@@ -1,0 +1,52 @@
+//! Quickstart: stand up the platform, sanity-run one of every subsystem,
+//! and execute a real Pallas kernel through the PJRT runtime.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use fpgahub::config::ExperimentConfig;
+use fpgahub::hub::resources::place_full_hub;
+use fpgahub::hub::transport::FpgaTransport;
+use fpgahub::net::p4::P4Switch;
+use fpgahub::runtime::{exec, Runtime};
+use fpgahub::sim::time::to_us;
+use fpgahub::sim::Sim;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExperimentConfig::default();
+
+    // 1. the discrete-event engine
+    let mut sim = Sim::new();
+    sim.after(fpgahub::sim::US, |s| println!("  [sim] hello from t={}µs", to_us(s.now())));
+    sim.run();
+
+    // 2. the FPGA floorplan
+    let fabric = place_full_hub(cfg.platform.fpga_board, cfg.platform.num_ssds)?;
+    let (lut, ff, bram, uram) = fabric.utilization_pct();
+    println!(
+        "  [fpga] full hub on {:?}: LUT {lut:.1}% FF {ff:.1}% BRAM {bram:.1}% URAM {uram:.1}%",
+        cfg.platform.fpga_board
+    );
+
+    // 3. the switch + transport latency budget
+    let sw = P4Switch::tofino();
+    let tp = FpgaTransport::new(1, 64);
+    println!(
+        "  [net] switch pipeline {:.2}µs, FPGA transport {:.2}µs/side",
+        to_us(sw.pipeline_latency()),
+        to_us(tp.pipeline_latency())
+    );
+
+    // 4. a real kernel through PJRT: aggregate 8 partial vectors
+    let mut rt = Runtime::new(&cfg.platform.artifacts_dir)?;
+    let w = 8usize;
+    let n = 512usize;
+    let x: Vec<f32> = (0..w * n).map(|i| (i % 7) as f32 * 0.25).collect();
+    let out = rt.run("aggregate_w8_n512", &[exec::literal_f32(&x, &[w, n])?])?;
+    let sums = exec::to_f32(&out[0])?;
+    let want: f32 = (0..w).map(|r| x[r * n]).sum();
+    println!("  [pjrt] aggregate_w8_n512 lane0 = {} (expect {want})", sums[0]);
+    assert!((sums[0] - want).abs() < 1e-5);
+
+    println!("quickstart OK");
+    Ok(())
+}

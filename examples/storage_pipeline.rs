@@ -1,0 +1,30 @@
+//! The §4.5 middle-tier scenario as a standalone application: compare the
+//! CPU-only and CPU-FPGA designs on a write-heavy block-storage workload,
+//! with the compression ratio measured from the real Pallas kernel.
+//!
+//!     make artifacts && cargo run --release --example storage_pipeline
+
+use fpgahub::apps::block_storage::HubMiddleTier;
+use fpgahub::baselines::cpu_pipeline::{CpuOnlyMiddleTier, MiddleTierConfig};
+use fpgahub::config::ExperimentConfig;
+use fpgahub::expts::fig10::measured_compress_ratio;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExperimentConfig::default();
+    let ratio = measured_compress_ratio(&cfg)?;
+    println!("compression ratio (PJRT delta+bitplane kernel): {ratio:.3}\n");
+
+    let mt = MiddleTierConfig { compress_ratio: ratio, ..Default::default() };
+    println!("{:>6} | {:>14} | {:>14} | {:>12} | {:>12}",
+        "cores", "cpu_only_gbps", "cpu_fpga_gbps", "cpu_lat_us", "fpga_lat_us");
+    for cores in [1usize, 2, 4, 8, 16, 32, 48] {
+        let cpu = CpuOnlyMiddleTier::new(mt).run(cores, 7);
+        let hub = HubMiddleTier::new(mt).run(cores, 7);
+        println!(
+            "{cores:>6} | {:>14.1} | {:>14.1} | {:>12.0} | {:>12.0}",
+            cpu.throughput_gbps, hub.throughput_gbps, cpu.mean_latency_us, hub.mean_latency_us
+        );
+    }
+    println!("\nCPU-FPGA reaches line rate with 2 cores; CPU-only never does (paper Fig 10).");
+    Ok(())
+}

@@ -1,0 +1,124 @@
+"""AOT bridge: lower every L1/L2 entry point to HLO *text* artifacts.
+
+HLO text (NOT HloModuleProto.serialize()) is the interchange format: jax>=0.5
+emits protos with 64-bit instruction ids which the rust side's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Run from python/:  python -m compile.aot --out-dir ../artifacts
+`make artifacts` is the only place this executes; the rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.aggregate import aggregate
+from compile.kernels.compress import compress
+from compile.kernels.decompress import decompress
+from compile.kernels.gemm import gemm
+
+# Aggregation tile lane count: rust pads flat gradients to a multiple of this.
+AGG_BLOCK_N = 512
+
+# (name, fn, example_args) — each becomes artifacts/<name>.hlo.txt.
+def _manifest():
+    f32 = jnp.float32
+    i32 = jnp.int32
+    s = jax.ShapeDtypeStruct
+    entries = []
+
+    # Fig 8: 8 workers x 1 KB partial activations (256 f32 lanes -> one tile).
+    entries.append(
+        ("aggregate_w8_n512", aggregate, (s((8, 512), f32),), {"block_n": 512})
+    )
+    # Training: flat grads padded to AGG_BLOCK_N multiple.
+    n_train = ((model.FLAT_PARAM_LEN + AGG_BLOCK_N - 1) // AGG_BLOCK_N) * AGG_BLOCK_N
+    entries.append(
+        (f"aggregate_w8_n{n_train}", aggregate, (s((8, n_train), f32),),
+         {"block_n": AGG_BLOCK_N})
+    )
+    # Fig 2: the GEMM stream unit of work (one 256^3 tile-set).
+    entries.append(
+        ("gemm_m256_k256_n256", gemm, (s((256, 256), f32), s((256, 256), f32)), {})
+    )
+    # Fig 10: one 64 KB storage payload = 64 rows x 256 int32.
+    entries.append(("compress_b64_s256", compress, (s((64, 256), i32),), {}))
+    entries.append(("decompress_b64_s256", decompress, (s((64, 256), i32),), {}))
+
+    # L2 model entry points.
+    for name, (fn, args) in model.example_args().items():
+        entries.append((name, fn, args, {}))
+    return entries, n_train
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, args, static_kwargs):
+    if static_kwargs:
+        import functools
+
+        fn = functools.partial(fn, **static_kwargs)
+    return jax.jit(fn).lower(*args)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single artifact by name")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries, n_train = _manifest()
+    index = {
+        "agg_block_n": AGG_BLOCK_N,
+        "flat_param_len": model.FLAT_PARAM_LEN,
+        "train_agg_n": n_train,
+        "model": {
+            "d_in": model.D_IN,
+            "d_hidden": model.D_HIDDEN,
+            "d_out": model.D_OUT,
+            "n_classes": model.N_CLASSES,
+            "batch": model.BATCH,
+            "param_shapes": [list(s) for s in model.PARAM_SHAPES],
+        },
+        "artifacts": {},
+    }
+    for name, fn, ex_args, static_kwargs in entries:
+        if args.only and name != args.only:
+            continue
+        lowered = lower_entry(fn, ex_args, static_kwargs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        index["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "num_inputs": len(ex_args),
+            "input_shapes": [list(a.shape) for a in ex_args],
+            "input_dtypes": [str(a.dtype) for a in ex_args],
+            "hlo_chars": len(text),
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+
+    with open(os.path.join(args.out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'index.json')}")
+
+
+if __name__ == "__main__":
+    main()

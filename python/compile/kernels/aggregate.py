@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: in-network aggregation (the P4-switch / FpgaHub collective).
+
+The paper's FPGA/switch co-design (§2.3, Fig 8) aggregates partial activations
+from W workers at line rate. On the FPGA this is a DSP adder tree fed by BRAM
+line buffers; the TPU re-think (DESIGN.md §Hardware-Adaptation) streams
+(W, block_n) tiles HBM→VMEM via BlockSpec and reduces the worker axis on the
+VPU — the grid dimension plays the role of the FPGA's flit stream.
+
+Shapes: x is (W, N) — W partial vectors of length N; output is the (N,)
+elementwise sum. N must be a multiple of `block_n` (the rust coordinator pads).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 512
+
+
+def _aggregate_kernel(x_ref, o_ref):
+    # One grid step owns one (W, block_n) tile in VMEM; reduce the worker
+    # axis with a tree-friendly sum (the VPU analogue of the DSP adder tree).
+    o_ref[...] = jnp.sum(x_ref[...], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def aggregate(x: jax.Array, *, block_n: int = DEFAULT_BLOCK_N) -> jax.Array:
+    """Sum W partial activation vectors: (W, N) -> (N,)."""
+    w, n = x.shape
+    if n % block_n != 0:
+        raise ValueError(f"N={n} must be a multiple of block_n={block_n}")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _aggregate_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((w, block_n), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((block_n,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x)
+
+
+def vmem_bytes(w: int, block_n: int, dtype_bytes: int = 4) -> int:
+    """Per-grid-step VMEM footprint (input tile + output tile).
+
+    Used by EXPERIMENTS.md §Perf to check the tile fits the ~16 MiB VMEM
+    budget of a real TPU core with double-buffering headroom.
+    """
+    return (w * block_n + block_n) * dtype_bytes * 2  # x2 double buffering

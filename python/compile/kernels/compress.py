@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: delta + bit-plane compression (the Fig 10 data plane).
+
+The paper's §4.5 middle tier compresses 64 KB storage payloads with LZ4 —
+1.6 Gb/s per CPU core vs line rate when hardwired on the FPGA. LZ4's
+byte-oriented match/copy loop is a poor fit for a vector machine and for
+Pallas' static shapes, so we implement the FPGA-compressor *class* honestly
+with a fixed-layout scheme (DESIGN.md §Hardware-Adaptation):
+
+  1. per-row delta coding      (storage payloads are locally correlated)
+  2. zigzag mapping            (signed deltas -> small unsigned ints)
+  3. per-row effective-bit-width measurement (exact, comparison-based —
+     no float log2, so the oracle matches bit-for-bit)
+
+The transformed payload has a static shape; the *effective* compressed size
+is  sum_rows(ceil(bits_r * S / 8)) + header  — the same
+data-dependent-ratio / data-independent-layout contract a streaming hardware
+compressor gives you. The rust data plane uses `bits` to size the simulated
+network transfer, and the reference decoder (ref.py) proves losslessness.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _compress_kernel(x_ref, enc_ref, bits_ref):
+    x = x_ref[...]
+    # 1. delta along the row; column 0 deltas against an implicit 0 so the
+    #    first value survives verbatim and the transform stays invertible.
+    prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    delta = x - prev
+    # 2. zigzag: sign bit to LSB so small |delta| -> small unsigned value.
+    zz = (delta << 1) ^ (delta >> 31)
+    enc_ref[...] = zz
+    # 3. exact effective bit width per row: bits = #{k : max >= 2^k}.
+    #    Comparison ladder instead of log2 keeps it bit-exact vs the oracle.
+    row_max = jnp.max(zz.astype(jnp.uint32), axis=1)  # (rows,)
+    thresholds = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))  # 2^k
+    bits = jnp.sum(
+        (row_max[:, None] >= thresholds[None, :]).astype(jnp.int32), axis=1
+    )
+    bits_ref[...] = bits
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def compress(x: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Delta+zigzag transform with per-row effective bit width.
+
+    x: (B, S) int32 payload. Returns (encoded (B, S) int32, bits (B,) int32).
+    """
+    b, s = x.shape
+    if b % block_rows != 0:
+        raise ValueError(f"B={b} must be a multiple of block_rows={block_rows}")
+    grid = (b // block_rows,)
+    return pl.pallas_call(
+        _compress_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, s), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((block_rows, s), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, s), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ),
+        interpret=True,
+    )(x)
+
+
+def compressed_size_bytes(bits, s: int, header_bytes_per_row: int = 2) -> int:
+    """Effective compressed size implied by the per-row bit widths."""
+    import numpy as np
+
+    bits = np.asarray(bits)
+    payload = np.sum((bits.astype(np.int64) * s + 7) // 8)
+    return int(payload + header_bytes_per_row * bits.shape[0])

@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: the decompressor paired with compress.py.
+
+Gives the FPGA data plane the read path of the §4.5 middle tier (storage
+*read* requests decompress on the way out). Un-zigzag + row prefix sum —
+the prefix sum is the classic streaming-hardware primitive (carry chain on
+the FPGA, log-depth scan on the VPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _decompress_kernel(enc_ref, out_ref):
+    zz = enc_ref[...]
+    # un-zigzag in unsigned arithmetic: (zz >> 1) ^ -(zz & 1)
+    u = zz.astype(jnp.uint32)
+    delta = ((u >> 1) ^ (-(u & 1).astype(jnp.int32)).astype(jnp.uint32)).astype(
+        jnp.int32
+    )
+    # inverse delta: prefix sum along the row (column 0 is verbatim)
+    out_ref[...] = jnp.cumsum(delta, axis=1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def decompress(enc: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+    """Invert compress(): (B, S) int32 encoded -> (B, S) int32 original."""
+    b, s = enc.shape
+    if b % block_rows != 0:
+        raise ValueError(f"B={b} must be a multiple of block_rows={block_rows}")
+    grid = (b // block_rows,)
+    return pl.pallas_call(
+        _decompress_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, s), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s), jnp.int32),
+        interpret=True,
+    )(enc)

@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: MXU-tiled GEMM (the GPU compute the hub overlaps with).
+
+Fig 2 of the paper contrasts GEMM throughput with and without collective
+interference. The GEMM itself is the paper's stand-in for "the compute the
+accelerator should be free to do"; here it is an MXU-shaped tiled matmul:
+128x128 output tiles, k-loop as the innermost grid dimension, accumulation in
+the output block across k steps (the Pallas revisiting-output idiom).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # f32 accumulation regardless of input dtype (bf16 feeds the MXU, f32
+    # leaves it) — mirrors the systolic-array contract.
+    acc = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(2, 3, 4)
+)
+def _gemm_vjp(x, y, block_m, block_n, block_k):
+    return _gemm_impl(x, y, block_m=block_m, block_n=block_n, block_k=block_k)
+
+
+def _gemm_fwd(x, y, block_m, block_n, block_k):
+    return _gemm_vjp(x, y, block_m, block_n, block_k), (x, y)
+
+
+def _gemm_bwd(block_m, block_n, block_k, res, g):
+    # dX = g @ Y^T, dY = X^T @ g — both through the same Pallas kernel, so
+    # the backward pass exercises the MXU tiling too. Transposes keep every
+    # dimension 128-aligned under the divisibility contract.
+    x, y = res
+    dx = _gemm_impl(g, y.T, block_m=block_m, block_n=block_k, block_k=block_n)
+    dy = _gemm_impl(x.T, g, block_m=block_k, block_n=block_n, block_k=block_m)
+    return dx.astype(x.dtype), dy.astype(y.dtype)
+
+
+_gemm_vjp.defvjp(_gemm_fwd, _gemm_bwd)
+
+
+def gemm(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """Tiled matmul: (M, K) @ (K, N) -> (M, N) in f32. Differentiable."""
+    return _gemm_vjp(x, y, block_m, block_n, block_k)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k")
+)
+def _gemm_impl(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """Tiled matmul: (M, K) @ (K, N) -> (M, N) in f32."""
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    for dim, blk, name in ((m, block_m, "M"), (n, block_n, "N"), (k, block_k, "K")):
+        if dim % blk != 0:
+            raise ValueError(f"{name}={dim} must be a multiple of its block {blk}")
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def mxu_utilization_estimate(
+    m: int, n: int, k: int, block_m: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK, block_k: int = DEFAULT_BLOCK,
+) -> float:
+    """Fraction of MXU issue slots doing useful MACs (structural estimate).
+
+    Full 128x128x128 tiles keep the systolic array fully fed; ragged edges
+    would idle lanes. With the divisibility contract above this is the tile
+    occupancy, i.e. 1.0 for aligned shapes.
+    """
+    full = (m // block_m) * (n // block_n) * (k // block_k)
+    total_macs = m * n * k
+    tile_macs = full * block_m * block_n * block_k
+    return tile_macs / total_macs if total_macs else 0.0

@@ -1,0 +1,69 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels — the build-time correctness signal.
+
+Every kernel in this package is pytest-checked against the function of the
+same name here; the rust side then trusts the AOT artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def aggregate_ref(x):
+    """(W, N) -> (N,) elementwise sum over workers."""
+    return jnp.sum(x, axis=0)
+
+
+def gemm_ref(x, y):
+    """(M, K) @ (K, N) -> (M, N), f32 accumulation."""
+    return jnp.dot(
+        x.astype(jnp.float32), y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def compress_ref(x):
+    """Delta+zigzag encode with exact per-row effective bit width.
+
+    Column 0 carries the verbatim first value (delta against an implicit 0),
+    so the transform is invertible by a row prefix sum.
+    """
+    x = np.asarray(x, dtype=np.int32)
+    prev = np.concatenate([np.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    delta = x - prev
+    zz = (delta.astype(np.int32) << 1) ^ (delta.astype(np.int32) >> 31)
+    row_max = zz.astype(np.uint32).max(axis=1)
+    ks = np.uint32(1) << np.arange(32, dtype=np.uint32)
+    bits = (row_max[:, None] >= ks[None, :]).sum(axis=1).astype(np.int32)
+    return zz.astype(np.int32), bits
+
+
+def decompress_ref(enc):
+    """Inverse of compress_ref's transform — proves losslessness."""
+    enc = np.asarray(enc, dtype=np.int32)
+    # un-zigzag: (zz >> 1) ^ -(zz & 1), in unsigned arithmetic.
+    u = enc.astype(np.uint32)
+    delta = ((u >> 1) ^ (-(u & 1)).astype(np.uint32)).astype(np.int32)
+    # inverse delta: row prefix sum (column 0 is the verbatim first value).
+    return np.cumsum(delta.astype(np.int64), axis=1).astype(np.int32)
+
+
+def mlp_init(rng: np.random.Generator, d_in: int, d_hidden: int, d_out: int):
+    """He-initialized 2-layer MLP parameters as a flat tuple of arrays."""
+    w1 = rng.normal(0, np.sqrt(2.0 / d_in), (d_in, d_hidden)).astype(np.float32)
+    b1 = np.zeros((d_hidden,), np.float32)
+    w2 = rng.normal(0, np.sqrt(2.0 / d_hidden), (d_hidden, d_out)).astype(np.float32)
+    b2 = np.zeros((d_out,), np.float32)
+    return w1, b1, w2, b2
+
+
+def mlp_loss_ref(params, x, y):
+    """Softmax cross-entropy of the 2-layer MLP — oracle for model.grad_loss."""
+    w1, b1, w2, b2 = [jnp.asarray(p) for p in params]
+    h = jnp.maximum(jnp.asarray(x) @ w1 + b1, 0.0)
+    logits = h @ w2 + b2
+    logits = logits - logits.max(axis=1, keepdims=True)
+    logz = jnp.log(jnp.sum(jnp.exp(logits), axis=1))
+    ll = logits[jnp.arange(logits.shape[0]), jnp.asarray(y)] - logz
+    return -jnp.mean(ll)

@@ -1,0 +1,114 @@
+"""L2: the end-to-end training workload's fwd/bwd as a JAX compute graph.
+
+FpgaHub's headline use case (§2.2.3, §3.3) is data-parallel training where
+collectives are offloaded to the hub. The per-worker compute is this 2-layer
+MLP classifier; gradients are flattened, aggregated through the simulated
+FPGA-Switch path by the rust coordinator (using the `aggregate` Pallas
+kernel), and applied with `apply_update`.
+
+Everything here is AOT-lowered once by aot.py; python never runs at serve
+time. The hidden layer's matmuls go through the L1 Pallas GEMM so the whole
+three-layer stack is exercised by a single artifact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.gemm import gemm
+
+# Model dimensions (128-aligned so the Pallas GEMM tiles cleanly).
+D_IN = 128
+D_HIDDEN = 256
+D_OUT = 128  # logits padded to 128 lanes; labels live in [0, N_CLASSES)
+N_CLASSES = 16
+BATCH = 128
+
+PARAM_SHAPES = (
+    (D_IN, D_HIDDEN),   # w1
+    (D_HIDDEN,),        # b1
+    (D_HIDDEN, D_OUT),  # w2
+    (D_OUT,),           # b2
+)
+PARAM_SIZES = tuple(
+    int(functools.reduce(lambda a, b: a * b, s, 1)) for s in PARAM_SHAPES
+)
+FLAT_PARAM_LEN = sum(PARAM_SIZES)  # 65920
+
+
+def _forward(params, x):
+    w1, b1, w2, b2 = params
+    h = jnp.maximum(gemm(x, w1) + b1, 0.0)
+    return gemm(h, w2) + b2  # logits (BATCH, D_OUT)
+
+
+def loss_fn(params, x, y):
+    """Masked softmax cross-entropy over the first N_CLASSES logit lanes."""
+    logits = _forward(params, x)
+    mask = jnp.arange(D_OUT) < N_CLASSES
+    logits = jnp.where(mask[None, :], logits, -1e30)
+    logits = logits - jax.lax.stop_gradient(logits.max(axis=1, keepdims=True))
+    logz = jnp.log(jnp.sum(jnp.exp(logits), axis=1))
+    ll = jnp.take_along_axis(logits, y[:, None], axis=1)[:, 0] - logz
+    return -jnp.mean(ll)
+
+
+def flatten_grads(grads):
+    return jnp.concatenate([g.reshape(-1) for g in grads])
+
+
+def unflatten(flat):
+    out, off = [], 0
+    for shape, size in zip(PARAM_SHAPES, PARAM_SIZES):
+        out.append(flat[off : off + size].reshape(shape))
+        off += size
+    return tuple(out)
+
+
+@jax.jit
+def grad_loss(w1, b1, w2, b2, x, y):
+    """Per-worker step: loss + flattened gradient vector.
+
+    Returns (loss, flat_grads) — flat_grads has FLAT_PARAM_LEN elements; the
+    rust coordinator pads it to the aggregation tile and ships it through the
+    simulated network.
+    """
+    params = (w1, b1, w2, b2)
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    return loss, flatten_grads(grads)
+
+
+@jax.jit
+def apply_update(w1, b1, w2, b2, agg_flat, lr, inv_workers):
+    """SGD update from an aggregated (summed) flat gradient."""
+    g1, gb1, g2, gb2 = unflatten(agg_flat * inv_workers)
+    return (w1 - lr * g1, b1 - lr * gb1, w2 - lr * g2, b2 - lr * gb2)
+
+
+@jax.jit
+def eval_loss(w1, b1, w2, b2, x, y):
+    """Evaluation-only loss (and accuracy) for the loss-curve log."""
+    params = (w1, b1, w2, b2)
+    logits = _forward(params, x)
+    mask = jnp.arange(D_OUT) < N_CLASSES
+    logits = jnp.where(mask[None, :], logits, -1e30)
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return loss_fn(params, x, y), acc
+
+
+def example_args():
+    """ShapeDtypeStructs for AOT lowering of each exported entry point."""
+    f32 = jnp.float32
+    p = [jax.ShapeDtypeStruct(s, f32) for s in PARAM_SHAPES]
+    x = jax.ShapeDtypeStruct((BATCH, D_IN), f32)
+    y = jax.ShapeDtypeStruct((BATCH,), jnp.int32)
+    flat = jax.ShapeDtypeStruct((FLAT_PARAM_LEN,), f32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+    return {
+        "grad_loss": (grad_loss, (*p, x, y)),
+        "apply_update": (apply_update, (*p, flat, scalar, scalar)),
+        "eval_loss": (eval_loss, (*p, x, y)),
+    }

@@ -1,0 +1,89 @@
+"""Aggregate kernel vs pure-jnp oracle — hypothesis sweeps shapes/dtypes."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.aggregate import aggregate, vmem_bytes
+from compile.kernels.ref import aggregate_ref
+
+SETTINGS = dict(deadline=None, max_examples=25)
+
+
+@hypothesis.given(
+    w=st.integers(1, 16),
+    blocks=st.integers(1, 4),
+    block_n=st.sampled_from([128, 256, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_aggregate_matches_ref_f32(w, blocks, block_n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(w, blocks * block_n)).astype(np.float32)
+    got = aggregate(x, block_n=block_n)
+    want = aggregate_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@hypothesis.given(
+    w=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_aggregate_matches_ref_bf16(w, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(
+        rng.normal(size=(w, 256)).astype(np.float32), dtype=jnp.bfloat16
+    )
+    got = aggregate(x, block_n=128)
+    want = aggregate_ref(x)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_aggregate_int32_exact():
+    rng = np.random.default_rng(0)
+    x = rng.integers(-1000, 1000, size=(8, 512), dtype=np.int32)
+    got = np.asarray(aggregate(x))
+    assert (got == x.sum(axis=0)).all()
+
+
+def test_single_worker_identity():
+    x = np.arange(512, dtype=np.float32).reshape(1, 512)
+    np.testing.assert_array_equal(np.asarray(aggregate(x)), x[0])
+
+
+def test_rejects_misaligned_n():
+    with pytest.raises(ValueError):
+        aggregate(np.zeros((4, 100), np.float32))
+
+
+def test_zero_input_zero_output():
+    got = np.asarray(aggregate(np.zeros((8, 512), np.float32)))
+    assert (got == 0).all()
+
+
+def test_linearity():
+    """sum(a + b) == sum(a) + sum(b) — aggregation must be linear."""
+    rng = np.random.default_rng(7)
+    a = rng.normal(size=(8, 512)).astype(np.float32)
+    b = rng.normal(size=(8, 512)).astype(np.float32)
+    lhs = np.asarray(aggregate(a + b))
+    rhs = np.asarray(aggregate(a)) + np.asarray(aggregate(b))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_budget_training_tile():
+    """The training tile (8 workers x 512 lanes f32) fits VMEM comfortably."""
+    assert vmem_bytes(8, 512) < 16 * 2**20  # 16 MiB TPU VMEM
+
+
+def test_jit_lowerable():
+    spec = jax.ShapeDtypeStruct((8, 512), jnp.float32)
+    lowered = jax.jit(lambda x: aggregate(x)).lower(spec)
+    assert "stablehlo" in str(lowered.compiler_ir("stablehlo"))

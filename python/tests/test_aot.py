@@ -1,0 +1,46 @@
+"""AOT path: every manifest entry lowers to parseable HLO text."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_manifest_names_unique():
+    entries, _ = aot._manifest()
+    names = [e[0] for e in entries]
+    assert len(names) == len(set(names))
+
+
+def test_train_agg_n_covers_flat_params():
+    _, n_train = aot._manifest()
+    assert n_train >= model.FLAT_PARAM_LEN
+    assert n_train % aot.AGG_BLOCK_N == 0
+    assert n_train - model.FLAT_PARAM_LEN < aot.AGG_BLOCK_N
+
+
+def test_lower_one_entry_produces_hlo_text():
+    entries, _ = aot._manifest()
+    name, fn, args, kw = entries[0]
+    text = aot.to_hlo_text(aot.lower_entry(fn, args, kw))
+    assert "ENTRY" in text and "HloModule" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "index.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_artifacts_consistent_with_index():
+    with open(os.path.join(ART, "index.json")) as f:
+        index = json.load(f)
+    assert index["flat_param_len"] == model.FLAT_PARAM_LEN
+    for name, meta in index["artifacts"].items():
+        path = os.path.join(ART, meta["file"])
+        assert os.path.exists(path), f"missing artifact {name}"
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head

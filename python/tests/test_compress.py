@@ -1,0 +1,101 @@
+"""Compression kernel: oracle equality, losslessness, ratio properties."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from compile.kernels.compress import compress, compressed_size_bytes
+from compile.kernels.ref import compress_ref, decompress_ref
+
+SETTINGS = dict(deadline=None, max_examples=25)
+
+
+def _payload(rng, b, s, spread):
+    """Locally-correlated int32 payload (random walk) like storage blocks."""
+    steps = rng.integers(-spread, spread + 1, size=(b, s))
+    return np.cumsum(steps, axis=1).astype(np.int32)
+
+
+@hypothesis.given(
+    b=st.sampled_from([8, 16, 64]),
+    s=st.sampled_from([64, 256]),
+    spread=st.sampled_from([1, 100, 100_000]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_kernel_matches_ref_exactly(b, s, spread, seed):
+    rng = np.random.default_rng(seed)
+    x = _payload(rng, b, s, spread)
+    enc, bits = compress(x)
+    enc_ref, bits_ref = compress_ref(x)
+    np.testing.assert_array_equal(np.asarray(enc), enc_ref)
+    np.testing.assert_array_equal(np.asarray(bits), bits_ref)
+
+
+@hypothesis.given(
+    spread=st.sampled_from([0, 1, 7, 1000]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_roundtrip_lossless(spread, seed):
+    rng = np.random.default_rng(seed)
+    x = _payload(rng, 16, 128, spread) if spread else np.zeros((16, 128), np.int32)
+    enc, _ = compress(x, block_rows=8)
+    np.testing.assert_array_equal(decompress_ref(np.asarray(enc)), x)
+
+
+def test_roundtrip_extreme_values():
+    x = np.array(
+        [[np.iinfo(np.int32).max, np.iinfo(np.int32).min, -1, 0] * 64] * 8,
+        dtype=np.int32,
+    )
+    enc, bits = compress(x)
+    np.testing.assert_array_equal(decompress_ref(np.asarray(enc)), x)
+    assert int(np.asarray(bits).max()) == 32
+
+
+def test_constant_rows_compress_well():
+    x = np.full((8, 256), 42, np.int32)
+    enc, bits = compress(x)
+    bits = np.asarray(bits)
+    # first value 42 -> zz 84 -> 7 bits; all other deltas are 0.
+    assert (bits == 7).all()
+    size = compressed_size_bytes(bits, 256)
+    assert size < x.nbytes / 4  # >4x ratio on constant data
+
+
+def test_smooth_data_beats_random_data():
+    rng = np.random.default_rng(0)
+    smooth = _payload(rng, 8, 256, 2)
+    noisy = rng.integers(-2**30, 2**30, size=(8, 256), dtype=np.int32)
+    _, bs = compress(smooth)
+    _, bn = compress(noisy)
+    assert compressed_size_bytes(np.asarray(bs), 256) < compressed_size_bytes(
+        np.asarray(bn), 256
+    )
+
+
+def test_bits_bounds():
+    rng = np.random.default_rng(1)
+    x = _payload(rng, 8, 256, 1000)
+    _, bits = compress(x)
+    bits = np.asarray(bits)
+    assert (bits >= 0).all() and (bits <= 32).all()
+
+
+def test_compressed_size_includes_header():
+    bits = np.zeros((8,), np.int32)
+    assert compressed_size_bytes(bits, 256) == 8 * 2  # header only
+
+
+def test_rejects_misaligned_rows():
+    with pytest.raises(ValueError):
+        compress(np.zeros((9, 128), np.int32), block_rows=8)
+
+
+def test_all_zero_payload():
+    x = np.zeros((8, 256), np.int32)
+    enc, bits = compress(x)
+    assert (np.asarray(enc) == 0).all()
+    assert (np.asarray(bits) == 0).all()

@@ -1,0 +1,55 @@
+"""Decompress kernel: exact inverse of compress, matches the numpy oracle."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from compile.kernels.compress import compress
+from compile.kernels.decompress import decompress
+from compile.kernels.ref import compress_ref, decompress_ref
+
+SETTINGS = dict(deadline=None, max_examples=25)
+
+
+def _payload(rng, b, s, spread):
+    steps = rng.integers(-spread, spread + 1, size=(b, s))
+    return np.cumsum(steps, axis=1).astype(np.int32)
+
+
+@hypothesis.given(
+    b=st.sampled_from([8, 16, 64]),
+    s=st.sampled_from([64, 256]),
+    spread=st.sampled_from([1, 1000, 10**6]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_kernel_roundtrip_through_both_kernels(b, s, spread, seed):
+    rng = np.random.default_rng(seed)
+    x = _payload(rng, b, s, spread)
+    enc, _ = compress(x)
+    back = decompress(np.asarray(enc))
+    np.testing.assert_array_equal(np.asarray(back), x)
+
+
+def test_kernel_matches_ref_decoder():
+    rng = np.random.default_rng(0)
+    x = _payload(rng, 16, 128, 500)
+    enc, _ = compress_ref(x)
+    got = decompress(enc)
+    want = decompress_ref(enc)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_extreme_values_roundtrip():
+    x = np.array(
+        [[np.iinfo(np.int32).max, np.iinfo(np.int32).min, 0, -1] * 32] * 8,
+        dtype=np.int32,
+    )
+    enc, _ = compress(x)
+    np.testing.assert_array_equal(np.asarray(decompress(np.asarray(enc))), x)
+
+
+def test_rejects_misaligned_rows():
+    with pytest.raises(ValueError):
+        decompress(np.zeros((9, 64), np.int32), block_rows=8)

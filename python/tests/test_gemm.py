@@ -1,0 +1,95 @@
+"""GEMM kernel vs oracle: forward numerics, VJP, tiling invariants."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.gemm import gemm, _gemm_impl, mxu_utilization_estimate
+from compile.kernels.ref import gemm_ref
+
+SETTINGS = dict(deadline=None, max_examples=15)
+
+
+@hypothesis.given(
+    m=st.sampled_from([128, 256]),
+    k=st.sampled_from([128, 256]),
+    n=st.sampled_from([128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_gemm_matches_ref_f32(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    y = rng.normal(size=(k, n)).astype(np.float32)
+    got = gemm(x, y)
+    want = gemm_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_bf16_inputs_f32_accumulation():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32), jnp.bfloat16)
+    y = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32), jnp.bfloat16)
+    got = gemm(x, y)
+    assert got.dtype == jnp.float32
+    want = gemm_ref(np.asarray(x, np.float32), np.asarray(y, np.float32))
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-1)
+
+
+def test_block_shape_does_not_change_result():
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(256, 256)).astype(np.float32)
+    y = rng.normal(size=(256, 256)).astype(np.float32)
+    a = _gemm_impl(x, y, block_m=128, block_n=128, block_k=128)
+    b = _gemm_impl(x, y, block_m=256, block_n=256, block_k=256)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_identity_matmul():
+    eye = np.eye(128, dtype=np.float32)
+    x = np.random.default_rng(5).normal(size=(128, 128)).astype(np.float32)
+    np.testing.assert_allclose(gemm(x, eye), x, rtol=1e-6, atol=1e-6)
+
+
+def test_rejects_misaligned():
+    with pytest.raises(ValueError):
+        _gemm_impl(
+            np.zeros((100, 128), np.float32), np.zeros((128, 128), np.float32)
+        )
+    with pytest.raises(ValueError):
+        _gemm_impl(
+            np.zeros((128, 100), np.float32), np.zeros((128, 128), np.float32)
+        )
+
+
+def test_vjp_matches_jnp_grad():
+    """d/dx sum(gemm(x, y) * c) must equal the pure-jnp gradient."""
+    rng = np.random.default_rng(17)
+    x = rng.normal(size=(128, 128)).astype(np.float32)
+    y = rng.normal(size=(128, 128)).astype(np.float32)
+    c = rng.normal(size=(128, 128)).astype(np.float32)
+
+    gx, gy = jax.grad(lambda a, b: jnp.sum(gemm(a, b) * c), argnums=(0, 1))(x, y)
+    gx_ref, gy_ref = jax.grad(
+        lambda a, b: jnp.sum((a @ b) * c), argnums=(0, 1)
+    )(x, y)
+    np.testing.assert_allclose(gx, gx_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gy, gy_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_mxu_utilization_full_tiles():
+    assert mxu_utilization_estimate(256, 256, 256) == 1.0
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+
+
+def test_gemm_linearity_in_first_arg():
+    rng = np.random.default_rng(23)
+    x1 = rng.normal(size=(128, 128)).astype(np.float32)
+    x2 = rng.normal(size=(128, 128)).astype(np.float32)
+    y = rng.normal(size=(128, 128)).astype(np.float32)
+    lhs = np.asarray(gemm(x1 + x2, y))
+    rhs = np.asarray(gemm(x1, y)) + np.asarray(gemm(x2, y))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)

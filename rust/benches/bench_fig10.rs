@@ -1,0 +1,22 @@
+//! Fig 10 bench: middle-tier throughput + latency sweeps (with the real
+//! kernel-measured compression ratio) and closed-loop run wallclock.
+
+use fpgahub::apps::block_storage::HubMiddleTier;
+use fpgahub::baselines::cpu_pipeline::{CpuOnlyMiddleTier, MiddleTierConfig};
+use fpgahub::bench_harness::{banner, bench};
+use fpgahub::config::ExperimentConfig;
+
+fn main() {
+    let cfg = ExperimentConfig { csv: false, ..Default::default() };
+    banner("Fig 10: cloud block-storage middle tier");
+    fpgahub::expts::run("fig10", &cfg).expect("fig10");
+
+    banner("closed-loop run wallclock (simulator hot path)");
+    let mt = MiddleTierConfig::default();
+    bench("fig10/cpu_only_48cores_100ms", 2, 15, || {
+        std::hint::black_box(CpuOnlyMiddleTier::new(mt).run(48, 1));
+    });
+    bench("fig10/hub_2cores_100ms", 2, 15, || {
+        std::hint::black_box(HubMiddleTier::new(mt).run(2, 1));
+    });
+}

@@ -1,0 +1,31 @@
+//! Fig 2 bench: regenerates the interference comparison and times the
+//! model evaluation itself (the L3 hot path for the llm_step app).
+
+use fpgahub::apps::llm_step::{compare, summary, LlmStepConfig};
+use fpgahub::bench_harness::{banner, bench};
+use fpgahub::config::ExperimentConfig;
+
+fn main() {
+    banner("Fig 2: collective-GEMM interference (GPU-only vs FpgaHub offload)");
+    let cfg = ExperimentConfig { csv: false, ..Default::default() };
+    let tables = fpgahub::expts::run("fig2", &cfg).expect("fig2");
+    assert_eq!(tables.len(), 1);
+    println!("{}", summary(&LlmStepConfig::default()));
+
+    // sweep the gradient size to show the crossover the design space has
+    banner("ablation: allreduce size sweep");
+    for mb in [16u64, 64, 256, 1024] {
+        let c = LlmStepConfig { allreduce_bytes: mb << 20, ..Default::default() };
+        let (w, wo) = compare(&c);
+        println!(
+            "grads {mb:>5} MB: speedup {:.2}x (step {} -> {} µs)",
+            w.step_time as f64 / wo.step_time as f64,
+            fpgahub::sim::time::to_us(w.step_time) as u64,
+            fpgahub::sim::time::to_us(wo.step_time) as u64,
+        );
+    }
+
+    bench("fig2/compare", 10, 200, || {
+        let _ = std::hint::black_box(compare(&LlmStepConfig::default()));
+    });
+}

@@ -1,0 +1,84 @@
+//! Fig 8 bench: in-network aggregation latency, FPGA-Switch vs CPU-Switch,
+//! with numeric verification, plus round-throughput of the aggregation app.
+
+use fpgahub::apps::allreduce::FpgaSwitchAllreduce;
+use fpgahub::bench_harness::{banner, bench};
+use fpgahub::config::ExperimentConfig;
+use fpgahub::net::p4::P4Switch;
+use fpgahub::util::Rng;
+
+fn main() {
+    let cfg = ExperimentConfig { csv: false, ..Default::default() };
+    banner("Fig 8: in-network aggregation latency");
+    fpgahub::expts::run("fig8", &cfg).expect("fig8");
+
+    banner("ablation: worker-count scaling (FPGA-Switch round latency)");
+    for workers in [2u32, 4, 8, 16, 32] {
+        let mut sw = P4Switch::tofino();
+        let mut app =
+            FpgaSwitchAllreduce::new(&mut sw, workers, 512, Rng::new(7), 0.2).unwrap();
+        let chunks = vec![vec![0.5f32; 512]; workers as usize];
+        let mut worst_sum = 0.0f64;
+        let rounds = 50u64;
+        for r in 0..rounds {
+            let t0 = r * 500_000_000;
+            let out = app.round(t0, &chunks);
+            worst_sum +=
+                fpgahub::sim::time::to_us(*out.done_at.iter().max().unwrap() - t0);
+        }
+        println!("{workers:>3} workers: mean round {:.2}µs", worst_sum / rounds as f64);
+    }
+
+    banner("ablation: fixed-point shift (precision vs saturation)");
+    for shift in [8u32, 14, 20, 26] {
+        let mut sw = P4Switch::tofino();
+        let mut eng =
+            fpgahub::hub::collective::CollectiveEngine::new(&mut sw, 8, 512, shift).unwrap();
+        let mut rng = Rng::new(shift as u64);
+        let mut max_err = 0.0f32;
+        let mut saturated = false;
+        for _ in 0..20 {
+            let chunks: Vec<Vec<f32>> = (0..8)
+                .map(|_| (0..512).map(|_| rng.range_f64(-50.0, 50.0) as f32).collect())
+                .collect();
+            let mut out = None;
+            for c in &chunks {
+                out = eng.contribute(c);
+            }
+            let out = out.unwrap();
+            saturated |= out.saturated;
+            for i in 0..512 {
+                let want: f32 = chunks.iter().map(|c| c[i]).sum();
+                max_err = max_err.max((out.values[i] - want).abs());
+            }
+        }
+        println!(
+            "shift {shift:>2}: max |err| {max_err:.6}  saturated={saturated}  (range ±{:.0})",
+            fpgahub::util::fixed::max_magnitude(shift)
+        );
+    }
+
+    banner("ablation: hub state capacity vs switch SRAM (§2.3.2)");
+    {
+        let store = fpgahub::hub::StateStore::new();
+        let sw = P4Switch::tofino();
+        println!(
+            "P4 switch SRAM: {} MB | FpgaHub state store: {:.1} GB ({}x)",
+            sw.sram_bytes / (1 << 20),
+            store.total_capacity_bytes() as f64 / (1u64 << 30) as f64,
+            store.total_capacity_bytes() / sw.sram_bytes
+        );
+    }
+
+    banner("aggregation-round wallclock (simulator hot path)");
+    let mut sw = P4Switch::tofino();
+    let mut app = FpgaSwitchAllreduce::new(&mut sw, 8, 512, Rng::new(3), 0.2).unwrap();
+    let chunks: Vec<Vec<f32>> = (0..8)
+        .map(|w| (0..512).map(|i| (w * 512 + i) as f32 * 1e-4).collect())
+        .collect();
+    let mut t = 0u64;
+    bench("fig8/fpga_switch_round", 20, 500, || {
+        t += 500_000_000;
+        std::hint::black_box(app.round(t, &chunks));
+    });
+}

@@ -1,0 +1,22 @@
+//! Fig 9 bench: SPDK control-plane throughput sweep + simulator event rate.
+
+use fpgahub::baselines::SpdkControlPlane;
+use fpgahub::bench_harness::{banner, bench};
+use fpgahub::config::ExperimentConfig;
+use fpgahub::nvme::queue::NvmeOp;
+use fpgahub::nvme::ssd::SsdArray;
+use fpgahub::util::Rng;
+
+fn main() {
+    let cfg = ExperimentConfig { csv: false, ..Default::default() };
+    banner("Fig 9: CPU-based SSD control plane throughput vs cores");
+    fpgahub::expts::run("fig9", &cfg).expect("fig9");
+
+    banner("saturation-run wallclock (simulator hot path)");
+    bench("fig9/spdk_run_5cores_100ms", 2, 20, || {
+        let mut rng = Rng::new(9);
+        let mut array = SsdArray::new(10, &mut rng);
+        let mut cp = SpdkControlPlane::new(5);
+        std::hint::black_box(cp.run(&mut array, NvmeOp::Read, fpgahub::sim::time::S / 10));
+    });
+}

@@ -1,0 +1,30 @@
+//! Table 1 bench: resource-usage table + floorplanning wallclock, and an
+//! SSD-count ablation (how the control plane scales to bigger JBOFs).
+
+use fpgahub::bench_harness::{banner, bench};
+use fpgahub::config::ExperimentConfig;
+use fpgahub::devices::fpga::FpgaBoard;
+use fpgahub::hub::resources::{place_full_hub, table1_fabric};
+
+fn main() {
+    let cfg = ExperimentConfig { csv: false, ..Default::default() };
+    banner("Table 1: FPGA-based SSD control logic resources");
+    fpgahub::expts::run("table1", &cfg).expect("table1");
+
+    banner("ablation: SSD count scaling on U50");
+    for n in [1usize, 4, 10, 16, 32, 64] {
+        match table1_fabric(n) {
+            Ok(f) => {
+                let (lut, ff, bram, uram) = f.utilization_pct();
+                println!(
+                    "{n:>3} SSDs: LUT {lut:>5.1}%  FF {ff:>5.1}%  BRAM {bram:>5.1}%  URAM {uram:>4.1}%"
+                );
+            }
+            Err(e) => println!("{n:>3} SSDs: does not fit ({e})"),
+        }
+    }
+
+    bench("table1/place_full_hub_u280", 10, 500, || {
+        std::hint::black_box(place_full_hub(FpgaBoard::AlveoU280, 10).unwrap());
+    });
+}

@@ -1,0 +1,182 @@
+//! FPGA-Switch in-network aggregation (§4.3, Fig 8): W workers, each an
+//! FpgaHub, send partial activations through the FPGA reliable transport to
+//! the P4 switch, which aggregates and multicasts the result back.
+//!
+//! The numerics are real (fixed-point encode → switch integer adds →
+//! decode); the timing comes from the transport pipeline + wire + switch
+//! pipeline models. The same engine drives the end-to-end training example,
+//! where the decoded sums update actual model parameters via PJRT.
+
+use crate::hub::collective::CollectiveEngine;
+use crate::hub::transport::FpgaTransport;
+use crate::net::p4::{P4Error, P4Switch};
+use crate::net::EthLink;
+use crate::sim::time::Ps;
+use crate::util::Rng;
+
+/// One round's outcome: the aggregated vector + per-worker completion times.
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    pub values: Vec<f32>,
+    /// for each worker: when the multicast result was delivered to it
+    pub done_at: Vec<Ps>,
+    pub saturated: bool,
+}
+
+/// The distributed aggregation application.
+pub struct FpgaSwitchAllreduce {
+    pub workers: u32,
+    pub engine: CollectiveEngine,
+    pub transports: Vec<FpgaTransport>,
+    pub uplinks: Vec<EthLink>,
+    pub downlinks: Vec<EthLink>,
+    pub switch_pipeline: Ps,
+    rng: Rng,
+    /// per-worker arrival spread (compute imbalance before the collective)
+    pub skew_us: f64,
+}
+
+impl FpgaSwitchAllreduce {
+    pub fn new(
+        switch: &mut P4Switch,
+        workers: u32,
+        slots: usize,
+        rng: Rng,
+        skew_us: f64,
+    ) -> Result<Self, P4Error> {
+        let engine =
+            CollectiveEngine::new(switch, workers, slots, crate::util::fixed::DEFAULT_SHIFT)?;
+        Ok(FpgaSwitchAllreduce {
+            workers,
+            engine,
+            transports: (0..workers).map(|_| FpgaTransport::new(1, 256)).collect(),
+            uplinks: (0..workers).map(|_| EthLink::new_100g()).collect(),
+            downlinks: (0..workers).map(|_| EthLink::new_100g()).collect(),
+            switch_pipeline: switch.pipeline_latency(),
+            rng,
+            skew_us,
+        })
+    }
+
+    /// Execute one aggregation round starting at `now` with each worker
+    /// holding `chunks[w]` (all equal length ≤ installed slots).
+    pub fn round(&mut self, now: Ps, chunks: &[Vec<f32>]) -> RoundOutcome {
+        assert_eq!(chunks.len(), self.workers as usize);
+        let bytes = (chunks[0].len() * 4) as u64;
+
+        // 1. each worker's transport pushes its chunk to the switch
+        let mut at_switch = Vec::with_capacity(chunks.len());
+        for w in 0..chunks.len() {
+            let skew = crate::sim::time::us_f(self.rng.f64() * self.skew_us);
+            let t = now + skew + self.transports[w].pipeline_latency();
+            let pkts = self.transports[w].send_message(0, bytes);
+            let mut arrive = t;
+            for p in &pkts {
+                let (_, a) = self.uplinks[w].transmit(arrive, p.wire_bytes());
+                arrive = a;
+            }
+            at_switch.push(arrive);
+        }
+
+        // 2. switch aggregates as chunks arrive; completes on the last one
+        let mut order: Vec<usize> = (0..chunks.len()).collect();
+        order.sort_by_key(|&w| at_switch[w]);
+        let mut result = None;
+        let mut agg_done = now;
+        for &w in &order {
+            let r = self.engine.contribute(&chunks[w]);
+            agg_done = at_switch[w];
+            if r.is_some() {
+                result = r;
+            }
+        }
+        let result = result.expect("all workers contributed");
+        let multicast_at = agg_done + self.switch_pipeline;
+
+        // 3. multicast back through each worker's downlink + transport
+        let done_at: Vec<Ps> = (0..chunks.len())
+            .map(|w| {
+                let (_, arr) = self.downlinks[w].transmit(multicast_at, bytes + 64);
+                // receiving transport: depacketize + ack, then deliver
+                let mtu = self.transports[w].mtu;
+                let pkt = crate::net::packet::packetize(0, bytes, mtu)
+                    .into_iter()
+                    .next()
+                    .expect("at least one packet");
+                let _ = self.transports[w].receive(0, &pkt);
+                arr + self.transports[w].pipeline_latency()
+            })
+            .collect();
+
+        RoundOutcome { values: result.values, done_at, saturated: result.saturated }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::{to_us, US};
+
+    fn app(workers: u32, slots: usize, skew: f64) -> FpgaSwitchAllreduce {
+        let mut sw = P4Switch::tofino();
+        FpgaSwitchAllreduce::new(&mut sw, workers, slots, Rng::new(9), skew).unwrap()
+    }
+
+    #[test]
+    fn sums_are_exact_to_fixed_point() {
+        let mut a = app(8, 256, 0.0);
+        let chunks: Vec<Vec<f32>> = (0..8)
+            .map(|w| (0..256).map(|i| (w as f32 + 1.0) * 0.001 * i as f32).collect())
+            .collect();
+        let out = a.round(0, &chunks);
+        assert!(!out.saturated);
+        for i in 0..256 {
+            let want: f32 = chunks.iter().map(|c| c[i]).sum();
+            assert!((out.values[i] - want).abs() < 1e-3, "{i}: {} vs {want}", out.values[i]);
+        }
+    }
+
+    #[test]
+    fn round_latency_is_microsecond_class() {
+        let mut a = app(8, 256, 0.0);
+        let chunks = vec![vec![0.5f32; 256]; 8];
+        let out = a.round(0, &chunks);
+        let worst = out.done_at.iter().max().unwrap();
+        let us = to_us(*worst);
+        // FPGA-Switch: ~1-4 µs total (the Fig 8 regime)
+        assert!(us < 6.0, "FPGA-Switch round took {us}µs");
+    }
+
+    #[test]
+    fn all_workers_receive_the_result() {
+        let mut a = app(4, 64, 0.0);
+        let out = a.round(0, &vec![vec![1.0f32; 64]; 4]);
+        assert_eq!(out.done_at.len(), 4);
+        for v in &out.values {
+            assert!((v - 4.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn skew_delays_completion() {
+        let mut fast = app(4, 64, 0.0);
+        let mut slow = app(4, 64, 50.0); // up to 50µs compute imbalance
+        let o1 = fast.round(0, &vec![vec![1.0f32; 64]; 4]);
+        let o2 = slow.round(0, &vec![vec![1.0f32; 64]; 4]);
+        let w1 = *o1.done_at.iter().max().unwrap();
+        let w2 = *o2.done_at.iter().max().unwrap();
+        assert!(w2 > w1 + 10 * US);
+    }
+
+    #[test]
+    fn consecutive_rounds_reuse_switch_state() {
+        let mut a = app(2, 32, 0.0);
+        for round in 1..=4 {
+            let out = a.round((round as u64) * 100 * US, &vec![vec![round as f32; 32]; 2]);
+            for v in &out.values {
+                assert!((v - 2.0 * round as f32).abs() < 1e-3);
+            }
+        }
+        assert_eq!(a.engine.rounds, 4);
+    }
+}

@@ -1,0 +1,185 @@
+//! The §4.5 middle tier with FpgaHub ("CPU-FPGA"): control plane on CPU,
+//! data plane on FPGA (§2.5.3, Fig 5c).
+//!
+//! Receive path: FPGA transport lands the message in FPGA memory; the
+//! split/assemble engine forwards the (small) header to the CPU; the
+//! hardwired compression engine transforms the payload at line rate; the
+//! CPU issues three replica-send descriptors; the hub assembles and ships
+//! them. The CPU never touches a payload byte.
+
+use crate::baselines::cpu_pipeline::{MiddleTierConfig, MiddleTierResult};
+use crate::constants;
+use crate::devices::cpu::{CorePool, SwCost};
+use crate::hub::descriptor::{Descriptor, DescriptorTable, PayloadDest};
+use crate::hub::split_assemble::SplitAssemble;
+use crate::hub::transport::FpgaTransport;
+use crate::metrics::Hist;
+use crate::sim::time::{ns_f, to_us, us_f, Ps};
+use crate::util::Rng;
+
+/// Header size the middle tier programs for its flow (per-flow descriptor).
+pub const MIDDLE_TIER_HEADER_BYTES: u64 = 128;
+
+/// The hub-accelerated middle tier.
+pub struct HubMiddleTier {
+    pub cfg: MiddleTierConfig,
+    pub transport: FpgaTransport,
+    pub table: DescriptorTable,
+    pub splitter: SplitAssemble,
+}
+
+impl HubMiddleTier {
+    pub fn new(cfg: MiddleTierConfig) -> Self {
+        let mut table = DescriptorTable::new(16);
+        table
+            .install(Descriptor {
+                flow: 1,
+                header_bytes: MIDDLE_TIER_HEADER_BYTES,
+                payload_dest: PayloadDest::FpgaMemory,
+            })
+            .expect("fresh table");
+        HubMiddleTier {
+            cfg,
+            transport: FpgaTransport::new(4, 1024),
+            table,
+            splitter: SplitAssemble::new(),
+        }
+    }
+
+    /// FPGA-side per-message data-plane time: transport in, compress at
+    /// line rate, transport out ×replicas (pipelined: the engine streams,
+    /// so the dominant term is the compress pass over the payload).
+    pub fn fpga_data_plane_time(&self) -> Ps {
+        let payload = self.cfg.msg_bytes - MIDDLE_TIER_HEADER_BYTES;
+        let compress = ns_f(payload as f64 * 8.0 / constants::FPGA_COMPRESS_GBPS);
+        self.transport.pipeline_latency() * 2 + compress
+    }
+
+    /// CPU-side per-message control time: parse header + one replica
+    /// descriptor write per copy.
+    pub fn cpu_ctrl_time(&self) -> Ps {
+        SwCost::msg_ctrl() + SwCost::msg_ctrl() * self.cfg.replicas as u64
+    }
+
+    /// Messages/s this configuration can sustain with `cores` control cores.
+    pub fn capacity_msgs(&self, cores: usize) -> f64 {
+        let cpu = cores as f64 / crate::sim::time::to_s(self.cpu_ctrl_time());
+        // FPGA data plane: line-rate streaming — one message every
+        // payload/line-rate seconds
+        let payload = self.cfg.msg_bytes - MIDDLE_TIER_HEADER_BYTES;
+        let fpga = constants::ETH_GBPS * 1e9 / 8.0 / payload as f64;
+        cpu.min(fpga)
+    }
+
+    /// Run the closed-loop experiment (same protocol as the CPU baseline).
+    pub fn run(&mut self, cores: usize, seed: u64) -> MiddleTierResult {
+        let cfg = self.cfg;
+        let mut rng = Rng::new(seed);
+        let mut pool = CorePool::new(cores);
+        let rate = self.capacity_msgs(cores) * cfg.load_frac;
+        let mean_gap_us = 1e6 / rate;
+        let ctrl = self.cpu_ctrl_time();
+        let data = self.fpga_data_plane_time();
+        let mut lat = Hist::new();
+        let mut t_arrive: Ps = 0;
+        let mut processed = 0u64;
+        let mut bytes = 0u64;
+        // FPGA compression engine is a line-rate streaming resource
+        let mut engine_free: Ps = 0;
+        loop {
+            t_arrive += us_f(rng.exponential(mean_gap_us));
+            if t_arrive >= cfg.horizon {
+                break;
+            }
+            // control plane (header only) on the CPU — runs concurrently
+            // with the data plane; the message completes when both are done
+            let (_, _, ctrl_done) = pool.run(t_arrive, ctrl);
+            let data_start = t_arrive.max(engine_free);
+            let data_done = data_start + data;
+            engine_free = data_start
+                + ns_f(
+                    (cfg.msg_bytes - MIDDLE_TIER_HEADER_BYTES) as f64 * 8.0
+                        / constants::FPGA_COMPRESS_GBPS,
+                );
+            let done = ctrl_done.max(data_done);
+            if done <= cfg.horizon {
+                processed += 1;
+                bytes += cfg.msg_bytes;
+                lat.record(to_us(done - t_arrive));
+            }
+        }
+        MiddleTierResult {
+            cores,
+            throughput_gbps: bytes as f64 * 8.0 / 1e9 / crate::sim::time::to_s(cfg.horizon),
+            mean_latency_us: lat.mean(),
+            p99_latency_us: lat.p99(),
+            processed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::CpuOnlyMiddleTier;
+
+    fn hub() -> HubMiddleTier {
+        HubMiddleTier::new(MiddleTierConfig::default())
+    }
+
+    #[test]
+    fn two_cores_reach_near_line_rate() {
+        let r = hub().run(2, 1);
+        assert!(
+            r.throughput_gbps > constants::ETH_GBPS * 0.8,
+            "CPU-FPGA at 2 cores: {} Gb/s",
+            r.throughput_gbps
+        );
+    }
+
+    #[test]
+    fn one_core_is_control_plane_bound() {
+        let mut h = hub();
+        let r1 = h.run(1, 2);
+        let r2 = hub().run(2, 2);
+        assert!(r1.throughput_gbps < r2.throughput_gbps * 0.85,
+            "1 core {} vs 2 cores {}", r1.throughput_gbps, r2.throughput_gbps);
+    }
+
+    #[test]
+    fn more_cores_than_two_do_not_help() {
+        let r2 = hub().run(2, 3);
+        let r8 = hub().run(8, 3);
+        let gain = r8.throughput_gbps / r2.throughput_gbps;
+        assert!(gain < 1.15, "beyond 2 cores the FPGA line rate caps it: {gain}");
+    }
+
+    #[test]
+    fn latency_low_and_flat_in_cores() {
+        let r2 = hub().run(2, 4);
+        let r16 = hub().run(16, 4);
+        assert!(r2.mean_latency_us < 40.0, "{}", r2.mean_latency_us);
+        assert!(
+            (r16.mean_latency_us - r2.mean_latency_us).abs() < 10.0,
+            "hub latency must be flat: {} vs {}",
+            r16.mean_latency_us,
+            r2.mean_latency_us
+        );
+    }
+
+    #[test]
+    fn hub_beats_cpu_only_on_both_axes() {
+        let hub_r = hub().run(2, 5);
+        let cpu_r = CpuOnlyMiddleTier::new(MiddleTierConfig::default()).run(48, 5);
+        assert!(hub_r.throughput_gbps > cpu_r.throughput_gbps);
+        assert!(hub_r.mean_latency_us < cpu_r.mean_latency_us);
+    }
+
+    #[test]
+    fn data_plane_time_is_line_rate_class() {
+        let h = hub();
+        let t = to_us(h.fpga_data_plane_time());
+        // 64 KB at 100 Gb/s ≈ 5.2 µs + 2 transport pipelines
+        assert!((5.0..12.0).contains(&t), "{t}");
+    }
+}

@@ -1,0 +1,170 @@
+//! Fig 2: collective/GEMM interference on the GPU, with and without the
+//! FpgaHub collective offload (§2.2).
+//!
+//! One training step = a stream of GEMMs plus a gradient allreduce.
+//! * **W/ interference** (GPU-only): NCCL occupies 20 SMs and a share of
+//!   HBM bandwidth while it runs; GEMMs issued during the collective see
+//!   the reduced machine and the two serialize against shared resources.
+//! * **W/o interference** (FpgaHub): the GPU rings one doorbell (a posted
+//!   store, §2.2.3); the hub runs the collective on its own fabric and
+//!   wire; GEMMs see the full machine and fully overlap.
+
+use crate::constants;
+use crate::devices::gpu::Gpu;
+use crate::hub::transport::FpgaTransport;
+use crate::sim::time::{ns_f, to_us, Ps};
+
+/// Step workload description.
+#[derive(Clone, Copy, Debug)]
+pub struct LlmStepConfig {
+    pub gemm_m: u64,
+    pub gemm_n: u64,
+    pub gemm_k: u64,
+    pub gemms_per_step: u32,
+    pub allreduce_bytes: u64,
+    pub workers: u32,
+}
+
+impl Default for LlmStepConfig {
+    fn default() -> Self {
+        LlmStepConfig {
+            gemm_m: 4096,
+            gemm_n: 4096,
+            gemm_k: 4096,
+            gemms_per_step: 24,
+            // sized so a healthy step is compute-bound (collective hidden
+            // under the GEMM stream) — the regime the paper's Fig 2 plots
+            allreduce_bytes: 16 << 20,
+            workers: 8,
+        }
+    }
+}
+
+/// One mode's timing breakdown.
+#[derive(Clone, Copy, Debug)]
+pub struct LlmStepReport {
+    pub gemm_time: Ps,
+    pub collective_time: Ps,
+    pub step_time: Ps,
+    pub gemm_slowdown_pct: f64,
+}
+
+/// GPU-only step: collective on the GPU, interference on.
+pub fn step_with_interference(gpu: &Gpu, cfg: &LlmStepConfig) -> LlmStepReport {
+    let clean_gemm = gpu.gemm_time(cfg.gemm_m, cfg.gemm_n, cfg.gemm_k, 1.0, 1.0)
+        * cfg.gemms_per_step as u64;
+    // collectives and GEMMs co-run: GEMMs see the reduced machine while the
+    // collective is in flight
+    let gemm = gpu.gemm_time(
+        cfg.gemm_m,
+        cfg.gemm_n,
+        cfg.gemm_k,
+        gpu.sm_frac_with_nccl(),
+        gpu.bw_frac_with_nccl(),
+    ) * cfg.gemms_per_step as u64;
+    // NCCL ring over the GPU fabric; effective bus bw also suffers from the
+    // shared HBM (§2.2.2 figure 2's point)
+    let coll = gpu.ring_allreduce_time(
+        cfg.allreduce_bytes,
+        cfg.workers,
+        constants::ETH_GBPS * 0.85,
+    );
+    // overlap: the longer of the two streams dominates, but both are
+    // degraded while overlapping
+    let step = gemm.max(coll);
+    LlmStepReport {
+        gemm_time: gemm,
+        collective_time: coll,
+        step_time: step,
+        gemm_slowdown_pct: (gemm as f64 / clean_gemm as f64 - 1.0) * 100.0,
+    }
+}
+
+/// FpgaHub step: collective offloaded; GPU sees the whole machine.
+pub fn step_with_offload(
+    gpu: &Gpu,
+    cfg: &LlmStepConfig,
+    transport: &FpgaTransport,
+) -> LlmStepReport {
+    let gemm = gpu.gemm_time(cfg.gemm_m, cfg.gemm_n, cfg.gemm_k, 1.0, 1.0)
+        * cfg.gemms_per_step as u64;
+    // hub-side ring: FPGA transport pipeline per hop + wire at full rate;
+    // the GPU only pays one posted doorbell write (folded into transport)
+    let wire = gpu.ring_allreduce_time(cfg.allreduce_bytes, cfg.workers, constants::ETH_GBPS);
+    let coll = wire + transport.pipeline_latency() * 2 + ns_f(constants::MMIO_WRITE_POST_NS);
+    LlmStepReport {
+        gemm_time: gemm,
+        collective_time: coll,
+        step_time: gemm.max(coll), // true full overlap
+        gemm_slowdown_pct: 0.0,
+    }
+}
+
+/// Convenience: both modes side by side (the two bars of Fig 2).
+pub fn compare(cfg: &LlmStepConfig) -> (LlmStepReport, LlmStepReport) {
+    let gpu = Gpu::h100();
+    let transport = FpgaTransport::new(1, 64);
+    (step_with_interference(&gpu, cfg), step_with_offload(&gpu, cfg, &transport))
+}
+
+/// Human-readable ratio line used by the harness.
+pub fn summary(cfg: &LlmStepConfig) -> String {
+    let (with_if, without) = compare(cfg);
+    format!(
+        "w/ interference: step {:.1}µs (gemm +{:.1}%) | w/ offload: step {:.1}µs | speedup {:.2}x",
+        to_us(with_if.step_time),
+        with_if.gemm_slowdown_pct,
+        to_us(without.step_time),
+        with_if.step_time as f64 / without.step_time as f64
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offload_speeds_up_the_step() {
+        let (with_if, without) = compare(&LlmStepConfig::default());
+        assert!(without.step_time < with_if.step_time);
+        let speedup = with_if.step_time as f64 / without.step_time as f64;
+        assert!((1.05..2.0).contains(&speedup), "speedup {speedup}");
+    }
+
+    #[test]
+    fn gemm_slowdown_matches_sm_theft() {
+        let (with_if, without) = compare(&LlmStepConfig::default());
+        // 20/132 SMs stolen => ≥15% GEMM degradation while interfering
+        assert!(with_if.gemm_slowdown_pct > 10.0, "{}", with_if.gemm_slowdown_pct);
+        assert_eq!(without.gemm_slowdown_pct, 0.0);
+    }
+
+    #[test]
+    fn offloaded_collective_not_slower_than_nccl() {
+        let (with_if, without) = compare(&LlmStepConfig::default());
+        // hub wire rate ≥ NCCL's effective rate (no SM/HBM contention tax)
+        assert!(without.collective_time <= with_if.collective_time);
+    }
+
+    #[test]
+    fn compute_bound_configs_fully_hide_collectives() {
+        let cfg = LlmStepConfig {
+            gemms_per_step: 200,
+            allreduce_bytes: 16 << 20,
+            ..Default::default()
+        };
+        let (_, without) = compare(&cfg);
+        assert_eq!(without.step_time, without.gemm_time, "collective fully hidden");
+    }
+
+    #[test]
+    fn communication_bound_configs_expose_the_wire() {
+        let cfg = LlmStepConfig {
+            gemms_per_step: 1,
+            allreduce_bytes: 1 << 30,
+            ..Default::default()
+        };
+        let (_, without) = compare(&cfg);
+        assert_eq!(without.step_time, without.collective_time);
+    }
+}

@@ -1,0 +1,11 @@
+//! Applications built *on* the hub's public API — the workloads §4 evaluates.
+
+pub mod allreduce;
+pub mod block_storage;
+pub mod llm_step;
+pub mod storage_fetch;
+
+pub use allreduce::FpgaSwitchAllreduce;
+pub use block_storage::HubMiddleTier;
+pub use llm_step::{LlmStepConfig, LlmStepReport};
+pub use storage_fetch::run_fetch_demo;

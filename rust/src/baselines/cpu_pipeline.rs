@@ -1,0 +1,182 @@
+//! Fig 10 baseline ("CPU-only"): the cloud block-storage middle tier of
+//! §4.5 entirely in software — receive write request, LZ4-compress the
+//! payload, replicate to three disk servers.
+//!
+//! Two effects shape the figure:
+//!  * a single core compresses at only 1.6 Gb/s, so throughput scales ~
+//!    linearly in cores and still cannot reach line rate with all 48;
+//!  * per-message service time *grows* with active cores (shared memory
+//!    bandwidth/LLC contention on the payload-heavy pipeline), so average
+//!    latency rises as cores are added — the paper's second observation.
+
+use crate::devices::cpu::{CorePool, SwCost};
+use crate::metrics::Hist;
+use crate::sim::time::{to_us, us_f, Ps};
+use crate::util::Rng;
+
+/// Workload/run parameters shared by baseline and hub variants.
+#[derive(Clone, Copy, Debug)]
+pub struct MiddleTierConfig {
+    pub msg_bytes: u64,
+    pub replicas: u32,
+    /// compression ratio achieved on the payload (measured from the real
+    /// kernel by the harness; bytes_out = ratio * bytes_in)
+    pub compress_ratio: f64,
+    pub horizon: Ps,
+    /// offered load as a fraction of the configuration's capacity
+    pub load_frac: f64,
+}
+
+impl Default for MiddleTierConfig {
+    fn default() -> Self {
+        MiddleTierConfig {
+            msg_bytes: 64 * 1024,
+            replicas: 3,
+            compress_ratio: 0.45,
+            horizon: crate::sim::time::S / 10,
+            load_frac: 0.9,
+        }
+    }
+}
+
+/// Result row for one core count.
+#[derive(Clone, Copy, Debug)]
+pub struct MiddleTierResult {
+    pub cores: usize,
+    pub throughput_gbps: f64,
+    pub mean_latency_us: f64,
+    pub p99_latency_us: f64,
+    pub processed: u64,
+}
+
+/// Memory-contention inflation on payload processing: each additional
+/// active core adds ~1.2% to per-byte cost (shared LLC + DRAM channels).
+pub fn contention_factor(cores: usize) -> f64 {
+    1.0 + 0.012 * (cores.saturating_sub(1)) as f64
+}
+
+/// The CPU-only middle tier.
+pub struct CpuOnlyMiddleTier {
+    pub cfg: MiddleTierConfig,
+}
+
+impl CpuOnlyMiddleTier {
+    pub fn new(cfg: MiddleTierConfig) -> Self {
+        CpuOnlyMiddleTier { cfg }
+    }
+
+    /// Per-message service time on one core with `cores` active.
+    pub fn service_time(&self, cores: usize) -> Ps {
+        let infl = contention_factor(cores);
+        let recv = SwCost::msg_ctrl();
+        let compress =
+            (SwCost::lz4(self.cfg.msg_bytes) as f64 * infl) as Ps;
+        let out_bytes = (self.cfg.msg_bytes as f64 * self.cfg.compress_ratio) as u64;
+        // 3 replica sends: control + memcpy of the compressed payload each
+        let per_replica = SwCost::msg_ctrl() + ((SwCost::memcpy(out_bytes) as f64 * infl) as Ps);
+        recv + compress + per_replica * self.cfg.replicas as u64
+    }
+
+    /// Capacity in messages/s for a core count.
+    pub fn capacity_msgs(&self, cores: usize) -> f64 {
+        cores as f64 / crate::sim::time::to_s(self.service_time(cores))
+    }
+
+    /// Closed-loop run at `load_frac` of capacity with Poisson arrivals.
+    pub fn run(&self, cores: usize, seed: u64) -> MiddleTierResult {
+        let cfg = &self.cfg;
+        let mut rng = Rng::new(seed);
+        let mut pool = CorePool::new(cores);
+        let service = self.service_time(cores);
+        let rate = self.capacity_msgs(cores) * cfg.load_frac; // msgs/s
+        let mean_gap_us = 1e6 / rate;
+        let mut lat = Hist::new();
+        let mut t_arrive: Ps = 0;
+        let mut processed = 0u64;
+        let mut bytes = 0u64;
+        loop {
+            t_arrive += us_f(rng.exponential(mean_gap_us));
+            if t_arrive >= cfg.horizon {
+                break;
+            }
+            let (_, _, done) = pool.run(t_arrive, service);
+            if done <= cfg.horizon {
+                processed += 1;
+                bytes += cfg.msg_bytes;
+                lat.record(to_us(done - t_arrive));
+            }
+        }
+        MiddleTierResult {
+            cores,
+            throughput_gbps: bytes as f64 * 8.0 / 1e9 / crate::sim::time::to_s(cfg.horizon),
+            mean_latency_us: lat.mean(),
+            p99_latency_us: lat.p99(),
+            processed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constants;
+
+    fn tier() -> CpuOnlyMiddleTier {
+        CpuOnlyMiddleTier::new(MiddleTierConfig::default())
+    }
+
+    #[test]
+    fn single_core_throughput_below_2_gbps() {
+        let r = tier().run(1, 1);
+        // one core ≈ 1.6 Gb/s compression minus control overheads, ×0.9 load
+        assert!(r.throughput_gbps < 2.0, "{}", r.throughput_gbps);
+        assert!(r.throughput_gbps > 0.8, "{}", r.throughput_gbps);
+    }
+
+    #[test]
+    fn full_socket_cannot_reach_line_rate() {
+        let r = tier().run(constants::CPU_CORES as usize, 2);
+        assert!(
+            r.throughput_gbps < constants::ETH_GBPS * 0.8,
+            "CPU-only at 48 cores must stay under line rate: {}",
+            r.throughput_gbps
+        );
+        assert!(r.throughput_gbps > 30.0, "{}", r.throughput_gbps);
+    }
+
+    #[test]
+    fn throughput_scales_roughly_linearly() {
+        let r8 = tier().run(8, 3);
+        let r16 = tier().run(16, 3);
+        let ratio = r16.throughput_gbps / r8.throughput_gbps;
+        assert!((1.6..2.2).contains(&ratio), "scaling ratio {ratio}");
+    }
+
+    #[test]
+    fn latency_grows_with_cores_at_moderate_load() {
+        // at moderate load queueing is negligible for every core count, so
+        // the shared-memory contention inflation is what the latency curve
+        // shows — the paper's Fig 10b effect
+        let cfg = MiddleTierConfig { load_frac: 0.35, ..Default::default() };
+        let r4 = CpuOnlyMiddleTier::new(cfg).run(4, 4);
+        let r48 = CpuOnlyMiddleTier::new(cfg).run(48, 4);
+        assert!(
+            r48.mean_latency_us > r4.mean_latency_us * 1.2,
+            "latency must rise with contention: {} vs {}",
+            r48.mean_latency_us,
+            r4.mean_latency_us
+        );
+    }
+
+    #[test]
+    fn latency_is_hundreds_of_microseconds() {
+        let r = tier().run(8, 5);
+        assert!((250.0..1500.0).contains(&r.mean_latency_us), "{}", r.mean_latency_us);
+    }
+
+    #[test]
+    fn contention_factor_monotone() {
+        assert_eq!(contention_factor(1), 1.0);
+        assert!(contention_factor(48) > contention_factor(8));
+    }
+}

@@ -1,0 +1,103 @@
+//! Fig 7b baseline ("W/o offloading"): cross-network inter-GPU messaging
+//! staged through the CPUs — GPU→CPU(RDMA)→network→CPU(RDMA)→GPU.
+//!
+//! Cost composition per message (one direction):
+//!   GPU notifies its CPU (kernel completion / flag poll)   — jittery
+//!   CPU posts an RDMA send (verbs, doorbell)               — jittery
+//!   NIC wire + switch                                       — deterministic
+//!   remote CPU consumes completion, context switch          — jittery
+//!   remote CPU copies/ signals into GPU memory over PCIe    — bw-bound
+
+use crate::constants;
+use crate::net::EthLink;
+use crate::pcie::PcieLink;
+use crate::sim::time::{us_f, Ps};
+use crate::util::Rng;
+
+/// The staged path's per-hop state.
+pub struct CpuRdmaPath {
+    rng: Rng,
+    pub eth: EthLink,
+    pub pcie_local: PcieLink,
+    pub pcie_remote: PcieLink,
+    pub switch_latency: Ps,
+    pub messages: u64,
+}
+
+impl CpuRdmaPath {
+    pub fn new(rng: Rng, switch_latency: Ps) -> Self {
+        CpuRdmaPath {
+            rng,
+            eth: EthLink::new_100g(),
+            pcie_local: PcieLink::gen3_x16(),
+            pcie_remote: PcieLink::gen3_x16(),
+            switch_latency,
+            messages: 0,
+        }
+    }
+
+    /// One GPU→remote-GPU message of `bytes`; returns arrival time.
+    pub fn send(&mut self, now: Ps, bytes: u64) -> Ps {
+        self.messages += 1;
+        // 1. GPU -> CPU notification (CUDA runtime on CPU, §2.2.2)
+        let (m, s) = constants::GPU_KERNEL_NOTIFY_US;
+        let t = now + us_f(self.rng.normal_trunc(m, s, m * 0.4));
+        // 2. GPU memory -> host staging buffer over PCIe
+        let (_, t) = { let d = self.pcie_local.reserve(t, bytes); d };
+        // 3. CPU posts RDMA send
+        let (m, s) = constants::RDMA_POST_US;
+        let t = t + us_f(self.rng.normal_trunc(m, s, m * 0.4));
+        // 4. wire + switch
+        let (_, t) = { let d = self.eth.transmit(t, bytes); d };
+        let t = t + self.switch_latency;
+        // 5. remote CPU network stack wakes up and consumes the message
+        let (m, s) = constants::CPU_NET_STACK_US;
+        let t = t + us_f(self.rng.lognormal(m, s / m));
+        // 6. context switch to the app thread
+        let (m, s) = constants::CPU_CTX_SWITCH_US;
+        let t = t + us_f(self.rng.normal_trunc(m, s, m * 0.3));
+        // 7. staging buffer -> remote GPU memory over PCIe
+        let (_, t) = { let d = self.pcie_remote.reserve(t, bytes); d };
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Hist;
+    use crate::sim::time::{to_us, US};
+
+    #[test]
+    fn staged_path_is_tens_of_microseconds() {
+        let mut p = CpuRdmaPath::new(Rng::new(1), 1500 * crate::sim::time::NS);
+        let mut h = Hist::new();
+        for i in 0..2000u64 {
+            let t0 = i * 200 * US; // spaced: no queueing
+            h.record(to_us(p.send(t0, 4096) - t0));
+        }
+        let mean = h.mean();
+        assert!((12.0..40.0).contains(&mean), "staged mean {mean}µs");
+    }
+
+    #[test]
+    fn jitter_is_software_dominated() {
+        let mut p = CpuRdmaPath::new(Rng::new(2), 1500 * crate::sim::time::NS);
+        let mut h = Hist::new();
+        for i in 0..2000u64 {
+            let t0 = i * 200 * US;
+            h.record(to_us(p.send(t0, 4096) - t0));
+        }
+        // long-tailed: p99 well above the median
+        assert!(h.p99() > h.p50() * 1.2, "p99 {} p50 {}", h.p99(), h.p50());
+    }
+
+    #[test]
+    fn larger_messages_take_longer() {
+        let mut a = CpuRdmaPath::new(Rng::new(3), 0);
+        let mut b = CpuRdmaPath::new(Rng::new(3), 0);
+        let t_small = a.send(0, 4096);
+        let t_big = b.send(0, 1 << 20);
+        assert!(t_big > t_small);
+    }
+}

@@ -1,0 +1,102 @@
+//! Fig 8 baseline ("CPU-Switch"): SwitchML-style in-network aggregation
+//! where each host's *CPU* runs the custom network transport (§2.3.1,
+//! Fig 3a). Per aggregation round each worker pays: CPU stack send →
+//! NIC → wire → switch pipeline → wire → NIC → CPU stack receive.
+//!
+//! The contrast with `hub::transport` + `hub::collective` (FPGA-Switch) is
+//! the entire point of the figure: the switch is identical in both designs;
+//! only the host transport differs.
+
+use crate::constants;
+use crate::net::p4::P4Switch;
+use crate::net::EthLink;
+use crate::sim::time::{us_f, Ps};
+use crate::util::Rng;
+
+/// One CPU host participating in switch aggregation.
+pub struct CpuSwitchHost {
+    rng: Rng,
+    pub nic_link: EthLink,
+    pub rounds: u64,
+}
+
+impl CpuSwitchHost {
+    pub fn new(rng: Rng) -> Self {
+        CpuSwitchHost { rng, nic_link: EthLink::new_100g(), rounds: 0 }
+    }
+
+    /// CPU-side cost to push one aggregation chunk into the NIC (DPDK/RDMA
+    /// custom stack, §2.3: "high overhead from the CPU-initialized network
+    /// stack").
+    pub fn tx_stack_cost(&mut self) -> Ps {
+        let (m, s) = constants::CPU_NET_STACK_US;
+        us_f(self.rng.lognormal(m, s / m))
+    }
+
+    /// CPU-side cost to consume the multicast result.
+    pub fn rx_stack_cost(&mut self) -> Ps {
+        let (m, s) = constants::CPU_NET_STACK_US;
+        let stack = self.rng.lognormal(m, s / m);
+        let (cm, cs) = constants::CPU_CTX_SWITCH_US;
+        us_f(stack + self.rng.normal_trunc(cm, cs, cm * 0.3))
+    }
+
+    /// Latency of one full round for this worker: send chunk, switch
+    /// aggregates (waits for stragglers — `straggler_lag` models the other
+    /// workers' arrival spread), multicast back, receive.
+    pub fn aggregation_round(
+        &mut self,
+        now: Ps,
+        chunk_bytes: u64,
+        switch: &P4Switch,
+        straggler_lag: Ps,
+    ) -> Ps {
+        self.rounds += 1;
+        let t = now + self.tx_stack_cost();
+        let (_, t) = { let d = self.nic_link.transmit(t, chunk_bytes); d };
+        let t = t.max(now + straggler_lag) + switch.pipeline_latency();
+        // multicast back over the same link class
+        let (_, t) = { let d = self.nic_link.transmit(t, chunk_bytes); d };
+        t + self.rx_stack_cost()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Hist;
+    use crate::sim::time::{to_us, US};
+
+    #[test]
+    fn cpu_switch_round_is_order_of_magnitude_over_fpga() {
+        let sw = P4Switch::tofino();
+        let mut host = CpuSwitchHost::new(Rng::new(1));
+        let mut h = Hist::new();
+        for i in 0..2000u64 {
+            let t0 = i * 500 * US;
+            h.record(to_us(host.aggregation_round(t0, 1024, &sw, 0) - t0));
+        }
+        // the paper's Fig 8: FPGA-Switch ≈ 1.2 µs, CPU-Switch ≈ 10×
+        assert!(h.mean() > 10.0, "CPU-Switch mean {}", h.mean());
+        assert!(h.mean() < 60.0, "CPU-Switch mean {}", h.mean());
+    }
+
+    #[test]
+    fn straggler_lag_extends_round() {
+        let sw = P4Switch::tofino();
+        let mut a = CpuSwitchHost::new(Rng::new(2));
+        let mut b = CpuSwitchHost::new(Rng::new(2));
+        let fast = a.aggregation_round(0, 1024, &sw, 0);
+        let slow = b.aggregation_round(0, 1024, &sw, 500 * US);
+        assert!(slow >= fast + 400 * US);
+    }
+
+    #[test]
+    fn stack_costs_are_jittery() {
+        let mut host = CpuSwitchHost::new(Rng::new(3));
+        let xs: Vec<f64> = (0..200).map(|_| to_us(host.tx_stack_cost())).collect();
+        let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = xs.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max > min * 1.3, "no jitter? min {min} max {max}");
+    }
+}

@@ -1,0 +1,12 @@
+//! The paper's comparison points, implemented for real: every figure in §4
+//! is FpgaHub vs one of these CPU-centric designs.
+
+pub mod cpu_pipeline;
+pub mod cpu_rdma;
+pub mod cpu_switch;
+pub mod spdk;
+
+pub use cpu_pipeline::CpuOnlyMiddleTier;
+pub use cpu_rdma::CpuRdmaPath;
+pub use cpu_switch::CpuSwitchHost;
+pub use spdk::SpdkControlPlane;

@@ -1,0 +1,126 @@
+//! Fig 9 baseline: the CPU-based NVMe control plane over SPDK (§4.4).
+//!
+//! Each core runs a polled submission/completion loop: generate a 4 KB
+//! random I/O, write the SQ entry in host DRAM, ring the doorbell, poll the
+//! CQ. The per-command CPU cost bounds a core's IOPS; the SSD array bounds
+//! the platform. The experiment sweeps core count and reports achieved
+//! IOPS — the paper's observation is saturation at ~5 cores.
+
+use crate::devices::cpu::{CorePool, SwCost};
+use crate::nvme::queue::NvmeOp;
+use crate::nvme::ssd::SsdArray;
+use crate::sim::time::Ps;
+
+/// Outcome of a fixed-duration saturation run.
+#[derive(Clone, Copy, Debug)]
+pub struct SpdkRunResult {
+    pub completed: u64,
+    pub achieved_iops: f64,
+    pub cpu_bound: bool,
+}
+
+/// The CPU-side control plane.
+pub struct SpdkControlPlane {
+    pub cores: CorePool,
+}
+
+impl SpdkControlPlane {
+    pub fn new(cores: usize) -> Self {
+        SpdkControlPlane { cores: CorePool::new(cores) }
+    }
+
+    /// Drive `array` with `op` commands as fast as the cores allow, for
+    /// `horizon` simulated time. Commands round-robin across SSDs.
+    ///
+    /// The loop is closed-form per command: a core is occupied for the
+    /// command's CPU cost, then the command enters the array. Whichever of
+    /// (cores, array) saturates first caps throughput — exactly the Fig 9
+    /// crossover structure.
+    pub fn run(&mut self, array: &mut SsdArray, op: NvmeOp, horizon: Ps) -> SpdkRunResult {
+        let cpu_cost = SwCost::spdk_cmd(matches!(op, NvmeOp::Write));
+        let n_ssds = array.len();
+        let mut completed = 0u64;
+        let mut i = 0usize;
+        loop {
+            // next core free to build+submit+handle one command
+            let (_, start, cpu_done) = self.cores.run(self.cores.earliest_free(), cpu_cost);
+            if start >= horizon {
+                break;
+            }
+            let done = array.process(cpu_done, i % n_ssds, op);
+            if done <= horizon {
+                completed += 1;
+            }
+            i += 1;
+            if i as u64 > 200_000_000 {
+                break; // safety valve
+            }
+        }
+        let secs = crate::sim::time::to_s(horizon);
+        let achieved = completed as f64 / secs;
+        let core_capacity =
+            self.cores.cores() as f64 / crate::sim::time::to_s(cpu_cost);
+        SpdkRunResult {
+            completed,
+            achieved_iops: achieved,
+            cpu_bound: core_capacity < array.array_iops_cap(op),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constants;
+    use crate::sim::time::S;
+    use crate::util::Rng;
+
+    fn run_with(cores: usize, op: NvmeOp) -> SpdkRunResult {
+        let mut rng = Rng::new(42);
+        let mut array = SsdArray::new(10, &mut rng);
+        let mut cp = SpdkControlPlane::new(cores);
+        cp.run(&mut array, op, S / 10)
+    }
+
+    #[test]
+    fn one_core_is_cpu_bound() {
+        let r = run_with(1, NvmeOp::Read);
+        assert!(r.cpu_bound);
+        let per_core = 1e6 / constants::SPDK_READ_CMD_CPU_US;
+        assert!((r.achieved_iops - per_core).abs() / per_core < 0.1,
+            "1-core iops {} vs {per_core}", r.achieved_iops);
+    }
+
+    #[test]
+    fn many_cores_saturate_the_array_not_the_cpu() {
+        let r = run_with(8, NvmeOp::Read);
+        assert!(!r.cpu_bound);
+        let cap = constants::SSD_ARRAY_READ_IOPS_CAP;
+        assert!(r.achieved_iops > cap * 0.9, "8-core iops {}", r.achieved_iops);
+        assert!(r.achieved_iops < cap * 1.05);
+    }
+
+    #[test]
+    fn throughput_monotone_in_cores_until_saturation() {
+        let mut prev = 0.0;
+        for cores in [1, 2, 3, 4, 5] {
+            let r = run_with(cores, NvmeOp::Read);
+            assert!(
+                r.achieved_iops >= prev * 0.99,
+                "{cores} cores: {} < prev {prev}",
+                r.achieved_iops
+            );
+            prev = r.achieved_iops;
+        }
+    }
+
+    #[test]
+    fn writes_need_about_five_cores_too() {
+        // paper: "it requires 5 CPU cores to saturate ... for both read and
+        // write workloads"
+        let r4 = run_with(4, NvmeOp::Write);
+        let r6 = run_with(6, NvmeOp::Write);
+        assert!(r4.cpu_bound, "4 cores still CPU-bound for writes");
+        assert!(!r6.cpu_bound, "6 cores saturate the write array");
+    }
+}

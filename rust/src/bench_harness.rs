@@ -1,0 +1,70 @@
+//! Self-contained benchmark harness (`criterion` is unavailable offline —
+//! DESIGN.md §6): warmup + timed iterations, mean/p50/p99 wallclock
+//! reporting, consistent output format across all `rust/benches/*`.
+
+use std::time::Instant;
+
+use crate::metrics::Hist;
+
+/// Timing result of one benchmark case.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} iters={:<4} mean={:>9.3}ms p50={:>9.3}ms p99={:>9.3}ms",
+            self.name, self.iters, self.mean_ms, self.p50_ms, self.p99_ms
+        );
+    }
+}
+
+/// Run `f` for `warmup` + `iters` iterations and report wallclock stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut h = Hist::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        h.record(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: h.mean(),
+        p50_ms: h.p50(),
+        p99_ms: h.p99(),
+    };
+    r.print();
+    r
+}
+
+/// Standard banner so `cargo bench` output groups cleanly per figure.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let mut n = 0u64;
+        let r = bench("spin", 2, 20, || {
+            for i in 0..10_000 {
+                n = n.wrapping_add(i);
+            }
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.p99_ms >= r.p50_ms);
+    }
+}

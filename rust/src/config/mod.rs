@@ -1,0 +1,11 @@
+//! Configuration: a TOML-subset parser (no `serde`/`toml` offline —
+//! DESIGN.md §6), a minimal JSON reader for `artifacts/index.json`, and the
+//! typed platform/experiment configs the launcher consumes.
+
+pub mod json;
+pub mod parse;
+pub mod platform;
+
+pub use json::JsonValue;
+pub use parse::TomlDoc;
+pub use platform::{ExperimentConfig, PlatformConfig};

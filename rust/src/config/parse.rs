@@ -1,0 +1,231 @@
+//! A TOML-subset parser: `[section]` headers, `key = value` pairs with
+//! string / integer / float / boolean values, `#` comments. That is the
+//! entire subset our configs use; anything else is a parse error (fail
+//! loudly, never guess).
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse errors carry the line number.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A parsed document: section -> key -> value. Top-level keys live under
+/// the "" section.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(ParseError {
+                    line: line_no,
+                    msg: "unterminated section header".into(),
+                })?;
+                current = name.trim().to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or(ParseError {
+                line: line_no,
+                msg: format!("expected `key = value`, got '{line}'"),
+            })?;
+            let key = key.trim().to_string();
+            if key.is_empty() {
+                return Err(ParseError { line: line_no, msg: "empty key".into() });
+            }
+            let value = parse_value(value.trim()).map_err(|msg| ParseError { line: line_no, msg })?;
+            doc.sections.entry(current.clone()).or_default().insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# platform file
+seed = 42
+name = "testbed"
+
+[gpu]
+sms = 132
+tflops = 989.0
+offload = true
+
+[fpga]  # inline comment
+board = "u50"
+freq_mhz = 200
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(d.i64_or("", "seed", 0), 42);
+        assert_eq!(d.str_or("", "name", ""), "testbed");
+        assert_eq!(d.i64_or("gpu", "sms", 0), 132);
+        assert_eq!(d.f64_or("gpu", "tflops", 0.0), 989.0);
+        assert!(d.bool_or("gpu", "offload", false));
+        assert_eq!(d.str_or("fpga", "board", ""), "u50");
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let d = TomlDoc::parse("x = 5").unwrap();
+        assert_eq!(d.f64_or("", "x", 0.0), 5.0);
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let d = TomlDoc::parse("").unwrap();
+        assert_eq!(d.i64_or("nope", "nothing", 7), 7);
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let d = TomlDoc::parse("big = 1_000_000").unwrap();
+        assert_eq!(d.i64_or("", "big", 0), 1_000_000);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let d = TomlDoc::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(d.str_or("", "tag", ""), "a#b");
+    }
+
+    #[test]
+    fn error_reports_line_number() {
+        let err = TomlDoc::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn unterminated_section_rejected() {
+        assert!(TomlDoc::parse("[oops\n").is_err());
+    }
+
+    #[test]
+    fn unterminated_string_rejected() {
+        assert!(TomlDoc::parse("s = \"abc\n").is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! Typed platform + experiment configuration: the launcher's contract.
+//!
+//! Every knob defaults to `constants::*` (the paper's testbed) and can be
+//! overridden from a TOML file — `configs/default.toml` documents them all.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::parse::TomlDoc;
+use crate::constants;
+use crate::devices::fpga::FpgaBoard;
+
+/// The simulated platform (one §4.1 server/cluster).
+#[derive(Clone, Debug)]
+pub struct PlatformConfig {
+    pub seed: u64,
+    pub workers: u32,
+    pub cpu_cores: u32,
+    pub num_ssds: usize,
+    pub fpga_board: FpgaBoard,
+    pub eth_gbps: f64,
+    pub artifacts_dir: PathBuf,
+    pub results_dir: PathBuf,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        PlatformConfig {
+            seed: 0xF26A,
+            workers: 8,
+            cpu_cores: constants::CPU_CORES,
+            num_ssds: 10,
+            fpga_board: FpgaBoard::AlveoU50,
+            eth_gbps: constants::ETH_GBPS,
+            artifacts_dir: PathBuf::from("artifacts"),
+            results_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+impl PlatformConfig {
+    pub fn from_doc(doc: &TomlDoc) -> anyhow::Result<Self> {
+        let d = PlatformConfig::default();
+        let board = match doc.str_or("fpga", "board", "u50").as_str() {
+            "u50" => FpgaBoard::AlveoU50,
+            "u280" => FpgaBoard::AlveoU280,
+            "vpk180" => FpgaBoard::Vpk180,
+            other => anyhow::bail!("unknown fpga board '{other}' (u50|u280|vpk180)"),
+        };
+        Ok(PlatformConfig {
+            seed: doc.i64_or("", "seed", d.seed as i64) as u64,
+            workers: doc.i64_or("cluster", "workers", d.workers as i64) as u32,
+            cpu_cores: doc.i64_or("cpu", "cores", d.cpu_cores as i64) as u32,
+            num_ssds: doc.i64_or("ssd", "count", d.num_ssds as i64) as usize,
+            fpga_board: board,
+            eth_gbps: doc.f64_or("net", "gbps", d.eth_gbps),
+            artifacts_dir: PathBuf::from(doc.str_or("", "artifacts_dir", "artifacts")),
+            results_dir: PathBuf::from(doc.str_or("", "results_dir", "results")),
+        })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        Self::from_doc(&TomlDoc::load(path)?)
+    }
+}
+
+/// Per-experiment knobs (iteration counts etc.).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub platform: PlatformConfig,
+    /// samples per latency distribution
+    pub samples: usize,
+    /// training steps for the e2e example
+    pub train_steps: usize,
+    pub csv: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            platform: PlatformConfig::default(),
+            samples: 5_000,
+            train_steps: 200,
+            csv: true,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_doc(doc: &TomlDoc) -> anyhow::Result<Self> {
+        Ok(ExperimentConfig {
+            platform: PlatformConfig::from_doc(doc)?,
+            samples: doc.i64_or("experiment", "samples", 5_000) as usize,
+            train_steps: doc.i64_or("experiment", "train_steps", 200) as usize,
+            csv: doc.bool_or("experiment", "csv", true),
+        })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        Self::from_doc(&TomlDoc::load(path)?)
+    }
+
+    /// Quick variant for tests/benches: fewer samples, no CSV.
+    pub fn quick() -> Self {
+        ExperimentConfig { samples: 500, train_steps: 20, csv: false, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_testbed() {
+        let p = PlatformConfig::default();
+        assert_eq!(p.workers, 8);
+        assert_eq!(p.num_ssds, 10);
+        assert_eq!(p.cpu_cores, 48);
+        assert_eq!(p.fpga_board, FpgaBoard::AlveoU50);
+    }
+
+    #[test]
+    fn overrides_from_toml() {
+        let doc = TomlDoc::parse(
+            "seed = 7\n[cluster]\nworkers = 4\n[fpga]\nboard = \"u280\"\n[net]\ngbps = 400.0\n",
+        )
+        .unwrap();
+        let p = PlatformConfig::from_doc(&doc).unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.workers, 4);
+        assert_eq!(p.fpga_board, FpgaBoard::AlveoU280);
+        assert_eq!(p.eth_gbps, 400.0);
+    }
+
+    #[test]
+    fn bad_board_rejected() {
+        let doc = TomlDoc::parse("[fpga]\nboard = \"zynq\"\n").unwrap();
+        assert!(PlatformConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn experiment_knobs() {
+        let doc = TomlDoc::parse("[experiment]\nsamples = 99\ntrain_steps = 3\ncsv = false\n")
+            .unwrap();
+        let e = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(e.samples, 99);
+        assert_eq!(e.train_steps, 3);
+        assert!(!e.csv);
+    }
+}

@@ -1,0 +1,178 @@
+//! Calibration constants for every device model, with provenance.
+//!
+//! Each constant is either taken directly from the paper (§2 potentials, §4
+//! setup) or from the cited datasheets (U50/U280/VPK180, D7-P5510, Tofino,
+//! H100/A100). Experiments read these through `config::PlatformConfig`, which
+//! defaults to this file but can override any of them from a TOML config —
+//! the "huge design space exploration" knob the paper's conclusion asks for.
+
+/// FPGA fabric clock the paper assumes ("an FPGA design typically achieves
+/// a frequency of 200MHz", §2.1).
+pub const FPGA_FREQ_MHZ: u64 = 200;
+
+// ---------------------------------------------------------------- PCIe ----
+
+/// Effective PCIe Gen3 x16 bandwidth (testbed FPGA is UltraScale+, §4.1).
+pub const PCIE_GEN3_X16_GBPS: f64 = 100.0; // ~12.5 GB/s effective
+/// Per-DMA-descriptor setup on the FPGA QDMA engine.
+pub const PCIE_DMA_SETUP_NS: f64 = 150.0;
+
+/// MMIO read latencies per initiator→target path (Fig 7a calibration).
+/// GPU→FPGA rides a pure-hardware path (GPUDirect BAR mapping); CPU paths
+/// cross the root complex + uncore and jitter with core power states.
+pub const MMIO_GPU_FPGA_US: (f64, f64) = (0.66, 0.015); // (mean, std)
+pub const MMIO_CPU_FPGA_US: (f64, f64) = (0.92, 0.060);
+pub const MMIO_CPU_GPU_US: (f64, f64) = (1.30, 0.180);
+/// MMIO writes are posted: fire-and-forget from the initiator's view.
+pub const MMIO_WRITE_POST_NS: f64 = 80.0;
+
+// ------------------------------------------------------------- Network ----
+
+/// Testbed NIC/FPGA port rate (U280-class: single-digit 100G ports, §2.3).
+pub const ETH_GBPS: f64 = 100.0;
+/// Propagation + SerDes per hop inside one rack.
+pub const ETH_HOP_NS: f64 = 120.0;
+/// MTU used by the FPGA transport packetizer.
+pub const MTU_BYTES: u64 = 4096;
+
+/// Tofino-class P4 switch (§2.3): 12-stage pipeline, ~1–2 µs end-to-end.
+pub const P4_STAGES: u32 = 12;
+pub const P4_STAGE_NS: f64 = 110.0; // 12 stages ≈ 1.3 µs
+pub const P4_PORTS: u32 = 32;
+pub const P4_PORT_GBPS: f64 = 100.0;
+/// On-switch SRAM for stateful processing ("tens of MBs", §2.3.1).
+pub const P4_SRAM_BYTES: u64 = 22 * 1024 * 1024;
+
+/// FPGA reliable transport (§2.3.2): "reduce the network transport time
+/// dramatically to 2us" — split into packetize + DMA-in/out + pipeline.
+pub const FPGA_TRANSPORT_CYCLES: u64 = 180; // 0.9 µs @200 MHz per direction
+/// CPU-managed transport round-trip cost ("at least 10us latency", §2.3.1).
+pub const CPU_NET_STACK_US: (f64, f64) = (8.5, 1.8); // per message, lognormal-ish
+/// RDMA verbs post + NIC doorbell from the CPU.
+pub const RDMA_POST_US: (f64, f64) = (1.1, 0.15);
+/// Kernel-launch / GPU→CPU notification cost (CUDA runtime on CPU, §2.2.2).
+pub const GPU_KERNEL_NOTIFY_US: (f64, f64) = (2.1, 0.6);
+
+// ---------------------------------------------------------------- NVMe ----
+
+/// D7-P5510-class SSD, 4 KB random (datasheet: ~930K/190K IOPS R/W).
+pub const SSD_READ_IOPS: f64 = 700_000.0; // per-SSD sustained mixed-queue
+pub const SSD_WRITE_IOPS: f64 = 190_000.0;
+pub const SSD_READ_LAT_US: (f64, f64) = (82.0, 6.0);
+pub const SSD_WRITE_LAT_US: (f64, f64) = (16.0, 3.0);
+pub const SSD_QUEUE_DEPTH: usize = 1024;
+/// Platform ceiling: 10 SSDs share host PCIe lanes (Fig 9 saturation).
+pub const SSD_ARRAY_READ_IOPS_CAP: f64 = 6_800_000.0;
+pub const SSD_ARRAY_WRITE_IOPS_CAP: f64 = 1_900_000.0;
+
+/// SPDK-class CPU cost per I/O command: build + submit + completion poll
+/// amortized. Reads are cheaper than writes (no flush bookkeeping).
+pub const SPDK_READ_CMD_CPU_US: f64 = 0.72;
+pub const SPDK_WRITE_CMD_CPU_US: f64 = 2.55;
+
+// ----------------------------------------------------------------- CPU ----
+
+/// Xeon Silver 4214-class: cores per socket × 2 sockets (testbed, §4.1).
+pub const CPU_CORES: u32 = 48;
+/// Single-core LZ4 compression throughput (§4.5: "1.6 Gbps").
+pub const CPU_LZ4_GBPS: f64 = 1.6;
+/// Per-message header/control handling on the CPU (middle-tier app).
+pub const CPU_MSG_CTRL_US: f64 = 1.9;
+/// Per-byte memcpy cost (~12 GB/s effective single-core).
+pub const CPU_MEMCPY_GBPS: f64 = 96.0;
+/// Context switch / wakeup when a message crosses kernel boundaries.
+pub const CPU_CTX_SWITCH_US: (f64, f64) = (2.0, 0.5);
+
+// ----------------------------------------------------------------- GPU ----
+
+/// H100-class figures the paper quotes (§1, §2.2): 989 TFLOPS, 3.35 TB/s,
+/// 132 SMs of which NCCL occupies 20.
+pub const GPU_SMS: u32 = 132;
+pub const GPU_NCCL_SMS: u32 = 20;
+pub const GPU_TFLOPS: f64 = 989.0;
+pub const GPU_HBM_TBPS: f64 = 3.35;
+/// Fraction of HBM bandwidth collectives consume while active (§2.2.2).
+pub const GPU_NCCL_HBM_SHARE: f64 = 0.28;
+pub const GPU_KERNEL_LAUNCH_US: f64 = 4.5;
+
+// ---------------------------------------------------------------- FPGA ----
+
+/// Alveo U50 resource budget (Table 1 denominators, from the datasheet).
+pub const U50_LUT: u64 = 872_000;
+pub const U50_FF: u64 = 1_743_000;
+pub const U50_BRAM: u64 = 1_344;
+pub const U50_URAM: u64 = 640;
+
+/// Alveo U280 (§2.1 example board).
+pub const U280_LUT: u64 = 1_304_000;
+pub const U280_FF: u64 = 2_607_000;
+pub const U280_BRAM: u64 = 2_016;
+pub const U280_URAM: u64 = 960;
+
+/// VPK180 (§2.1 example board).
+pub const VPK180_LUT: u64 = 3_200_000;
+pub const VPK180_FF: u64 = 6_400_000;
+pub const VPK180_BRAM: u64 = 3_741;
+pub const VPK180_URAM: u64 = 1_925;
+
+/// FPGA line-rate compression engine (§4.5: "hardwired compression is very
+/// easy to achieve high throughput in FPGAs") — one engine at port rate.
+pub const FPGA_COMPRESS_GBPS: f64 = 100.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7a_ordering_holds() {
+        // GPU→FPGA must beat CPU→FPGA and CPU→GPU, and must beat their sum
+        // by a wide margin (the paper's second observation).
+        assert!(MMIO_GPU_FPGA_US.0 < MMIO_CPU_FPGA_US.0);
+        assert!(MMIO_GPU_FPGA_US.0 < MMIO_CPU_GPU_US.0);
+        assert!(MMIO_GPU_FPGA_US.0 < MMIO_CPU_FPGA_US.0 + MMIO_CPU_GPU_US.0);
+        // jitter ordering: GPU-FPGA is the most deterministic path
+        assert!(MMIO_GPU_FPGA_US.1 < MMIO_CPU_FPGA_US.1);
+        assert!(MMIO_CPU_FPGA_US.1 < MMIO_CPU_GPU_US.1);
+    }
+
+    #[test]
+    fn fpga_transport_is_2us_class() {
+        let one_way_us =
+            crate::sim::time::cycles(FPGA_TRANSPORT_CYCLES, FPGA_FREQ_MHZ) as f64 / 1e6;
+        assert!(one_way_us < 1.5, "one-way transport {one_way_us}us");
+        // and an order of magnitude under the CPU stack
+        assert!(CPU_NET_STACK_US.0 > 5.0 * one_way_us);
+    }
+
+    #[test]
+    fn p4_pipeline_latency_in_paper_band() {
+        let us = P4_STAGES as f64 * P4_STAGE_NS / 1000.0;
+        assert!((1.0..=2.0).contains(&us), "P4 pipeline {us}us");
+    }
+
+    #[test]
+    fn table1_percentages_match_paper() {
+        // 45K/872K=5.2%, 109K/1743K=6.3%, 164/1344=12.2%, 2/640=0.3%
+        assert!((45_000.0 / U50_LUT as f64 * 100.0 - 5.2).abs() < 0.1);
+        assert!((109_000.0 / U50_FF as f64 * 100.0 - 6.3).abs() < 0.1);
+        assert!((164.0 / U50_BRAM as f64 * 100.0 - 12.2).abs() < 0.1);
+        assert!((2.0 / U50_URAM as f64 * 100.0 - 0.3).abs() < 0.05);
+    }
+
+    #[test]
+    fn fig9_crossover_near_five_cores() {
+        // cores needed = cap / (1/cmd_cost): read ≈ 4.9, write ≈ 4.8
+        let read_cores = SSD_ARRAY_READ_IOPS_CAP / (1e6 / SPDK_READ_CMD_CPU_US);
+        let write_cores = SSD_ARRAY_WRITE_IOPS_CAP / (1e6 / SPDK_WRITE_CMD_CPU_US);
+        assert!((4.0..6.0).contains(&read_cores), "read cores {read_cores}");
+        assert!((4.0..6.0).contains(&write_cores), "write cores {write_cores}");
+    }
+
+    #[test]
+    fn fig10_crossover_cpu_only_needs_all_cores() {
+        // 48 cores × 1.6 Gb/s ≈ 76.8 Gb/s — below the 100 Gb/s line rate,
+        // so CPU-only saturates the cores, not the network (paper's point).
+        assert!(CPU_CORES as f64 * CPU_LZ4_GBPS < ETH_GBPS);
+        assert!(FPGA_COMPRESS_GBPS >= ETH_GBPS);
+    }
+}

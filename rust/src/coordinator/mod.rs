@@ -1,0 +1,7 @@
+//! The leader process: builds a platform from config, owns the PJRT
+//! runtime, and drives end-to-end workloads (the distributed-training loop
+//! the paper motivates in §2.2.3/§3.3).
+
+pub mod train;
+
+pub use train::{TrainConfig, TrainDriver, TrainStepLog};

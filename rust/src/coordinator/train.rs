@@ -1,0 +1,253 @@
+//! End-to-end distributed training over the simulated FpgaHub platform.
+//!
+//! Eight simulated workers each compute real gradients on their shard
+//! (`grad_loss.hlo` — JAX fwd/bwd calling the Pallas GEMM), the hub
+//! aggregates the flat gradients (`aggregate_w8_n*.hlo` — the Pallas
+//! aggregation kernel), the update applies (`apply_update.hlo`), and the
+//! per-step *simulated* time is charged by the platform models: GPU compute
+//! via the roofline, gradient movement via the FPGA transport + switch
+//! path. Python never runs; all math flows through PJRT.
+
+use anyhow::{Context, Result};
+
+use crate::apps::allreduce::FpgaSwitchAllreduce;
+use crate::constants;
+use crate::devices::gpu::Gpu;
+use crate::net::p4::P4Switch;
+use crate::runtime::{exec, Runtime};
+use crate::sim::time::{to_us, Ps};
+use crate::util::Rng;
+
+/// Training hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub workers: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// log every k steps
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { workers: 8, steps: 200, lr: 0.1, seed: 3, log_every: 10 }
+    }
+}
+
+/// One logged step.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainStepLog {
+    pub step: usize,
+    pub mean_worker_loss: f32,
+    pub sim_time: Ps,
+    pub compute_us: f64,
+    pub allreduce_us: f64,
+}
+
+/// Model parameters as flat host vectors.
+struct Params {
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+/// Synthetic 16-class task: class centers + Gaussian noise (mirrors
+/// python/tests/test_model.py so the loss scale is comparable).
+struct DataGen {
+    centers: Vec<f32>, // (n_classes, d_in)
+    d_in: usize,
+    n_classes: usize,
+    rng: Rng,
+}
+
+impl DataGen {
+    fn new(d_in: usize, n_classes: usize, mut rng: Rng) -> Self {
+        let centers = (0..n_classes * d_in).map(|_| rng.normal() as f32).collect();
+        DataGen { centers, d_in, n_classes, rng }
+    }
+
+    fn batch(&mut self, n: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(n * self.d_in);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = self.rng.range_u64(0, self.n_classes as u64) as usize;
+            y.push(c as i32);
+            for j in 0..self.d_in {
+                x.push(self.centers[c * self.d_in + j] + 0.3 * self.rng.normal() as f32);
+            }
+        }
+        (x, y)
+    }
+}
+
+/// The training driver.
+pub struct TrainDriver {
+    pub cfg: TrainConfig,
+    rt: Runtime,
+    params: Params,
+    data: Vec<DataGen>,
+    allreduce: FpgaSwitchAllreduce,
+    gpu: Gpu,
+    pub logs: Vec<TrainStepLog>,
+    sim_now: Ps,
+}
+
+impl TrainDriver {
+    pub fn new(mut rt: Runtime, cfg: TrainConfig) -> Result<Self> {
+        let dims = rt.index.model_dims;
+        let mut rng = Rng::new(cfg.seed);
+        // He init (matches the python oracle's scheme)
+        let he = |rng: &mut Rng, fan_in: usize, n: usize| -> Vec<f32> {
+            let s = (2.0 / fan_in as f64).sqrt();
+            (0..n).map(|_| (rng.normal() * s) as f32).collect()
+        };
+        let params = Params {
+            w1: he(&mut rng, dims.d_in, dims.d_in * dims.d_hidden),
+            b1: vec![0.0; dims.d_hidden],
+            w2: he(&mut rng, dims.d_hidden, dims.d_hidden * dims.d_out),
+            b2: vec![0.0; dims.d_out],
+        };
+        // one shared task, per-worker shards
+        let mut task_rng = Rng::new(cfg.seed ^ 0xDA7A);
+        let centers_rng = task_rng.fork();
+        let data = (0..cfg.workers)
+            .map(|w| {
+                let mut g = DataGen::new(dims.d_in, dims.n_classes, centers_rng.clone());
+                // same centers, different noise/label stream per worker
+                g.rng = Rng::new(cfg.seed ^ (w as u64 + 1) * 0x9E37);
+                g
+            })
+            .collect();
+        let mut switch = P4Switch::tofino();
+        let slots = 4096; // switch-side chunking for the timing model
+        let allreduce = FpgaSwitchAllreduce::new(
+            &mut switch,
+            cfg.workers as u32,
+            slots,
+            Rng::new(cfg.seed ^ 0x5117),
+            2.0,
+        )
+        .context("installing aggregation program")?;
+        // pre-compile the three artifacts the loop uses
+        rt.ensure_compiled("grad_loss")?;
+        rt.ensure_compiled("apply_update")?;
+        let agg = rt.index.aggregate_name(rt.index.train_agg_n);
+        rt.ensure_compiled(&agg)?;
+        Ok(TrainDriver {
+            cfg,
+            rt,
+            params,
+            data,
+            allreduce,
+            gpu: Gpu::h100(),
+            logs: Vec::new(),
+            sim_now: 0,
+        })
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        let d = self.rt.index.model_dims;
+        Ok(vec![
+            exec::literal_f32(&self.params.w1, &[d.d_in, d.d_hidden])?,
+            exec::literal_f32(&self.params.b1, &[d.d_hidden])?,
+            exec::literal_f32(&self.params.w2, &[d.d_hidden, d.d_out])?,
+            exec::literal_f32(&self.params.b2, &[d.d_out])?,
+        ])
+    }
+
+    /// Execute one synchronous data-parallel step. Returns the log entry.
+    pub fn step(&mut self, step_idx: usize) -> Result<TrainStepLog> {
+        let d = self.rt.index.model_dims;
+        let n_agg = self.rt.index.train_agg_n;
+        let flat_len = self.rt.index.flat_param_len;
+        let w = self.cfg.workers;
+
+        // 1. each worker: real gradients via PJRT
+        let mut flat_grads: Vec<Vec<f32>> = Vec::with_capacity(w);
+        let mut losses = Vec::with_capacity(w);
+        for wk in 0..w {
+            let (x, y) = self.data[wk].batch(d.batch);
+            let mut inputs = self.param_literals()?;
+            inputs.push(exec::literal_f32(&x, &[d.batch, d.d_in])?);
+            inputs.push(exec::literal_i32(&y, &[d.batch])?);
+            let out = self.rt.run("grad_loss", &inputs)?;
+            losses.push(exec::to_scalar_f32(&out[0])?);
+            flat_grads.push(exec::to_f32(&out[1])?);
+        }
+
+        // 2. hub aggregation: pad to the aggregation tile and run the
+        //    Pallas aggregate kernel over the (W, N) gradient matrix
+        let mut agg_in = vec![0.0f32; w * n_agg];
+        for (wk, g) in flat_grads.iter().enumerate() {
+            agg_in[wk * n_agg..wk * n_agg + flat_len].copy_from_slice(g);
+        }
+        let agg_name = self.rt.index.aggregate_name(n_agg);
+        let out = self.rt.run(&agg_name, &[exec::literal_f32(&agg_in, &[w, n_agg])?])?;
+        let agg_flat_padded = exec::to_f32(&out[0])?;
+
+        // 3. apply the SGD update
+        let mut inputs = self.param_literals()?;
+        inputs.push(exec::literal_f32(&agg_flat_padded[..flat_len], &[flat_len])?);
+        inputs.push(exec::scalar_f32(self.cfg.lr));
+        inputs.push(exec::scalar_f32(1.0 / w as f32));
+        let new_params = self.rt.run("apply_update", &inputs)?;
+        self.params.w1 = exec::to_f32(&new_params[0])?;
+        self.params.b1 = exec::to_f32(&new_params[1])?;
+        self.params.w2 = exec::to_f32(&new_params[2])?;
+        self.params.b2 = exec::to_f32(&new_params[3])?;
+
+        // 4. charge simulated time: fwd+bwd GEMMs on the GPU model +
+        //    gradient allreduce over the FPGA-switch path
+        let compute: Ps = {
+            // fwd: (B,Din)x(Din,H), (B,H)x(H,Dout); bwd ≈ 2x fwd
+            let f1 = self.gpu.gemm_time(d.batch as u64, d.d_hidden as u64, d.d_in as u64, 1.0, 1.0);
+            let f2 = self.gpu.gemm_time(d.batch as u64, d.d_out as u64, d.d_hidden as u64, 1.0, 1.0);
+            (f1 + f2) * 3
+        };
+        let grad_bytes = (flat_len * 4) as u64;
+        let wire = self.gpu.ring_allreduce_time(grad_bytes, w as u32, constants::ETH_GBPS);
+        let transport = self.allreduce.transports[0].pipeline_latency();
+        let switch_lat = self.allreduce.switch_pipeline;
+        let allreduce_time = wire + transport * 2 + switch_lat;
+        let step_time = compute + allreduce_time;
+        self.sim_now += step_time;
+
+        let log = TrainStepLog {
+            step: step_idx,
+            mean_worker_loss: losses.iter().sum::<f32>() / w as f32,
+            sim_time: self.sim_now,
+            compute_us: to_us(compute),
+            allreduce_us: to_us(allreduce_time),
+        };
+        Ok(log)
+    }
+
+    /// Run the configured number of steps; returns the full log.
+    pub fn run(&mut self) -> Result<&[TrainStepLog]> {
+        for s in 0..self.cfg.steps {
+            let log = self.step(s)?;
+            if s % self.cfg.log_every == 0 || s + 1 == self.cfg.steps {
+                println!(
+                    "step {:>4}  loss {:.4}  sim_t {:>10.1}µs  (compute {:.1}µs + allreduce {:.1}µs)",
+                    log.step,
+                    log.mean_worker_loss,
+                    to_us(log.sim_time),
+                    log.compute_us,
+                    log.allreduce_us
+                );
+            }
+            self.logs.push(log);
+        }
+        Ok(&self.logs)
+    }
+
+    pub fn first_loss(&self) -> f32 {
+        self.logs.first().map(|l| l.mean_worker_loss).unwrap_or(f32::NAN)
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        self.logs.last().map(|l| l.mean_worker_loss).unwrap_or(f32::NAN)
+    }
+}

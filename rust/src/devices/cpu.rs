@@ -1,0 +1,149 @@
+//! CPU model: a pool of cores as earliest-free resources, plus the software
+//! cost constants (net stack, SPDK commands, LZ4, context switches) that the
+//! paper's baselines pay and FpgaHub's offloads avoid.
+
+use crate::constants;
+use crate::sim::time::{us_f, Ps};
+
+/// A pool of identical cores; work is placed on the earliest-free core
+/// (work stealing / perfect load balancing — generous to the CPU baselines,
+/// which makes the paper's comparisons conservative).
+#[derive(Clone, Debug)]
+pub struct CorePool {
+    busy_until: Vec<Ps>,
+    pub busy_time: Vec<Ps>,
+}
+
+impl CorePool {
+    pub fn new(cores: usize) -> Self {
+        assert!(cores > 0, "a CPU needs at least one core");
+        CorePool { busy_until: vec![0; cores], busy_time: vec![0; cores] }
+    }
+
+    pub fn cores(&self) -> usize {
+        self.busy_until.len()
+    }
+
+    /// Run `duration` of work arriving at `now`; returns (core, start, end).
+    pub fn run(&mut self, now: Ps, duration: Ps) -> (usize, Ps, Ps) {
+        let (core, &free_at) = self
+            .busy_until
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &t)| t)
+            .expect("non-empty pool");
+        let start = now.max(free_at);
+        let end = start + duration;
+        self.busy_until[core] = end;
+        self.busy_time[core] += duration;
+        (core, start, end)
+    }
+
+    /// Earliest time any core is free.
+    pub fn earliest_free(&self) -> Ps {
+        *self.busy_until.iter().min().unwrap()
+    }
+
+    /// Aggregate utilization over [0, horizon].
+    pub fn utilization(&self, horizon: Ps) -> f64 {
+        if horizon == 0 {
+            return 0.0;
+        }
+        let busy: u128 = self.busy_time.iter().map(|&b| b as u128).sum();
+        busy as f64 / (horizon as f64 * self.cores() as f64)
+    }
+}
+
+/// Software cost helpers (deterministic parts; jittered parts sample at the
+/// call sites that own an RNG).
+pub struct SwCost;
+
+impl SwCost {
+    /// LZ4-class compression of `bytes` on one core (§4.5: 1.6 Gb/s).
+    pub fn lz4(bytes: u64) -> Ps {
+        us_f(bytes as f64 * 8.0 / constants::CPU_LZ4_GBPS / 1000.0) // bits/Gbps = ns
+    }
+
+    /// One SPDK I/O command's CPU time (submit + completion handling).
+    pub fn spdk_cmd(op_is_write: bool) -> Ps {
+        us_f(if op_is_write {
+            constants::SPDK_WRITE_CMD_CPU_US
+        } else {
+            constants::SPDK_READ_CMD_CPU_US
+        })
+    }
+
+    /// Per-message control handling (header parse, dispatch, bookkeeping).
+    pub fn msg_ctrl() -> Ps {
+        us_f(constants::CPU_MSG_CTRL_US)
+    }
+
+    /// memcpy of `bytes` on one core.
+    pub fn memcpy(bytes: u64) -> Ps {
+        us_f(bytes as f64 * 8.0 / constants::CPU_MEMCPY_GBPS / 1000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::{MS, US};
+
+    #[test]
+    fn single_core_serializes() {
+        let mut p = CorePool::new(1);
+        let (_, s1, e1) = p.run(0, 10 * US);
+        let (_, s2, e2) = p.run(0, 10 * US);
+        assert_eq!((s1, e1), (0, 10 * US));
+        assert_eq!((s2, e2), (10 * US, 20 * US));
+    }
+
+    #[test]
+    fn two_cores_parallelize() {
+        let mut p = CorePool::new(2);
+        p.run(0, 10 * US);
+        let (_, s2, _) = p.run(0, 10 * US);
+        assert_eq!(s2, 0); // second core picks it up immediately
+    }
+
+    #[test]
+    fn picks_earliest_free_core() {
+        let mut p = CorePool::new(2);
+        p.run(0, 30 * US); // core 0 busy till 30
+        p.run(0, 10 * US); // core 1 busy till 10
+        let (core, s, _) = p.run(0, 5 * US);
+        assert_eq!(core, 1);
+        assert_eq!(s, 10 * US);
+    }
+
+    #[test]
+    fn utilization_math() {
+        let mut p = CorePool::new(2);
+        p.run(0, MS); // one core busy the whole horizon
+        assert!((p.utilization(MS) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lz4_cost_matches_1_6_gbps() {
+        // 64 KB at 1.6 Gb/s = 327.68 µs
+        let t = SwCost::lz4(64 * 1024);
+        let us = t as f64 / US as f64;
+        assert!((us - 327.68).abs() < 0.5, "{us}");
+    }
+
+    #[test]
+    fn spdk_write_costs_more_than_read() {
+        assert!(SwCost::spdk_cmd(true) > SwCost::spdk_cmd(false));
+    }
+
+    #[test]
+    fn memcpy_much_faster_than_lz4() {
+        assert!(SwCost::memcpy(65536) * 10 < SwCost::lz4(65536));
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one core")]
+    fn zero_core_pool_rejected() {
+        CorePool::new(0);
+    }
+}

@@ -1,0 +1,221 @@
+//! FPGA fabric model: board resource budgets and per-component accounting.
+//!
+//! Everything the hub instantiates (`hub::*` components) declares a
+//! `ResourceUsage`; `FpgaFabric` sums them against the board budget and
+//! renders Table 1. Timing is cycle-based at the §2.1 fabric clock.
+
+use crate::constants;
+use crate::sim::time::{cycles, Ps};
+
+/// LUT/FF/BRAM/URAM counts (BRAM in 36Kb blocks, URAM in 288Kb blocks).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResourceUsage {
+    pub lut: u64,
+    pub ff: u64,
+    pub bram: u64,
+    pub uram: u64,
+}
+
+impl ResourceUsage {
+    pub const ZERO: ResourceUsage = ResourceUsage { lut: 0, ff: 0, bram: 0, uram: 0 };
+
+    pub fn new(lut: u64, ff: u64, bram: u64, uram: u64) -> Self {
+        ResourceUsage { lut, ff, bram, uram }
+    }
+
+    pub fn scaled(self, n: u64) -> Self {
+        ResourceUsage {
+            lut: self.lut * n,
+            ff: self.ff * n,
+            bram: self.bram * n,
+            uram: self.uram * n,
+        }
+    }
+}
+
+impl std::ops::Add for ResourceUsage {
+    type Output = ResourceUsage;
+    fn add(self, o: ResourceUsage) -> ResourceUsage {
+        ResourceUsage {
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            bram: self.bram + o.bram,
+            uram: self.uram + o.uram,
+        }
+    }
+}
+
+impl std::ops::AddAssign for ResourceUsage {
+    fn add_assign(&mut self, o: ResourceUsage) {
+        *self = *self + o;
+    }
+}
+
+/// Supported boards (§2.1 + §4 testbed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FpgaBoard {
+    AlveoU50,
+    AlveoU280,
+    Vpk180,
+}
+
+impl FpgaBoard {
+    pub fn budget(self) -> ResourceUsage {
+        match self {
+            FpgaBoard::AlveoU50 => ResourceUsage::new(
+                constants::U50_LUT,
+                constants::U50_FF,
+                constants::U50_BRAM,
+                constants::U50_URAM,
+            ),
+            FpgaBoard::AlveoU280 => ResourceUsage::new(
+                constants::U280_LUT,
+                constants::U280_FF,
+                constants::U280_BRAM,
+                constants::U280_URAM,
+            ),
+            FpgaBoard::Vpk180 => ResourceUsage::new(
+                constants::VPK180_LUT,
+                constants::VPK180_FF,
+                constants::VPK180_BRAM,
+                constants::VPK180_URAM,
+            ),
+        }
+    }
+}
+
+/// Over-budget error: the component that did not fit and what was left.
+#[derive(Debug, thiserror::Error)]
+#[error("component '{component}' does not fit {board:?}: needs {needed:?}, free {free:?}")]
+pub struct PlacementError {
+    pub component: String,
+    pub board: FpgaBoard,
+    pub needed: ResourceUsage,
+    pub free: ResourceUsage,
+}
+
+/// The fabric: a board, a clock, and the placed components.
+#[derive(Debug)]
+pub struct FpgaFabric {
+    pub board: FpgaBoard,
+    pub freq_mhz: u64,
+    used: ResourceUsage,
+    placed: Vec<(String, ResourceUsage)>,
+}
+
+impl FpgaFabric {
+    pub fn new(board: FpgaBoard) -> Self {
+        FpgaFabric {
+            board,
+            freq_mhz: constants::FPGA_FREQ_MHZ,
+            used: ResourceUsage::ZERO,
+            placed: Vec::new(),
+        }
+    }
+
+    /// Place a component; fails if any resource class is exhausted.
+    pub fn place(&mut self, name: &str, usage: ResourceUsage) -> Result<(), PlacementError> {
+        let budget = self.board.budget();
+        let after = self.used + usage;
+        if after.lut > budget.lut
+            || after.ff > budget.ff
+            || after.bram > budget.bram
+            || after.uram > budget.uram
+        {
+            return Err(PlacementError {
+                component: name.to_string(),
+                board: self.board,
+                needed: usage,
+                free: ResourceUsage::new(
+                    budget.lut - self.used.lut,
+                    budget.ff - self.used.ff,
+                    budget.bram - self.used.bram,
+                    budget.uram - self.used.uram,
+                ),
+            });
+        }
+        self.used = after;
+        self.placed.push((name.to_string(), usage));
+        Ok(())
+    }
+
+    pub fn used(&self) -> ResourceUsage {
+        self.used
+    }
+
+    pub fn placed(&self) -> &[(String, ResourceUsage)] {
+        &self.placed
+    }
+
+    /// Utilization percentages (LUT, FF, BRAM, URAM) — Table 1's bottom row.
+    pub fn utilization_pct(&self) -> (f64, f64, f64, f64) {
+        let b = self.board.budget();
+        (
+            self.used.lut as f64 / b.lut as f64 * 100.0,
+            self.used.ff as f64 / b.ff as f64 * 100.0,
+            self.used.bram as f64 / b.bram as f64 * 100.0,
+            self.used.uram as f64 / b.uram as f64 * 100.0,
+        )
+    }
+
+    /// Duration of `n` fabric cycles.
+    pub fn cycles(&self, n: u64) -> Ps {
+        cycles(n, self.freq_mhz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::NS;
+
+    #[test]
+    fn resource_arithmetic() {
+        let a = ResourceUsage::new(10, 20, 3, 1);
+        let b = ResourceUsage::new(1, 2, 3, 4);
+        assert_eq!(a + b, ResourceUsage::new(11, 22, 6, 5));
+        assert_eq!(a.scaled(3), ResourceUsage::new(30, 60, 9, 3));
+    }
+
+    #[test]
+    fn placement_accumulates() {
+        let mut f = FpgaFabric::new(FpgaBoard::AlveoU50);
+        f.place("a", ResourceUsage::new(1000, 2000, 10, 0)).unwrap();
+        f.place("b", ResourceUsage::new(500, 500, 2, 1)).unwrap();
+        assert_eq!(f.used(), ResourceUsage::new(1500, 2500, 12, 1));
+        assert_eq!(f.placed().len(), 2);
+    }
+
+    #[test]
+    fn placement_fails_when_bram_exhausted() {
+        let mut f = FpgaFabric::new(FpgaBoard::AlveoU50);
+        let budget = FpgaBoard::AlveoU50.budget();
+        f.place("big", ResourceUsage::new(0, 0, budget.bram, 0)).unwrap();
+        let err = f.place("one-more", ResourceUsage::new(0, 0, 1, 0)).unwrap_err();
+        assert_eq!(err.component, "one-more");
+        assert_eq!(err.free.bram, 0);
+    }
+
+    #[test]
+    fn utilization_pct_math() {
+        let mut f = FpgaFabric::new(FpgaBoard::AlveoU50);
+        f.place("x", ResourceUsage::new(constants::U50_LUT / 2, 0, 0, 0)).unwrap();
+        let (lut, ff, _, _) = f.utilization_pct();
+        assert!((lut - 50.0).abs() < 0.1);
+        assert_eq!(ff, 0.0);
+    }
+
+    #[test]
+    fn boards_ordered_by_size() {
+        let u50 = FpgaBoard::AlveoU50.budget();
+        let u280 = FpgaBoard::AlveoU280.budget();
+        let vpk = FpgaBoard::Vpk180.budget();
+        assert!(u50.lut < u280.lut && u280.lut < vpk.lut);
+    }
+
+    #[test]
+    fn fabric_clock_is_200mhz() {
+        let f = FpgaFabric::new(FpgaBoard::AlveoU280);
+        assert_eq!(f.cycles(1), 5 * NS);
+    }
+}

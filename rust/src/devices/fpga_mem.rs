@@ -1,0 +1,169 @@
+//! FPGA on-board/on-chip memory tiers (§2.1 "Memory Capacity and
+//! Bandwidth"): BRAM (on-chip, ns-class), DDR4 channels (32 GB, 38.4 GB/s)
+//! and HBM stacks (8 GB, 460 GB/s) — the U280 numbers the paper quotes from
+//! Shuhai [32, 89]. `hub::state_store` places offloaded application state
+//! across these tiers; §2.3.2's second co-design argument ("offload states
+//! onto FPGA's on-board memory") is exercised against the P4 switch's
+//! tens-of-MB SRAM budget.
+
+use crate::sim::time::{ns_f, Ps};
+
+/// A memory tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemTier {
+    /// on-chip block RAM: single-cycle-class access, tiny capacity
+    Bram,
+    /// on-board DDR4 (per the U280: 2 channels, 32 GB total)
+    Ddr,
+    /// on-board HBM stacks (U280: 8 GB, 460 GB/s)
+    Hbm,
+}
+
+/// Tier characteristics.
+#[derive(Clone, Copy, Debug)]
+pub struct TierSpec {
+    pub capacity_bytes: u64,
+    pub bandwidth_gbps: f64, // gigaBYTES/s
+    pub access_ns: f64,
+}
+
+impl MemTier {
+    /// U280-class specs (§2.1, Shuhai-calibrated).
+    pub fn spec(self) -> TierSpec {
+        match self {
+            MemTier::Bram => TierSpec {
+                capacity_bytes: 41 * 1024 * 1024 / 8, // ~41 Mb of BRAM -> bytes
+                bandwidth_gbps: 4000.0,               // fabric-wide aggregate
+                access_ns: 5.0,                       // one 200 MHz cycle
+            },
+            MemTier::Ddr => TierSpec {
+                capacity_bytes: 32 * (1 << 30),
+                bandwidth_gbps: 38.4,
+                access_ns: 120.0,
+            },
+            MemTier::Hbm => TierSpec {
+                capacity_bytes: 8 * (1 << 30),
+                bandwidth_gbps: 460.0,
+                access_ns: 180.0,
+            },
+        }
+    }
+}
+
+/// One tier instance with an allocator and a bandwidth serialization point.
+#[derive(Debug)]
+pub struct MemBank {
+    pub tier: MemTier,
+    pub spec: TierSpec,
+    allocated: u64,
+    busy_until: Ps,
+    pub accesses: u64,
+}
+
+/// Out-of-capacity error.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[error("{tier:?} exhausted: asked {asked} B, free {free} B")]
+pub struct OutOfMemory {
+    pub tier: MemTier,
+    pub asked: u64,
+    pub free: u64,
+}
+
+impl MemBank {
+    pub fn new(tier: MemTier) -> Self {
+        MemBank { tier, spec: tier.spec(), allocated: 0, busy_until: 0, accesses: 0 }
+    }
+
+    pub fn allocate(&mut self, bytes: u64) -> Result<(), OutOfMemory> {
+        let free = self.spec.capacity_bytes - self.allocated;
+        if bytes > free {
+            return Err(OutOfMemory { tier: self.tier, asked: bytes, free });
+        }
+        self.allocated += bytes;
+        Ok(())
+    }
+
+    pub fn free(&mut self, bytes: u64) {
+        self.allocated = self.allocated.saturating_sub(bytes);
+    }
+
+    pub fn allocated(&self) -> u64 {
+        self.allocated
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.spec.capacity_bytes - self.allocated
+    }
+
+    /// Access `bytes` starting at `now`: fixed access latency + bandwidth
+    /// serialization. Returns completion time.
+    pub fn access(&mut self, now: Ps, bytes: u64) -> Ps {
+        self.accesses += 1;
+        let start = now.max(self.busy_until);
+        let xfer = ns_f(bytes as f64 / self.spec.bandwidth_gbps); // B / (GB/s) = ns
+        let done = start + ns_f(self.spec.access_ns) + xfer;
+        self.busy_until = done;
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::{to_us, NS, US};
+
+    #[test]
+    fn tier_ordering_capacity_vs_latency() {
+        let b = MemTier::Bram.spec();
+        let d = MemTier::Ddr.spec();
+        let h = MemTier::Hbm.spec();
+        assert!(b.capacity_bytes < h.capacity_bytes && h.capacity_bytes < d.capacity_bytes);
+        assert!(b.access_ns < d.access_ns);
+        assert!(h.bandwidth_gbps > d.bandwidth_gbps * 10.0, "HBM ~12x DDR (460 vs 38.4)");
+    }
+
+    #[test]
+    fn allocation_respects_capacity() {
+        let mut bank = MemBank::new(MemTier::Bram);
+        let cap = bank.spec.capacity_bytes;
+        bank.allocate(cap).unwrap();
+        let err = bank.allocate(1).unwrap_err();
+        assert_eq!(err.free, 0);
+        bank.free(cap / 2);
+        bank.allocate(1).unwrap();
+    }
+
+    #[test]
+    fn bram_access_is_cycle_class() {
+        let mut bank = MemBank::new(MemTier::Bram);
+        let done = bank.access(0, 64);
+        assert!(done < 10 * NS, "{done}");
+    }
+
+    #[test]
+    fn ddr_bulk_transfer_is_bandwidth_bound() {
+        let mut bank = MemBank::new(MemTier::Ddr);
+        // 38.4 MB at 38.4 GB/s = 1 ms = 1000 µs
+        let done = bank.access(0, 38_400_000);
+        assert!((to_us(done) - 1000.0).abs() < 2.0, "{}", to_us(done));
+    }
+
+    #[test]
+    fn hbm_is_an_order_faster_than_ddr_for_bulk() {
+        let mut d = MemBank::new(MemTier::Ddr);
+        let mut h = MemBank::new(MemTier::Hbm);
+        let td = d.access(0, 1 << 27);
+        let th = h.access(0, 1 << 27);
+        assert!(td as f64 / th as f64 > 8.0);
+    }
+
+    #[test]
+    fn concurrent_accesses_serialize_on_bandwidth() {
+        let mut bank = MemBank::new(MemTier::Ddr);
+        let a = bank.access(0, 1 << 20);
+        let b = bank.access(0, 1 << 20);
+        assert!(b > a);
+        assert!(b >= 2 * (a - ns_f(bank.spec.access_ns)));
+        let _ = US;
+    }
+}

@@ -1,0 +1,120 @@
+//! GPU model: roofline GEMM timing with SM partitioning and HBM bandwidth
+//! sharing — the machinery behind Fig 2's interference argument.
+//!
+//! §2.2.2: NCCL-class collectives occupy 20/132 SMs *and* memory bandwidth;
+//! when collectives run on the GPU, GEMMs see fewer SMs and less HBM. When
+//! FpgaHub owns the collective, GEMMs see the whole machine.
+
+use crate::constants;
+use crate::sim::time::{us_f, Ps};
+
+/// H100-class GPU.
+#[derive(Clone, Debug)]
+pub struct Gpu {
+    pub sms: u32,
+    pub peak_tflops: f64,
+    pub hbm_tbps: f64,
+    pub launch_us: f64,
+}
+
+impl Default for Gpu {
+    fn default() -> Self {
+        Self::h100()
+    }
+}
+
+impl Gpu {
+    pub fn h100() -> Self {
+        Gpu {
+            sms: constants::GPU_SMS,
+            peak_tflops: constants::GPU_TFLOPS,
+            hbm_tbps: constants::GPU_HBM_TBPS,
+            launch_us: constants::GPU_KERNEL_LAUNCH_US,
+        }
+    }
+
+    /// GEMM (M,K)x(K,N) execution time given the fraction of SMs and HBM
+    /// bandwidth available: roofline max(compute, memory) + launch.
+    pub fn gemm_time(&self, m: u64, n: u64, k: u64, sm_frac: f64, bw_frac: f64) -> Ps {
+        assert!(sm_frac > 0.0 && sm_frac <= 1.0);
+        assert!(bw_frac > 0.0 && bw_frac <= 1.0);
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        let bytes = 4.0 * (m * k + k * n + m * n) as f64; // f32 operands + result
+        let compute_us = flops / (self.peak_tflops * 1e12 * sm_frac) * 1e6;
+        let memory_us = bytes / (self.hbm_tbps * 1e12 * bw_frac) * 1e6;
+        us_f(compute_us.max(memory_us) + self.launch_us)
+    }
+
+    /// Ring-allreduce time for `bytes` over `workers` ranks at `busbw_gbps`
+    /// effective bus bandwidth: 2(W-1)/W × bytes / busbw.
+    pub fn ring_allreduce_time(&self, bytes: u64, workers: u32, busbw_gbps: f64) -> Ps {
+        assert!(workers >= 2);
+        let factor = 2.0 * (workers as f64 - 1.0) / workers as f64;
+        us_f(factor * bytes as f64 * 8.0 / busbw_gbps / 1000.0)
+    }
+
+    /// SM fraction left for compute while on-GPU collectives run (§2.2.2).
+    pub fn sm_frac_with_nccl(&self) -> f64 {
+        (self.sms - constants::GPU_NCCL_SMS) as f64 / self.sms as f64
+    }
+
+    /// HBM fraction left for compute while on-GPU collectives run.
+    pub fn bw_frac_with_nccl(&self) -> f64 {
+        1.0 - constants::GPU_NCCL_HBM_SHARE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::to_us;
+
+    #[test]
+    fn large_gemm_is_compute_bound() {
+        let g = Gpu::h100();
+        // 8192^3 GEMM: ~1.1 PFLOP, arithmetic intensity huge
+        let t_full = g.gemm_time(8192, 8192, 8192, 1.0, 1.0);
+        let t_half_bw = g.gemm_time(8192, 8192, 8192, 1.0, 0.5);
+        assert_eq!(t_full, t_half_bw, "compute-bound: bw share irrelevant");
+        let t_half_sm = g.gemm_time(8192, 8192, 8192, 0.5, 1.0);
+        assert!(t_half_sm > t_full, "fewer SMs must slow a compute-bound GEMM");
+    }
+
+    #[test]
+    fn skinny_gemm_is_memory_bound() {
+        let g = Gpu::h100();
+        // (128, 8192) x (8192, 128): low arithmetic intensity
+        let t_full = g.gemm_time(128, 128, 8192, 1.0, 1.0);
+        let t_half_bw = g.gemm_time(128, 128, 8192, 1.0, 0.5);
+        assert!(t_half_bw > t_full, "memory-bound: bw share matters");
+    }
+
+    #[test]
+    fn nccl_interference_slows_gemm() {
+        let g = Gpu::h100();
+        let clean = g.gemm_time(4096, 4096, 4096, 1.0, 1.0);
+        let interfered =
+            g.gemm_time(4096, 4096, 4096, g.sm_frac_with_nccl(), g.bw_frac_with_nccl());
+        let slowdown = interfered as f64 / clean as f64;
+        // 20/132 SMs stolen -> ≥1.15x slowdown on a compute-bound GEMM
+        assert!(slowdown > 1.1, "slowdown {slowdown}");
+    }
+
+    #[test]
+    fn allreduce_scales_with_ring_factor() {
+        let g = Gpu::h100();
+        let t2 = g.ring_allreduce_time(1 << 28, 2, 100.0);
+        let t8 = g.ring_allreduce_time(1 << 28, 8, 100.0);
+        // 2(W-1)/W: 1.0 for W=2, 1.75 for W=8
+        let ratio = to_us(t8) / to_us(t2);
+        assert!((ratio - 1.75).abs() < 0.01, "{ratio}");
+    }
+
+    #[test]
+    fn launch_overhead_dominates_tiny_kernels() {
+        let g = Gpu::h100();
+        let t = g.gemm_time(64, 64, 64, 1.0, 1.0);
+        assert!(to_us(t) >= g.launch_us);
+        assert!(to_us(t) < g.launch_us * 1.2);
+    }
+}

@@ -1,0 +1,12 @@
+//! Processor device models: CPU core pool with software-stack costs, GPU
+//! roofline + SM partitioning, and FPGA fabric with resource accounting.
+
+pub mod cpu;
+pub mod fpga;
+pub mod fpga_mem;
+pub mod gpu;
+
+pub use cpu::CorePool;
+pub use fpga::{FpgaBoard, FpgaFabric, ResourceUsage};
+pub use fpga_mem::{MemBank, MemTier};
+pub use gpu::Gpu;

@@ -1,0 +1,56 @@
+//! Figure 2: collective/GEMM interference, with vs without FpgaHub offload.
+
+use crate::apps::llm_step::{compare, LlmStepConfig};
+use crate::config::ExperimentConfig;
+use crate::metrics::Table;
+use crate::sim::time::to_us;
+
+pub fn run(_cfg: &ExperimentConfig) -> Table {
+    let mut t = Table::new(
+        "Fig 2: collective-GEMM interference",
+        &[
+            "mode",
+            "gemm_stream_us",
+            "collective_us",
+            "step_us",
+            "gemm_slowdown_pct",
+            "overlap",
+        ],
+    );
+    let cfg = LlmStepConfig::default();
+    let (with_if, without) = compare(&cfg);
+    t.row(&[
+        "GPU-only (w/ interference)".into(),
+        format!("{:.1}", to_us(with_if.gemm_time)),
+        format!("{:.1}", to_us(with_if.collective_time)),
+        format!("{:.1}", to_us(with_if.step_time)),
+        format!("{:.1}", with_if.gemm_slowdown_pct),
+        "degraded".into(),
+    ]);
+    t.row(&[
+        "FpgaHub offload (w/o interference)".into(),
+        format!("{:.1}", to_us(without.gemm_time)),
+        format!("{:.1}", to_us(without.collective_time)),
+        format!("{:.1}", to_us(without.step_time)),
+        format!("{:.1}", without.gemm_slowdown_pct),
+        "full".into(),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    #[test]
+    fn offload_row_is_strictly_better() {
+        let t = run(&ExperimentConfig::quick());
+        let step_with: f64 = t.rows[0][3].parse().unwrap();
+        let step_without: f64 = t.rows[1][3].parse().unwrap();
+        assert!(step_without < step_with);
+        let slow_with: f64 = t.rows[0][4].parse().unwrap();
+        assert!(slow_with > 10.0);
+        assert_eq!(t.rows[1][4], "0.0");
+    }
+}

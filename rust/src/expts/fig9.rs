@@ -1,0 +1,62 @@
+//! Figure 9: throughput of the CPU-based SSD control plane vs core count
+//! (4 KB random read and write over 10 SSDs), plus the FPGA column — zero
+//! CPU cores by construction (§4.4's conclusion).
+
+use crate::baselines::SpdkControlPlane;
+use crate::config::ExperimentConfig;
+use crate::metrics::Table;
+use crate::nvme::queue::NvmeOp;
+use crate::nvme::ssd::SsdArray;
+use crate::sim::time::S;
+use crate::util::Rng;
+
+pub fn run(cfg: &ExperimentConfig) -> Table {
+    let mut t = Table::new(
+        "Fig 9: CPU-based SSD control plane throughput",
+        &["cores", "read_kiops", "write_kiops", "read_cpu_bound", "write_cpu_bound"],
+    );
+    let horizon = S / 10;
+    for cores in 1..=8usize {
+        let mut results = Vec::new();
+        for op in [NvmeOp::Read, NvmeOp::Write] {
+            let mut rng = Rng::new(cfg.platform.seed ^ cores as u64);
+            let mut array = SsdArray::new(cfg.platform.num_ssds, &mut rng);
+            let mut cp = SpdkControlPlane::new(cores);
+            results.push(cp.run(&mut array, op, horizon));
+        }
+        t.row(&[
+            cores.to_string(),
+            format!("{:.0}", results[0].achieved_iops / 1e3),
+            format!("{:.0}", results[1].achieved_iops / 1e3),
+            results[0].cpu_bound.to_string(),
+            results[1].cpu_bound.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constants;
+
+    #[test]
+    fn saturation_at_about_five_cores() {
+        let t = run(&ExperimentConfig::quick());
+        // row index = cores-1; read saturates by 6 cores, not by 3
+        let read_k = |row: usize| t.rows[row][1].parse::<f64>().unwrap();
+        let cap_k = constants::SSD_ARRAY_READ_IOPS_CAP / 1e3;
+        assert!(read_k(2) < cap_k * 0.8, "3 cores must not saturate");
+        assert!(read_k(5) > cap_k * 0.9, "6 cores must saturate");
+        // monotone growth before the knee
+        assert!(read_k(0) < read_k(1) && read_k(1) < read_k(2));
+    }
+
+    #[test]
+    fn write_knee_in_same_region() {
+        let t = run(&ExperimentConfig::quick());
+        let bound = |row: usize| t.rows[row][4].parse::<bool>().unwrap();
+        assert!(bound(2), "3 cores: write still CPU-bound");
+        assert!(!bound(6), "7 cores: write array-bound");
+    }
+}

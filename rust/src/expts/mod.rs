@@ -1,0 +1,43 @@
+//! One harness per figure/table of §4. Each `run_*` returns the
+//! `metrics::Table` with the same rows/series the paper plots and, when
+//! configured, writes `results/<name>.csv`.
+
+pub mod fig10;
+pub mod fig2;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+
+use crate::config::ExperimentConfig;
+use crate::metrics::{write_csv, Table};
+
+/// All experiment names (CLI `fpgahub expt <name>`).
+pub const ALL: &[&str] = &["fig2", "fig7a", "fig7b", "fig8", "fig9", "fig10a", "fig10b", "table1"];
+
+/// Dispatch by name.
+pub fn run(name: &str, cfg: &ExperimentConfig) -> anyhow::Result<Vec<Table>> {
+    let tables = match name {
+        "fig2" => vec![fig2::run(cfg)],
+        "fig7a" => vec![fig7::run_7a(cfg)],
+        "fig7b" => vec![fig7::run_7b(cfg)],
+        "fig7" => vec![fig7::run_7a(cfg), fig7::run_7b(cfg)],
+        "fig8" => vec![fig8::run(cfg)?],
+        "fig9" => vec![fig9::run(cfg)],
+        "fig10a" | "fig10b" | "fig10" => fig10::run(cfg)?,
+        "table1" => vec![table1::run(cfg)?],
+        other => anyhow::bail!("unknown experiment '{other}' (have {ALL:?})"),
+    };
+    for t in &tables {
+        println!("{}", t.render());
+        if cfg.csv {
+            let path = cfg
+                .platform
+                .results_dir
+                .join(format!("{}.csv", t.title.replace([' ', '/'], "_").to_lowercase()));
+            write_csv(t, &path)?;
+            println!("wrote {}\n", path.display());
+        }
+    }
+    Ok(tables)
+}

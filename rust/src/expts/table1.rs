@@ -1,0 +1,62 @@
+//! Table 1: FPGA resource usage of the SSD control logic on an Alveo U50,
+//! plus the headroom rows §4.4's conclusion gestures at.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::hub::resources::{place_full_hub, table1_fabric};
+use crate::metrics::Table;
+
+pub fn run(cfg: &ExperimentConfig) -> Result<Table> {
+    let fabric = table1_fabric(cfg.platform.num_ssds)?;
+    let u = fabric.used();
+    let (lut_pct, ff_pct, bram_pct, uram_pct) = fabric.utilization_pct();
+
+    let mut t = Table::new(
+        "Table 1: resource usage of FPGA-based SSD control logic (U50)",
+        &["metric", "LUT", "FF", "BRAM", "URAM"],
+    );
+    t.row(&[
+        "used".into(),
+        format!("{}K", u.lut / 1000),
+        format!("{}K", u.ff / 1000),
+        u.bram.to_string(),
+        u.uram.to_string(),
+    ]);
+    t.row(&[
+        "pct_of_board".into(),
+        format!("{lut_pct:.1}%"),
+        format!("{ff_pct:.1}%"),
+        format!("{bram_pct:.1}%"),
+        format!("{uram_pct:.1}%"),
+    ]);
+    // headroom: the full hub placed on the configured board
+    let full = place_full_hub(cfg.platform.fpga_board, cfg.platform.num_ssds)?;
+    let (l, f, b, ur) = full.utilization_pct();
+    t.row(&[
+        format!("full_hub_on_{:?}", cfg.platform.fpga_board),
+        format!("{l:.1}%"),
+        format!("{f:.1}%"),
+        format!("{b:.1}%"),
+        format!("{ur:.1}%"),
+    ]);
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_row_reproduced_exactly() {
+        let t = run(&ExperimentConfig::quick()).unwrap();
+        assert_eq!(t.rows[0][1], "45K");
+        assert_eq!(t.rows[0][2], "109K");
+        assert_eq!(t.rows[0][3], "164");
+        assert_eq!(t.rows[0][4], "2");
+        assert_eq!(t.rows[1][1], "5.2%");
+        assert_eq!(t.rows[1][2], "6.3%");
+        assert_eq!(t.rows[1][3], "12.2%");
+        assert_eq!(t.rows[1][4], "0.3%");
+    }
+}

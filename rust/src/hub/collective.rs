@@ -1,0 +1,130 @@
+//! The offloaded collective engine (§2.2.3, §3.3): "offload the entire
+//! collective communication functionalities and states to FpgaHub, so as to
+//! fully overlap computation and communication, without wasting precious GPU
+//! resources."
+//!
+//! Two aggregation datapaths, matching the two experiments that use it:
+//!
+//! * **Switch-aggregated** (Fig 8): the hub fixed-point-encodes f32 chunks
+//!   (the P4 ALU constraint), streams them to the `SwitchAggregator`, and
+//!   decodes the multicast result.
+//! * **Hub-aggregated** (training e2e): the hub itself sums f32 vectors —
+//!   in the real device a DSP adder tree, here the AOT Pallas `aggregate`
+//!   kernel executed through PJRT, so the arithmetic is real.
+
+use crate::net::p4::{P4Error, P4Switch, SwitchAggregator};
+use crate::util::fixed;
+
+/// Timing + numeric outcome of one collective round.
+#[derive(Clone, Debug)]
+pub struct AllreduceResult {
+    pub values: Vec<f32>,
+    pub saturated: bool,
+}
+
+/// The engine's aggregation state for switch-path collectives.
+pub struct CollectiveEngine {
+    pub workers: u32,
+    pub shift: u32,
+    agg: SwitchAggregator,
+    pub rounds: u64,
+}
+
+impl CollectiveEngine {
+    /// Install the aggregation program on the switch; fails if the slot
+    /// count exceeds switch SRAM (§2.3.1 limitation 2 in action).
+    pub fn new(
+        switch: &mut P4Switch,
+        workers: u32,
+        slots: usize,
+        shift: u32,
+    ) -> Result<Self, P4Error> {
+        let agg = SwitchAggregator::install(switch, workers, slots)?;
+        Ok(CollectiveEngine { workers, shift, agg, rounds: 0 })
+    }
+
+    /// One worker contributes its f32 chunk (the hub encodes to fixed
+    /// point). Returns the decoded sum once all `workers` contributed.
+    pub fn contribute(&mut self, values: &[f32]) -> Option<AllreduceResult> {
+        let (enc, saturated_in) = fixed::encode_slice(values, self.shift);
+        let done = self.agg.contribute(&enc)?;
+        self.rounds += 1;
+        let decoded =
+            fixed::decode_slice(&done.iter().map(|&v| v as i64).collect::<Vec<_>>(), self.shift);
+        Some(AllreduceResult {
+            values: decoded,
+            saturated: saturated_in || self.agg.saturations > 0,
+        })
+    }
+
+    pub fn switch_saturations(&self) -> u64 {
+        self.agg.saturations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fixed::DEFAULT_SHIFT;
+
+    fn engine(workers: u32, slots: usize) -> (P4Switch, CollectiveEngine) {
+        let mut sw = P4Switch::tofino();
+        let eng = CollectiveEngine::new(&mut sw, workers, slots, DEFAULT_SHIFT).unwrap();
+        (sw, eng)
+    }
+
+    #[test]
+    fn allreduce_sums_float_gradients() {
+        let (_sw, mut eng) = engine(4, 16);
+        let chunks: Vec<Vec<f32>> = (0..4)
+            .map(|w| (0..16).map(|i| 0.01 * (w * 16 + i) as f32).collect())
+            .collect();
+        let mut result = None;
+        for c in &chunks {
+            result = eng.contribute(c);
+        }
+        let res = result.expect("4th contribution completes the round");
+        assert!(!res.saturated);
+        for i in 0..16 {
+            let want: f32 = chunks.iter().map(|c| c[i]).sum();
+            assert!((res.values[i] - want).abs() < 1e-4, "{i}");
+        }
+    }
+
+    #[test]
+    fn incomplete_round_returns_none() {
+        let (_sw, mut eng) = engine(3, 4);
+        assert!(eng.contribute(&[1.0; 4]).is_none());
+        assert!(eng.contribute(&[1.0; 4]).is_none());
+        assert!(eng.contribute(&[1.0; 4]).is_some());
+        assert_eq!(eng.rounds, 1);
+    }
+
+    #[test]
+    fn repeated_rounds_stay_correct() {
+        let (_sw, mut eng) = engine(2, 4);
+        for round in 1..=5 {
+            eng.contribute(&[round as f32; 4]);
+            let res = eng.contribute(&[round as f32; 4]).unwrap();
+            for v in res.values {
+                assert!((v - 2.0 * round as f32).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn saturation_reported_not_silent() {
+        let (_sw, mut eng) = engine(2, 1);
+        let huge = fixed::max_magnitude(DEFAULT_SHIFT) * 0.9;
+        eng.contribute(&[huge]);
+        let res = eng.contribute(&[huge]).unwrap();
+        assert!(res.saturated, "i32 accumulator overflow must be surfaced");
+    }
+
+    #[test]
+    fn slots_beyond_switch_sram_rejected() {
+        let mut sw = P4Switch::tofino();
+        let too_many = (sw.sram_bytes as usize / 8) + 1;
+        assert!(CollectiveEngine::new(&mut sw, 8, too_many, DEFAULT_SHIFT).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! User-defined message descriptors (§3.1): the CPU programs, via the MMIO
+//! master interface, how each flow's messages are split — how many header
+//! bytes go to the host and where the payload lands. "The message header
+//! size can be set in a per-flow manner" (§2.5.3).
+
+use crate::pcie::Endpoint;
+
+/// Where a split payload is steered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadDest {
+    /// stays in FPGA on-board memory (DDR/HBM)
+    FpgaMemory,
+    /// DMA'd into GPU HBM via GPUDirect-style peer-to-peer
+    Device(Endpoint),
+    /// delivered to the hub's own user logic (NIC-initiated processing)
+    UserLogic,
+}
+
+/// One flow's split/assemble rule.
+#[derive(Clone, Copy, Debug)]
+pub struct Descriptor {
+    pub flow: u64,
+    pub header_bytes: u64,
+    pub payload_dest: PayloadDest,
+}
+
+/// MMIO-programmable descriptor table (bounded like a real BRAM table).
+#[derive(Debug)]
+pub struct DescriptorTable {
+    capacity: usize,
+    entries: Vec<Descriptor>,
+    pub updates: u64,
+}
+
+/// Errors a misprogrammed table surfaces.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum DescriptorError {
+    #[error("descriptor table full ({0} entries)")]
+    Full(usize),
+    #[error("no descriptor installed for flow {0}")]
+    UnknownFlow(u64),
+}
+
+impl DescriptorTable {
+    pub fn new(capacity: usize) -> Self {
+        DescriptorTable { capacity, entries: Vec::new(), updates: 0 }
+    }
+
+    /// Install or update a flow's descriptor (an MMIO write from the host).
+    pub fn install(&mut self, d: Descriptor) -> Result<(), DescriptorError> {
+        self.updates += 1;
+        if let Some(e) = self.entries.iter_mut().find(|e| e.flow == d.flow) {
+            *e = d;
+            return Ok(());
+        }
+        if self.entries.len() >= self.capacity {
+            return Err(DescriptorError::Full(self.capacity));
+        }
+        self.entries.push(d);
+        Ok(())
+    }
+
+    pub fn lookup(&self, flow: u64) -> Result<&Descriptor, DescriptorError> {
+        self.entries
+            .iter()
+            .find(|e| e.flow == flow)
+            .ok_or(DescriptorError::UnknownFlow(flow))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(flow: u64, hdr: u64) -> Descriptor {
+        Descriptor { flow, header_bytes: hdr, payload_dest: PayloadDest::FpgaMemory }
+    }
+
+    #[test]
+    fn install_and_lookup() {
+        let mut t = DescriptorTable::new(4);
+        t.install(d(7, 128)).unwrap();
+        assert_eq!(t.lookup(7).unwrap().header_bytes, 128);
+        assert_eq!(t.lookup(8).unwrap_err(), DescriptorError::UnknownFlow(8));
+    }
+
+    #[test]
+    fn update_in_place_keeps_capacity() {
+        let mut t = DescriptorTable::new(1);
+        t.install(d(1, 64)).unwrap();
+        t.install(d(1, 256)).unwrap(); // per-flow update, not a new entry
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.lookup(1).unwrap().header_bytes, 256);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut t = DescriptorTable::new(2);
+        t.install(d(1, 0)).unwrap();
+        t.install(d(2, 0)).unwrap();
+        assert_eq!(t.install(d(3, 0)), Err(DescriptorError::Full(2)));
+    }
+
+    #[test]
+    fn unknown_flow_error() {
+        let t = DescriptorTable::new(2);
+        assert_eq!(t.lookup(42).unwrap_err(), DescriptorError::UnknownFlow(42));
+    }
+
+    #[test]
+    fn updates_counter_tracks_mmio_writes() {
+        let mut t = DescriptorTable::new(4);
+        t.install(d(1, 0)).unwrap();
+        t.install(d(1, 1)).unwrap();
+        let _ = t.install(d(2, 0));
+        assert_eq!(t.updates, 3);
+    }
+}

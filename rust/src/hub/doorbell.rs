@@ -1,0 +1,112 @@
+//! Doorbell registers (§2.2.3): the GPU "can directly use one store
+//! instruction to trigger one doorbell register within the FPGA to start one
+//! collective operation". A bank of MMIO-mapped registers; rings are posted
+//! writes (cheap for the initiator), and the hub fabric notices a ring one
+//! fabric cycle later.
+
+use crate::sim::time::Ps;
+
+/// One doorbell ring event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ring {
+    pub register: u32,
+    pub value: u64,
+    pub rung_at: Ps,
+}
+
+/// A bank of doorbell registers.
+#[derive(Debug)]
+pub struct DoorbellBank {
+    registers: usize,
+    pending: std::collections::VecDeque<Ring>,
+    pub total_rings: u64,
+}
+
+impl DoorbellBank {
+    pub fn new(registers: usize) -> Self {
+        DoorbellBank {
+            registers,
+            pending: std::collections::VecDeque::new(),
+            total_rings: 0,
+        }
+    }
+
+    pub fn registers(&self) -> usize {
+        self.registers
+    }
+
+    /// An initiator's posted MMIO write lands at `at`.
+    pub fn ring(&mut self, register: u32, value: u64, at: Ps) {
+        assert!(
+            (register as usize) < self.registers,
+            "doorbell {register} out of range ({} registers)",
+            self.registers
+        );
+        self.total_rings += 1;
+        self.pending.push_back(Ring { register, value, rung_at: at });
+    }
+
+    /// The fabric polls its doorbells every cycle — drain rings visible by
+    /// `now` (BRAM write-to-read visibility is one cycle, folded into `now`).
+    pub fn drain_visible(&mut self, now: Ps) -> Vec<Ring> {
+        let mut out = Vec::new();
+        while let Some(front) = self.pending.front() {
+            if front.rung_at <= now {
+                out.push(self.pending.pop_front().unwrap());
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::US;
+
+    #[test]
+    fn ring_then_drain() {
+        let mut bank = DoorbellBank::new(8);
+        bank.ring(3, 0xDEAD, US);
+        assert_eq!(bank.pending(), 1);
+        assert!(bank.drain_visible(US / 2).is_empty(), "not visible yet");
+        let rings = bank.drain_visible(US);
+        assert_eq!(rings, vec![Ring { register: 3, value: 0xDEAD, rung_at: US }]);
+        assert_eq!(bank.pending(), 0);
+    }
+
+    #[test]
+    fn drain_preserves_ring_order() {
+        let mut bank = DoorbellBank::new(4);
+        bank.ring(0, 1, US);
+        bank.ring(1, 2, 2 * US);
+        bank.ring(2, 3, 3 * US);
+        let rings = bank.drain_visible(2 * US);
+        assert_eq!(rings.len(), 2);
+        assert_eq!(rings[0].value, 1);
+        assert_eq!(rings[1].value, 2);
+        assert_eq!(bank.pending(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_register_panics() {
+        DoorbellBank::new(2).ring(2, 0, 0);
+    }
+
+    #[test]
+    fn total_rings_counts_everything() {
+        let mut bank = DoorbellBank::new(1);
+        for i in 0..10 {
+            bank.ring(0, i, i * US);
+        }
+        bank.drain_visible(100 * US);
+        assert_eq!(bank.total_rings, 10);
+    }
+}

@@ -1,0 +1,25 @@
+//! The FpgaHub itself (§3 "Initial Design"): the three components the paper
+//! names — PCIe (QDMA: DMA + MMIO master/slave), networking (CMAC + custom
+//! reliable transport + split/assemble driven by descriptors), and the
+//! NIC-initiated user logic — plus the SSD controller, doorbells, the
+//! collective engine, and fabric resource accounting.
+
+pub mod collective;
+pub mod descriptor;
+pub mod doorbell;
+pub mod resources;
+pub mod split_assemble;
+pub mod ssd_ctrl;
+pub mod state_store;
+pub mod transport;
+pub mod user_logic;
+
+pub use collective::CollectiveEngine;
+pub use descriptor::{Descriptor, DescriptorTable, PayloadDest};
+pub use doorbell::DoorbellBank;
+pub use resources::hub_component_cost;
+pub use split_assemble::SplitAssemble;
+pub use ssd_ctrl::SsdController;
+pub use state_store::{StateStore, Urgency};
+pub use transport::FpgaTransport;
+pub use user_logic::UserLogic;

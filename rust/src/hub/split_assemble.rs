@@ -1,0 +1,132 @@
+//! The split/assemble component (§3.2): on receive, split each message into
+//! header (forwarded to host CPU memory) and payload (steered per the flow's
+//! descriptor); on send, reassemble header from CPU memory with payload from
+//! FPGA memory. This is what lets §2.5.3 keep the control plane on the CPU
+//! while the data plane never leaves the FPGA.
+
+use crate::hub::descriptor::{DescriptorError, DescriptorTable, PayloadDest};
+
+/// Result of splitting one received message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SplitResult {
+    pub flow: u64,
+    /// bytes DMA'd to host CPU memory (message header)
+    pub header_to_cpu: u64,
+    /// bytes steered to the payload destination
+    pub payload_bytes: u64,
+    pub payload_dest: PayloadDest,
+}
+
+/// Split/assemble statistics (per-direction byte counters).
+#[derive(Debug, Default)]
+pub struct SplitAssemble {
+    pub split_messages: u64,
+    pub header_bytes_to_cpu: u64,
+    pub payload_bytes_kept: u64,
+    pub assembled_messages: u64,
+}
+
+impl SplitAssemble {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Split an incoming `message_bytes`-long message of `flow`.
+    /// Header size is per-flow from the descriptor table; if the message is
+    /// shorter than the declared header, the whole message is header.
+    pub fn split(
+        &mut self,
+        table: &DescriptorTable,
+        flow: u64,
+        message_bytes: u64,
+    ) -> Result<SplitResult, DescriptorError> {
+        let d = table.lookup(flow)?;
+        let header = d.header_bytes.min(message_bytes);
+        let payload = message_bytes - header;
+        self.split_messages += 1;
+        self.header_bytes_to_cpu += header;
+        self.payload_bytes_kept += payload;
+        Ok(SplitResult {
+            flow,
+            header_to_cpu: header,
+            payload_bytes: payload,
+            payload_dest: d.payload_dest,
+        })
+    }
+
+    /// Assemble an outgoing message: header from CPU + payload from FPGA
+    /// memory; returns total wire bytes.
+    pub fn assemble(&mut self, header_bytes: u64, payload_bytes: u64) -> u64 {
+        self.assembled_messages += 1;
+        header_bytes + payload_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hub::descriptor::Descriptor;
+    use crate::pcie::Endpoint;
+
+    fn table() -> DescriptorTable {
+        let mut t = DescriptorTable::new(8);
+        t.install(Descriptor { flow: 1, header_bytes: 128, payload_dest: PayloadDest::FpgaMemory })
+            .unwrap();
+        t.install(Descriptor {
+            flow: 2,
+            header_bytes: 64,
+            payload_dest: PayloadDest::Device(Endpoint::Gpu),
+        })
+        .unwrap();
+        t
+    }
+
+    #[test]
+    fn split_respects_per_flow_header_size() {
+        let t = table();
+        let mut sa = SplitAssemble::new();
+        let r1 = sa.split(&t, 1, 65_536).unwrap();
+        assert_eq!(r1.header_to_cpu, 128);
+        assert_eq!(r1.payload_bytes, 65_536 - 128);
+        assert_eq!(r1.payload_dest, PayloadDest::FpgaMemory);
+
+        let r2 = sa.split(&t, 2, 65_536).unwrap();
+        assert_eq!(r2.header_to_cpu, 64);
+        assert_eq!(r2.payload_dest, PayloadDest::Device(Endpoint::Gpu));
+    }
+
+    #[test]
+    fn tiny_message_is_all_header() {
+        let t = table();
+        let mut sa = SplitAssemble::new();
+        let r = sa.split(&t, 1, 100).unwrap();
+        assert_eq!(r.header_to_cpu, 100);
+        assert_eq!(r.payload_bytes, 0);
+    }
+
+    #[test]
+    fn unknown_flow_is_an_error() {
+        let t = table();
+        let mut sa = SplitAssemble::new();
+        assert_eq!(sa.split(&t, 99, 1000).unwrap_err(), DescriptorError::UnknownFlow(99));
+    }
+
+    #[test]
+    fn byte_accounting_splits_exactly() {
+        let t = table();
+        let mut sa = SplitAssemble::new();
+        for _ in 0..10 {
+            sa.split(&t, 1, 4096).unwrap();
+        }
+        assert_eq!(sa.split_messages, 10);
+        assert_eq!(sa.header_bytes_to_cpu + sa.payload_bytes_kept, 10 * 4096);
+        assert_eq!(sa.header_bytes_to_cpu, 10 * 128);
+    }
+
+    #[test]
+    fn assemble_sums_parts() {
+        let mut sa = SplitAssemble::new();
+        assert_eq!(sa.assemble(128, 65_408), 65_536);
+        assert_eq!(sa.assembled_messages, 1);
+    }
+}

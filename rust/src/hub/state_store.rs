@@ -1,0 +1,186 @@
+//! Offloaded application-state store (§2.3.2, second co-design point):
+//! "offload states onto FPGA's on-board memory, because a typical FPGA
+//! features a few DDR channels, or even HBM stacks, to host massive
+//! application states."
+//!
+//! The store places named state regions (QP tables, aggregation buffers,
+//! KV/middle-tier state) across BRAM → HBM → DDR by a simple policy:
+//! latency-critical regions ask for BRAM and spill to HBM; bulk regions go
+//! to HBM and spill to DDR. The point the experiments make: a P4 switch
+//! caps stateful apps at tens of MB of SRAM (§2.3.1), while the hub offers
+//! *gigabytes* one PCIe/network hop away.
+
+use std::collections::HashMap;
+
+use crate::devices::fpga_mem::{MemBank, MemTier, OutOfMemory};
+use crate::sim::time::Ps;
+
+/// Placement urgency declared by the owner of a region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Urgency {
+    /// per-packet state: wants BRAM, tolerates HBM
+    LatencyCritical,
+    /// bulk state: wants HBM, tolerates DDR
+    Bulk,
+}
+
+/// A placed region.
+#[derive(Clone, Copy, Debug)]
+pub struct Region {
+    pub bytes: u64,
+    pub tier: MemTier,
+}
+
+/// The tiered store.
+#[derive(Debug)]
+pub struct StateStore {
+    pub bram: MemBank,
+    pub hbm: MemBank,
+    pub ddr: MemBank,
+    regions: HashMap<String, Region>,
+}
+
+impl Default for StateStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StateStore {
+    pub fn new() -> Self {
+        StateStore {
+            bram: MemBank::new(MemTier::Bram),
+            hbm: MemBank::new(MemTier::Hbm),
+            ddr: MemBank::new(MemTier::Ddr),
+            regions: HashMap::new(),
+        }
+    }
+
+    fn bank(&mut self, tier: MemTier) -> &mut MemBank {
+        match tier {
+            MemTier::Bram => &mut self.bram,
+            MemTier::Hbm => &mut self.hbm,
+            MemTier::Ddr => &mut self.ddr,
+        }
+    }
+
+    /// Place a named region; spills down the tier ladder on exhaustion.
+    pub fn place(
+        &mut self,
+        name: &str,
+        bytes: u64,
+        urgency: Urgency,
+    ) -> Result<Region, OutOfMemory> {
+        assert!(!self.regions.contains_key(name), "region '{name}' already placed");
+        let ladder: &[MemTier] = match urgency {
+            Urgency::LatencyCritical => &[MemTier::Bram, MemTier::Hbm, MemTier::Ddr],
+            Urgency::Bulk => &[MemTier::Hbm, MemTier::Ddr],
+        };
+        let mut last_err = None;
+        for &tier in ladder {
+            match self.bank(tier).allocate(bytes) {
+                Ok(()) => {
+                    let r = Region { bytes, tier };
+                    self.regions.insert(name.to_string(), r);
+                    return Ok(r);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.expect("ladder non-empty"))
+    }
+
+    /// Release a region.
+    pub fn release(&mut self, name: &str) {
+        if let Some(r) = self.regions.remove(name) {
+            self.bank(r.tier).free(r.bytes);
+        }
+    }
+
+    /// Access `bytes` of a region starting at `now`; returns completion.
+    pub fn access(&mut self, name: &str, now: Ps, bytes: u64) -> Ps {
+        let r = *self.regions.get(name).unwrap_or_else(|| panic!("unknown region '{name}'"));
+        self.bank(r.tier).access(now, bytes)
+    }
+
+    pub fn region(&self, name: &str) -> Option<&Region> {
+        self.regions.get(name)
+    }
+
+    /// Total state capacity (the number to put against the P4 switch's
+    /// tens-of-MB SRAM in §2.3).
+    pub fn total_capacity_bytes(&self) -> u64 {
+        self.bram.spec.capacity_bytes
+            + self.hbm.spec.capacity_bytes
+            + self.ddr.spec.capacity_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constants;
+    use crate::sim::time::NS;
+
+    #[test]
+    fn latency_critical_lands_in_bram() {
+        let mut s = StateStore::new();
+        let r = s.place("qp_table", 64 * 1024, Urgency::LatencyCritical).unwrap();
+        assert_eq!(r.tier, MemTier::Bram);
+        // per-packet QP lookup is cycle-class
+        let done = s.access("qp_table", 0, 128);
+        assert!(done < 10 * NS);
+    }
+
+    #[test]
+    fn bulk_lands_in_hbm_and_spills_to_ddr() {
+        let mut s = StateStore::new();
+        let r1 = s.place("grad_buf", 6 * (1 << 30), Urgency::Bulk).unwrap();
+        assert_eq!(r1.tier, MemTier::Hbm);
+        // second 6 GB no longer fits the 8 GB HBM -> spills to DDR
+        let r2 = s.place("kv_state", 6 * (1 << 30), Urgency::Bulk).unwrap();
+        assert_eq!(r2.tier, MemTier::Ddr);
+    }
+
+    #[test]
+    fn oversized_bram_ask_spills_to_hbm() {
+        let mut s = StateStore::new();
+        let r = s.place("big_table", 1 << 30, Urgency::LatencyCritical).unwrap();
+        assert_eq!(r.tier, MemTier::Hbm);
+    }
+
+    #[test]
+    fn exhaustion_reports_out_of_memory() {
+        let mut s = StateStore::new();
+        s.place("a", 32 * (1 << 30), Urgency::Bulk).unwrap(); // fills DDR... no: HBM first
+        s.place("b", 7 * (1 << 30), Urgency::Bulk).unwrap();
+        // now HBM has <8 GB free and DDR is... compute: a=32GB -> HBM(8) no,
+        // DDR(32) yes; b=7GB -> HBM. c=40GB fits nowhere.
+        let err = s.place("c", 40 * (1 << 30), Urgency::Bulk).unwrap_err();
+        assert!(err.asked > err.free);
+    }
+
+    #[test]
+    fn release_returns_capacity() {
+        let mut s = StateStore::new();
+        s.place("x", 8 * (1 << 30), Urgency::Bulk).unwrap(); // fills HBM
+        s.release("x");
+        let r = s.place("y", 8 * (1 << 30), Urgency::Bulk).unwrap();
+        assert_eq!(r.tier, MemTier::Hbm);
+    }
+
+    #[test]
+    fn hub_state_capacity_dwarfs_switch_sram() {
+        let s = StateStore::new();
+        let ratio = s.total_capacity_bytes() as f64 / constants::P4_SRAM_BYTES as f64;
+        assert!(ratio > 1000.0, "hub/switch state ratio {ratio}");
+    }
+
+    #[test]
+    #[should_panic(expected = "already placed")]
+    fn duplicate_region_rejected() {
+        let mut s = StateStore::new();
+        s.place("dup", 1024, Urgency::Bulk).unwrap();
+        let _ = s.place("dup", 1024, Urgency::Bulk);
+    }
+}

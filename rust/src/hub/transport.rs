@@ -1,0 +1,234 @@
+//! The FPGA-resident reliable network transport (§2.3.2, Fig 3b).
+//!
+//! A hardware go-back-N transport: QP (queue pair) state lives in on-chip
+//! memory, packetization/depacketization are pipelined at the fabric clock,
+//! and the whole send path costs `FPGA_TRANSPORT_CYCLES` — ~0.9 µs — instead
+//! of the CPU stack's ~8-10 µs with software jitter. The state machine is
+//! implemented exactly (sequence numbers, cumulative acks, retransmit on
+//! timeout) because the experiments inject loss to prove reliability.
+
+use std::collections::VecDeque;
+
+use crate::constants;
+use crate::net::packet::{packetize, Packet};
+use crate::sim::time::Ps;
+
+/// Per-QP connection state (kept in BRAM/URAM on the real device).
+#[derive(Debug)]
+pub struct QpState {
+    pub qp: u32,
+    pub next_seq: u32,
+    /// oldest unacked sequence
+    pub base: u32,
+    pub in_flight: VecDeque<Packet>,
+    /// receiver side: next expected sequence
+    pub expect: u32,
+    pub retransmits: u64,
+    pub delivered_bytes: u64,
+}
+
+impl QpState {
+    fn new(qp: u32) -> Self {
+        QpState {
+            qp,
+            next_seq: 0,
+            base: 0,
+            in_flight: VecDeque::new(),
+            expect: 0,
+            retransmits: 0,
+            delivered_bytes: 0,
+        }
+    }
+}
+
+/// The transport engine: QP table + packetizer.
+#[derive(Debug)]
+pub struct FpgaTransport {
+    pub mtu: u64,
+    pub window: usize,
+    qps: Vec<QpState>,
+    pub freq_mhz: u64,
+}
+
+/// What the receiver does with an arriving packet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RxAction {
+    /// in-order: deliver payload, advance expect, ack `expect`
+    Deliver { ack: u32, message_complete: bool },
+    /// out-of-order under go-back-N: drop, re-ack last in-order
+    DropOutOfOrder { ack: u32 },
+}
+
+impl FpgaTransport {
+    pub fn new(num_qps: u32, window: usize) -> Self {
+        FpgaTransport {
+            mtu: constants::MTU_BYTES,
+            window,
+            qps: (0..num_qps).map(QpState::new).collect(),
+            freq_mhz: constants::FPGA_FREQ_MHZ,
+        }
+    }
+
+    pub fn qp(&self, qp: u32) -> &QpState {
+        &self.qps[qp as usize]
+    }
+
+    /// Pipeline latency of one transport traversal (packetize or
+    /// depacketize side) — the 2 µs-class number of §2.3.2.
+    pub fn pipeline_latency(&self) -> Ps {
+        crate::sim::time::cycles(constants::FPGA_TRANSPORT_CYCLES, self.freq_mhz)
+    }
+
+    /// Sender: packetize a message on `qp`. Returns the packets admitted to
+    /// the window (the rest are queued by the caller re-invoking later —
+    /// hardware would backpressure the user logic).
+    pub fn send_message(&mut self, qp: u32, bytes: u64) -> Vec<Packet> {
+        let window = self.window;
+        let state = &mut self.qps[qp as usize];
+        let mut pkts = packetize(qp as u64, bytes, self.mtu);
+        // stamp transport sequence numbers
+        for p in &mut pkts {
+            p.seq = state.next_seq;
+            state.next_seq += 1;
+        }
+        assert!(
+            pkts.len() <= window,
+            "message needs {} packets but window is {window} — segment the message",
+            pkts.len()
+        );
+        for p in &pkts {
+            state.in_flight.push_back(p.clone());
+        }
+        pkts
+    }
+
+    /// Receiver side: classify an arriving packet under go-back-N.
+    pub fn receive(&mut self, qp: u32, pkt: &Packet) -> RxAction {
+        let state = &mut self.qps[qp as usize];
+        if pkt.seq == state.expect {
+            state.expect += 1;
+            state.delivered_bytes += pkt.payload_bytes;
+            RxAction::Deliver { ack: state.expect, message_complete: pkt.last_of_message }
+        } else {
+            RxAction::DropOutOfOrder { ack: state.expect }
+        }
+    }
+
+    /// Sender side: cumulative ack up to (but excluding) `ack`.
+    pub fn on_ack(&mut self, qp: u32, ack: u32) {
+        let state = &mut self.qps[qp as usize];
+        while state.base < ack {
+            state.in_flight.pop_front();
+            state.base += 1;
+        }
+    }
+
+    /// Sender side: retransmit everything in flight (timeout / dup-ack).
+    pub fn retransmit(&mut self, qp: u32) -> Vec<Packet> {
+        let state = &mut self.qps[qp as usize];
+        state.retransmits += state.in_flight.len() as u64;
+        state.in_flight.iter().cloned().collect()
+    }
+
+    /// BRAM cost of the QP table: the state that would otherwise live in
+    /// host DRAM (§2.3.2 "keeping massive network transport states ... on
+    /// FPGA's on-board or/and on-chip memory").
+    pub fn qp_table_bram_blocks(&self) -> u64 {
+        // ~128 B of state per QP, one 36 Kb BRAM per 32 QPs (dual-port)
+        (self.qps.len() as u64).div_ceil(32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lossless_roundtrip(bytes: u64) -> (FpgaTransport, FpgaTransport) {
+        let mut tx = FpgaTransport::new(1, 64);
+        let mut rx = FpgaTransport::new(1, 64);
+        let pkts = tx.send_message(0, bytes);
+        for p in &pkts {
+            match rx.receive(0, p) {
+                RxAction::Deliver { ack, .. } => tx.on_ack(0, ack),
+                RxAction::DropOutOfOrder { .. } => panic!("unexpected drop"),
+            }
+        }
+        (tx, rx)
+    }
+
+    #[test]
+    fn lossless_delivery_completes() {
+        let (tx, rx) = lossless_roundtrip(20_000);
+        assert_eq!(rx.qp(0).delivered_bytes, 20_000);
+        assert!(tx.qp(0).in_flight.is_empty());
+        assert_eq!(tx.qp(0).retransmits, 0);
+    }
+
+    #[test]
+    fn out_of_order_packet_dropped_and_reacked() {
+        let mut tx = FpgaTransport::new(1, 64);
+        let mut rx = FpgaTransport::new(1, 64);
+        let pkts = tx.send_message(0, 10_000); // 3 packets
+        // deliver pkt0, then pkt2 (pkt1 "lost")
+        assert!(matches!(rx.receive(0, &pkts[0]), RxAction::Deliver { ack: 1, .. }));
+        assert_eq!(rx.receive(0, &pkts[2]), RxAction::DropOutOfOrder { ack: 1 });
+        // retransmit from base: after ack(1), packets 1 and 2 remain
+        tx.on_ack(0, 1);
+        let re = tx.retransmit(0);
+        assert_eq!(re.len(), 2);
+        assert_eq!(re[0].seq, 1);
+        // now the go-back-N replay completes the message
+        for p in &re {
+            rx.receive(0, p);
+        }
+        assert_eq!(rx.qp(0).delivered_bytes, 10_000);
+        assert_eq!(tx.qp(0).retransmits, 2);
+    }
+
+    #[test]
+    fn sequence_numbers_continue_across_messages() {
+        let mut tx = FpgaTransport::new(1, 64);
+        let a = tx.send_message(0, 8192); // 2 pkts: seq 0,1
+        let b = tx.send_message(0, 4096); // 1 pkt: seq 2
+        assert_eq!(a[1].seq, 1);
+        assert_eq!(b[0].seq, 2);
+    }
+
+    #[test]
+    fn cumulative_ack_frees_window() {
+        let mut tx = FpgaTransport::new(1, 8);
+        tx.send_message(0, 8 * 4096); // fills the window
+        assert_eq!(tx.qp(0).in_flight.len(), 8);
+        tx.on_ack(0, 5);
+        assert_eq!(tx.qp(0).in_flight.len(), 3);
+        assert_eq!(tx.qp(0).base, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "window")]
+    fn oversized_message_rejected() {
+        let mut tx = FpgaTransport::new(1, 2);
+        tx.send_message(0, 100 * 4096);
+    }
+
+    #[test]
+    fn multiple_qps_independent() {
+        let mut tx = FpgaTransport::new(2, 64);
+        tx.send_message(0, 4096);
+        tx.send_message(1, 8192);
+        assert_eq!(tx.qp(0).next_seq, 1);
+        assert_eq!(tx.qp(1).next_seq, 2);
+    }
+
+    #[test]
+    fn pipeline_latency_sub_microsecond() {
+        let t = FpgaTransport::new(1, 4);
+        assert!(t.pipeline_latency() < crate::sim::time::US);
+    }
+
+    #[test]
+    fn qp_table_bram_scales() {
+        assert_eq!(FpgaTransport::new(32, 4).qp_table_bram_blocks(), 1);
+        assert_eq!(FpgaTransport::new(33, 4).qp_table_bram_blocks(), 2);
+    }
+}

@@ -1,0 +1,167 @@
+//! NIC-initiated user logic (§3.3): "this user logic, instead of the host
+//! CPU, can directly issue SSD operations on behalf of data analytics to
+//! fetch data from SSDs to the destination, once this module receives from
+//! the network a command to access storage."
+//!
+//! The state machine: network command → parse → SSD read(s) via the on-FPGA
+//! control plane → peer-to-peer DMA to the destination device → completion
+//! message back over the FPGA transport. No CPU anywhere on the path.
+
+use crate::hub::ssd_ctrl::SsdController;
+use crate::nvme::queue::{NvmeCommand, NvmeOp};
+use crate::nvme::ssd::SsdArray;
+use crate::pcie::{DmaEngine, Endpoint};
+use crate::sim::time::Ps;
+
+/// A storage command arriving from the network.
+#[derive(Clone, Copy, Debug)]
+pub struct StorageRequest {
+    pub id: u64,
+    pub op: NvmeOp,
+    pub ssd: usize,
+    pub lba: u64,
+    pub blocks_4k: u32,
+    pub dest: Endpoint,
+}
+
+/// Completed request: when data landed and where.
+#[derive(Clone, Copy, Debug)]
+pub struct StorageCompletion {
+    pub id: u64,
+    pub dest: Endpoint,
+    pub bytes: u64,
+    pub data_landed_at: Ps,
+}
+
+/// The orchestrator.
+pub struct UserLogic {
+    pub ctrl: SsdController,
+    pub p2p_ns: f64,
+    pub served: u64,
+}
+
+impl UserLogic {
+    pub fn new(num_ssds: usize, queue_depth: usize, p2p_ns: f64) -> Self {
+        UserLogic { ctrl: SsdController::new(num_ssds, queue_depth), p2p_ns, served: 0 }
+    }
+
+    /// Serve one network-initiated storage request end to end. `dma` is the
+    /// PCIe engine toward `req.dest`. Returns the completion record.
+    ///
+    /// Timeline: submit (fabric cycles) → SSD executes (media + p2p) →
+    /// completion captured natively → payload DMA'd to the destination.
+    pub fn serve(
+        &mut self,
+        now: Ps,
+        req: StorageRequest,
+        array: &mut SsdArray,
+        dma: &mut DmaEngine,
+    ) -> Result<StorageCompletion, crate::nvme::queue::SqFull> {
+        let bytes = req.blocks_4k as u64 * 4096;
+        let submit_done = now + self.ctrl.submit_cost();
+        self.ctrl.submit(
+            req.ssd,
+            NvmeCommand {
+                id: req.id,
+                op: req.op,
+                lba: req.lba,
+                blocks: req.blocks_4k * 8, // 512B blocks
+                buffer_addr: match req.dest {
+                    Endpoint::Cpu => 0x1000_0000,
+                    Endpoint::Gpu => 0x2000_0000,
+                    Endpoint::Fpga => 0x3000_0000,
+                    Endpoint::Ssd(_) => 0x4000_0000,
+                },
+            },
+        )?;
+        let visible = self
+            .ctrl
+            .ssd_execute_next(submit_done, req.ssd, array, self.p2p_ns)
+            .expect("command was just submitted");
+        self.ctrl.consume_completion(req.ssd).expect("completion just posted");
+        // For reads the SSD's DMA pushed data toward the buffer while the
+        // command executed; the hub forwards to the final destination if it
+        // is not the FPGA itself.
+        let landed = match req.dest {
+            Endpoint::Fpga => visible,
+            _ => dma.transfer(visible, bytes),
+        };
+        self.served += 1;
+        Ok(StorageCompletion { id: req.id, dest: req.dest, bytes, data_landed_at: landed })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcie::PcieLink;
+    use crate::sim::time::to_us;
+    use crate::util::Rng;
+
+    fn setup(ssds: usize) -> (UserLogic, SsdArray, DmaEngine) {
+        let mut rng = Rng::new(11);
+        (
+            UserLogic::new(ssds, 64, 500.0),
+            SsdArray::new(ssds, &mut rng),
+            DmaEngine::new(PcieLink::gen3_x16()),
+        )
+    }
+
+    fn req(id: u64, ssd: usize, dest: Endpoint) -> StorageRequest {
+        StorageRequest { id, op: NvmeOp::Read, ssd, lba: id * 8, blocks_4k: 1, dest }
+    }
+
+    #[test]
+    fn fetch_to_gpu_without_cpu() {
+        let (mut ul, mut arr, mut dma) = setup(2);
+        let c = ul.serve(0, req(1, 0, Endpoint::Gpu), &mut arr, &mut dma).unwrap();
+        assert_eq!(c.bytes, 4096);
+        // end-to-end ≈ SSD read latency + small p2p/DMA overheads; decisively
+        // under the CPU-staged path which adds ≥10µs software time
+        let us = to_us(c.data_landed_at);
+        assert!((60.0..120.0).contains(&us), "{us}µs");
+        assert_eq!(ul.served, 1);
+    }
+
+    #[test]
+    fn fpga_destination_skips_final_dma() {
+        let (mut ul, mut arr, mut dma) = setup(1);
+        let c = ul.serve(0, req(1, 0, Endpoint::Fpga), &mut arr, &mut dma).unwrap();
+        assert_eq!(dma.transfers, 0, "payload stays in FPGA memory");
+        assert_eq!(c.dest, Endpoint::Fpga);
+    }
+
+    #[test]
+    fn multi_block_reads_move_more_bytes() {
+        let (mut ul, mut arr, mut dma) = setup(1);
+        let mut r = req(1, 0, Endpoint::Gpu);
+        r.blocks_4k = 16;
+        let c = ul.serve(0, r, &mut arr, &mut dma).unwrap();
+        assert_eq!(c.bytes, 16 * 4096);
+    }
+
+    #[test]
+    fn requests_to_different_ssds_parallelize() {
+        let (mut ul, mut arr, mut dma) = setup(2);
+        let c0 = ul.serve(0, req(1, 0, Endpoint::Fpga), &mut arr, &mut dma).unwrap();
+        let c1 = ul.serve(0, req(2, 1, Endpoint::Fpga), &mut arr, &mut dma).unwrap();
+        // both finish in one media-latency window, not two
+        let max_us = to_us(c0.data_landed_at.max(c1.data_landed_at));
+        assert!(max_us < 120.0, "{max_us}");
+    }
+
+    #[test]
+    fn ring_full_backpressures_cleanly() {
+        let mut ul = UserLogic::new(1, 1, 500.0);
+        let mut rng = Rng::new(3);
+        let mut arr = SsdArray::new(1, &mut rng);
+        let mut dma = DmaEngine::new(PcieLink::gen3_x16());
+        // first request drains the ring inside serve(); to force SqFull we
+        // bypass serve and fill the ring manually
+        ul.ctrl
+            .submit(0, NvmeCommand { id: 1, op: NvmeOp::Read, lba: 0, blocks: 8, buffer_addr: 0 })
+            .unwrap();
+        let err = ul.serve(0, req(2, 0, Endpoint::Gpu), &mut arr, &mut dma);
+        assert!(err.is_err());
+    }
+}

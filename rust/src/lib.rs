@@ -1,0 +1,35 @@
+//! # FpgaHub — FPGA-centric hyper-heterogeneous computing platform
+//!
+//! Reproduction of *FpgaHub: FPGA-centric Hyper-heterogeneous Computing
+//! Platform for Big Data Analytics* (Wang et al., 2025).
+//!
+//! The crate is organized in three tiers (see `DESIGN.md`):
+//!
+//! * **Substrates** — a deterministic discrete-event simulator ([`sim`]) and
+//!   calibrated device models: PCIe fabric ([`pcie`]), Ethernet + P4 switch
+//!   ([`net`]), NVMe SSDs ([`nvme`]), CPU/GPU/FPGA ([`devices`]).
+//! * **FpgaHub core** ([`hub`]) — the paper's contribution: NIC-initiated
+//!   user logic, descriptor-driven split/assemble, an FPGA-resident reliable
+//!   transport, the on-FPGA NVMe control plane, offloaded collectives, and
+//!   FPGA resource accounting.
+//! * **Evaluation** — baselines ([`baselines`]), applications ([`apps`]),
+//!   experiment harnesses ([`expts`]) reproducing every figure/table of §4,
+//!   and a PJRT [`runtime`] that executes the AOT-lowered JAX/Pallas
+//!   artifacts so real numerics flow through the simulated platform.
+
+pub mod apps;
+pub mod baselines;
+pub mod bench_harness;
+pub mod config;
+pub mod constants;
+pub mod coordinator;
+pub mod devices;
+pub mod expts;
+pub mod hub;
+pub mod metrics;
+pub mod net;
+pub mod nvme;
+pub mod pcie;
+pub mod runtime;
+pub mod sim;
+pub mod util;

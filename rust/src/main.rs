@@ -1,0 +1,151 @@
+//! `fpgahub` — the leader binary.
+//!
+//! Subcommands (hand-rolled CLI; no `clap` offline — DESIGN.md §6):
+//!   fpgahub list                       list experiments
+//!   fpgahub expt <name> [--config F] [--samples N] [--no-csv]
+//!   fpgahub all [--config F]           run every experiment
+//!   fpgahub train [--steps N] [--workers W] [--config F]
+//!   fpgahub fetch-demo [--requests N]  NIC-initiated storage fetch demo
+//!   fpgahub info                       platform + artifact status
+
+use fpgahub::config::ExperimentConfig;
+use fpgahub::coordinator::{TrainConfig, TrainDriver};
+use fpgahub::expts;
+use fpgahub::runtime::Runtime;
+use fpgahub::sim::time::to_us;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: fpgahub <list|expt NAME|all|train|fetch-demo|info> [options]\n\
+         options: --config FILE --samples N --steps N --workers N --requests N --no-csv"
+    );
+    std::process::exit(2);
+}
+
+struct Args {
+    cmd: String,
+    name: Option<String>,
+    config: Option<String>,
+    samples: Option<usize>,
+    steps: Option<usize>,
+    workers: Option<usize>,
+    requests: Option<u64>,
+    no_csv: bool,
+}
+
+fn parse_args() -> Args {
+    let mut argv = std::env::args().skip(1);
+    let cmd = argv.next().unwrap_or_else(|| usage());
+    let mut a = Args {
+        cmd,
+        name: None,
+        config: None,
+        samples: None,
+        steps: None,
+        workers: None,
+        requests: None,
+        no_csv: false,
+    };
+    let mut positional: Vec<String> = Vec::new();
+    let mut args: Vec<String> = argv.collect();
+    args.reverse();
+    while let Some(arg) = args.pop() {
+        let mut need = |what: &str| -> String {
+            args.pop().unwrap_or_else(|| {
+                eprintln!("{what} needs a value");
+                std::process::exit(2)
+            })
+        };
+        match arg.as_str() {
+            "--config" => a.config = Some(need("--config")),
+            "--samples" => a.samples = need("--samples").parse().ok(),
+            "--steps" => a.steps = need("--steps").parse().ok(),
+            "--workers" => a.workers = need("--workers").parse().ok(),
+            "--requests" => a.requests = need("--requests").parse().ok(),
+            "--no-csv" => a.no_csv = true,
+            other if !other.starts_with("--") => positional.push(other.to_string()),
+            other => {
+                eprintln!("unknown option {other}");
+                usage();
+            }
+        }
+    }
+    a.name = positional.into_iter().next();
+    a
+}
+
+fn load_cfg(a: &Args) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = match &a.config {
+        Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(s) = a.samples {
+        cfg.samples = s;
+    }
+    if let Some(s) = a.steps {
+        cfg.train_steps = s;
+    }
+    if let Some(w) = a.workers {
+        cfg.platform.workers = w as u32;
+    }
+    if a.no_csv {
+        cfg.csv = false;
+    }
+    Ok(cfg)
+}
+
+fn main() -> anyhow::Result<()> {
+    let a = parse_args();
+    let cfg = load_cfg(&a)?;
+    match a.cmd.as_str() {
+        "list" => {
+            println!("experiments: {}", expts::ALL.join(" "));
+        }
+        "expt" => {
+            let name = a.name.clone().unwrap_or_else(|| usage());
+            expts::run(&name, &cfg)?;
+        }
+        "all" => {
+            for name in expts::ALL {
+                expts::run(name, &cfg)?;
+            }
+        }
+        "train" => {
+            let rt = Runtime::new(&cfg.platform.artifacts_dir)?;
+            let tc = TrainConfig {
+                workers: cfg.platform.workers as usize,
+                steps: cfg.train_steps,
+                ..Default::default()
+            };
+            let mut driver = TrainDriver::new(rt, tc)?;
+            driver.run()?;
+            println!(
+                "loss: {:.4} -> {:.4} over {} steps ({:.1}ms simulated)",
+                driver.first_loss(),
+                driver.last_loss(),
+                cfg.train_steps,
+                to_us(driver.logs.last().unwrap().sim_time) / 1000.0
+            );
+        }
+        "fetch-demo" => {
+            let n = a.requests.unwrap_or(2000);
+            let mut r = fpgahub::apps::run_fetch_demo(n, cfg.platform.num_ssds, cfg.platform.seed);
+            println!("NIC-initiated: {}", r.nic_initiated.summary("µs"));
+            println!("CPU-staged:    {}", r.cpu_staged.summary("µs"));
+        }
+        "info" => {
+            println!("platform: {:?}", cfg.platform);
+            match Runtime::new(&cfg.platform.artifacts_dir) {
+                Ok(rt) => {
+                    println!("PJRT: {} devices", rt.client.device_count());
+                    let mut names: Vec<_> = rt.index.artifacts.keys().collect();
+                    names.sort();
+                    println!("artifacts ({}): {names:?}", names.len());
+                }
+                Err(e) => println!("artifacts not ready: {e}"),
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

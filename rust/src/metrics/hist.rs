@@ -1,0 +1,176 @@
+//! Latency histogram: keeps all samples (experiments are bounded) for exact
+//! percentiles, plus running mean/min/max — the quantities Figures 7 and 8
+//! report (mean, fluctuation band, order-of-magnitude comparisons).
+
+#[derive(Clone, Debug, Default)]
+pub struct Hist {
+    samples: Vec<f64>,
+    sorted: bool,
+    sum: f64,
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+        self.sum += v;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.sum / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self
+            .samples
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile by linear interpolation, q in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q));
+        self.ensure_sorted();
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let n = self.samples.len();
+        let rank = q / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// "Fluctuation" as the paper plots it: p99 − p1 band width.
+    pub fn fluctuation(&mut self) -> f64 {
+        self.percentile(99.0) - self.percentile(1.0)
+    }
+
+    /// One-line summary used by the bench harness.
+    pub fn summary(&mut self, unit: &str) -> String {
+        format!(
+            "n={} mean={:.3}{u} p50={:.3}{u} p99={:.3}{u} min={:.3}{u} max={:.3}{u}",
+            self.len(),
+            self.mean(),
+            self.p50(),
+            self.p99(),
+            self.min(),
+            self.max(),
+            u = unit
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(vals: &[f64]) -> Hist {
+        let mut h = Hist::new();
+        for &v in vals {
+            h.record(v);
+        }
+        h
+    }
+
+    #[test]
+    fn mean_min_max() {
+        let h = filled(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(h.mean(), 2.5);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 4.0);
+    }
+
+    #[test]
+    fn percentiles_exact_on_known_data() {
+        let mut h = filled(&(1..=100).map(|x| x as f64).collect::<Vec<_>>());
+        assert!((h.p50() - 50.5).abs() < 1e-9);
+        assert!((h.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((h.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!(h.p99() > 98.0 && h.p99() < 100.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut h = filled(&[7.0]);
+        assert_eq!(h.p50(), 7.0);
+        assert_eq!(h.mean(), 7.0);
+        assert_eq!(h.stddev(), 0.0);
+    }
+
+    #[test]
+    fn stddev_matches_formula() {
+        let h = filled(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        // sample stddev of this classic set is ~2.138
+        assert!((h.stddev() - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn fluctuation_band() {
+        let mut h = filled(&(0..1000).map(|x| x as f64).collect::<Vec<_>>());
+        let f = h.fluctuation();
+        assert!(f > 950.0 && f <= 990.0, "{f}");
+    }
+
+    #[test]
+    fn record_after_percentile_resorts() {
+        let mut h = filled(&[5.0, 1.0]);
+        assert_eq!(h.p50(), 3.0);
+        h.record(0.0);
+        assert_eq!(h.percentile(0.0), 0.0);
+    }
+
+    #[test]
+    fn empty_hist_is_safe() {
+        let mut h = Hist::new();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.p50(), 0.0);
+        assert!(h.is_empty());
+    }
+}

@@ -1,0 +1,11 @@
+//! Measurement plumbing shared by every experiment: streaming histograms
+//! with exact percentiles, time-bucketed throughput series, and the ASCII /
+//! CSV reporters that print the paper's rows.
+
+pub mod hist;
+pub mod report;
+pub mod series;
+
+pub use hist::Hist;
+pub use report::{write_csv, Table};
+pub use series::Series;

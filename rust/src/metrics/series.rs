@@ -1,0 +1,100 @@
+//! Time-bucketed throughput series (Figures 9 / 10a plot throughput curves).
+
+use crate::sim::time::{to_s, Ps};
+
+/// Accumulates (time, amount) points and reports totals / rates.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    points: Vec<(Ps, f64)>,
+    total: f64,
+}
+
+impl Series {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, at: Ps, amount: f64) {
+        self.points.push((at, amount));
+        self.total += amount;
+    }
+
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Average rate (amount/sec) over [start, end].
+    pub fn rate_over(&self, start: Ps, end: Ps) -> f64 {
+        assert!(end > start);
+        let sum: f64 = self
+            .points
+            .iter()
+            .filter(|(t, _)| *t >= start && *t <= end)
+            .map(|(_, a)| a)
+            .sum();
+        sum / to_s(end - start)
+    }
+
+    /// Steady-state rate: drops the leading `warmup_frac` of the window to
+    /// exclude ramp-up (queues filling, pipelines priming).
+    pub fn steady_rate(&self, end: Ps, warmup_frac: f64) -> f64 {
+        let start = (end as f64 * warmup_frac) as Ps;
+        if end <= start {
+            return 0.0;
+        }
+        self.rate_over(start, end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::{MS, S};
+
+    #[test]
+    fn total_accumulates() {
+        let mut s = Series::new();
+        s.record(0, 10.0);
+        s.record(MS, 20.0);
+        assert_eq!(s.total(), 30.0);
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn rate_over_window() {
+        let mut s = Series::new();
+        // 1000 units/ms for 1s => 1e6 units/s
+        for i in 0..1000 {
+            s.record(i * MS, 1000.0);
+        }
+        let r = s.rate_over(0, S);
+        assert!((r - 1e6).abs() / 1e6 < 1e-6);
+    }
+
+    #[test]
+    fn steady_rate_excludes_warmup() {
+        let mut s = Series::new();
+        // nothing in the first half, 100/ms in the second half
+        for i in 500..1000 {
+            s.record(i * MS, 100.0);
+        }
+        let all = s.rate_over(0, S);
+        let steady = s.steady_rate(S, 0.5);
+        assert!(steady > all * 1.9, "steady {steady} vs all {all}");
+    }
+
+    #[test]
+    fn empty_series() {
+        let s = Series::new();
+        assert_eq!(s.rate_over(0, S), 0.0);
+        assert!(s.is_empty());
+    }
+}

@@ -1,0 +1,78 @@
+//! Ethernet link: bandwidth serialization + per-hop propagation.
+
+use crate::constants;
+use crate::sim::time::{ns_f, Ps};
+
+/// A full-duplex Ethernet link direction (model each direction separately).
+#[derive(Clone, Debug)]
+pub struct EthLink {
+    pub gbps: f64,
+    pub hop_ns: f64,
+    busy_until: Ps,
+    pub bytes_moved: u64,
+}
+
+impl EthLink {
+    pub fn new_100g() -> Self {
+        EthLink {
+            gbps: constants::ETH_GBPS,
+            hop_ns: constants::ETH_HOP_NS,
+            busy_until: 0,
+            bytes_moved: 0,
+        }
+    }
+
+    pub fn with_gbps(gbps: f64) -> Self {
+        EthLink { gbps, hop_ns: constants::ETH_HOP_NS, busy_until: 0, bytes_moved: 0 }
+    }
+
+    /// Serialization time of `bytes` on the wire.
+    pub fn ser_time(&self, bytes: u64) -> Ps {
+        ns_f(bytes as f64 * 8.0 / self.gbps)
+    }
+
+    /// Transmit starting no earlier than `now`; returns (first_bit_out,
+    /// last_bit_at_receiver). Serialization occupies the link; propagation
+    /// does not.
+    pub fn transmit(&mut self, now: Ps, bytes: u64) -> (Ps, Ps) {
+        let start = now.max(self.busy_until);
+        let ser_done = start + self.ser_time(bytes);
+        self.busy_until = ser_done;
+        self.bytes_moved += bytes;
+        (start, ser_done + ns_f(self.hop_ns))
+    }
+
+    pub fn busy_until(&self) -> Ps {
+        self.busy_until
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::NS;
+
+    #[test]
+    fn serialization_plus_propagation() {
+        let mut l = EthLink::with_gbps(100.0);
+        let (s, arr) = l.transmit(0, 1250); // 100ns ser
+        assert_eq!(s, 0);
+        assert_eq!(arr, 100 * NS + ns_f(constants::ETH_HOP_NS));
+    }
+
+    #[test]
+    fn back_to_back_packets_queue() {
+        let mut l = EthLink::with_gbps(100.0);
+        let (_, a1) = l.transmit(0, 1250);
+        let (s2, a2) = l.transmit(0, 1250);
+        assert_eq!(s2, 100 * NS); // waits for the wire, not the propagation
+        assert_eq!(a2, a1 + 100 * NS);
+    }
+
+    #[test]
+    fn faster_link_is_faster() {
+        let t100 = EthLink::with_gbps(100.0).ser_time(4096);
+        let t400 = EthLink::with_gbps(400.0).ser_time(4096);
+        assert_eq!(t100, 4 * t400);
+    }
+}

@@ -1,0 +1,11 @@
+//! Network substrate: Ethernet links, packets, host NIC models, and the
+//! Tofino-class P4 switch pipeline with its three §2.3.1 limitations made
+//! explicit (stage count, ALU capability, SRAM budget).
+
+pub mod link;
+pub mod p4;
+pub mod packet;
+
+pub use link::EthLink;
+pub use p4::{P4Program, P4Switch, SwitchAggregator};
+pub use packet::{packetize, Packet};

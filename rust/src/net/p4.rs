@@ -1,0 +1,305 @@
+//! Tofino-class P4 switch model.
+//!
+//! §2.3.1's three limitations are first-class here:
+//!  1. **limited stages** — a program declaring more dependent stages than
+//!     the pipeline has is rejected at "compile" (validation) time;
+//!  2. **limited ALU** — programs needing multiply/divide/float are rejected
+//!     (only add/sub/compare/bit ops survive);
+//!  3. **limited SRAM** — stateful slots (e.g. aggregation registers) must
+//!     fit the SRAM budget.
+//!
+//! The switch also does the actual in-network math for Fig 8: integer
+//! aggregation of fixed-point gradient chunks with saturation tracking.
+
+use crate::constants;
+use crate::sim::time::{ns_f, Ps};
+
+/// Operations a match-action stage ALU can perform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Compare,
+    BitOp,
+    Multiply,
+    Divide,
+    Float,
+}
+
+impl AluOp {
+    /// §2.3.1: "the switch data plane ... can't support complex calculations
+    /// like multiplication and division".
+    pub fn supported(self) -> bool {
+        !matches!(self, AluOp::Multiply | AluOp::Divide | AluOp::Float)
+    }
+}
+
+/// A data-plane program's resource declaration.
+#[derive(Clone, Debug)]
+pub struct P4Program {
+    pub name: String,
+    /// longest chain of *dependent* table applications
+    pub dependent_stages: u32,
+    pub ops: Vec<AluOp>,
+    pub sram_bytes: u64,
+}
+
+/// Validation errors mirror the paper's three limitations.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum P4Error {
+    #[error("program '{0}' needs {1} dependent stages but the pipeline has {2}")]
+    TooManyStages(String, u32, u32),
+    #[error("program '{0}' uses unsupported ALU op {1:?}")]
+    UnsupportedOp(String, AluOp),
+    #[error("program '{0}' needs {1} B SRAM but only {2} B available")]
+    SramExceeded(String, u64, u64),
+}
+
+/// The switch itself.
+#[derive(Debug)]
+pub struct P4Switch {
+    pub stages: u32,
+    pub stage_ns: f64,
+    pub ports: u32,
+    pub port_gbps: f64,
+    pub sram_bytes: u64,
+    sram_used: u64,
+    programs: Vec<P4Program>,
+}
+
+impl Default for P4Switch {
+    fn default() -> Self {
+        Self::tofino()
+    }
+}
+
+impl P4Switch {
+    pub fn tofino() -> Self {
+        P4Switch {
+            stages: constants::P4_STAGES,
+            stage_ns: constants::P4_STAGE_NS,
+            ports: constants::P4_PORTS,
+            port_gbps: constants::P4_PORT_GBPS,
+            sram_bytes: constants::P4_SRAM_BYTES,
+            sram_used: 0,
+            programs: Vec::new(),
+        }
+    }
+
+    /// Install a program if it fits all three constraints.
+    pub fn install(&mut self, prog: P4Program) -> Result<(), P4Error> {
+        if prog.dependent_stages > self.stages {
+            return Err(P4Error::TooManyStages(
+                prog.name.clone(),
+                prog.dependent_stages,
+                self.stages,
+            ));
+        }
+        if let Some(op) = prog.ops.iter().find(|o| !o.supported()) {
+            return Err(P4Error::UnsupportedOp(prog.name.clone(), *op));
+        }
+        let avail = self.sram_bytes - self.sram_used;
+        if prog.sram_bytes > avail {
+            return Err(P4Error::SramExceeded(prog.name.clone(), prog.sram_bytes, avail));
+        }
+        self.sram_used += prog.sram_bytes;
+        self.programs.push(prog);
+        Ok(())
+    }
+
+    pub fn sram_free(&self) -> u64 {
+        self.sram_bytes - self.sram_used
+    }
+
+    /// One packet's pipeline traversal latency ("roughly 1-2 us", §2.3.1).
+    pub fn pipeline_latency(&self) -> Ps {
+        ns_f(self.stages as f64 * self.stage_ns)
+    }
+
+    /// Aggregate switching capacity (Tofino: 3.2 Tb/s).
+    pub fn aggregate_tbps(&self) -> f64 {
+        self.ports as f64 * self.port_gbps / 1000.0
+    }
+}
+
+/// The SwitchML/ATP-style aggregation service running *on* the switch:
+/// `slots` fixed-point accumulators in SRAM; workers stream chunks, the
+/// switch adds them with its 32-bit ALUs and multicasts when all have
+/// contributed.
+#[derive(Debug)]
+pub struct SwitchAggregator {
+    pub workers: u32,
+    pub slots: usize,
+    acc: Vec<i32>,
+    contributed: Vec<u32>,
+    pub saturations: u64,
+}
+
+impl SwitchAggregator {
+    /// Builds the aggregator *and* its P4 program; installation can fail if
+    /// the slot count blows the SRAM budget (a real Tofino constraint).
+    pub fn install(
+        switch: &mut P4Switch,
+        workers: u32,
+        slots: usize,
+    ) -> Result<Self, P4Error> {
+        let prog = P4Program {
+            name: format!("switch-agg-{workers}w-{slots}s"),
+            // parse, bitmap-update, add, count-check, multicast decision
+            dependent_stages: 5,
+            ops: vec![AluOp::Add, AluOp::Compare, AluOp::BitOp],
+            // accumulator + contribution bitmap per slot
+            sram_bytes: (slots * (4 + 4)) as u64,
+        };
+        switch.install(prog)?;
+        Ok(SwitchAggregator {
+            workers,
+            slots,
+            acc: vec![0; slots],
+            contributed: vec![0; slots],
+            saturations: 0,
+        })
+    }
+
+    /// Worker `w`'s fixed-point chunk lands on slot range [0, len).
+    /// Returns Some(result) when this contribution completes the slot set.
+    pub fn contribute(&mut self, values: &[i32]) -> Option<Vec<i32>> {
+        assert!(values.len() <= self.slots, "chunk larger than slot array");
+        for (i, &v) in values.iter().enumerate() {
+            let (sum, over) = self.acc[i].overflowing_add(v);
+            if over {
+                self.saturations += 1;
+                self.acc[i] = if self.acc[i] > 0 { i32::MAX } else { i32::MIN };
+            } else {
+                self.acc[i] = sum;
+            }
+            self.contributed[i] += 1;
+        }
+        if self.contributed[..values.len()].iter().all(|&c| c >= self.workers) {
+            let out = self.acc[..values.len()].to_vec();
+            for i in 0..values.len() {
+                self.acc[i] = 0;
+                self.contributed[i] = 0;
+            }
+            Some(out)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::US;
+
+    #[test]
+    fn pipeline_latency_in_band() {
+        let sw = P4Switch::tofino();
+        let lat = sw.pipeline_latency();
+        assert!(lat >= US && lat <= 2 * US, "{lat}");
+    }
+
+    #[test]
+    fn tofino_is_3_2_tbps() {
+        assert!((P4Switch::tofino().aggregate_tbps() - 3.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_multiplication() {
+        let mut sw = P4Switch::tofino();
+        let err = sw
+            .install(P4Program {
+                name: "mulnet".into(),
+                dependent_stages: 3,
+                ops: vec![AluOp::Add, AluOp::Multiply],
+                sram_bytes: 64,
+            })
+            .unwrap_err();
+        assert!(matches!(err, P4Error::UnsupportedOp(_, AluOp::Multiply)));
+    }
+
+    #[test]
+    fn rejects_long_dependency_chains() {
+        let mut sw = P4Switch::tofino();
+        let err = sw
+            .install(P4Program {
+                name: "deep".into(),
+                dependent_stages: 13,
+                ops: vec![AluOp::Add],
+                sram_bytes: 0,
+            })
+            .unwrap_err();
+        assert!(matches!(err, P4Error::TooManyStages(_, 13, 12)));
+    }
+
+    #[test]
+    fn rejects_sram_overflow_and_tracks_usage() {
+        let mut sw = P4Switch::tofino();
+        let half = sw.sram_bytes / 2 + 1;
+        sw.install(P4Program {
+            name: "a".into(),
+            dependent_stages: 1,
+            ops: vec![],
+            sram_bytes: half,
+        })
+        .unwrap();
+        let err = sw
+            .install(P4Program {
+                name: "b".into(),
+                dependent_stages: 1,
+                ops: vec![],
+                sram_bytes: half,
+            })
+            .unwrap_err();
+        assert!(matches!(err, P4Error::SramExceeded(..)));
+    }
+
+    #[test]
+    fn aggregator_sums_all_workers() {
+        let mut sw = P4Switch::tofino();
+        let mut agg = SwitchAggregator::install(&mut sw, 4, 8).unwrap();
+        for w in 0..4 {
+            let chunk: Vec<i32> = (0..8).map(|i| (w * 10 + i) as i32).collect();
+            let res = agg.contribute(&chunk);
+            if w < 3 {
+                assert!(res.is_none());
+            } else {
+                let out = res.unwrap();
+                for i in 0..8 {
+                    let want: i32 = (0..4).map(|w2| w2 * 10 + i).sum();
+                    assert_eq!(out[i as usize], want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aggregator_resets_for_next_round() {
+        let mut sw = P4Switch::tofino();
+        let mut agg = SwitchAggregator::install(&mut sw, 2, 4).unwrap();
+        for round in 0..3 {
+            assert!(agg.contribute(&[1, 2, 3, 4]).is_none());
+            let out = agg.contribute(&[10, 20, 30, 40]).unwrap();
+            assert_eq!(out, vec![11, 22, 33, 44], "round {round}");
+        }
+    }
+
+    #[test]
+    fn aggregator_saturates_not_wraps() {
+        let mut sw = P4Switch::tofino();
+        let mut agg = SwitchAggregator::install(&mut sw, 2, 1).unwrap();
+        agg.contribute(&[i32::MAX]);
+        let out = agg.contribute(&[i32::MAX]).unwrap();
+        assert_eq!(out[0], i32::MAX);
+        assert_eq!(agg.saturations, 1);
+    }
+
+    #[test]
+    fn aggregator_slot_budget_enforced_by_sram() {
+        let mut sw = P4Switch::tofino();
+        // far beyond the ~22 MB SRAM budget at 8 B/slot
+        let too_many = (sw.sram_bytes as usize / 8) + 1;
+        assert!(SwitchAggregator::install(&mut sw, 8, too_many).is_err());
+    }
+}

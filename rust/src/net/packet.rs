@@ -1,0 +1,100 @@
+//! Packets and message packetization (MTU segmentation).
+
+use crate::constants::MTU_BYTES;
+
+/// One wire packet. `payload_bytes` excludes the fixed header.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Packet {
+    pub flow: u64,
+    pub seq: u32,
+    pub payload_bytes: u64,
+    pub last_of_message: bool,
+}
+
+/// Fixed per-packet header overhead (Eth + IP/UDP-class + transport).
+pub const HEADER_BYTES: u64 = 64;
+
+impl Packet {
+    pub fn wire_bytes(&self) -> u64 {
+        self.payload_bytes + HEADER_BYTES
+    }
+}
+
+/// Split a message into MTU-sized packets (the FPGA transport's packetizer
+/// and the CPU stack's segmentation both use this).
+pub fn packetize(flow: u64, message_bytes: u64, mtu: u64) -> Vec<Packet> {
+    assert!(mtu > 0, "mtu must be positive");
+    if message_bytes == 0 {
+        return vec![Packet { flow, seq: 0, payload_bytes: 0, last_of_message: true }];
+    }
+    let n = message_bytes.div_ceil(mtu);
+    (0..n)
+        .map(|i| {
+            let remaining = message_bytes - i * mtu;
+            Packet {
+                flow,
+                seq: i as u32,
+                payload_bytes: remaining.min(mtu),
+                last_of_message: i == n - 1,
+            }
+        })
+        .collect()
+}
+
+/// Convenience: packetize at the default MTU.
+pub fn packetize_default(flow: u64, message_bytes: u64) -> Vec<Packet> {
+    packetize(flow, message_bytes, MTU_BYTES)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_multiple_of_mtu() {
+        let ps = packetize(1, 8192, 4096);
+        assert_eq!(ps.len(), 2);
+        assert!(ps.iter().all(|p| p.payload_bytes == 4096));
+        assert!(ps[1].last_of_message && !ps[0].last_of_message);
+    }
+
+    #[test]
+    fn ragged_tail() {
+        let ps = packetize(1, 10_000, 4096);
+        assert_eq!(ps.len(), 3);
+        assert_eq!(ps[2].payload_bytes, 10_000 - 2 * 4096);
+        let total: u64 = ps.iter().map(|p| p.payload_bytes).sum();
+        assert_eq!(total, 10_000);
+    }
+
+    #[test]
+    fn small_message_single_packet() {
+        let ps = packetize(1, 100, 4096);
+        assert_eq!(ps.len(), 1);
+        assert_eq!(ps[0].payload_bytes, 100);
+        assert!(ps[0].last_of_message);
+    }
+
+    #[test]
+    fn zero_byte_message_still_sends_marker() {
+        let ps = packetize(1, 0, 4096);
+        assert_eq!(ps.len(), 1);
+        assert_eq!(ps[0].payload_bytes, 0);
+        assert!(ps[0].last_of_message);
+    }
+
+    #[test]
+    fn sequence_numbers_monotonic() {
+        let ps = packetize(9, 50_000, 4096);
+        for (i, p) in ps.iter().enumerate() {
+            assert_eq!(p.seq as usize, i);
+            assert_eq!(p.flow, 9);
+        }
+    }
+
+    #[test]
+    fn wire_bytes_include_header() {
+        let p = Packet { flow: 0, seq: 0, payload_bytes: 1000, last_of_message: true };
+        assert_eq!(p.wire_bytes(), 1000 + HEADER_BYTES);
+    }
+}

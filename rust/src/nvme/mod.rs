@@ -1,0 +1,10 @@
+//! NVMe substrate: SSD device model plus the SQ/CQ queue-pair protocol of
+//! §2.4.1 — generic over *where* the queues live (host DRAM for the CPU
+//! control plane, FPGA BRAM for the offloaded one), which is exactly the
+//! design axis the paper's Fig 4 contrasts.
+
+pub mod queue;
+pub mod ssd;
+
+pub use queue::{CompletionEntry, NvmeCommand, NvmeOp, QueueLocation, QueuePair};
+pub use ssd::{Ssd, SsdArray};

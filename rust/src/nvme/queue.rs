@@ -1,0 +1,164 @@
+//! NVMe submission/completion queue pairs (§2.4.1 steps 1–5).
+
+/// Read or write (4 KB random I/O in the Fig 9 workload).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NvmeOp {
+    Read,
+    Write,
+}
+
+/// One NVMe command as the paper describes it: direction, LBA, and the PCIe
+/// bus address of the data buffer — which may be CPU memory, GPU memory, or
+/// FPGA memory ("the only difference ... is the PCIe bus address field",
+/// §2.4.2).
+#[derive(Clone, Copy, Debug)]
+pub struct NvmeCommand {
+    pub id: u64,
+    pub op: NvmeOp,
+    pub lba: u64,
+    pub blocks: u32,
+    pub buffer_addr: u64,
+}
+
+/// Completion queue entry.
+#[derive(Clone, Copy, Debug)]
+pub struct CompletionEntry {
+    pub command_id: u64,
+    pub status_ok: bool,
+}
+
+/// Where a queue pair physically lives — the crux of §2.4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueLocation {
+    /// Host DRAM: the CPU polls CQs (expensive), NVMe controller DMAs
+    /// across the root complex.
+    HostDram,
+    /// FPGA on-chip BRAM: user logic captures CQ writes natively; commands
+    /// move via peer-to-peer DMA.
+    FpgaBram,
+}
+
+/// A bounded SQ/CQ ring pair.
+#[derive(Debug)]
+pub struct QueuePair {
+    pub location: QueueLocation,
+    pub depth: usize,
+    sq: std::collections::VecDeque<NvmeCommand>,
+    cq: std::collections::VecDeque<CompletionEntry>,
+    pub sq_doorbells: u64,
+    pub cq_doorbells: u64,
+}
+
+/// Ring-full error — the submitter must back off (backpressure).
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[error("submission queue full (depth {0})")]
+pub struct SqFull(pub usize);
+
+impl QueuePair {
+    pub fn new(location: QueueLocation, depth: usize) -> Self {
+        QueuePair {
+            location,
+            depth,
+            sq: std::collections::VecDeque::with_capacity(depth),
+            cq: std::collections::VecDeque::with_capacity(depth),
+            sq_doorbells: 0,
+            cq_doorbells: 0,
+        }
+    }
+
+    /// Step 1: write a command to an SQ entry + ring the doorbell.
+    pub fn submit(&mut self, cmd: NvmeCommand) -> Result<(), SqFull> {
+        if self.sq.len() >= self.depth {
+            return Err(SqFull(self.depth));
+        }
+        self.sq.push_back(cmd);
+        self.sq_doorbells += 1;
+        Ok(())
+    }
+
+    /// Step 2: the NVMe controller fetches the next command.
+    pub fn fetch(&mut self) -> Option<NvmeCommand> {
+        self.sq.pop_front()
+    }
+
+    /// Step 4: the SSD posts a completion.
+    pub fn complete(&mut self, entry: CompletionEntry) {
+        assert!(self.cq.len() < self.depth, "CQ overflow — protocol violation");
+        self.cq.push_back(entry);
+    }
+
+    /// Step 5: the control plane consumes a completion + rings the CQ
+    /// doorbell. For `HostDram` this is what the CPU burns poll cycles on.
+    pub fn pop_completion(&mut self) -> Option<CompletionEntry> {
+        let e = self.cq.pop_front();
+        if e.is_some() {
+            self.cq_doorbells += 1;
+        }
+        e
+    }
+
+    pub fn sq_len(&self) -> usize {
+        self.sq.len()
+    }
+    pub fn cq_len(&self) -> usize {
+        self.cq.len()
+    }
+    /// Commands issued but not yet completed-and-consumed can be inferred by
+    /// the caller; the ring itself only exposes occupancy.
+    pub fn is_idle(&self) -> bool {
+        self.sq.is_empty() && self.cq.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd(id: u64) -> NvmeCommand {
+        NvmeCommand { id, op: NvmeOp::Read, lba: id * 8, blocks: 8, buffer_addr: 0x1000 }
+    }
+
+    #[test]
+    fn submit_fetch_complete_consume_cycle() {
+        let mut qp = QueuePair::new(QueueLocation::HostDram, 4);
+        qp.submit(cmd(1)).unwrap();
+        assert_eq!(qp.sq_len(), 1);
+        let c = qp.fetch().unwrap();
+        assert_eq!(c.id, 1);
+        qp.complete(CompletionEntry { command_id: 1, status_ok: true });
+        let e = qp.pop_completion().unwrap();
+        assert!(e.status_ok && e.command_id == 1);
+        assert!(qp.is_idle());
+        assert_eq!(qp.sq_doorbells, 1);
+        assert_eq!(qp.cq_doorbells, 1);
+    }
+
+    #[test]
+    fn sq_backpressure_when_full() {
+        let mut qp = QueuePair::new(QueueLocation::FpgaBram, 2);
+        qp.submit(cmd(1)).unwrap();
+        qp.submit(cmd(2)).unwrap();
+        assert_eq!(qp.submit(cmd(3)), Err(SqFull(2)));
+        qp.fetch();
+        qp.submit(cmd(3)).unwrap(); // space freed
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut qp = QueuePair::new(QueueLocation::HostDram, 8);
+        for i in 0..5 {
+            qp.submit(cmd(i)).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(qp.fetch().unwrap().id, i);
+        }
+    }
+
+    #[test]
+    fn empty_pops_are_none() {
+        let mut qp = QueuePair::new(QueueLocation::HostDram, 2);
+        assert!(qp.fetch().is_none());
+        assert!(qp.pop_completion().is_none());
+        assert_eq!(qp.cq_doorbells, 0);
+    }
+}

@@ -1,0 +1,199 @@
+//! SSD device model: a service-rate server with latency distributions,
+//! calibrated to a D7-P5510-class drive, plus the shared-platform IOPS
+//! ceiling that makes Fig 9 saturate.
+
+use crate::constants;
+use crate::nvme::queue::NvmeOp;
+use crate::sim::time::{us_f, Ps};
+use crate::util::Rng;
+
+/// One NVMe SSD.
+#[derive(Debug)]
+pub struct Ssd {
+    pub read_iops: f64,
+    pub write_iops: f64,
+    /// precomputed 1/IOPS service intervals (§Perf: hot path runs per-command)
+    read_interval: Ps,
+    write_interval: Ps,
+    /// internal parallelism: next time a command slot frees up
+    next_free: Ps,
+    rng: Rng,
+    pub completed_reads: u64,
+    pub completed_writes: u64,
+}
+
+impl Ssd {
+    pub fn p5510(rng: Rng) -> Self {
+        Ssd {
+            read_iops: constants::SSD_READ_IOPS,
+            write_iops: constants::SSD_WRITE_IOPS,
+            read_interval: us_f(1e6 / constants::SSD_READ_IOPS),
+            write_interval: us_f(1e6 / constants::SSD_WRITE_IOPS),
+            next_free: 0,
+            rng,
+            completed_reads: 0,
+            completed_writes: 0,
+        }
+    }
+
+    fn service_interval(&self, op: NvmeOp) -> Ps {
+        match op {
+            NvmeOp::Read => self.read_interval,
+            NvmeOp::Write => self.write_interval,
+        }
+    }
+
+    /// Process one 4 KB command arriving at `now`; returns completion time.
+    /// Throughput is bounded by the service interval (1/IOPS); latency is
+    /// the sampled media/FTL time on top of the queue position.
+    pub fn process(&mut self, now: Ps, op: NvmeOp) -> Ps {
+        let start = now.max(self.next_free);
+        self.next_free = start + self.service_interval(op);
+        let (mean, std) = match op {
+            NvmeOp::Read => {
+                self.completed_reads += 1;
+                constants::SSD_READ_LAT_US
+            }
+            NvmeOp::Write => {
+                self.completed_writes += 1;
+                constants::SSD_WRITE_LAT_US
+            }
+        };
+        start + us_f(self.rng.normal_trunc(mean, std, mean * 0.3))
+    }
+
+    pub fn next_free(&self) -> Ps {
+        self.next_free
+    }
+}
+
+/// Ten SSDs behind shared host PCIe lanes — the §4.4 array. The shared
+/// ceiling is modeled as one more service-rate server in front.
+#[derive(Debug)]
+pub struct SsdArray {
+    pub ssds: Vec<Ssd>,
+    read_cap_interval: Ps,
+    write_cap_interval: Ps,
+    cap_next_free: Ps,
+}
+
+impl SsdArray {
+    pub fn new(n: usize, rng: &mut Rng) -> Self {
+        SsdArray {
+            ssds: (0..n).map(|_| Ssd::p5510(rng.fork())).collect(),
+            read_cap_interval: us_f(1e6 / constants::SSD_ARRAY_READ_IOPS_CAP),
+            write_cap_interval: us_f(1e6 / constants::SSD_ARRAY_WRITE_IOPS_CAP),
+            cap_next_free: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ssds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ssds.is_empty()
+    }
+
+    /// Route a command to SSD `idx` through the shared platform ceiling.
+    pub fn process(&mut self, now: Ps, idx: usize, op: NvmeOp) -> Ps {
+        let interval = match op {
+            NvmeOp::Read => self.read_cap_interval,
+            NvmeOp::Write => self.write_cap_interval,
+        };
+        let gate = now.max(self.cap_next_free);
+        self.cap_next_free = gate + interval;
+        self.ssds[idx].process(gate, op)
+    }
+
+    /// Max sustainable array IOPS for an op mix of pure `op`.
+    pub fn array_iops_cap(&self, op: NvmeOp) -> f64 {
+        match op {
+            NvmeOp::Read => constants::SSD_ARRAY_READ_IOPS_CAP,
+            NvmeOp::Write => constants::SSD_ARRAY_WRITE_IOPS_CAP,
+        }
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.ssds.iter().map(|s| s.completed_reads + s.completed_writes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::{to_s, to_us, S, US};
+
+    #[test]
+    fn read_latency_in_band() {
+        let mut ssd = Ssd::p5510(Rng::new(1));
+        let mut total = 0.0;
+        for i in 0..1000u64 {
+            // arrivals spread out so no queueing
+            let done = ssd.process(i * 100 * US, NvmeOp::Read);
+            total += to_us(done - i * 100 * US);
+        }
+        let mean = total / 1000.0;
+        assert!((70.0..95.0).contains(&mean), "mean read latency {mean}µs");
+    }
+
+    #[test]
+    fn writes_faster_than_reads_at_low_load() {
+        let mut ssd = Ssd::p5510(Rng::new(2));
+        let r = ssd.process(0, NvmeOp::Read);
+        let mut ssd2 = Ssd::p5510(Rng::new(2));
+        let w = ssd2.process(0, NvmeOp::Write);
+        assert!(w < r);
+    }
+
+    #[test]
+    fn single_ssd_read_throughput_capped() {
+        let mut ssd = Ssd::p5510(Rng::new(3));
+        // flood it for one simulated second
+        let mut completed = 0u64;
+        loop {
+            let done = ssd.process(0, NvmeOp::Read);
+            if done > S {
+                break;
+            }
+            completed += 1;
+        }
+        let iops = completed as f64;
+        assert!(
+            (iops - constants::SSD_READ_IOPS).abs() / constants::SSD_READ_IOPS < 0.05,
+            "iops {iops}"
+        );
+    }
+
+    #[test]
+    fn array_enforces_shared_ceiling() {
+        let mut rng = Rng::new(4);
+        let mut arr = SsdArray::new(10, &mut rng);
+        // flood all 10 SSDs round-robin for 0.2 simulated seconds
+        let horizon = S / 5;
+        let mut completed = 0u64;
+        let mut i = 0usize;
+        loop {
+            let done = arr.process(0, i % 10, NvmeOp::Read);
+            if done > horizon {
+                break;
+            }
+            completed += 1;
+            i += 1;
+        }
+        let iops = completed as f64 / to_s(horizon);
+        let cap = constants::SSD_ARRAY_READ_IOPS_CAP;
+        assert!(iops <= cap * 1.05, "array iops {iops} vs cap {cap}");
+        assert!(iops >= cap * 0.90, "array should reach its cap, got {iops}");
+    }
+
+    #[test]
+    fn array_routes_to_correct_ssd() {
+        let mut rng = Rng::new(5);
+        let mut arr = SsdArray::new(3, &mut rng);
+        arr.process(0, 1, NvmeOp::Write);
+        assert_eq!(arr.ssds[1].completed_writes, 1);
+        assert_eq!(arr.ssds[0].completed_writes, 0);
+        assert_eq!(arr.total_completed(), 1);
+    }
+}

@@ -1,0 +1,132 @@
+//! DMA over a PCIe link: descriptor setup + bandwidth-serialized transfer.
+//!
+//! A link is a FIFO resource: concurrent transfers queue behind each other
+//! (`busy_until`), which is what makes the CPU-staged baseline in Fig 7b pay
+//! twice (two PCIe crossings) while GPUDirect pays once.
+
+use crate::constants;
+use crate::sim::time::{ns_f, Ps};
+
+/// A PCIe link with effective bandwidth in Gb/s.
+#[derive(Clone, Debug)]
+pub struct PcieLink {
+    pub gbps: f64,
+    /// serialization point: next time the link is free
+    busy_until: Ps,
+    pub bytes_moved: u64,
+}
+
+impl PcieLink {
+    pub fn gen3_x16() -> Self {
+        PcieLink { gbps: constants::PCIE_GEN3_X16_GBPS, busy_until: 0, bytes_moved: 0 }
+    }
+
+    pub fn with_gbps(gbps: f64) -> Self {
+        PcieLink { gbps, busy_until: 0, bytes_moved: 0 }
+    }
+
+    /// Pure serialization time of `bytes` on this link.
+    pub fn wire_time(&self, bytes: u64) -> Ps {
+        ns_f(bytes as f64 * 8.0 / self.gbps)
+    }
+
+    /// Reserve the link for a transfer starting no earlier than `now`.
+    /// Returns (start, done).
+    pub fn reserve(&mut self, now: Ps, bytes: u64) -> (Ps, Ps) {
+        let start = now.max(self.busy_until);
+        let done = start + self.wire_time(bytes);
+        self.busy_until = done;
+        self.bytes_moved += bytes;
+        (start, done)
+    }
+
+    pub fn busy_until(&self) -> Ps {
+        self.busy_until
+    }
+}
+
+/// A DMA engine fronting a link (the FPGA QDMA core, or an SSD's engine).
+#[derive(Clone, Debug)]
+pub struct DmaEngine {
+    pub link: PcieLink,
+    pub setup_ns: f64,
+    pub transfers: u64,
+}
+
+impl DmaEngine {
+    pub fn new(link: PcieLink) -> Self {
+        DmaEngine { link, setup_ns: constants::PCIE_DMA_SETUP_NS, transfers: 0 }
+    }
+
+    /// Schedule a DMA of `bytes` at `now`; returns completion time.
+    /// Setup (descriptor fetch/decode) happens before the wire occupancy.
+    pub fn transfer(&mut self, now: Ps, bytes: u64) -> Ps {
+        self.transfers += 1;
+        let ready = now + ns_f(self.setup_ns);
+        let (_, done) = self.link.reserve(ready, bytes);
+        done
+    }
+
+    /// Effective achieved bandwidth if `bytes` were moved in `elapsed` ps.
+    pub fn achieved_gbps(bytes: u64, elapsed: Ps) -> f64 {
+        if elapsed == 0 {
+            return 0.0;
+        }
+        bytes as f64 * 8.0 / (elapsed as f64 / 1000.0) // bits per ns = Gb/s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::{NS, US};
+
+    #[test]
+    fn wire_time_scales_linearly() {
+        let l = PcieLink::with_gbps(100.0);
+        assert_eq!(l.wire_time(1250), 100 * NS); // 10k bits @100G = 100ns
+        assert_eq!(l.wire_time(2500), 200 * NS);
+    }
+
+    #[test]
+    fn concurrent_transfers_serialize() {
+        let mut l = PcieLink::with_gbps(100.0);
+        let (s1, d1) = l.reserve(0, 12_500); // 1µs
+        let (s2, d2) = l.reserve(0, 12_500); // queued behind
+        assert_eq!(s1, 0);
+        assert_eq!(d1, US);
+        assert_eq!(s2, d1);
+        assert_eq!(d2, 2 * US);
+    }
+
+    #[test]
+    fn idle_link_starts_immediately() {
+        let mut l = PcieLink::with_gbps(100.0);
+        l.reserve(0, 1250);
+        let (s, _) = l.reserve(10 * US, 1250);
+        assert_eq!(s, 10 * US); // link long idle again
+    }
+
+    #[test]
+    fn dma_adds_setup_cost() {
+        let mut d = DmaEngine::new(PcieLink::with_gbps(100.0));
+        let done = d.transfer(0, 12_500);
+        assert_eq!(done, US + ns_f(constants::PCIE_DMA_SETUP_NS));
+        assert_eq!(d.transfers, 1);
+    }
+
+    #[test]
+    fn achieved_bandwidth_math() {
+        // 12.5 KB in 1µs = 100 Gb/s
+        let g = DmaEngine::achieved_gbps(12_500, US);
+        assert!((g - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let mut l = PcieLink::with_gbps(100.0);
+        l.reserve(0, 100);
+        l.reserve(0, 200);
+        assert_eq!(l.bytes_moved, 300);
+    }
+}

@@ -1,0 +1,135 @@
+//! MMIO transactions: the control-plane primitive of the whole platform.
+//!
+//! The paper's Fig 7a measures exactly this: a load issued by device X
+//! against device Y's BAR. Reads are non-posted (round trip, jittery when a
+//! software stack or the root complex uncore is involved); writes are posted
+//! (doorbells are cheap — that's why the GPU can ring the FpgaHub with one
+//! store instruction, §2.2.3).
+
+use crate::constants;
+use crate::sim::time::{ns_f, us_f, Ps};
+use crate::util::Rng;
+
+/// PCIe endpoints that can initiate or receive MMIO.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Endpoint {
+    Cpu,
+    Gpu,
+    Fpga,
+    Ssd(u32),
+}
+
+impl std::fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Endpoint::Cpu => write!(f, "CPU"),
+            Endpoint::Gpu => write!(f, "GPU"),
+            Endpoint::Fpga => write!(f, "FPGA"),
+            Endpoint::Ssd(i) => write!(f, "SSD{i}"),
+        }
+    }
+}
+
+/// MMIO latency model with per-path (mean, std) truncated-normal jitter.
+#[derive(Debug)]
+pub struct Mmio {
+    rng: Rng,
+}
+
+impl Mmio {
+    pub fn new(rng: Rng) -> Self {
+        Mmio { rng }
+    }
+
+    /// Distribution parameters (µs) for a read on `from` → `to`.
+    pub fn read_params(from: Endpoint, to: Endpoint) -> (f64, f64) {
+        use Endpoint::*;
+        match (from, to) {
+            (Gpu, Fpga) | (Fpga, Gpu) => constants::MMIO_GPU_FPGA_US,
+            (Cpu, Fpga) | (Fpga, Cpu) => constants::MMIO_CPU_FPGA_US,
+            (Cpu, Gpu) | (Gpu, Cpu) => constants::MMIO_CPU_GPU_US,
+            // FPGA↔SSD peer-to-peer rides the same hardware path class as
+            // GPU↔FPGA (no software on either side).
+            (Fpga, Ssd(_)) | (Ssd(_), Fpga) => constants::MMIO_GPU_FPGA_US,
+            // CPU↔SSD config-space class accesses behave like CPU↔FPGA.
+            (Cpu, Ssd(_)) | (Ssd(_), Cpu) => constants::MMIO_CPU_FPGA_US,
+            (a, b) => panic!("no MMIO path modeled for {a}->{b}"),
+        }
+    }
+
+    /// Sample one non-posted read's latency.
+    pub fn read(&mut self, from: Endpoint, to: Endpoint) -> Ps {
+        let (mean, std) = Self::read_params(from, to);
+        // physical floor: half the mean — a TLP cannot beat the wire
+        us_f(self.rng.normal_trunc(mean, std, mean * 0.5))
+    }
+
+    /// A posted write (doorbell): constant small cost at the initiator.
+    pub fn write_posted(&mut self) -> Ps {
+        ns_f(constants::MMIO_WRITE_POST_NS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Hist;
+    use crate::sim::time::to_us;
+
+    fn sample_path(from: Endpoint, to: Endpoint, n: usize) -> Hist {
+        let mut mmio = Mmio::new(Rng::new(1));
+        let mut h = Hist::new();
+        for _ in 0..n {
+            h.record(to_us(mmio.read(from, to)));
+        }
+        h
+    }
+
+    #[test]
+    fn gpu_fpga_beats_cpu_paths() {
+        let gf = sample_path(Endpoint::Gpu, Endpoint::Fpga, 5000).mean();
+        let cf = sample_path(Endpoint::Cpu, Endpoint::Fpga, 5000).mean();
+        let cg = sample_path(Endpoint::Cpu, Endpoint::Gpu, 5000).mean();
+        assert!(gf < cf && gf < cg);
+        assert!(gf < cf + cg, "direct path must beat the staged path");
+    }
+
+    #[test]
+    fn gpu_fpga_fluctuation_smallest() {
+        let mut gf = sample_path(Endpoint::Gpu, Endpoint::Fpga, 5000);
+        let mut cg = sample_path(Endpoint::Cpu, Endpoint::Gpu, 5000);
+        assert!(gf.fluctuation() < cg.fluctuation());
+    }
+
+    #[test]
+    fn reads_never_below_physical_floor() {
+        let mut mmio = Mmio::new(Rng::new(3));
+        let (mean, _) = Mmio::read_params(Endpoint::Cpu, Endpoint::Gpu);
+        for _ in 0..10_000 {
+            let t = to_us(mmio.read(Endpoint::Cpu, Endpoint::Gpu));
+            assert!(t >= mean * 0.5 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn posted_write_is_cheap() {
+        let mut mmio = Mmio::new(Rng::new(4));
+        let w = mmio.write_posted();
+        let r = mmio.read(Endpoint::Cpu, Endpoint::Fpga);
+        assert!(w * 5 < r, "posted write must be far cheaper than a read");
+    }
+
+    #[test]
+    fn symmetric_paths_share_params() {
+        assert_eq!(
+            Mmio::read_params(Endpoint::Gpu, Endpoint::Fpga),
+            Mmio::read_params(Endpoint::Fpga, Endpoint::Gpu)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "no MMIO path")]
+    fn unmodeled_path_panics() {
+        Mmio::read_params(Endpoint::Ssd(0), Endpoint::Gpu);
+    }
+}

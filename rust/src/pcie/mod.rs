@@ -1,0 +1,12 @@
+//! PCIe fabric model: links with bandwidth serialization, DMA engines, and
+//! MMIO transactions with per-path latency/jitter distributions.
+//!
+//! The Fig 7a experiment is entirely about this module: who initiates a
+//! load/store, which path it crosses (root complex vs peer-to-peer), and how
+//! much the software side of the path jitters.
+
+pub mod dma;
+pub mod mmio;
+
+pub use dma::{DmaEngine, PcieLink};
+pub use mmio::{Endpoint, Mmio};

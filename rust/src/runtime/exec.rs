@@ -1,0 +1,85 @@
+//! Typed literal helpers: rust slices ⇄ xla literals.
+
+use anyhow::{anyhow, Result};
+
+/// f32 slice -> literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let expected: usize = dims.iter().product();
+    if data.len() != expected {
+        anyhow::bail!("shape {dims:?} wants {expected} elements, got {}", data.len());
+    }
+    if dims.len() <= 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+}
+
+/// i32 slice -> literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let expected: usize = dims.iter().product();
+    if data.len() != expected {
+        anyhow::bail!("shape {dims:?} wants {expected} elements, got {}", data.len());
+    }
+    if dims.len() <= 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Literal -> Vec<f32> (any shape, row-major).
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {e:?}"))
+}
+
+/// Literal -> Vec<i32>.
+pub fn to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow!("literal to i32 vec: {e:?}"))
+}
+
+/// Scalar f32 out of a literal.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = to_f32(lit)?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32_matrix() {
+        let data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let lit = literal_f32(&data, &[3, 4]).unwrap();
+        assert_eq!(to_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_i32_vector() {
+        let data = vec![1i32, -2, 3];
+        let lit = literal_i32(&data, &[3]).unwrap();
+        assert_eq!(to_i32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_i32(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = scalar_f32(2.5);
+        assert_eq!(to_scalar_f32(&lit).unwrap(), 2.5);
+    }
+}

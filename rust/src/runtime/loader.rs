@@ -1,0 +1,184 @@
+//! Artifact index + lazy-compiling executable registry.
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::json::JsonValue;
+
+/// One artifact's metadata from `index.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub num_inputs: usize,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub input_dtypes: Vec<String>,
+}
+
+/// The parsed `artifacts/index.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactIndex {
+    pub dir: PathBuf,
+    pub agg_block_n: usize,
+    pub flat_param_len: usize,
+    pub train_agg_n: usize,
+    pub model_dims: ModelDims,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+}
+
+/// L2 model dimensions recorded at lowering time.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelDims {
+    pub d_in: usize,
+    pub d_hidden: usize,
+    pub d_out: usize,
+    pub n_classes: usize,
+    pub batch: usize,
+}
+
+impl ArtifactIndex {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("index.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = JsonValue::parse(&text).map_err(|e| anyhow!("parsing index.json: {e}"))?;
+        let need_usize = |key: &str| -> Result<usize> {
+            v.get(key).and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("index.json missing {key}"))
+        };
+        let model = v.get("model").ok_or_else(|| anyhow!("index.json missing model"))?;
+        let md = |key: &str| -> Result<usize> {
+            model.get(key).and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("model missing {key}"))
+        };
+        let mut artifacts = HashMap::new();
+        let arts = v
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("index.json missing artifacts"))?;
+        for (name, meta) in arts {
+            let file = meta
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                .to_string();
+            let shapes = meta
+                .get("input_shapes")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow!("artifact {name} missing input_shapes"))?
+                .iter()
+                .map(|dims| {
+                    dims.as_arr()
+                        .map(|d| d.iter().filter_map(|x| x.as_usize()).collect::<Vec<_>>())
+                        .ok_or_else(|| anyhow!("bad shape in {name}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let dtypes = meta
+                .get("input_dtypes")
+                .and_then(|s| s.as_arr())
+                .map(|a| {
+                    a.iter().filter_map(|x| x.as_str().map(str::to_string)).collect::<Vec<_>>()
+                })
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file,
+                    num_inputs: meta.get("num_inputs").and_then(|x| x.as_usize()).unwrap_or(0),
+                    input_shapes: shapes,
+                    input_dtypes: dtypes,
+                },
+            );
+        }
+        Ok(ArtifactIndex {
+            dir: dir.to_path_buf(),
+            agg_block_n: need_usize("agg_block_n")?,
+            flat_param_len: need_usize("flat_param_len")?,
+            train_agg_n: need_usize("train_agg_n")?,
+            model_dims: ModelDims {
+                d_in: md("d_in")?,
+                d_hidden: md("d_hidden")?,
+                d_out: md("d_out")?,
+                n_classes: md("n_classes")?,
+                batch: md("batch")?,
+            },
+            artifacts,
+        })
+    }
+
+    /// Find the aggregate artifact for a given N (exact name match).
+    pub fn aggregate_name(&self, n: usize) -> String {
+        format!("aggregate_w8_n{n}")
+    }
+}
+
+/// The executable registry. Compilation is lazy and cached: experiments only
+/// pay for the artifacts they use.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub index: ArtifactIndex,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub executions: u64,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact index.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let index = ArtifactIndex::load(artifacts_dir)?;
+        Ok(Runtime { client, index, compiled: HashMap::new(), executions: 0 })
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let meta = self
+                .index
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact '{name}' (have: {:?})",
+                    self.index.artifacts.keys().collect::<Vec<_>>()))?;
+            let path = self.index.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Execute an artifact: inputs in lowering order, outputs un-tupled
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if let Some(meta) = self.index.artifacts.get(name) {
+            if meta.num_inputs != 0 && meta.num_inputs != inputs.len() {
+                bail!("artifact '{name}' expects {} inputs, got {}", meta.num_inputs, inputs.len());
+            }
+        }
+        self.ensure_compiled(name)?;
+        self.executions += 1;
+        let exe = &self.compiled[name];
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        tuple.to_tuple().map_err(|e| anyhow!("untupling {name} result: {e:?}"))
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.len()
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts`) and executes them on the CPU PJRT client.
+//! Python never runs here — the HLO text is the only interchange.
+
+pub mod exec;
+pub mod loader;
+
+pub use exec::{literal_f32, literal_i32, to_f32, to_i32};
+pub use loader::{ArtifactIndex, ArtifactMeta, Runtime};

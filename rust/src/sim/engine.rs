@@ -1,0 +1,208 @@
+//! The event engine: a time-ordered queue of boxed actions.
+//!
+//! Ties are broken by insertion sequence (FIFO among same-time events), which
+//! keeps causally-ordered schedules deterministic.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::time::Ps;
+
+type Action = Box<dyn FnOnce(&mut Sim)>;
+
+struct Entry {
+    at: Ps,
+    seq: u64,
+    act: Action,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// Discrete-event simulator.
+pub struct Sim {
+    now: Ps,
+    seq: u64,
+    queue: BinaryHeap<Reverse<Entry>>,
+    processed: u64,
+}
+
+impl Default for Sim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sim {
+    pub fn new() -> Self {
+        Sim { now: 0, seq: 0, queue: BinaryHeap::new(), processed: 0 }
+    }
+
+    /// Current simulated time.
+    #[inline]
+    pub fn now(&self) -> Ps {
+        self.now
+    }
+
+    /// Total events executed so far (perf counter for §Perf).
+    pub fn events_processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `act` at absolute time `at` (clamped to now — scheduling in
+    /// the past would break causality, so it fires "immediately").
+    pub fn at(&mut self, at: Ps, act: impl FnOnce(&mut Sim) + 'static) {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Reverse(Entry { at, seq, act: Box::new(act) }));
+    }
+
+    /// Schedule `act` after a delay.
+    pub fn after(&mut self, delay: Ps, act: impl FnOnce(&mut Sim) + 'static) {
+        self.at(self.now.saturating_add(delay), act);
+    }
+
+    /// Run until the queue drains.
+    pub fn run(&mut self) {
+        while let Some(Reverse(e)) = self.queue.pop() {
+            debug_assert!(e.at >= self.now, "time went backwards");
+            self.now = e.at;
+            self.processed += 1;
+            (e.act)(self);
+        }
+    }
+
+    /// Run until the queue drains or `deadline` passes; returns true if the
+    /// queue drained.
+    pub fn run_until(&mut self, deadline: Ps) -> bool {
+        while let Some(Reverse(top)) = self.queue.peek() {
+            if top.at > deadline {
+                self.now = deadline;
+                return false;
+            }
+            let Reverse(e) = self.queue.pop().unwrap();
+            self.now = e.at;
+            self.processed += 1;
+            (e.act)(self);
+        }
+        self.now = self.now.max(deadline);
+        true
+    }
+
+    /// Number of pending events.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::{NS, US};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let mut sim = Sim::new();
+        for (i, t) in [(0u32, 30 * NS), (1, 10 * NS), (2, 20 * NS)] {
+            let ord = order.clone();
+            sim.at(t, move |_| ord.borrow_mut().push(i));
+        }
+        sim.run();
+        assert_eq!(*order.borrow(), vec![1, 2, 0]);
+        assert_eq!(sim.now(), 30 * NS);
+    }
+
+    #[test]
+    fn same_time_events_fifo() {
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let mut sim = Sim::new();
+        for i in 0..10u32 {
+            let ord = order.clone();
+            sim.at(5 * NS, move |_| ord.borrow_mut().push(i));
+        }
+        sim.run();
+        assert_eq!(*order.borrow(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        let hits = Rc::new(RefCell::new(0u32));
+        let mut sim = Sim::new();
+        let h = hits.clone();
+        sim.after(NS, move |s| {
+            *h.borrow_mut() += 1;
+            let h2 = h.clone();
+            s.after(NS, move |_| *h2.borrow_mut() += 1);
+        });
+        sim.run();
+        assert_eq!(*hits.borrow(), 2);
+        assert_eq!(sim.now(), 2 * NS);
+        assert_eq!(sim.events_processed(), 2);
+    }
+
+    #[test]
+    fn past_scheduling_clamps_to_now() {
+        let mut sim = Sim::new();
+        let fired_at = Rc::new(RefCell::new(0u64));
+        let f = fired_at.clone();
+        sim.at(100 * NS, move |s| {
+            let f2 = f.clone();
+            s.at(1 * NS, move |s2| *f2.borrow_mut() = s2.now()); // in the past
+        });
+        sim.run();
+        assert_eq!(*fired_at.borrow(), 100 * NS);
+    }
+
+    #[test]
+    fn run_until_stops_at_deadline() {
+        let mut sim = Sim::new();
+        let hits = Rc::new(RefCell::new(0u32));
+        for t in 1..=10u64 {
+            let h = hits.clone();
+            sim.at(t * US, move |_| *h.borrow_mut() += 1);
+        }
+        let drained = sim.run_until(5 * US);
+        assert!(!drained);
+        assert_eq!(*hits.borrow(), 5);
+        assert_eq!(sim.now(), 5 * US);
+        assert_eq!(sim.pending(), 5);
+        assert!(sim.run_until(20 * US));
+        assert_eq!(*hits.borrow(), 10);
+    }
+
+    #[test]
+    fn heavy_load_is_stable() {
+        // 100k events in random order still execute monotonically.
+        let mut sim = Sim::new();
+        let last = Rc::new(RefCell::new(0u64));
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..100_000 {
+            let t = rng.range_u64(0, 1_000_000);
+            let l = last.clone();
+            sim.at(t, move |s| {
+                assert!(s.now() >= *l.borrow());
+                *l.borrow_mut() = s.now();
+            });
+        }
+        sim.run();
+        assert_eq!(sim.events_processed(), 100_000);
+    }
+}

@@ -1,0 +1,13 @@
+//! Deterministic discrete-event simulation core.
+//!
+//! Everything in the platform (PCIe transactions, packets, NVMe commands,
+//! CPU core occupancy) advances on a single logical clock with picosecond
+//! resolution. Events are closures over the engine; components live in
+//! `Rc<RefCell<_>>` cells captured by those closures. Single-threaded by
+//! design: determinism is a deliverable (reproducible figures).
+
+pub mod engine;
+pub mod time;
+
+pub use engine::Sim;
+pub use time::{Ps, GHZ_1, MS, NS, S, US};

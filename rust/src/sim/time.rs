@@ -1,0 +1,92 @@
+//! Simulated time: u64 picoseconds.
+//!
+//! Picoseconds let us express sub-cycle offsets of a 200 MHz FPGA (5 ns
+//! cycle) and PCIe TLP serialization without floating point in the clock;
+//! u64 ps covers ~5.1 million simulated seconds.
+
+/// Simulated time / duration in picoseconds.
+pub type Ps = u64;
+
+pub const PS: Ps = 1;
+pub const NS: Ps = 1_000;
+pub const US: Ps = 1_000_000;
+pub const MS: Ps = 1_000_000_000;
+pub const S: Ps = 1_000_000_000_000;
+
+/// One cycle at 1 GHz.
+pub const GHZ_1: Ps = NS;
+
+/// Convert a fractional number of microseconds to Ps (for jitter draws).
+#[inline]
+pub fn us_f(us: f64) -> Ps {
+    (us * US as f64).round().max(0.0) as Ps
+}
+
+/// Convert a fractional number of nanoseconds to Ps.
+#[inline]
+pub fn ns_f(ns: f64) -> Ps {
+    (ns * NS as f64).round().max(0.0) as Ps
+}
+
+/// Ps -> f64 microseconds (for reporting).
+#[inline]
+pub fn to_us(ps: Ps) -> f64 {
+    ps as f64 / US as f64
+}
+
+/// Ps -> f64 seconds (for throughput math).
+#[inline]
+pub fn to_s(ps: Ps) -> f64 {
+    ps as f64 / S as f64
+}
+
+/// Cycles at `freq_mhz` -> Ps.
+#[inline]
+pub fn cycles(n: u64, freq_mhz: u64) -> Ps {
+    // 1 cycle = 1e6/freq_mhz ps
+    n * 1_000_000 / freq_mhz
+}
+
+/// Serialization time of `bytes` at `gbps` gigabits/s (bits/ns = Gb/s).
+#[inline]
+pub fn wire_time(bytes: u64, gbps: f64) -> Ps {
+    ns_f(bytes as f64 * 8.0 / gbps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_ratios() {
+        assert_eq!(NS, 1_000 * PS);
+        assert_eq!(US, 1_000 * NS);
+        assert_eq!(MS, 1_000 * US);
+        assert_eq!(S, 1_000 * MS);
+    }
+
+    #[test]
+    fn cycle_math_200mhz() {
+        // 200 MHz -> 5 ns/cycle
+        assert_eq!(cycles(1, 200), 5 * NS);
+        assert_eq!(cycles(100, 200), 500 * NS);
+    }
+
+    #[test]
+    fn us_f_roundtrip() {
+        assert_eq!(us_f(1.5), 1_500_000);
+        assert!((to_us(us_f(12.345)) - 12.345).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wire_time_100gbps() {
+        // 1250 bytes = 10_000 bits at 100 Gb/s = 100 ns
+        let t = wire_time(1250, 100.0);
+        assert_eq!(t, 100 * NS);
+    }
+
+    #[test]
+    fn wire_time_zero_bytes() {
+        assert_eq!(wire_time(0, 100.0), 0);
+    }
+}

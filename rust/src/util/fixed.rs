@@ -1,0 +1,95 @@
+//! Fixed-point conversion for switch-side aggregation.
+//!
+//! P4 switch ALUs cannot do floating point (§2.3.1), so SwitchML-style
+//! in-network aggregation converts f32 gradients to scaled i32 on the host
+//! (here: on the FpgaHub) and sums integers on the switch. These helpers are
+//! the numeric contract between `hub::collective` and `net::p4`.
+
+/// Scale factor exponent: value = round(f * 2^SHIFT).
+pub const DEFAULT_SHIFT: u32 = 20;
+
+/// f32 -> saturating fixed-point i32.
+#[inline]
+pub fn to_fixed(v: f32, shift: u32) -> i32 {
+    let scaled = (v as f64) * (1u64 << shift) as f64;
+    scaled.round().clamp(i32::MIN as f64, i32::MAX as f64) as i32
+}
+
+/// fixed-point (possibly a sum of many workers, so i64) -> f32.
+#[inline]
+pub fn from_fixed(v: i64, shift: u32) -> f32 {
+    (v as f64 / (1u64 << shift) as f64) as f32
+}
+
+/// Convert a slice; returns the values and whether any saturated.
+pub fn encode_slice(vs: &[f32], shift: u32) -> (Vec<i32>, bool) {
+    let bound = (i32::MAX as f64) / (1u64 << shift) as f64;
+    let mut saturated = false;
+    let out = vs
+        .iter()
+        .map(|&v| {
+            if (v as f64).abs() >= bound {
+                saturated = true;
+            }
+            to_fixed(v, shift)
+        })
+        .collect();
+    (out, saturated)
+}
+
+/// Decode a summed slice back to f32.
+pub fn decode_slice(vs: &[i64], shift: u32) -> Vec<f32> {
+    vs.iter().map(|&v| from_fixed(v, shift)).collect()
+}
+
+/// Max representable magnitude for a given shift (pre-saturation).
+pub fn max_magnitude(shift: u32) -> f32 {
+    (i32::MAX as f64 / (1u64 << shift) as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_small_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, -0.125, 123.456, -987.5] {
+            let f = to_fixed(v, DEFAULT_SHIFT);
+            let back = from_fixed(f as i64, DEFAULT_SHIFT);
+            assert!((back - v).abs() < 1e-4, "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn saturation_flagged() {
+        let (_, sat) = encode_slice(&[1e9f32], DEFAULT_SHIFT);
+        assert!(sat);
+        let (_, ok) = encode_slice(&[1.0f32, -2.0], DEFAULT_SHIFT);
+        assert!(!ok);
+    }
+
+    #[test]
+    fn summed_decode_matches_float_sum() {
+        let workers: Vec<Vec<f32>> = (0..8)
+            .map(|w| (0..64).map(|i| (w as f32 * 0.01) + i as f32 * 0.001).collect())
+            .collect();
+        let mut acc = vec![0i64; 64];
+        for w in &workers {
+            let (enc, _) = encode_slice(w, DEFAULT_SHIFT);
+            for (a, e) in acc.iter_mut().zip(enc) {
+                *a += e as i64;
+            }
+        }
+        let got = decode_slice(&acc, DEFAULT_SHIFT);
+        for i in 0..64 {
+            let want: f32 = workers.iter().map(|w| w[i]).sum();
+            assert!((got[i] - want).abs() < 1e-3, "{i}: {} vs {want}", got[i]);
+        }
+    }
+
+    #[test]
+    fn max_magnitude_consistent() {
+        let m = max_magnitude(DEFAULT_SHIFT);
+        assert!(to_fixed(m * 2.0, DEFAULT_SHIFT) == i32::MAX);
+    }
+}

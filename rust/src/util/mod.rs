@@ -1,0 +1,9 @@
+//! Small self-contained utilities: deterministic RNG, a mini property-test
+//! harness (the environment has no `proptest`; see DESIGN.md §6), and
+//! fixed-point helpers used by the switch-aggregation path.
+
+pub mod fixed;
+pub mod quickcheck;
+pub mod rng;
+
+pub use rng::Rng;

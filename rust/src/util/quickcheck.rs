@@ -1,0 +1,125 @@
+//! Mini property-testing harness (`proptest` is unavailable offline —
+//! DESIGN.md §6). Seeded generation + first-failure shrinking over a
+//! user-supplied `simplify` step.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla_extension rpath at runtime)
+//! use fpgahub::util::quickcheck::{forall, Gen};
+//! forall("sum is commutative", 200, |g| (g.u64(0, 100), g.u64(0, 100)),
+//!        |&(a, b)| a + b == b + a, |_c| vec![]);
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Generation context handed to the case generator.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_u64(lo as u64, hi as u64) as usize
+    }
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+    pub fn vec_u64(&mut self, len_lo: usize, len_hi: usize, lo: u64, hi: u64) -> Vec<u64> {
+        let n = self.usize(len_lo, len_hi);
+        (0..n).map(|_| self.u64(lo, hi)).collect()
+    }
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f64(lo as f64, hi as f64) as f32).collect()
+    }
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize(0, items.len())]
+    }
+}
+
+/// Run `cases` random cases of `prop`; on failure, greedily shrink via
+/// `simplify` and panic with the smallest failing case found.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+    mut simplify: impl FnMut(&T) -> Vec<T>,
+) {
+    let mut g = Gen { rng: Rng::new(0xF9A6_u64 ^ name.len() as u64) };
+    for case_idx in 0..cases {
+        let case = gen(&mut g);
+        if prop(&case) {
+            continue;
+        }
+        // shrink: repeatedly take the first simpler case that still fails
+        let mut smallest = case;
+        'shrink: loop {
+            for cand in simplify(&smallest) {
+                if !prop(&cand) {
+                    smallest = cand;
+                    continue 'shrink;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' falsified at case {case_idx}:\n  minimal counterexample: {smallest:?}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(
+            "add-commutes",
+            500,
+            |g| (g.u64(0, 1000), g.u64(0, 1000)),
+            |&(a, b)| a + b == b + a,
+            |_| vec![],
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn failing_property_panics() {
+        forall(
+            "all-below-50",
+            500,
+            |g| g.u64(0, 100),
+            |&x| x < 50,
+            |_| vec![],
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample: 50")]
+    fn shrinking_finds_boundary() {
+        forall(
+            "all-below-50-shrunk",
+            500,
+            |g| g.u64(0, 10_000),
+            |&x| x < 50,
+            |&x| if x > 0 { vec![x / 2, x - 1] } else { vec![] },
+        );
+    }
+
+    #[test]
+    fn gen_helpers_in_bounds() {
+        let mut g = Gen { rng: Rng::new(3) };
+        for _ in 0..1000 {
+            assert!(g.usize(2, 5) < 5);
+            let v = g.vec_u64(0, 4, 10, 20);
+            assert!(v.len() < 4);
+            assert!(v.iter().all(|x| (10..20).contains(x)));
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Deterministic xoshiro256++ RNG.
+//!
+//! Every stochastic element of the simulation (latency jitter, workload
+//! generation) draws from seeded instances of this generator, so every
+//! experiment is bit-reproducible. No external `rand` crate is available in
+//! the build image (DESIGN.md §6).
+
+/// xoshiro256++ by Blackman & Vigna — public domain reference algorithm.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Box–Muller produces normals in pairs; the spare is cached here.
+    /// (§Perf: halves the ln/sqrt/trig cost of the latency-jitter hot path.)
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Seed via SplitMix64 so any u64 (including 0) yields a good state.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()], spare_normal: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [lo, hi).
+    #[inline]
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo < hi, "empty range");
+        lo + self.next_u64() % (hi - lo)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Standard normal via Box–Muller, pair-cached (both the cos and sin
+    /// variates are used, so transcendental cost is paid every *other* call).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        let (s, c) = theta.sin_cos();
+        self.spare_normal = Some(r * s);
+        r * c
+    }
+
+    /// Normal with mean/std, truncated at `lo` (latencies must not go
+    /// negative or below a physical floor).
+    pub fn normal_trunc(&mut self, mean: f64, std: f64, lo: f64) -> f64 {
+        (mean + std * self.normal()).max(lo)
+    }
+
+    /// Exponential with the given mean (heavy-ish tail for software paths).
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        -mean * self.f64().max(1e-300).ln()
+    }
+
+    /// Log-normal parameterized by the *target* mean and sigma of the
+    /// underlying normal — models long-tailed OS scheduling noise.
+    pub fn lognormal(&mut self, target_mean: f64, sigma: f64) -> f64 {
+        // E[lognormal(mu, sigma)] = exp(mu + sigma^2/2) = target_mean
+        let mu = target_mean.ln() - sigma * sigma / 2.0;
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Fork an independent stream (for per-component RNGs).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn range_u64_bounds() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            let x = r.range_u64(10, 20);
+            assert!((10..20).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_mean_and_std_close() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean_close() {
+        let mut r = Rng::new(13);
+        let n = 200_000;
+        let mean = (0..n).map(|_| r.exponential(5.0)).sum::<f64>() / n as f64;
+        assert!((mean - 5.0).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn lognormal_mean_close() {
+        let mut r = Rng::new(15);
+        let n = 400_000;
+        let mean = (0..n).map(|_| r.lognormal(3.0, 0.5)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_trunc_respects_floor() {
+        let mut r = Rng::new(17);
+        for _ in 0..10_000 {
+            assert!(r.normal_trunc(1.0, 10.0, 0.5) >= 0.5);
+        }
+    }
+
+    #[test]
+    fn forked_streams_are_independent() {
+        let mut root = Rng::new(19);
+        let mut a = root.fork();
+        let mut b = root.fork();
+        // streams differ from each other and from the parent
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

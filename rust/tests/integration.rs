@@ -1,0 +1,222 @@
+//! Cross-module integration: experiments produce the paper's shapes, the
+//! hub subsystems compose, and the CLI-facing surfaces hold together.
+
+use fpgahub::config::{ExperimentConfig, PlatformConfig};
+use fpgahub::expts;
+use fpgahub::hub::descriptor::{Descriptor, DescriptorTable, PayloadDest};
+use fpgahub::hub::split_assemble::SplitAssemble;
+use fpgahub::hub::transport::{FpgaTransport, RxAction};
+use fpgahub::hub::user_logic::{StorageRequest, UserLogic};
+use fpgahub::nvme::queue::NvmeOp;
+use fpgahub::nvme::ssd::SsdArray;
+use fpgahub::pcie::{DmaEngine, Endpoint, PcieLink};
+use fpgahub::util::Rng;
+
+fn quick() -> ExperimentConfig {
+    ExperimentConfig::quick()
+}
+
+#[test]
+fn every_experiment_runs_and_produces_rows() {
+    for name in expts::ALL {
+        let tables = expts::run(name, &quick()).unwrap_or_else(|e| panic!("{name}: {e}"));
+        for t in &tables {
+            assert!(!t.rows.is_empty(), "{name} produced an empty table");
+        }
+    }
+}
+
+#[test]
+fn unknown_experiment_is_an_error() {
+    assert!(expts::run("fig99", &quick()).is_err());
+}
+
+#[test]
+fn csv_outputs_written_when_enabled() {
+    let dir = std::env::temp_dir().join(format!("fpgahub_csv_{}", std::process::id()));
+    let mut cfg = quick();
+    cfg.csv = true;
+    cfg.platform.results_dir = dir.clone();
+    expts::run("table1", &cfg).unwrap();
+    let entries: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+    assert!(!entries.is_empty(), "no CSV written to {}", dir.display());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Full receive-path composition: transport delivers packets in order, the
+/// splitter steers header/payload per descriptor, and the byte accounting
+/// closes (nothing lost between subsystems).
+#[test]
+fn receive_path_transport_to_split_assemble() {
+    let mut tx = FpgaTransport::new(1, 256);
+    let mut rx = FpgaTransport::new(1, 256);
+    let mut table = DescriptorTable::new(4);
+    table
+        .install(Descriptor {
+            flow: 0,
+            header_bytes: 128,
+            payload_dest: PayloadDest::Device(Endpoint::Gpu),
+        })
+        .unwrap();
+    let mut splitter = SplitAssemble::new();
+
+    let message_bytes = 256 * 1024u64;
+    let pkts = tx.send_message(0, message_bytes);
+    let mut delivered = 0u64;
+    let mut completed = false;
+    for p in &pkts {
+        match rx.receive(0, p) {
+            RxAction::Deliver { ack, message_complete } => {
+                tx.on_ack(0, ack);
+                delivered += p.payload_bytes;
+                completed |= message_complete;
+            }
+            RxAction::DropOutOfOrder { .. } => panic!("lossless link dropped a packet"),
+        }
+    }
+    assert!(completed);
+    assert_eq!(delivered, message_bytes);
+
+    let split = splitter.split(&table, 0, message_bytes).unwrap();
+    assert_eq!(split.header_to_cpu, 128);
+    assert_eq!(split.header_to_cpu + split.payload_bytes, message_bytes);
+    assert_eq!(split.payload_dest, PayloadDest::Device(Endpoint::Gpu));
+}
+
+/// Go-back-N recovery composes with the splitter under injected loss.
+#[test]
+fn lossy_link_still_delivers_every_byte() {
+    let mut tx = FpgaTransport::new(1, 256);
+    let mut rx = FpgaTransport::new(1, 256);
+    let mut rng = Rng::new(0xBAD);
+    let message_bytes = 128 * 1024u64;
+    let mut pending = tx.send_message(0, message_bytes);
+    let mut delivered = 0u64;
+    let mut rounds = 0;
+    while delivered < message_bytes {
+        rounds += 1;
+        assert!(rounds < 100, "retransmission storm");
+        let mut lost_any = false;
+        for p in &pending {
+            if rng.f64() < 0.15 {
+                lost_any = true;
+                continue; // drop on the wire
+            }
+            match rx.receive(0, p) {
+                RxAction::Deliver { ack, .. } => {
+                    tx.on_ack(0, ack);
+                    delivered += p.payload_bytes;
+                }
+                RxAction::DropOutOfOrder { ack } => tx.on_ack(0, ack),
+            }
+        }
+        if delivered < message_bytes {
+            pending = tx.retransmit(0);
+            assert!(!pending.is_empty() || !lost_any);
+        }
+    }
+    assert_eq!(delivered, message_bytes);
+    assert!(tx.qp(0).retransmits > 0, "loss was injected; retransmits expected");
+}
+
+/// NIC-initiated storage path serves a queue of requests across all SSDs
+/// and lands every byte at the GPU.
+#[test]
+fn user_logic_serves_a_request_train() {
+    let mut rng = Rng::new(5);
+    let mut array = SsdArray::new(4, &mut rng);
+    let mut ul = UserLogic::new(4, 64, 500.0);
+    let mut dma = DmaEngine::new(PcieLink::gen3_x16());
+    let mut total = 0u64;
+    let mut last = 0;
+    for i in 0..64u64 {
+        let c = ul
+            .serve(
+                i * 50 * fpgahub::sim::US,
+                StorageRequest {
+                    id: i,
+                    op: NvmeOp::Read,
+                    ssd: (i % 4) as usize,
+                    lba: i * 8,
+                    blocks_4k: 4,
+                    dest: Endpoint::Gpu,
+                },
+                &mut array,
+                &mut dma,
+            )
+            .unwrap();
+        total += c.bytes;
+        last = last.max(c.data_landed_at);
+    }
+    assert_eq!(total, 64 * 4 * 4096);
+    assert_eq!(ul.served, 64);
+    assert!(last > 0);
+}
+
+/// §2.2.3 end to end: a GPU store instruction rings a hub doorbell; the
+/// fabric drains it next cycle and kicks one collective round — no CPU, no
+/// kernel launch, anywhere.
+#[test]
+fn gpu_doorbell_triggers_collective_round() {
+    use fpgahub::hub::collective::CollectiveEngine;
+    use fpgahub::hub::doorbell::DoorbellBank;
+    use fpgahub::net::p4::P4Switch;
+    use fpgahub::pcie::Mmio;
+    use fpgahub::sim::time::cycles;
+
+    let mut mmio = Mmio::new(Rng::new(77));
+    let mut bank = DoorbellBank::new(8);
+    let mut sw = P4Switch::tofino();
+    let mut eng = CollectiveEngine::new(&mut sw, 4, 64, 20).unwrap();
+
+    // four GPUs each ring register 0 with their "gradient ready" epoch
+    let mut t = 0;
+    for _gpu in 0..4 {
+        t += mmio.write_posted(); // one posted store each
+        bank.ring(0, 1, t);
+    }
+    // the fabric sees all rings one cycle later and feeds the aggregator
+    let visible_at = t + cycles(1, 200);
+    let rings = bank.drain_visible(visible_at);
+    assert_eq!(rings.len(), 4);
+    let mut out = None;
+    for _ in &rings {
+        out = eng.contribute(&[0.25f32; 64]);
+    }
+    let res = out.expect("4th contribution completes");
+    assert!((res.values[0] - 1.0).abs() < 1e-4);
+    // total trigger cost: four posted writes + one cycle — far under 1µs
+    assert!(visible_at < fpgahub::sim::US, "doorbell path cost {visible_at}ps");
+}
+
+#[test]
+fn platform_config_roundtrip_through_toml() {
+    let text = "seed = 99\n[cluster]\nworkers = 16\n[ssd]\ncount = 24\n[fpga]\nboard = \"vpk180\"\n";
+    let doc = fpgahub::config::TomlDoc::parse(text).unwrap();
+    let p = PlatformConfig::from_doc(&doc).unwrap();
+    assert_eq!(p.seed, 99);
+    assert_eq!(p.workers, 16);
+    assert_eq!(p.num_ssds, 24);
+    assert_eq!(p.fpga_board, fpgahub::devices::fpga::FpgaBoard::Vpk180);
+}
+
+/// The paper's headline claims, asserted end to end in one place.
+#[test]
+fn paper_headline_shapes() {
+    let cfg = quick();
+    // Fig 8: order of magnitude
+    let t8 = &expts::run("fig8", &cfg).unwrap()[0];
+    let fpga: f64 = t8.rows[0][1].parse().unwrap();
+    let cpu: f64 = t8.rows[1][1].parse().unwrap();
+    assert!(cpu / fpga >= 5.0, "fig8 ratio {}", cpu / fpga);
+
+    // Fig 7b: ~50% latency reduction
+    let t7 = &expts::run("fig7b", &cfg).unwrap()[0];
+    let off: f64 = t7.rows[0][1].parse().unwrap();
+    let base: f64 = t7.rows[1][1].parse().unwrap();
+    assert!((0.35..0.75).contains(&(1.0 - off / base)));
+
+    // Table 1: exact resource row
+    let t1 = &expts::run("table1", &cfg).unwrap()[0];
+    assert_eq!(t1.rows[0][1], "45K");
+}

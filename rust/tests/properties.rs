@@ -1,0 +1,220 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! transport state machines) using the in-crate mini harness
+//! (`util::quickcheck`; `proptest` is unavailable offline — DESIGN.md §6).
+
+use fpgahub::devices::cpu::CorePool;
+use fpgahub::hub::descriptor::{Descriptor, DescriptorTable, PayloadDest};
+use fpgahub::hub::split_assemble::SplitAssemble;
+use fpgahub::hub::transport::{FpgaTransport, RxAction};
+use fpgahub::net::packet::packetize;
+use fpgahub::sim::Sim;
+use fpgahub::util::fixed;
+use fpgahub::util::quickcheck::forall;
+use fpgahub::util::Rng;
+
+#[test]
+fn prop_packetize_conserves_bytes() {
+    forall(
+        "packetize conserves bytes and ends exactly once",
+        300,
+        |g| (g.u64(0, 1 << 22), g.u64(256, 9001)),
+        |&(bytes, mtu)| {
+            let pkts = packetize(1, bytes, mtu);
+            let total: u64 = pkts.iter().map(|p| p.payload_bytes).sum();
+            let lasts = pkts.iter().filter(|p| p.last_of_message).count();
+            total == bytes
+                && lasts == 1
+                && pkts.last().unwrap().last_of_message
+                && pkts.iter().all(|p| p.payload_bytes <= mtu)
+        },
+        |&(bytes, mtu)| {
+            let mut cands = vec![];
+            if bytes > 0 {
+                cands.push((bytes / 2, mtu));
+            }
+            if mtu > 256 {
+                cands.push((bytes, 256.max(mtu / 2)));
+            }
+            cands
+        },
+    );
+}
+
+#[test]
+fn prop_transport_delivers_in_order_under_any_loss_pattern() {
+    forall(
+        "go-back-N delivers every byte in order under arbitrary loss",
+        120,
+        |g| (g.u64(1, 64 * 4096), g.u64(1, u64::MAX)),
+        |&(bytes, loss_seed)| {
+            let mut tx = FpgaTransport::new(1, 1024);
+            let mut rx = FpgaTransport::new(1, 1024);
+            let mut rng = Rng::new(loss_seed);
+            let mut pending = tx.send_message(0, bytes);
+            let mut delivered = 0u64;
+            for _round in 0..200 {
+                for p in &pending {
+                    if rng.f64() < 0.25 {
+                        continue;
+                    }
+                    match rx.receive(0, p) {
+                        RxAction::Deliver { ack, .. } => {
+                            tx.on_ack(0, ack);
+                            delivered += p.payload_bytes;
+                        }
+                        RxAction::DropOutOfOrder { ack } => tx.on_ack(0, ack),
+                    }
+                }
+                if delivered >= bytes {
+                    return rx.qp(0).delivered_bytes == bytes;
+                }
+                pending = tx.retransmit(0);
+            }
+            false // did not converge
+        },
+        |&(bytes, seed)| if bytes > 1 { vec![(bytes / 2, seed)] } else { vec![] },
+    );
+}
+
+#[test]
+fn prop_split_conserves_bytes_for_any_descriptor() {
+    forall(
+        "split(header)+payload == message for any flow config",
+        300,
+        |g| (g.u64(0, 4096), g.u64(0, 1 << 20)),
+        |&(header, msg)| {
+            let mut table = DescriptorTable::new(4);
+            table
+                .install(Descriptor {
+                    flow: 1,
+                    header_bytes: header,
+                    payload_dest: PayloadDest::FpgaMemory,
+                })
+                .unwrap();
+            let mut sa = SplitAssemble::new();
+            let r = sa.split(&table, 1, msg).unwrap();
+            r.header_to_cpu + r.payload_bytes == msg && r.header_to_cpu <= header.max(msg)
+        },
+        |&(h, m)| vec![(h / 2, m), (h, m / 2)],
+    );
+}
+
+#[test]
+fn prop_core_pool_never_overlaps_work_on_one_core() {
+    forall(
+        "a core never runs two jobs at once and picks a legal start",
+        150,
+        |g| {
+            let cores = g.usize(1, 8);
+            let jobs: Vec<(u64, u64)> = (0..g.usize(1, 40))
+                .map(|_| (g.u64(0, 1_000_000), g.u64(1, 50_000)))
+                .collect();
+            (cores, jobs)
+        },
+        |(cores, jobs)| {
+            let mut pool = CorePool::new(*cores);
+            let mut per_core: Vec<Vec<(u64, u64)>> = vec![vec![]; *cores];
+            for &(arrive, dur) in jobs {
+                let (core, start, end) = pool.run(arrive, dur);
+                if start < arrive || end != start + dur {
+                    return false;
+                }
+                per_core[core].push((start, end));
+            }
+            per_core.iter().all(|iv| {
+                iv.windows(2).all(|w| w[0].1 <= w[1].0) // FIFO per core, no overlap
+            })
+        },
+        |(cores, jobs)| {
+            let mut cands = vec![];
+            if jobs.len() > 1 {
+                cands.push((*cores, jobs[..jobs.len() / 2].to_vec()));
+            }
+            cands
+        },
+    );
+}
+
+#[test]
+fn prop_fixed_point_roundtrip_bounded_error() {
+    forall(
+        "fixed-point encode/sum/decode error is bounded by W * ulp",
+        200,
+        |g| {
+            let w = g.usize(1, 16);
+            let vals: Vec<Vec<f32>> = (0..w).map(|_| g.vec_f32(16, -100.0, 100.0)).collect();
+            vals
+        },
+        |vals| {
+            let shift = fixed::DEFAULT_SHIFT;
+            let mut acc = vec![0i64; 16];
+            for v in vals {
+                let (enc, sat) = fixed::encode_slice(v, shift);
+                if sat {
+                    return true; // saturation is reported, not a failure
+                }
+                for (a, e) in acc.iter_mut().zip(enc) {
+                    *a += e as i64;
+                }
+            }
+            let dec = fixed::decode_slice(&acc, shift);
+            let ulp = 1.0 / (1u64 << shift) as f32;
+            (0..16).all(|i| {
+                let want: f32 = vals.iter().map(|v| v[i]).sum();
+                (dec[i] - want).abs() <= (vals.len() as f32 + 1.0) * ulp * 4.0 + 1e-4
+            })
+        },
+        |vals| if vals.len() > 1 { vec![vals[..vals.len() / 2].to_vec()] } else { vec![] },
+    );
+}
+
+#[test]
+fn prop_sim_executes_events_in_nondecreasing_time() {
+    forall(
+        "event timestamps observed by handlers are monotone",
+        60,
+        |g| g.vec_u64(1, 200, 0, 1_000_000),
+        |times| {
+            let mut sim = Sim::new();
+            let observed = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+            for &t in times {
+                let obs = observed.clone();
+                sim.at(t, move |s| obs.borrow_mut().push(s.now()));
+            }
+            sim.run();
+            let obs = observed.borrow();
+            obs.len() == times.len() && obs.windows(2).all(|w| w[0] <= w[1])
+        },
+        |times| if times.len() > 1 { vec![times[..times.len() / 2].to_vec()] } else { vec![] },
+    );
+}
+
+#[test]
+fn prop_descriptor_table_update_semantics() {
+    forall(
+        "N installs on K flows never exceed K live entries; last write wins",
+        200,
+        |g| {
+            let ops: Vec<(u64, u64)> =
+                (0..g.usize(1, 30)).map(|_| (g.u64(0, 5), g.u64(0, 4096))).collect();
+            ops
+        },
+        |ops| {
+            let mut table = DescriptorTable::new(8);
+            let mut last = std::collections::HashMap::new();
+            for &(flow, hdr) in ops {
+                table
+                    .install(Descriptor {
+                        flow,
+                        header_bytes: hdr,
+                        payload_dest: PayloadDest::FpgaMemory,
+                    })
+                    .unwrap();
+                last.insert(flow, hdr);
+            }
+            table.len() == last.len()
+                && last.iter().all(|(f, h)| table.lookup(*f).unwrap().header_bytes == *h)
+        },
+        |ops| if ops.len() > 1 { vec![ops[..ops.len() / 2].to_vec()] } else { vec![] },
+    );
+}
