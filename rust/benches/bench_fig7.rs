@@ -1,11 +1,13 @@
 //! Fig 7 bench: control-plane latency table (7a) + cross-network inter-GPU
-//! latency table (7b), plus wallclock cost of the two path models.
+//! latency table (7b), plus wallclock cost of the two path models on the
+//! event engine.
 
 use fpgahub::baselines::CpuRdmaPath;
 use fpgahub::bench_harness::{banner, bench};
 use fpgahub::config::ExperimentConfig;
 use fpgahub::expts::fig7::OffloadedGpuPath;
 use fpgahub::net::p4::P4Switch;
+use fpgahub::runtime_hub::HubRuntime;
 use fpgahub::util::Rng;
 
 fn main() {
@@ -17,16 +19,18 @@ fn main() {
 
     banner("path-model wallclock (simulator hot path)");
     let sw = P4Switch::tofino();
-    let mut off = OffloadedGpuPath::new(sw.pipeline_latency());
+    let mut rt = HubRuntime::new();
+    let mut off = OffloadedGpuPath::new(&mut rt, sw.pipeline_latency());
     let mut t = 0u64;
     bench("fig7/offloaded_path_send", 100, 2000, || {
         t += 400_000_000;
-        std::hint::black_box(off.send(t, 4096));
+        std::hint::black_box(off.send(&mut rt, t, 4096));
     });
-    let mut base = CpuRdmaPath::new(Rng::new(1), sw.pipeline_latency());
+    let mut rt2 = HubRuntime::new();
+    let mut base = CpuRdmaPath::new(&mut rt2, Rng::new(1), sw.pipeline_latency());
     let mut t2 = 0u64;
     bench("fig7/cpu_rdma_path_send", 100, 2000, || {
         t2 += 400_000_000;
-        std::hint::black_box(base.send(t2, 4096));
+        std::hint::black_box(base.send(&mut rt2, t2, 4096));
     });
 }

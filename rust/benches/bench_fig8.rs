@@ -1,10 +1,12 @@
 //! Fig 8 bench: in-network aggregation latency, FPGA-Switch vs CPU-Switch,
-//! with numeric verification, plus round-throughput of the aggregation app.
+//! with numeric verification, plus round-throughput of the aggregation app
+//! and the event-engine hot-path numbers (events/s, sim/wall ratio).
 
 use fpgahub::apps::allreduce::FpgaSwitchAllreduce;
-use fpgahub::bench_harness::{banner, bench};
+use fpgahub::bench_harness::{banner, bench_sim};
 use fpgahub::config::ExperimentConfig;
 use fpgahub::net::p4::P4Switch;
+use fpgahub::runtime_hub::HubRuntime;
 use fpgahub::util::Rng;
 
 fn main() {
@@ -14,15 +16,16 @@ fn main() {
 
     banner("ablation: worker-count scaling (FPGA-Switch round latency)");
     for workers in [2u32, 4, 8, 16, 32] {
+        let mut rt = HubRuntime::new();
         let mut sw = P4Switch::tofino();
-        let mut app =
-            FpgaSwitchAllreduce::new(&mut sw, workers, 512, Rng::new(7), 0.2).unwrap();
+        let app =
+            FpgaSwitchAllreduce::new(&mut rt, &mut sw, workers, 512, Rng::new(7), 0.2).unwrap();
         let chunks = vec![vec![0.5f32; 512]; workers as usize];
         let mut worst_sum = 0.0f64;
         let rounds = 50u64;
         for r in 0..rounds {
             let t0 = r * 500_000_000;
-            let out = app.round(t0, &chunks);
+            let out = app.round(&mut rt, t0, &chunks);
             worst_sum +=
                 fpgahub::sim::time::to_us(*out.done_at.iter().max().unwrap() - t0);
         }
@@ -70,15 +73,17 @@ fn main() {
         );
     }
 
-    banner("aggregation-round wallclock (simulator hot path)");
+    banner("engine hot path: one full 8-worker round");
+    // app and runtime built once; each iteration times only the engine
+    // (schedule + drain of one round)
+    let mut rt = HubRuntime::new();
     let mut sw = P4Switch::tofino();
-    let mut app = FpgaSwitchAllreduce::new(&mut sw, 8, 512, Rng::new(3), 0.2).unwrap();
-    let chunks: Vec<Vec<f32>> = (0..8)
-        .map(|w| (0..512).map(|i| (w * 512 + i) as f32 * 1e-4).collect())
-        .collect();
+    let app = FpgaSwitchAllreduce::new(&mut rt, &mut sw, 8, 512, Rng::new(7), 0.2).unwrap();
+    let chunks = vec![vec![0.5f32; 512]; 8];
     let mut t = 0u64;
-    bench("fig8/fpga_switch_round", 20, 500, || {
+    bench_sim("fig8/allreduce_round_8w", 20, 500, || {
         t += 500_000_000;
-        std::hint::black_box(app.round(t, &chunks));
+        app.schedule_round(&mut rt, t, &chunks, |_, _| {});
+        rt.run().into()
     });
 }

@@ -15,8 +15,8 @@ fn main() {
     banner("saturation-run wallclock (simulator hot path)");
     bench("fig9/spdk_run_5cores_100ms", 2, 20, || {
         let mut rng = Rng::new(9);
-        let mut array = SsdArray::new(10, &mut rng);
+        let array = SsdArray::new(10, &mut rng);
         let mut cp = SpdkControlPlane::new(5);
-        std::hint::black_box(cp.run(&mut array, NvmeOp::Read, fpgahub::sim::time::S / 10));
+        std::hint::black_box(cp.run(array, NvmeOp::Read, fpgahub::sim::time::S / 10));
     });
 }

@@ -1,8 +1,9 @@
 //! Quickstart: stand up the platform, sanity-run one of every subsystem,
 //! and execute a real Pallas kernel through the PJRT runtime.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     make artifacts && cargo run --release --features pjrt --example quickstart
 
+use fpgahub::anyhow;
 use fpgahub::config::ExperimentConfig;
 use fpgahub::hub::resources::place_full_hub;
 use fpgahub::hub::transport::FpgaTransport;

@@ -6,8 +6,9 @@
 //! aggregate for the collective) → L2 JAX fwd/bwd (grad_loss/apply_update
 //! HLO) → L3 rust coordinator + platform simulation. Python is not running.
 //!
-//!     make artifacts && cargo run --release --example train_allreduce -- [steps]
+//!     make artifacts && cargo run --release --features pjrt --example train_allreduce -- [steps]
 
+use fpgahub::anyhow;
 use fpgahub::config::ExperimentConfig;
 use fpgahub::coordinator::{TrainConfig, TrainDriver};
 use fpgahub::runtime::Runtime;

@@ -1,0 +1,148 @@
+//! Minimal `anyhow`-compatible error plumbing.
+//!
+//! The build image has no crates.io access (DESIGN.md §6), so this module
+//! provides the tiny subset of `anyhow` the crate uses: a string-backed
+//! [`Error`], a [`Result`] alias with a defaulted error type, the
+//! `anyhow!`/`bail!`/`ensure!` macros, and the [`Context`] extension trait.
+//! Call sites import it as `use crate::anyhow::...` (or `fpgahub::anyhow`
+//! from bins/tests/examples) and read exactly like the real crate.
+
+use std::fmt;
+
+/// A boxed-up, display-oriented error. Like `anyhow::Error` it deliberately
+/// does **not** implement `std::error::Error`, which is what allows the
+/// blanket `From<E: std::error::Error>` conversion below to coexist with
+/// the language's reflexive `From<T> for T`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(&e)
+    }
+}
+
+/// `Result` with the error type defaulted, as in the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to fallible results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+// The macros live in this module's namespace via `pub use`, so both
+// `use crate::anyhow::{anyhow, bail}` and path calls like
+// `anyhow::bail!(...)` (after `use crate::anyhow;`) work.
+
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::anyhow::Error::msg(format!($($arg)*))
+    };
+}
+pub use format_err as anyhow;
+
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow::Error::msg(format!($($arg)*)))
+    };
+}
+pub use bail;
+
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+pub use ensure;
+
+#[cfg(test)]
+mod tests {
+    use super::{anyhow, bail, ensure, Context, Error, Result};
+
+    fn fails_if(flag: bool) -> Result<u32> {
+        ensure!(!flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    fn always_bails() -> Result<()> {
+        bail!("nope: {}", 42);
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        assert_eq!(fails_if(false).unwrap(), 7);
+        assert_eq!(fails_if(true).unwrap_err().to_string(), "flag was true");
+        assert_eq!(always_bails().unwrap_err().to_string(), "nope: 42");
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        fn read_missing() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read_missing().is_err());
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"));
+        let e = r.context("loading config").unwrap_err();
+        assert!(e.to_string().starts_with("loading config: "));
+        let o: Option<u32> = None;
+        let e2 = o.with_context(|| "missing key").unwrap_err();
+        assert_eq!(e2.to_string(), "missing key");
+    }
+
+    #[test]
+    fn debug_matches_display() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), format!("{e:?}"));
+    }
+}

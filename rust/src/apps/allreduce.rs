@@ -3,15 +3,24 @@
 //! the P4 switch, which aggregates and multicasts the result back.
 //!
 //! The numerics are real (fixed-point encode → switch integer adds →
-//! decode); the timing comes from the transport pipeline + wire + switch
-//! pipeline models. The same engine drives the end-to-end training example,
-//! where the decoded sums update actual model parameters via PJRT.
+//! decode). The *timing* is event-driven: every leg of a round is a
+//! [`TransferDesc`] on a [`HubRuntime`], so the per-worker uplinks and
+//! downlinks are stateful shared resources — a second tenant pushing
+//! traffic through the same hub port visibly delays the collective
+//! (`apps::multi_tenant`), which the old closed-form `round()` arithmetic
+//! could never show.
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::constants;
 use crate::hub::collective::CollectiveEngine;
 use crate::hub::transport::FpgaTransport;
 use crate::net::p4::{P4Error, P4Switch};
-use crate::net::EthLink;
-use crate::sim::time::Ps;
+use crate::net::packet::packetize;
+use crate::runtime_hub::{submit_on, HubRuntime, LinkId, TransferDesc};
+use crate::sim::time::{ns_f, us_f, Ps};
+use crate::sim::Sim;
 use crate::util::Rng;
 
 /// One round's outcome: the aggregated vector + per-worker completion times.
@@ -23,21 +32,41 @@ pub struct RoundOutcome {
     pub saturated: bool,
 }
 
-/// The distributed aggregation application.
+/// Live state of a scheduled round, filled in as events complete.
+pub struct RoundState {
+    pub t0: Ps,
+    pub values: Vec<f32>,
+    pub done_at: Vec<Ps>,
+    pub saturated: bool,
+    pub completed: u32,
+    on_done: Option<Box<dyn FnOnce(&mut Sim, Ps)>>,
+}
+
+struct AllreduceInner {
+    engine: CollectiveEngine,
+    transports: Vec<FpgaTransport>,
+    rng: Rng,
+    /// rounds handed to `schedule_round` so far — each contribution checks
+    /// it is landing in its own round (see `schedule_round`)
+    rounds_scheduled: u64,
+}
+
+/// The distributed aggregation application, scheduled on a [`HubRuntime`].
 pub struct FpgaSwitchAllreduce {
     pub workers: u32,
-    pub engine: CollectiveEngine,
-    pub transports: Vec<FpgaTransport>,
-    pub uplinks: Vec<EthLink>,
-    pub downlinks: Vec<EthLink>,
     pub switch_pipeline: Ps,
-    rng: Rng,
     /// per-worker arrival spread (compute imbalance before the collective)
     pub skew_us: f64,
+    uplinks: Vec<LinkId>,
+    downlinks: Vec<LinkId>,
+    inner: Rc<RefCell<AllreduceInner>>,
 }
 
 impl FpgaSwitchAllreduce {
+    /// Install the aggregation program on `switch` and register this app's
+    /// per-worker uplinks/downlinks on `rt`.
     pub fn new(
+        rt: &mut HubRuntime,
         switch: &mut P4Switch,
         workers: u32,
         slots: usize,
@@ -46,69 +75,170 @@ impl FpgaSwitchAllreduce {
     ) -> Result<Self, P4Error> {
         let engine =
             CollectiveEngine::new(switch, workers, slots, crate::util::fixed::DEFAULT_SHIFT)?;
+        let hop = ns_f(constants::ETH_HOP_NS);
+        let uplinks = (0..workers)
+            .map(|_| rt.add_link("allreduce-uplink", constants::ETH_GBPS, hop))
+            .collect();
+        let downlinks = (0..workers)
+            .map(|_| rt.add_link("allreduce-downlink", constants::ETH_GBPS, hop))
+            .collect();
         Ok(FpgaSwitchAllreduce {
             workers,
-            engine,
-            transports: (0..workers).map(|_| FpgaTransport::new(1, 256)).collect(),
-            uplinks: (0..workers).map(|_| EthLink::new_100g()).collect(),
-            downlinks: (0..workers).map(|_| EthLink::new_100g()).collect(),
             switch_pipeline: switch.pipeline_latency(),
-            rng,
             skew_us,
+            uplinks,
+            downlinks,
+            inner: Rc::new(RefCell::new(AllreduceInner {
+                engine,
+                transports: (0..workers).map(|_| FpgaTransport::new(1, 256)).collect(),
+                rng,
+                rounds_scheduled: 0,
+            })),
         })
     }
 
-    /// Execute one aggregation round starting at `now` with each worker
-    /// holding `chunks[w]` (all equal length ≤ installed slots).
-    pub fn round(&mut self, now: Ps, chunks: &[Vec<f32>]) -> RoundOutcome {
+    /// Rounds the switch aggregation program has completed.
+    pub fn rounds(&self) -> u64 {
+        self.inner.borrow().engine.rounds
+    }
+
+    /// The uplink of worker `w` — exported so co-tenants can (deliberately)
+    /// share the hub's egress port with the collective.
+    pub fn uplink(&self, w: usize) -> LinkId {
+        self.uplinks[w]
+    }
+
+    /// One transport traversal's pipeline latency.
+    pub fn transport_pipeline(&self) -> Ps {
+        self.inner.borrow().transports[0].pipeline_latency()
+    }
+
+    /// Schedule one aggregation round starting at `t0`, each worker holding
+    /// `chunks[w]`. The round unfolds as events; `on_done` fires when the
+    /// last worker holds the multicast result (with that worst time).
+    ///
+    /// Rounds on one app are sequential on the switch: the caller must
+    /// space them so a round drains before the next one's chunks arrive
+    /// (the engine asserts this — a contribution landing while an earlier
+    /// round is still open would silently mix rounds otherwise, e.g. under
+    /// extreme co-tenant backlog on an uplink).
+    pub fn schedule_round(
+        &self,
+        rt: &mut HubRuntime,
+        t0: Ps,
+        chunks: &[Vec<f32>],
+        on_done: impl FnOnce(&mut Sim, Ps) + 'static,
+    ) -> Rc<RefCell<RoundState>> {
         assert_eq!(chunks.len(), self.workers as usize);
         let bytes = (chunks[0].len() * 4) as u64;
+        let round = Rc::new(RefCell::new(RoundState {
+            t0,
+            values: Vec::new(),
+            done_at: vec![0; chunks.len()],
+            saturated: false,
+            completed: 0,
+            on_done: Some(Box::new(on_done)),
+        }));
+        let hub = rt.state();
+        let round_idx = {
+            let mut inner = self.inner.borrow_mut();
+            let idx = inner.rounds_scheduled;
+            inner.rounds_scheduled += 1;
+            idx
+        };
 
-        // 1. each worker's transport pushes its chunk to the switch
-        let mut at_switch = Vec::with_capacity(chunks.len());
         for w in 0..chunks.len() {
-            let skew = crate::sim::time::us_f(self.rng.f64() * self.skew_us);
-            let t = now + skew + self.transports[w].pipeline_latency();
-            let pkts = self.transports[w].send_message(0, bytes);
-            let mut arrive = t;
+            // 1. worker w's transport packetizes after its compute skew
+            let (skew, pipeline, pkts) = {
+                let mut inner = self.inner.borrow_mut();
+                let skew = us_f(inner.rng.f64() * self.skew_us);
+                let pipeline = inner.transports[w].pipeline_latency();
+                let pkts = inner.transports[w].send_message(0, bytes);
+                (skew, pipeline, pkts)
+            };
+            let mut desc = TransferDesc::with_label(w as u64).delay(skew + pipeline);
             for p in &pkts {
-                let (_, a) = self.uplinks[w].transmit(arrive, p.wire_bytes());
-                arrive = a;
+                desc = desc.xfer(self.uplinks[w], p.wire_bytes());
             }
-            at_switch.push(arrive);
+
+            // 2. on arrival at the switch: contribute; the last contribution
+            //    triggers the multicast after the switch pipeline
+            let chunk = chunks[w].clone();
+            let inner = self.inner.clone();
+            let round_rc = round.clone();
+            let hub_rc = hub.clone();
+            let downlinks = self.downlinks.clone();
+            let switch_pipeline = self.switch_pipeline;
+            let workers = self.workers;
+            rt.submit(t0, desc, move |sim, _arrived| {
+                let result = {
+                    let mut ir = inner.borrow_mut();
+                    assert_eq!(
+                        ir.engine.rounds, round_idx,
+                        "collective round {round_idx} contribution arrived while round {} \
+                         is still open — rounds overlapped; increase the round gap",
+                        ir.engine.rounds
+                    );
+                    ir.engine.contribute(&chunk)
+                };
+                if let Some(res) = result {
+                    {
+                        let mut rs = round_rc.borrow_mut();
+                        rs.values = res.values;
+                        rs.saturated = res.saturated;
+                    }
+                    let multicast_at = sim.now() + switch_pipeline;
+                    // 3. multicast back through each worker's downlink +
+                    //    receiving transport
+                    for w2 in 0..workers as usize {
+                        let rx_pipeline = inner.borrow().transports[w2].pipeline_latency();
+                        let dl = TransferDesc::with_label(w2 as u64)
+                            .xfer(downlinks[w2], bytes + 64)
+                            .delay(rx_pipeline);
+                        let inner2 = inner.clone();
+                        let round2 = round_rc.clone();
+                        submit_on(&hub_rc, sim, multicast_at, dl, move |s2, done| {
+                            {
+                                // receiving transport: depacketize + ack
+                                let mut ir = inner2.borrow_mut();
+                                let mtu = ir.transports[w2].mtu;
+                                let pkt = packetize(0, bytes, mtu)
+                                    .into_iter()
+                                    .next()
+                                    .expect("at least one packet");
+                                let _ = ir.transports[w2].receive(0, &pkt);
+                            }
+                            let mut rs = round2.borrow_mut();
+                            rs.done_at[w2] = done;
+                            rs.completed += 1;
+                            if rs.completed == workers {
+                                let cb = rs.on_done.take();
+                                let worst = *rs.done_at.iter().max().unwrap();
+                                drop(rs);
+                                if let Some(cb) = cb {
+                                    cb(s2, worst);
+                                }
+                            }
+                        });
+                    }
+                }
+            });
         }
+        round
+    }
 
-        // 2. switch aggregates as chunks arrive; completes on the last one
-        let mut order: Vec<usize> = (0..chunks.len()).collect();
-        order.sort_by_key(|&w| at_switch[w]);
-        let mut result = None;
-        let mut agg_done = now;
-        for &w in &order {
-            let r = self.engine.contribute(&chunks[w]);
-            agg_done = at_switch[w];
-            if r.is_some() {
-                result = r;
-            }
+    /// Blocking convenience: schedule one round, drain the engine, return
+    /// the outcome (single-tenant usage — Fig 8, tests).
+    pub fn round(&self, rt: &mut HubRuntime, t0: Ps, chunks: &[Vec<f32>]) -> RoundOutcome {
+        let handle = self.schedule_round(rt, t0, chunks, |_, _| {});
+        rt.run();
+        let rs = handle.borrow();
+        assert_eq!(rs.completed, self.workers, "round did not complete");
+        RoundOutcome {
+            values: rs.values.clone(),
+            done_at: rs.done_at.clone(),
+            saturated: rs.saturated,
         }
-        let result = result.expect("all workers contributed");
-        let multicast_at = agg_done + self.switch_pipeline;
-
-        // 3. multicast back through each worker's downlink + transport
-        let done_at: Vec<Ps> = (0..chunks.len())
-            .map(|w| {
-                let (_, arr) = self.downlinks[w].transmit(multicast_at, bytes + 64);
-                // receiving transport: depacketize + ack, then deliver
-                let mtu = self.transports[w].mtu;
-                let pkt = crate::net::packet::packetize(0, bytes, mtu)
-                    .into_iter()
-                    .next()
-                    .expect("at least one packet");
-                let _ = self.transports[w].receive(0, &pkt);
-                arr + self.transports[w].pipeline_latency()
-            })
-            .collect();
-
-        RoundOutcome { values: result.values, done_at, saturated: result.saturated }
     }
 }
 
@@ -117,18 +247,21 @@ mod tests {
     use super::*;
     use crate::sim::time::{to_us, US};
 
-    fn app(workers: u32, slots: usize, skew: f64) -> FpgaSwitchAllreduce {
+    fn app(workers: u32, slots: usize, skew: f64) -> (HubRuntime, FpgaSwitchAllreduce) {
+        let mut rt = HubRuntime::new();
         let mut sw = P4Switch::tofino();
-        FpgaSwitchAllreduce::new(&mut sw, workers, slots, Rng::new(9), skew).unwrap()
+        let a =
+            FpgaSwitchAllreduce::new(&mut rt, &mut sw, workers, slots, Rng::new(9), skew).unwrap();
+        (rt, a)
     }
 
     #[test]
     fn sums_are_exact_to_fixed_point() {
-        let mut a = app(8, 256, 0.0);
+        let (mut rt, a) = app(8, 256, 0.0);
         let chunks: Vec<Vec<f32>> = (0..8)
             .map(|w| (0..256).map(|i| (w as f32 + 1.0) * 0.001 * i as f32).collect())
             .collect();
-        let out = a.round(0, &chunks);
+        let out = a.round(&mut rt, 0, &chunks);
         assert!(!out.saturated);
         for i in 0..256 {
             let want: f32 = chunks.iter().map(|c| c[i]).sum();
@@ -138,9 +271,9 @@ mod tests {
 
     #[test]
     fn round_latency_is_microsecond_class() {
-        let mut a = app(8, 256, 0.0);
+        let (mut rt, a) = app(8, 256, 0.0);
         let chunks = vec![vec![0.5f32; 256]; 8];
-        let out = a.round(0, &chunks);
+        let out = a.round(&mut rt, 0, &chunks);
         let worst = out.done_at.iter().max().unwrap();
         let us = to_us(*worst);
         // FPGA-Switch: ~1-4 µs total (the Fig 8 regime)
@@ -149,8 +282,8 @@ mod tests {
 
     #[test]
     fn all_workers_receive_the_result() {
-        let mut a = app(4, 64, 0.0);
-        let out = a.round(0, &vec![vec![1.0f32; 64]; 4]);
+        let (mut rt, a) = app(4, 64, 0.0);
+        let out = a.round(&mut rt, 0, &vec![vec![1.0f32; 64]; 4]);
         assert_eq!(out.done_at.len(), 4);
         for v in &out.values {
             assert!((v - 4.0).abs() < 1e-3);
@@ -159,10 +292,10 @@ mod tests {
 
     #[test]
     fn skew_delays_completion() {
-        let mut fast = app(4, 64, 0.0);
-        let mut slow = app(4, 64, 50.0); // up to 50µs compute imbalance
-        let o1 = fast.round(0, &vec![vec![1.0f32; 64]; 4]);
-        let o2 = slow.round(0, &vec![vec![1.0f32; 64]; 4]);
+        let (mut rt1, fast) = app(4, 64, 0.0);
+        let (mut rt2, slow) = app(4, 64, 50.0); // up to 50µs compute imbalance
+        let o1 = fast.round(&mut rt1, 0, &vec![vec![1.0f32; 64]; 4]);
+        let o2 = slow.round(&mut rt2, 0, &vec![vec![1.0f32; 64]; 4]);
         let w1 = *o1.done_at.iter().max().unwrap();
         let w2 = *o2.done_at.iter().max().unwrap();
         assert!(w2 > w1 + 10 * US);
@@ -170,13 +303,24 @@ mod tests {
 
     #[test]
     fn consecutive_rounds_reuse_switch_state() {
-        let mut a = app(2, 32, 0.0);
+        let (mut rt, a) = app(2, 32, 0.0);
         for round in 1..=4 {
-            let out = a.round((round as u64) * 100 * US, &vec![vec![round as f32; 32]; 2]);
+            let out =
+                a.round(&mut rt, (round as u64) * 100 * US, &vec![vec![round as f32; 32]; 2]);
             for v in &out.values {
                 assert!((v - 2.0 * round as f32).abs() < 1e-3);
             }
         }
-        assert_eq!(a.engine.rounds, 4);
+        assert_eq!(a.rounds(), 4);
+    }
+
+    #[test]
+    fn events_actually_flowed_through_the_engine() {
+        let (mut rt, a) = app(4, 64, 0.0);
+        let handle = a.schedule_round(&mut rt, 0, &vec![vec![1.0f32; 64]; 4], |_, _| {});
+        let stats = rt.run();
+        // 4 uplink descriptors + 4 downlink descriptors, multiple stages each
+        assert!(stats.events >= 16, "only {} events", stats.events);
+        assert_eq!(handle.borrow().completed, 4);
     }
 }

@@ -6,15 +6,20 @@
 //! hardwired compression engine transforms the payload at line rate; the
 //! CPU issues three replica-send descriptors; the hub assembles and ships
 //! them. The CPU never touches a payload byte.
+//!
+//! The closed-loop run is event-driven: each message is a pair of
+//! descriptors on a [`HubRuntime`] — header control on the shared core
+//! pool, payload streaming through the line-rate compression engine (a
+//! FIFO resource) — joined when both legs finish.
 
 use crate::baselines::cpu_pipeline::{MiddleTierConfig, MiddleTierResult};
 use crate::constants;
-use crate::devices::cpu::{CorePool, SwCost};
+use crate::devices::cpu::SwCost;
 use crate::hub::descriptor::{Descriptor, DescriptorTable, PayloadDest};
 use crate::hub::split_assemble::SplitAssemble;
 use crate::hub::transport::FpgaTransport;
-use crate::metrics::Hist;
-use crate::sim::time::{ns_f, to_us, us_f, Ps};
+use crate::runtime_hub::{join2_on, run_closed_loop, HubRuntime, TransferDesc};
+use crate::sim::time::{ns_f, Ps};
 use crate::util::Rng;
 
 /// Header size the middle tier programs for its flow (per-flow descriptor).
@@ -71,49 +76,44 @@ impl HubMiddleTier {
         cpu.min(fpga)
     }
 
-    /// Run the closed-loop experiment (same protocol as the CPU baseline).
+    /// Run the closed-loop experiment (same protocol as the CPU baseline):
+    /// Poisson arrivals; per message the header-control descriptor runs on
+    /// the core pool while the payload descriptor streams through the
+    /// compression engine; the message completes when both legs do.
     pub fn run(&mut self, cores: usize, seed: u64) -> MiddleTierResult {
         let cfg = self.cfg;
-        let mut rng = Rng::new(seed);
-        let mut pool = CorePool::new(cores);
+        let mut rt = HubRuntime::new();
+        let pool = rt.add_pool(cores);
+        let payload = cfg.msg_bytes - MIDDLE_TIER_HEADER_BYTES;
+        // the engine occupies for the streaming pass; the two transport
+        // pipeline traversals ride as its post-serialization latency
+        let engine = rt.add_link(
+            "fpga-compress-engine",
+            constants::FPGA_COMPRESS_GBPS,
+            self.transport.pipeline_latency() * 2,
+        );
         let rate = self.capacity_msgs(cores) * cfg.load_frac;
         let mean_gap_us = 1e6 / rate;
         let ctrl = self.cpu_ctrl_time();
-        let data = self.fpga_data_plane_time();
-        let mut lat = Hist::new();
-        let mut t_arrive: Ps = 0;
-        let mut processed = 0u64;
-        let mut bytes = 0u64;
-        // FPGA compression engine is a line-rate streaming resource
-        let mut engine_free: Ps = 0;
-        loop {
-            t_arrive += us_f(rng.exponential(mean_gap_us));
-            if t_arrive >= cfg.horizon {
-                break;
-            }
-            // control plane (header only) on the CPU — runs concurrently
-            // with the data plane; the message completes when both are done
-            let (_, _, ctrl_done) = pool.run(t_arrive, ctrl);
-            let data_start = t_arrive.max(engine_free);
-            let data_done = data_start + data;
-            engine_free = data_start
-                + ns_f(
-                    (cfg.msg_bytes - MIDDLE_TIER_HEADER_BYTES) as f64 * 8.0
-                        / constants::FPGA_COMPRESS_GBPS,
-                );
-            let done = ctrl_done.max(data_done);
-            if done <= cfg.horizon {
-                processed += 1;
-                bytes += cfg.msg_bytes;
-                lat.record(to_us(done - t_arrive));
-            }
-        }
+
+        let mut r = run_closed_loop(
+            &mut rt,
+            Rng::new(seed),
+            mean_gap_us,
+            cfg.horizon,
+            move |st, sim, t_arrive, record| {
+                let ctrl_desc = TransferDesc::with_label(1).on_core(pool, ctrl);
+                let data_desc = TransferDesc::with_label(2).xfer(engine, payload);
+                join2_on(st, sim, t_arrive, ctrl_desc, data_desc, record);
+            },
+        );
+        let bytes = r.processed * cfg.msg_bytes;
         MiddleTierResult {
             cores,
             throughput_gbps: bytes as f64 * 8.0 / 1e9 / crate::sim::time::to_s(cfg.horizon),
-            mean_latency_us: lat.mean(),
-            p99_latency_us: lat.p99(),
-            processed,
+            mean_latency_us: r.lat.mean(),
+            p99_latency_us: r.lat.p99(),
+            processed: r.processed,
         }
     }
 }
@@ -122,6 +122,7 @@ impl HubMiddleTier {
 mod tests {
     use super::*;
     use crate::baselines::CpuOnlyMiddleTier;
+    use crate::sim::time::to_us;
 
     fn hub() -> HubMiddleTier {
         HubMiddleTier::new(MiddleTierConfig::default())

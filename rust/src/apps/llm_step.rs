@@ -9,9 +9,13 @@
 //!   store, §2.2.3); the hub runs the collective on its own fabric and
 //!   wire; GEMMs see the full machine and fully overlap.
 
+use std::cell::Cell;
+use std::rc::Rc;
+
 use crate::constants;
 use crate::devices::gpu::Gpu;
 use crate::hub::transport::FpgaTransport;
+use crate::runtime_hub::{HubRuntime, TransferDesc};
 use crate::sim::time::{ns_f, to_us, Ps};
 
 /// Step workload description.
@@ -49,19 +53,43 @@ pub struct LlmStepReport {
     pub gemm_slowdown_pct: f64,
 }
 
+/// Run one step on the event engine: the GEMM stream is a chain of
+/// per-kernel events, the collective a parallel descriptor; the step ends
+/// when the engine drains (the longer of the two streams). Returns
+/// (gemm_done, collective_done, step_done).
+fn run_step_events(gemm_each: Ps, gemms: u32, lead_in: Ps, collective: Ps) -> (Ps, Ps, Ps) {
+    let mut rt = HubRuntime::new();
+    let gemm_done = Rc::new(Cell::new(0u64));
+    let coll_done = Rc::new(Cell::new(0u64));
+    let mut gemm_desc = TransferDesc::with_label(1);
+    for _ in 0..gemms {
+        gemm_desc = gemm_desc.delay(gemm_each);
+    }
+    let g = gemm_done.clone();
+    rt.submit(0, gemm_desc, move |_, t| g.set(t));
+    let c = coll_done.clone();
+    rt.submit(
+        0,
+        TransferDesc::with_label(2).delay(lead_in).delay(collective),
+        move |_, t| c.set(t),
+    );
+    let stats = rt.run();
+    (gemm_done.get(), coll_done.get(), stats.sim_now)
+}
+
 /// GPU-only step: collective on the GPU, interference on.
 pub fn step_with_interference(gpu: &Gpu, cfg: &LlmStepConfig) -> LlmStepReport {
     let clean_gemm = gpu.gemm_time(cfg.gemm_m, cfg.gemm_n, cfg.gemm_k, 1.0, 1.0)
         * cfg.gemms_per_step as u64;
     // collectives and GEMMs co-run: GEMMs see the reduced machine while the
     // collective is in flight
-    let gemm = gpu.gemm_time(
+    let gemm_each = gpu.gemm_time(
         cfg.gemm_m,
         cfg.gemm_n,
         cfg.gemm_k,
         gpu.sm_frac_with_nccl(),
         gpu.bw_frac_with_nccl(),
-    ) * cfg.gemms_per_step as u64;
+    );
     // NCCL ring over the GPU fabric; effective bus bw also suffers from the
     // shared HBM (§2.2.2 figure 2's point)
     let coll = gpu.ring_allreduce_time(
@@ -69,9 +97,8 @@ pub fn step_with_interference(gpu: &Gpu, cfg: &LlmStepConfig) -> LlmStepReport {
         cfg.workers,
         constants::ETH_GBPS * 0.85,
     );
-    // overlap: the longer of the two streams dominates, but both are
-    // degraded while overlapping
-    let step = gemm.max(coll);
+    // overlap: both streams run as events; the longer one ends the step
+    let (gemm, coll, step) = run_step_events(gemm_each, cfg.gemms_per_step, 0, coll);
     LlmStepReport {
         gemm_time: gemm,
         collective_time: coll,
@@ -86,16 +113,16 @@ pub fn step_with_offload(
     cfg: &LlmStepConfig,
     transport: &FpgaTransport,
 ) -> LlmStepReport {
-    let gemm = gpu.gemm_time(cfg.gemm_m, cfg.gemm_n, cfg.gemm_k, 1.0, 1.0)
-        * cfg.gemms_per_step as u64;
-    // hub-side ring: FPGA transport pipeline per hop + wire at full rate;
-    // the GPU only pays one posted doorbell write (folded into transport)
+    let gemm_each = gpu.gemm_time(cfg.gemm_m, cfg.gemm_n, cfg.gemm_k, 1.0, 1.0);
+    // hub-side ring: one posted doorbell write + two transport traversals
+    // lead in, then the wire at full rate
     let wire = gpu.ring_allreduce_time(cfg.allreduce_bytes, cfg.workers, constants::ETH_GBPS);
-    let coll = wire + transport.pipeline_latency() * 2 + ns_f(constants::MMIO_WRITE_POST_NS);
+    let lead_in = transport.pipeline_latency() * 2 + ns_f(constants::MMIO_WRITE_POST_NS);
+    let (gemm, coll, step) = run_step_events(gemm_each, cfg.gemms_per_step, lead_in, wire);
     LlmStepReport {
         gemm_time: gemm,
         collective_time: coll,
-        step_time: gemm.max(coll), // true full overlap
+        step_time: step, // true full overlap
         gemm_slowdown_pct: 0.0,
     }
 }

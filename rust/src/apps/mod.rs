@@ -1,11 +1,15 @@
-//! Applications built *on* the hub's public API — the workloads §4 evaluates.
+//! Applications built *on* the hub's public API — the workloads §4
+//! evaluates, plus the multi-tenant scenario that exercises cross-workload
+//! contention on the shared hub resources.
 
 pub mod allreduce;
 pub mod block_storage;
 pub mod llm_step;
+pub mod multi_tenant;
 pub mod storage_fetch;
 
 pub use allreduce::FpgaSwitchAllreduce;
 pub use block_storage::HubMiddleTier;
 pub use llm_step::{LlmStepConfig, LlmStepReport};
+pub use multi_tenant::{run_multi_tenant, MultiTenantConfig, MultiTenantReport};
 pub use storage_fetch::run_fetch_demo;

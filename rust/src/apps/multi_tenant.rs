@@ -1,0 +1,278 @@
+//! Multi-tenant hub: an in-network aggregation job and a NIC-initiated
+//! storage-fetch service sharing **one** FpgaHub — the scenario the paper's
+//! hub-vs-point-offload argument hinges on, and one that only the
+//! event-driven [`HubRuntime`] can express.
+//!
+//! The storage tenant's fetch replies egress through the same 100G hub
+//! port that worker 0 of the collective uses as its uplink, and both
+//! tenants cross the hub's PCIe/NVMe resources. Under the closed-form
+//! models each tenant's latency was a private formula; here the shared
+//! port is a stateful FIFO resource, so a 64 KB reply in flight visibly
+//! delays the collective's 2 KB chunk — and the report quantifies exactly
+//! that, by running the same two tenants isolated and shared.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::apps::allreduce::{FpgaSwitchAllreduce, RoundState};
+use crate::apps::storage_fetch::register_nic_fetch_path;
+use crate::constants;
+use crate::metrics::Hist;
+use crate::net::p4::P4Switch;
+use crate::net::packet::packetize;
+use crate::nvme::ssd::SsdArray;
+use crate::runtime_hub::{HubRuntime, LinkId, RunStats};
+use crate::sim::time::{ns_f, to_us, Ps, US};
+use crate::util::Rng;
+
+/// Workload mix for the shared-hub scenario.
+#[derive(Clone, Copy, Debug)]
+pub struct MultiTenantConfig {
+    pub workers: u32,
+    pub chunk_lanes: usize,
+    pub rounds: u64,
+    pub round_gap: Ps,
+    pub fetches: u64,
+    pub fetch_gap: Ps,
+    /// 4 KB blocks per fetch (16 → 64 KB replies on the shared port)
+    pub fetch_blocks_4k: u32,
+    pub num_ssds: usize,
+    pub seed: u64,
+}
+
+impl Default for MultiTenantConfig {
+    fn default() -> Self {
+        MultiTenantConfig {
+            workers: 8,
+            chunk_lanes: 512,
+            rounds: 40,
+            round_gap: 25 * US,
+            fetches: 100,
+            fetch_gap: 10 * US,
+            fetch_blocks_4k: 16,
+            num_ssds: 4,
+            seed: 0xF26A,
+        }
+    }
+}
+
+/// One tenant's latency summary.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantStats {
+    pub n: u64,
+    pub mean_us: f64,
+    pub p99_us: f64,
+}
+
+impl TenantStats {
+    fn from_hist(h: &mut Hist) -> Self {
+        TenantStats { n: h.len() as u64, mean_us: h.mean(), p99_us: h.p99() }
+    }
+}
+
+/// Shared-vs-isolated comparison, plus engine counters for the harness.
+#[derive(Clone, Copy, Debug)]
+pub struct MultiTenantReport {
+    pub shared_allreduce: TenantStats,
+    pub shared_fetch: TenantStats,
+    pub isolated_allreduce: TenantStats,
+    pub isolated_fetch: TenantStats,
+    pub shared_run: RunStats,
+    pub isolated_events: u64,
+}
+
+impl MultiTenantReport {
+    /// Mean slowdown the collective suffers from sharing the hub.
+    pub fn allreduce_slowdown_us(&self) -> f64 {
+        self.shared_allreduce.mean_us - self.isolated_allreduce.mean_us
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "multi-tenant hub (allreduce + storage fetch on one FpgaHub)\n\
+             allreduce rounds : isolated {:.2}µs -> shared {:.2}µs (+{:.2}µs, p99 {:.2}µs)\n\
+             storage fetches  : isolated {:.2}µs -> shared {:.2}µs (p99 {:.2}µs)\n\
+             engine           : {} events shared run, {} events isolated runs, {:.1}µs simulated",
+            self.isolated_allreduce.mean_us,
+            self.shared_allreduce.mean_us,
+            self.allreduce_slowdown_us(),
+            self.shared_allreduce.p99_us,
+            self.isolated_fetch.mean_us,
+            self.shared_fetch.mean_us,
+            self.shared_fetch.p99_us,
+            self.shared_run.events,
+            self.isolated_events,
+            to_us(self.shared_run.sim_elapsed),
+        )
+    }
+}
+
+/// Per-lane value every worker contributes: worker w sends 0.001·(w+1), so
+/// each lane of a correct round sums to 0.001·W(W+1)/2.
+fn expected_lane_sum(workers: u32) -> f32 {
+    0.001 * (workers * (workers + 1) / 2) as f32
+}
+
+/// Schedule the aggregation tenant: `rounds` rounds, `round_gap` apart.
+/// Returns the app (for its uplink handles), the round-latency histogram,
+/// and the per-round handles (so the caller can verify the numerics after
+/// the engine drains — contention must never corrupt the sums).
+#[allow(clippy::type_complexity)]
+fn schedule_allreduce_tenant(
+    rt: &mut HubRuntime,
+    cfg: &MultiTenantConfig,
+) -> (FpgaSwitchAllreduce, Rc<RefCell<Hist>>, Vec<Rc<RefCell<RoundState>>>) {
+    let mut sw = P4Switch::tofino();
+    let app = FpgaSwitchAllreduce::new(
+        rt,
+        &mut sw,
+        cfg.workers,
+        cfg.chunk_lanes,
+        Rng::new(cfg.seed ^ 0xA11),
+        0.2,
+    )
+    .expect("aggregation program fits the switch");
+    let hist = Rc::new(RefCell::new(Hist::new()));
+    let mut handles = Vec::with_capacity(cfg.rounds as usize);
+    for r in 0..cfg.rounds {
+        let t0 = r * cfg.round_gap;
+        let chunks: Vec<Vec<f32>> = (0..cfg.workers)
+            .map(|w| vec![0.001 * (w + 1) as f32; cfg.chunk_lanes])
+            .collect();
+        let h = hist.clone();
+        handles.push(app.schedule_round(rt, t0, &chunks, move |_, worst| {
+            h.borrow_mut().record(to_us(worst - t0));
+        }));
+    }
+    (app, hist, handles)
+}
+
+/// Every round must have completed and decoded to the exact expected sums,
+/// contended or not.
+fn verify_rounds(handles: &[Rc<RefCell<RoundState>>], cfg: &MultiTenantConfig, mode: &str) {
+    let want = expected_lane_sum(cfg.workers);
+    for (r, handle) in handles.iter().enumerate() {
+        let state = handle.borrow();
+        assert_eq!(
+            state.completed, cfg.workers,
+            "{mode}: round {r} did not complete on all workers"
+        );
+        for (lane, v) in state.values.iter().enumerate() {
+            assert!(
+                (v - want).abs() < 1e-3,
+                "{mode}: round {r} lane {lane} decoded {v}, expected {want}"
+            );
+        }
+    }
+}
+
+/// Schedule the storage tenant: NIC-initiated fetches (same calibration as
+/// `storage_fetch`) whose replies egress through `egress` (worker 0's
+/// uplink when sharing the hub), packetized at the MTU so co-tenant
+/// packets interleave on the port the way the wire would.
+fn schedule_fetch_tenant(
+    rt: &mut HubRuntime,
+    cfg: &MultiTenantConfig,
+    egress: LinkId,
+) -> Rc<RefCell<Hist>> {
+    let mut rng = Rng::new(cfg.seed ^ 0x57E0);
+    let arr = rt.add_array(SsdArray::new(cfg.num_ssds, &mut rng));
+    let path = register_nic_fetch_path(rt, arr, cfg.num_ssds);
+    let bytes = cfg.fetch_blocks_4k as u64 * 4096;
+
+    let hist = Rc::new(RefCell::new(Hist::new()));
+    for i in 0..cfg.fetches {
+        let t0 = i * cfg.fetch_gap;
+        let ssd = (i as usize) % cfg.num_ssds;
+        let mut desc = path.fetch_desc(i, ssd, cfg.fetch_blocks_4k);
+        // the reply ships over the hub's egress port, MTU packet by MTU
+        // packet — shared with the collective when both ride one hub
+        for p in packetize(i, bytes, constants::MTU_BYTES) {
+            desc = desc.xfer(egress, p.wire_bytes());
+        }
+        let h = hist.clone();
+        rt.submit(t0, desc, move |_, done| h.borrow_mut().record(to_us(done - t0)));
+    }
+    hist
+}
+
+/// Run the scenario twice — tenants sharing one hub, then each alone — and
+/// report both latency pictures plus engine counters.
+pub fn run_multi_tenant(cfg: &MultiTenantConfig) -> MultiTenantReport {
+    // --- shared: both tenants on one HubRuntime, one egress port
+    let mut rt = HubRuntime::new();
+    let (app, ar_hist, rounds) = schedule_allreduce_tenant(&mut rt, cfg);
+    let fetch_hist = schedule_fetch_tenant(&mut rt, cfg, app.uplink(0));
+    let shared_run = rt.run();
+    // contention may delay the collective but must never corrupt it
+    verify_rounds(&rounds, cfg, "shared");
+    let shared_allreduce = TenantStats::from_hist(&mut ar_hist.borrow_mut());
+    let shared_fetch = TenantStats::from_hist(&mut fetch_hist.borrow_mut());
+
+    // --- isolated: same seeds, same schedules, separate hubs
+    let mut rt_a = HubRuntime::new();
+    let (_app_iso, ar_iso, rounds_iso) = schedule_allreduce_tenant(&mut rt_a, cfg);
+    let run_a = rt_a.run();
+    verify_rounds(&rounds_iso, cfg, "isolated");
+    let mut rt_f = HubRuntime::new();
+    let own_egress =
+        rt_f.add_link("fetch-egress", constants::ETH_GBPS, ns_f(constants::ETH_HOP_NS));
+    let fetch_iso = schedule_fetch_tenant(&mut rt_f, cfg, own_egress);
+    let run_f = rt_f.run();
+
+    MultiTenantReport {
+        shared_allreduce,
+        shared_fetch,
+        isolated_allreduce: TenantStats::from_hist(&mut ar_iso.borrow_mut()),
+        isolated_fetch: TenantStats::from_hist(&mut fetch_iso.borrow_mut()),
+        shared_run,
+        isolated_events: run_a.events + run_f.events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contention_visibly_delays_the_collective() {
+        let r = run_multi_tenant(&MultiTenantConfig::default());
+        // sharing the egress port with 64 KB replies (16 MTU packets each)
+        // must measurably delay the collective vs running alone; the
+        // engine is deterministic, so a modest margin is stable
+        assert!(
+            r.shared_allreduce.mean_us > r.isolated_allreduce.mean_us + 0.01,
+            "shared {:.4}µs vs isolated {:.4}µs",
+            r.shared_allreduce.mean_us,
+            r.isolated_allreduce.mean_us
+        );
+        // and the storage tenant cannot be *faster* for sharing
+        assert!(r.shared_fetch.mean_us >= r.isolated_fetch.mean_us - 1e-9);
+    }
+
+    #[test]
+    fn all_work_completes_in_both_modes() {
+        let cfg = MultiTenantConfig::default();
+        let r = run_multi_tenant(&cfg);
+        assert_eq!(r.shared_allreduce.n, cfg.rounds);
+        assert_eq!(r.shared_fetch.n, cfg.fetches);
+        assert_eq!(r.isolated_allreduce.n, cfg.rounds);
+        assert_eq!(r.isolated_fetch.n, cfg.fetches);
+        assert!(r.shared_run.events > 0 && r.isolated_events > 0);
+    }
+
+    #[test]
+    fn isolated_round_latency_matches_single_tenant_regime() {
+        let r = run_multi_tenant(&MultiTenantConfig::default());
+        // alone, the collective sits in the Fig 8 band
+        assert!(r.isolated_allreduce.mean_us < 6.0, "{}", r.isolated_allreduce.mean_us);
+    }
+
+    #[test]
+    fn report_renders() {
+        let r = run_multi_tenant(&MultiTenantConfig { rounds: 4, fetches: 10, ..Default::default() });
+        let s = r.render();
+        assert!(s.contains("multi-tenant hub"));
+        assert!(s.contains("events"));
+    }
+}

@@ -2,16 +2,25 @@
 //! the network, for blocks to be fetched from local SSDs straight into GPU
 //! memory. The hub's user logic serves it NIC-initiated; the CPU-staged
 //! alternative is computed alongside for contrast.
+//!
+//! Both designs run as descriptor chains on one [`HubRuntime`]: the same
+//! shared [`SsdArray`] sits behind depth-limited NVMe rings (the
+//! NIC-initiated path pays the fabric submit/capture costs, the CPU path
+//! pays its software stack as pre-sampled jitter delays), and each path's
+//! PCIe crossing is a FIFO link — so queueing under load is an emergent
+//! property of the engine, not a formula.
+
+use std::cell::RefCell;
+use std::rc::Rc;
 
 use crate::constants;
 use crate::devices::cpu::SwCost;
 use crate::hub::transport::FpgaTransport;
-use crate::hub::user_logic::{StorageRequest, UserLogic};
 use crate::metrics::Hist;
 use crate::nvme::queue::NvmeOp;
 use crate::nvme::ssd::SsdArray;
-use crate::pcie::{DmaEngine, Endpoint, PcieLink};
-use crate::sim::time::{to_us, us_f, Ps};
+use crate::runtime_hub::{ArrayId, HubRuntime, LinkId, NvmeId, TransferDesc};
+use crate::sim::time::{cycles, ns_f, to_us, us_f, Ps, US};
 use crate::util::Rng;
 
 /// Demo outcome: latency distributions for both designs.
@@ -21,51 +30,107 @@ pub struct FetchDemoReport {
     pub requests: u64,
 }
 
+/// Fabric-side peer-to-peer MMIO cost on the offloaded control plane
+/// (doorbell to the SSD / CQ capture), as `hub::ssd_ctrl` charges it.
+const P2P_NS: f64 = 500.0;
+
+/// Handles for one NIC-initiated fetch data path on a runtime: on-FPGA
+/// rings per SSD, the p2p PCIe link toward the destination, and the
+/// transport pipeline latency. One calibration, shared by the fetch demo
+/// and the multi-tenant scenario.
+pub struct NicFetchPath {
+    pub queues: Vec<NvmeId>,
+    pub pcie: LinkId,
+    pub transport_pipeline: Ps,
+}
+
+/// Register the NIC-initiated fetch path (§3.3 calibration: 8-cycle
+/// command build + doorbell, 500 ns p2p MMIO each way, one-cycle native
+/// CQ capture, ring depth 256) over `array` on `rt`.
+pub fn register_nic_fetch_path(
+    rt: &mut HubRuntime,
+    array: ArrayId,
+    num_ssds: usize,
+) -> NicFetchPath {
+    let submit_ps = cycles(8, constants::FPGA_FREQ_MHZ) + ns_f(P2P_NS);
+    let complete_ps = ns_f(P2P_NS) + cycles(1, constants::FPGA_FREQ_MHZ);
+    NicFetchPath {
+        queues: (0..num_ssds)
+            .map(|i| rt.add_nvme_queue(array, i, 256, submit_ps, complete_ps))
+            .collect(),
+        pcie: rt.add_link("pcie-gpu-direct", constants::PCIE_GEN3_X16_GBPS, 0),
+        transport_pipeline: FpgaTransport::new(1, 64).pipeline_latency(),
+    }
+}
+
+impl NicFetchPath {
+    /// Descriptor for one fetch of `blocks_4k` 4 KB blocks from `ssd`:
+    /// command in over the transport, on-FPGA ring, p2p DMA toward the
+    /// destination, completion back through the transport. Callers may
+    /// append further stages (e.g. the reply's egress packets).
+    pub fn fetch_desc(&self, label: u64, ssd: usize, blocks_4k: u32) -> TransferDesc {
+        TransferDesc::with_label(label)
+            .delay(self.transport_pipeline)
+            .nvme(self.queues[ssd], NvmeOp::Read)
+            .delay(ns_f(constants::PCIE_DMA_SETUP_NS))
+            .xfer(self.pcie, blocks_4k as u64 * 4096)
+            .delay(self.transport_pipeline)
+    }
+}
+
 /// Run `n` network-initiated 4 KB fetches to GPU memory both ways.
 pub fn run_fetch_demo(n: u64, num_ssds: usize, seed: u64) -> FetchDemoReport {
     let mut rng = Rng::new(seed);
-    let mut array = SsdArray::new(num_ssds, &mut rng);
-    let mut ul = UserLogic::new(num_ssds, 256, 500.0);
-    let mut dma = DmaEngine::new(PcieLink::gen3_x16());
-    let transport = FpgaTransport::new(1, 64);
+    let mut rt = HubRuntime::new();
+    let arr = rt.add_array(SsdArray::new(num_ssds, &mut rng));
+
+    // NIC-initiated: on-FPGA rings (submit = build+doorbell+p2p fetch,
+    // complete = p2p CQ write + one-cycle native capture)
+    let nic = register_nic_fetch_path(&mut rt, arr, num_ssds);
+    // CPU-staged: host-DRAM rings; the software costs ride as delays
+    let cpu_q: Vec<NvmeId> = (0..num_ssds)
+        .map(|i| rt.add_nvme_queue(arr, i, constants::SSD_QUEUE_DEPTH, 0, 0))
+        .collect();
+    let pcie_cpu = rt.add_link("pcie-host-bounce", constants::PCIE_GEN3_X16_GBPS, 0);
     let mut jrng = rng.fork();
 
-    let mut nic = Hist::new();
-    let mut cpu = Hist::new();
+    let nic_hist = Rc::new(RefCell::new(Hist::new()));
+    let cpu_hist = Rc::new(RefCell::new(Hist::new()));
     for i in 0..n {
-        let t0: Ps = i * 300 * crate::sim::time::US; // spaced arrivals
-        // --- NIC-initiated: net cmd -> transport -> user logic -> GPU
-        let cmd_in = t0 + transport.pipeline_latency();
-        let req = StorageRequest {
-            id: i,
-            op: NvmeOp::Read,
-            ssd: (i as usize) % num_ssds,
-            lba: i * 8,
-            blocks_4k: 1,
-            dest: Endpoint::Gpu,
-        };
-        let done = ul.serve(cmd_in, req, &mut array, &mut dma).unwrap();
-        let reply = done.data_landed_at + transport.pipeline_latency();
-        nic.record(to_us(reply - t0));
+        let t0: Ps = i * 300 * US; // spaced arrivals
+        let ssd = (i as usize) % num_ssds;
+
+        // --- NIC-initiated: net cmd -> transport -> on-FPGA ring -> p2p
+        //     DMA to GPU -> transport reply
+        let h = nic_hist.clone();
+        rt.submit(t0, nic.fetch_desc(i, ssd, 1), move |_, done| {
+            h.borrow_mut().record(to_us(done - t0))
+        });
 
         // --- CPU-staged: net cmd -> CPU stack -> CPU submits I/O -> CPU
-        //     polls completion -> CPU DMAs to GPU -> CPU net reply
+        //     handles completion -> bounce buffer -> PCIe to GPU -> reply.
+        //     Software jitter is pre-sampled in the same draw order the
+        //     closed-form demo used.
         let (m, s) = constants::CPU_NET_STACK_US;
-        let t = t0 + us_f(jrng.lognormal(m, s / m)); // consume command
-        let t = t + SwCost::spdk_cmd(false); // submit
-        let media = array.process(t, (i as usize) % num_ssds, NvmeOp::Read);
-        // poll granularity + completion handling + context switch
+        let j_consume = us_f(jrng.lognormal(m, s / m));
         let (cm, cs) = constants::CPU_CTX_SWITCH_US;
-        let t = media + us_f(jrng.normal_trunc(cm, cs, cm * 0.3));
-        let t = t + SwCost::memcpy(4096); // bounce buffer
-        let (_, t_dma) = {
-            let mut link = PcieLink::gen3_x16();
-            link.reserve(t, 4096)
-        };
-        let reply_cpu = t_dma + us_f(jrng.lognormal(m, s / m)); // reply send
-        cpu.record(to_us(reply_cpu - t0));
+        let j_ctx = us_f(jrng.normal_trunc(cm, cs, cm * 0.3));
+        let j_reply = us_f(jrng.lognormal(m, s / m));
+        let cpu = TransferDesc::with_label(i)
+            .delay(j_consume + SwCost::spdk_cmd(false))
+            .nvme(cpu_q[ssd], NvmeOp::Read)
+            .delay(j_ctx + SwCost::memcpy(4096))
+            .xfer(pcie_cpu, 4096)
+            .delay(j_reply);
+        let h = cpu_hist.clone();
+        rt.submit(t0, cpu, move |_, done| h.borrow_mut().record(to_us(done - t0)));
     }
-    FetchDemoReport { nic_initiated: nic, cpu_staged: cpu, requests: n }
+    rt.run();
+
+    let nic_initiated =
+        Rc::try_unwrap(nic_hist).expect("sole owner after run").into_inner();
+    let cpu_staged = Rc::try_unwrap(cpu_hist).expect("sole owner after run").into_inner();
+    FetchDemoReport { nic_initiated, cpu_staged, requests: n }
 }
 
 #[cfg(test)]

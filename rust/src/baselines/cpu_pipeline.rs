@@ -9,9 +9,9 @@
 //!    bandwidth/LLC contention on the payload-heavy pipeline), so average
 //!    latency rises as cores are added — the paper's second observation.
 
-use crate::devices::cpu::{CorePool, SwCost};
-use crate::metrics::Hist;
-use crate::sim::time::{to_us, us_f, Ps};
+use crate::devices::cpu::SwCost;
+use crate::runtime_hub::{run_closed_loop, submit_on, HubRuntime, TransferDesc};
+use crate::sim::time::Ps;
 use crate::util::Rng;
 
 /// Workload/run parameters shared by baseline and hub variants.
@@ -83,35 +83,32 @@ impl CpuOnlyMiddleTier {
     }
 
     /// Closed-loop run at `load_frac` of capacity with Poisson arrivals.
+    /// Each message is one descriptor occupying a core of the shared pool
+    /// on a [`HubRuntime`] — queueing behind busy cores is the engine's
+    /// doing, not a formula's.
     pub fn run(&self, cores: usize, seed: u64) -> MiddleTierResult {
         let cfg = &self.cfg;
-        let mut rng = Rng::new(seed);
-        let mut pool = CorePool::new(cores);
+        let mut rt = HubRuntime::new();
+        let pool = rt.add_pool(cores);
         let service = self.service_time(cores);
         let rate = self.capacity_msgs(cores) * cfg.load_frac; // msgs/s
         let mean_gap_us = 1e6 / rate;
-        let mut lat = Hist::new();
-        let mut t_arrive: Ps = 0;
-        let mut processed = 0u64;
-        let mut bytes = 0u64;
-        loop {
-            t_arrive += us_f(rng.exponential(mean_gap_us));
-            if t_arrive >= cfg.horizon {
-                break;
-            }
-            let (_, _, done) = pool.run(t_arrive, service);
-            if done <= cfg.horizon {
-                processed += 1;
-                bytes += cfg.msg_bytes;
-                lat.record(to_us(done - t_arrive));
-            }
-        }
+        let mut r = run_closed_loop(
+            &mut rt,
+            Rng::new(seed),
+            mean_gap_us,
+            cfg.horizon,
+            move |st, sim, t_arrive, record| {
+                submit_on(st, sim, t_arrive, TransferDesc::new().on_core(pool, service), record);
+            },
+        );
+        let bytes = r.processed * cfg.msg_bytes;
         MiddleTierResult {
             cores,
             throughput_gbps: bytes as f64 * 8.0 / 1e9 / crate::sim::time::to_s(cfg.horizon),
-            mean_latency_us: lat.mean(),
-            p99_latency_us: lat.p99(),
-            processed,
+            mean_latency_us: r.lat.mean(),
+            p99_latency_us: r.lat.p99(),
+            processed: r.processed,
         }
     }
 }

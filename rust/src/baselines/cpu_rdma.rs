@@ -7,58 +7,86 @@
 //!   NIC wire + switch                                       — deterministic
 //!   remote CPU consumes completion, context switch          — jittery
 //!   remote CPU copies/ signals into GPU memory over PCIe    — bw-bound
+//!
+//! Each message is a descriptor chain on a [`HubRuntime`]: the software
+//! hops ride as pre-sampled jitter delays, the PCIe crossings and the wire
+//! are shared FIFO links — under load the staged path queues on them like
+//! everything else sharing the host.
+
+use std::cell::Cell;
+use std::rc::Rc;
 
 use crate::constants;
-use crate::net::EthLink;
-use crate::pcie::PcieLink;
-use crate::sim::time::{us_f, Ps};
+use crate::runtime_hub::{HubRuntime, LinkId, TransferDesc};
+use crate::sim::time::{ns_f, us_f, Ps};
+use crate::sim::Sim;
 use crate::util::Rng;
 
 /// The staged path's per-hop state.
 pub struct CpuRdmaPath {
     rng: Rng,
-    pub eth: EthLink,
-    pub pcie_local: PcieLink,
-    pub pcie_remote: PcieLink,
+    pub eth: LinkId,
+    pub pcie_local: LinkId,
+    pub pcie_remote: LinkId,
     pub switch_latency: Ps,
     pub messages: u64,
 }
 
 impl CpuRdmaPath {
-    pub fn new(rng: Rng, switch_latency: Ps) -> Self {
+    /// Register this path's links on `rt`.
+    pub fn new(rt: &mut HubRuntime, rng: Rng, switch_latency: Ps) -> Self {
         CpuRdmaPath {
             rng,
-            eth: EthLink::new_100g(),
-            pcie_local: PcieLink::gen3_x16(),
-            pcie_remote: PcieLink::gen3_x16(),
+            eth: rt.add_link("rdma-eth", constants::ETH_GBPS, ns_f(constants::ETH_HOP_NS)),
+            pcie_local: rt.add_link("rdma-pcie-local", constants::PCIE_GEN3_X16_GBPS, 0),
+            pcie_remote: rt.add_link("rdma-pcie-remote", constants::PCIE_GEN3_X16_GBPS, 0),
             switch_latency,
             messages: 0,
         }
     }
 
-    /// One GPU→remote-GPU message of `bytes`; returns arrival time.
-    pub fn send(&mut self, now: Ps, bytes: u64) -> Ps {
+    /// Schedule one GPU→remote-GPU message of `bytes` at `now`; `done`
+    /// fires with the arrival time. Jitter is pre-sampled in the same draw
+    /// order the closed-form path used (notify, post, stack, ctx-switch).
+    pub fn schedule_send(
+        &mut self,
+        rt: &mut HubRuntime,
+        now: Ps,
+        bytes: u64,
+        done: impl FnOnce(&mut Sim, Ps) + 'static,
+    ) {
         self.messages += 1;
-        // 1. GPU -> CPU notification (CUDA runtime on CPU, §2.2.2)
         let (m, s) = constants::GPU_KERNEL_NOTIFY_US;
-        let t = now + us_f(self.rng.normal_trunc(m, s, m * 0.4));
-        // 2. GPU memory -> host staging buffer over PCIe
-        let (_, t) = { let d = self.pcie_local.reserve(t, bytes); d };
-        // 3. CPU posts RDMA send
+        let j_notify = us_f(self.rng.normal_trunc(m, s, m * 0.4));
         let (m, s) = constants::RDMA_POST_US;
-        let t = t + us_f(self.rng.normal_trunc(m, s, m * 0.4));
-        // 4. wire + switch
-        let (_, t) = { let d = self.eth.transmit(t, bytes); d };
-        let t = t + self.switch_latency;
-        // 5. remote CPU network stack wakes up and consumes the message
+        let j_post = us_f(self.rng.normal_trunc(m, s, m * 0.4));
         let (m, s) = constants::CPU_NET_STACK_US;
-        let t = t + us_f(self.rng.lognormal(m, s / m));
-        // 6. context switch to the app thread
+        let j_stack = us_f(self.rng.lognormal(m, s / m));
         let (m, s) = constants::CPU_CTX_SWITCH_US;
-        let t = t + us_f(self.rng.normal_trunc(m, s, m * 0.3));
-        // 7. staging buffer -> remote GPU memory over PCIe
-        let (_, t) = { let d = self.pcie_remote.reserve(t, bytes); d };
-        t
+        let j_ctx = us_f(self.rng.normal_trunc(m, s, m * 0.3));
+        let desc = TransferDesc::new()
+            // 1. GPU -> CPU notification (CUDA runtime on CPU, §2.2.2)
+            .delay(j_notify)
+            // 2. GPU memory -> host staging buffer over PCIe
+            .xfer(self.pcie_local, bytes)
+            // 3. CPU posts RDMA send
+            .delay(j_post)
+            // 4. wire + switch
+            .xfer(self.eth, bytes)
+            // 5-6. remote CPU stack wakeup + context switch to the app
+            .delay(self.switch_latency + j_stack + j_ctx)
+            // 7. staging buffer -> remote GPU memory over PCIe
+            .xfer(self.pcie_remote, bytes);
+        rt.submit(now, desc, done);
+    }
+
+    /// Blocking convenience: schedule one message and drain the engine.
+    pub fn send(&mut self, rt: &mut HubRuntime, now: Ps, bytes: u64) -> Ps {
+        let out = Rc::new(Cell::new(0u64));
+        let o = out.clone();
+        self.schedule_send(rt, now, bytes, move |_, t| o.set(t));
+        rt.run();
+        out.get()
     }
 }
 
@@ -70,11 +98,12 @@ mod tests {
 
     #[test]
     fn staged_path_is_tens_of_microseconds() {
-        let mut p = CpuRdmaPath::new(Rng::new(1), 1500 * crate::sim::time::NS);
+        let mut rt = HubRuntime::new();
+        let mut p = CpuRdmaPath::new(&mut rt, Rng::new(1), 1500 * crate::sim::time::NS);
         let mut h = Hist::new();
         for i in 0..2000u64 {
             let t0 = i * 200 * US; // spaced: no queueing
-            h.record(to_us(p.send(t0, 4096) - t0));
+            h.record(to_us(p.send(&mut rt, t0, 4096) - t0));
         }
         let mean = h.mean();
         assert!((12.0..40.0).contains(&mean), "staged mean {mean}µs");
@@ -82,11 +111,12 @@ mod tests {
 
     #[test]
     fn jitter_is_software_dominated() {
-        let mut p = CpuRdmaPath::new(Rng::new(2), 1500 * crate::sim::time::NS);
+        let mut rt = HubRuntime::new();
+        let mut p = CpuRdmaPath::new(&mut rt, Rng::new(2), 1500 * crate::sim::time::NS);
         let mut h = Hist::new();
         for i in 0..2000u64 {
             let t0 = i * 200 * US;
-            h.record(to_us(p.send(t0, 4096) - t0));
+            h.record(to_us(p.send(&mut rt, t0, 4096) - t0));
         }
         // long-tailed: p99 well above the median
         assert!(h.p99() > h.p50() * 1.2, "p99 {} p50 {}", h.p99(), h.p50());
@@ -94,10 +124,12 @@ mod tests {
 
     #[test]
     fn larger_messages_take_longer() {
-        let mut a = CpuRdmaPath::new(Rng::new(3), 0);
-        let mut b = CpuRdmaPath::new(Rng::new(3), 0);
-        let t_small = a.send(0, 4096);
-        let t_big = b.send(0, 1 << 20);
+        let mut rt_a = HubRuntime::new();
+        let mut a = CpuRdmaPath::new(&mut rt_a, Rng::new(3), 0);
+        let mut rt_b = HubRuntime::new();
+        let mut b = CpuRdmaPath::new(&mut rt_b, Rng::new(3), 0);
+        let t_small = a.send(&mut rt_a, 0, 4096);
+        let t_big = b.send(&mut rt_b, 0, 1 << 20);
         assert!(t_big > t_small);
     }
 }

@@ -5,24 +5,36 @@
 //!
 //! The contrast with `hub::transport` + `hub::collective` (FPGA-Switch) is
 //! the entire point of the figure: the switch is identical in both designs;
-//! only the host transport differs.
+//! only the host transport differs. Each round leg is a descriptor on a
+//! [`HubRuntime`], with the host's NIC link a shared FIFO resource (the
+//! multicast return queues behind the send on the same port, as on the
+//! real wire).
+
+use std::cell::Cell;
+use std::rc::Rc;
 
 use crate::constants;
 use crate::net::p4::P4Switch;
-use crate::net::EthLink;
-use crate::sim::time::{us_f, Ps};
+use crate::runtime_hub::{HubRuntime, LinkId, TransferDesc};
+use crate::sim::time::{ns_f, us_f, Ps};
+use crate::sim::Sim;
 use crate::util::Rng;
 
 /// One CPU host participating in switch aggregation.
 pub struct CpuSwitchHost {
     rng: Rng,
-    pub nic_link: EthLink,
+    pub nic_link: LinkId,
     pub rounds: u64,
 }
 
 impl CpuSwitchHost {
-    pub fn new(rng: Rng) -> Self {
-        CpuSwitchHost { rng, nic_link: EthLink::new_100g(), rounds: 0 }
+    /// Register this host's NIC port on `rt`.
+    pub fn new(rt: &mut HubRuntime, rng: Rng) -> Self {
+        CpuSwitchHost {
+            rng,
+            nic_link: rt.add_link("cpu-switch-nic", constants::ETH_GBPS, ns_f(constants::ETH_HOP_NS)),
+            rounds: 0,
+        }
     }
 
     /// CPU-side cost to push one aggregation chunk into the NIC (DPDK/RDMA
@@ -41,23 +53,49 @@ impl CpuSwitchHost {
         us_f(stack + self.rng.normal_trunc(cm, cs, cm * 0.3))
     }
 
-    /// Latency of one full round for this worker: send chunk, switch
+    /// Schedule one full round for this worker: send chunk, switch
     /// aggregates (waits for stragglers — `straggler_lag` models the other
-    /// workers' arrival spread), multicast back, receive.
+    /// workers' arrival spread), multicast back, receive. `done` fires with
+    /// the completion time.
+    pub fn schedule_round(
+        &mut self,
+        rt: &mut HubRuntime,
+        now: Ps,
+        chunk_bytes: u64,
+        switch_pipeline: Ps,
+        straggler_lag: Ps,
+        done: impl FnOnce(&mut Sim, Ps) + 'static,
+    ) {
+        self.rounds += 1;
+        let tx = self.tx_stack_cost();
+        let rx = self.rx_stack_cost();
+        let desc = TransferDesc::new()
+            .delay(tx)
+            .xfer(self.nic_link, chunk_bytes)
+            .until(now + straggler_lag)
+            .delay(switch_pipeline)
+            // multicast back over the same link class
+            .xfer(self.nic_link, chunk_bytes)
+            .delay(rx);
+        rt.submit(now, desc, done);
+    }
+
+    /// Blocking convenience for single-host measurements.
     pub fn aggregation_round(
         &mut self,
+        rt: &mut HubRuntime,
         now: Ps,
         chunk_bytes: u64,
         switch: &P4Switch,
         straggler_lag: Ps,
     ) -> Ps {
-        self.rounds += 1;
-        let t = now + self.tx_stack_cost();
-        let (_, t) = { let d = self.nic_link.transmit(t, chunk_bytes); d };
-        let t = t.max(now + straggler_lag) + switch.pipeline_latency();
-        // multicast back over the same link class
-        let (_, t) = { let d = self.nic_link.transmit(t, chunk_bytes); d };
-        t + self.rx_stack_cost()
+        let out = Rc::new(Cell::new(0u64));
+        let o = out.clone();
+        self.schedule_round(rt, now, chunk_bytes, switch.pipeline_latency(), straggler_lag, move |_, t| {
+            o.set(t)
+        });
+        rt.run();
+        out.get()
     }
 }
 
@@ -70,11 +108,12 @@ mod tests {
     #[test]
     fn cpu_switch_round_is_order_of_magnitude_over_fpga() {
         let sw = P4Switch::tofino();
-        let mut host = CpuSwitchHost::new(Rng::new(1));
+        let mut rt = HubRuntime::new();
+        let mut host = CpuSwitchHost::new(&mut rt, Rng::new(1));
         let mut h = Hist::new();
         for i in 0..2000u64 {
             let t0 = i * 500 * US;
-            h.record(to_us(host.aggregation_round(t0, 1024, &sw, 0) - t0));
+            h.record(to_us(host.aggregation_round(&mut rt, t0, 1024, &sw, 0) - t0));
         }
         // the paper's Fig 8: FPGA-Switch ≈ 1.2 µs, CPU-Switch ≈ 10×
         assert!(h.mean() > 10.0, "CPU-Switch mean {}", h.mean());
@@ -84,16 +123,19 @@ mod tests {
     #[test]
     fn straggler_lag_extends_round() {
         let sw = P4Switch::tofino();
-        let mut a = CpuSwitchHost::new(Rng::new(2));
-        let mut b = CpuSwitchHost::new(Rng::new(2));
-        let fast = a.aggregation_round(0, 1024, &sw, 0);
-        let slow = b.aggregation_round(0, 1024, &sw, 500 * US);
+        let mut rt_a = HubRuntime::new();
+        let mut a = CpuSwitchHost::new(&mut rt_a, Rng::new(2));
+        let mut rt_b = HubRuntime::new();
+        let mut b = CpuSwitchHost::new(&mut rt_b, Rng::new(2));
+        let fast = a.aggregation_round(&mut rt_a, 0, 1024, &sw, 0);
+        let slow = b.aggregation_round(&mut rt_b, 0, 1024, &sw, 500 * US);
         assert!(slow >= fast + 400 * US);
     }
 
     #[test]
     fn stack_costs_are_jittery() {
-        let mut host = CpuSwitchHost::new(Rng::new(3));
+        let mut rt = HubRuntime::new();
+        let mut host = CpuSwitchHost::new(&mut rt, Rng::new(3));
         let xs: Vec<f64> = (0..200).map(|_| to_us(host.tx_stack_cost())).collect();
         let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
         let max = xs.iter().cloned().fold(0.0f64, f64::max);

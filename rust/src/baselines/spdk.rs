@@ -5,11 +5,23 @@
 //! CQ. The per-command CPU cost bounds a core's IOPS; the SSD array bounds
 //! the platform. The experiment sweeps core count and reports achieved
 //! IOPS — the paper's observation is saturation at ~5 cores.
+//!
+//! The loop is event-driven on a [`HubRuntime`]: every core is a
+//! self-rescheduling event chain (busy for one command's CPU cost, then
+//! immediately the next), and every command is a descriptor through a
+//! depth-limited NVMe ring over the shared array — whichever of (cores,
+//! array) saturates first caps throughput, exactly the Fig 9 crossover.
 
-use crate::devices::cpu::{CorePool, SwCost};
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+
+use crate::constants;
+use crate::devices::cpu::SwCost;
 use crate::nvme::queue::NvmeOp;
 use crate::nvme::ssd::SsdArray;
+use crate::runtime_hub::{submit_on, HubRuntime, HubState, NvmeId, TransferDesc};
 use crate::sim::time::Ps;
+use crate::sim::Sim;
 
 /// Outcome of a fixed-duration saturation run.
 #[derive(Clone, Copy, Debug)]
@@ -21,51 +33,82 @@ pub struct SpdkRunResult {
 
 /// The CPU-side control plane.
 pub struct SpdkControlPlane {
-    pub cores: CorePool,
+    pub cores: usize,
 }
 
 impl SpdkControlPlane {
     pub fn new(cores: usize) -> Self {
-        SpdkControlPlane { cores: CorePool::new(cores) }
+        assert!(cores > 0, "a control plane needs at least one core");
+        SpdkControlPlane { cores }
     }
 
     /// Drive `array` with `op` commands as fast as the cores allow, for
     /// `horizon` simulated time. Commands round-robin across SSDs.
-    ///
-    /// The loop is closed-form per command: a core is occupied for the
-    /// command's CPU cost, then the command enters the array. Whichever of
-    /// (cores, array) saturates first caps throughput — exactly the Fig 9
-    /// crossover structure.
-    pub fn run(&mut self, array: &mut SsdArray, op: NvmeOp, horizon: Ps) -> SpdkRunResult {
-        let cpu_cost = SwCost::spdk_cmd(matches!(op, NvmeOp::Write));
+    pub fn run(&mut self, array: SsdArray, op: NvmeOp, horizon: Ps) -> SpdkRunResult {
+        let array_cap = array.array_iops_cap(op);
         let n_ssds = array.len();
-        let mut completed = 0u64;
-        let mut i = 0usize;
-        loop {
-            // next core free to build+submit+handle one command
-            let (_, start, cpu_done) = self.cores.run(self.cores.earliest_free(), cpu_cost);
-            if start >= horizon {
-                break;
-            }
-            let done = array.process(cpu_done, i % n_ssds, op);
-            if done <= horizon {
-                completed += 1;
-            }
-            i += 1;
-            if i as u64 > 200_000_000 {
-                break; // safety valve
-            }
+        let mut rt = HubRuntime::new();
+        let arr = rt.add_array(array);
+        let queues: Vec<NvmeId> = (0..n_ssds)
+            .map(|i| rt.add_nvme_queue(arr, i, constants::SSD_QUEUE_DEPTH, 0, 0))
+            .collect();
+        let cpu_cost = SwCost::spdk_cmd(matches!(op, NvmeOp::Write));
+
+        let next_cmd = Rc::new(Cell::new(0u64));
+        let completed = Rc::new(Cell::new(0u64));
+        let hub = rt.state();
+        for _core in 0..self.cores {
+            let hub2 = hub.clone();
+            let nc = next_cmd.clone();
+            let cp = completed.clone();
+            let qs = queues.clone();
+            rt.sim
+                .at(0, move |s| core_loop(hub2, s, nc, cp, qs, op, cpu_cost, horizon));
         }
+        rt.run();
+
+        let completed = completed.get();
         let secs = crate::sim::time::to_s(horizon);
-        let achieved = completed as f64 / secs;
-        let core_capacity =
-            self.cores.cores() as f64 / crate::sim::time::to_s(cpu_cost);
+        let core_capacity = self.cores as f64 / crate::sim::time::to_s(cpu_cost);
         SpdkRunResult {
             completed,
-            achieved_iops: achieved,
-            cpu_bound: core_capacity < array.array_iops_cap(op),
+            achieved_iops: completed as f64 / secs,
+            cpu_bound: core_capacity < array_cap,
         }
     }
+}
+
+/// One core's polled loop: occupy [now, now+cpu_cost) building/submitting a
+/// command, hand the I/O descriptor to the ring, immediately start the next
+/// command when the core frees.
+#[allow(clippy::too_many_arguments)]
+fn core_loop(
+    hub: Rc<RefCell<HubState>>,
+    sim: &mut Sim,
+    next_cmd: Rc<Cell<u64>>,
+    completed: Rc<Cell<u64>>,
+    queues: Vec<NvmeId>,
+    op: NvmeOp,
+    cpu_cost: Ps,
+    horizon: Ps,
+) {
+    let start = sim.now();
+    if start >= horizon {
+        return;
+    }
+    let cpu_done = start + cpu_cost;
+    let i = next_cmd.get();
+    next_cmd.set(i + 1);
+    let q = queues[(i as usize) % queues.len()];
+    let cp = completed.clone();
+    submit_on(&hub, sim, cpu_done, TransferDesc::new().nvme(q, op), move |_, done| {
+        if done <= horizon {
+            cp.set(cp.get() + 1);
+        }
+    });
+    sim.at(cpu_done, move |s| {
+        core_loop(hub, s, next_cmd, completed, queues, op, cpu_cost, horizon)
+    });
 }
 
 #[cfg(test)]
@@ -77,9 +120,11 @@ mod tests {
 
     fn run_with(cores: usize, op: NvmeOp) -> SpdkRunResult {
         let mut rng = Rng::new(42);
-        let mut array = SsdArray::new(10, &mut rng);
+        let array = SsdArray::new(10, &mut rng);
         let mut cp = SpdkControlPlane::new(cores);
-        cp.run(&mut array, op, S / 10)
+        // 50 ms of simulated load is plenty to find the knee and keeps the
+        // event count test-friendly
+        cp.run(array, op, S / 20)
     }
 
     #[test]

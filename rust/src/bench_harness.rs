@@ -1,10 +1,16 @@
 //! Self-contained benchmark harness (`criterion` is unavailable offline —
 //! DESIGN.md §6): warmup + timed iterations, mean/p50/p99 wallclock
 //! reporting, consistent output format across all `rust/benches/*`.
+//!
+//! For event-driven workloads, [`bench_sim`] additionally reports
+//! simulated-time metrics: events processed per iteration, engine
+//! throughput (events/s of wallclock), and the simulated-time/wall-time
+//! ratio — the §Perf numbers for the `HubRuntime` hot path.
 
 use std::time::Instant;
 
 use crate::metrics::Hist;
+use crate::sim::time::Ps;
 
 /// Timing result of one benchmark case.
 pub struct BenchResult {
@@ -46,6 +52,83 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     r
 }
 
+/// What one iteration of an event-driven case reports back: how many
+/// engine events it executed and how much simulated time elapsed.
+/// `runtime_hub::RunStats` converts into this directly.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimMetrics {
+    pub events: u64,
+    pub sim_ps: Ps,
+}
+
+impl From<crate::runtime_hub::RunStats> for SimMetrics {
+    fn from(s: crate::runtime_hub::RunStats) -> Self {
+        SimMetrics { events: s.events, sim_ps: s.sim_elapsed }
+    }
+}
+
+/// Timing + engine-counter result of one event-driven benchmark case.
+pub struct SimBenchResult {
+    pub wall: BenchResult,
+    /// mean events executed per iteration
+    pub events_per_iter: f64,
+    /// engine throughput: events per wallclock second
+    pub events_per_sec: f64,
+    /// simulated seconds per wallclock second (>1 = faster than real time)
+    pub sim_wall_ratio: f64,
+}
+
+impl SimBenchResult {
+    pub fn print(&self) {
+        self.wall.print();
+        println!(
+            "      {:<44} events/iter={:<11.0} events/s={:>12.0} sim/wall={:>8.1}x",
+            self.wall.name, self.events_per_iter, self.events_per_sec, self.sim_wall_ratio
+        );
+    }
+}
+
+/// Like [`bench`], for closures that drive a simulator run and return its
+/// [`SimMetrics`]. Reports wallclock *and* engine-side throughput.
+pub fn bench_sim<F: FnMut() -> SimMetrics>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> SimBenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut h = Hist::new();
+    let mut events_total = 0u64;
+    let mut sim_total: f64 = 0.0;
+    let mut wall_total: f64 = 0.0;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let m = f();
+        let wall = t0.elapsed().as_secs_f64();
+        h.record(wall * 1e3);
+        wall_total += wall;
+        events_total += m.events;
+        sim_total += crate::sim::time::to_s(m.sim_ps);
+    }
+    let wall = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: h.mean(),
+        p50_ms: h.p50(),
+        p99_ms: h.p99(),
+    };
+    let r = SimBenchResult {
+        wall,
+        events_per_iter: events_total as f64 / iters.max(1) as f64,
+        events_per_sec: if wall_total > 0.0 { events_total as f64 / wall_total } else { 0.0 },
+        sim_wall_ratio: if wall_total > 0.0 { sim_total / wall_total } else { 0.0 },
+    };
+    r.print();
+    r
+}
+
 /// Standard banner so `cargo bench` output groups cleanly per figure.
 pub fn banner(title: &str) {
     println!("\n=== {title} ===");
@@ -54,6 +137,8 @@ pub fn banner(title: &str) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime_hub::{HubRuntime, TransferDesc};
+    use crate::sim::time::US;
 
     #[test]
     fn bench_reports_sane_stats() {
@@ -66,5 +151,21 @@ mod tests {
         assert_eq!(r.iters, 20);
         assert!(r.mean_ms >= 0.0);
         assert!(r.p99_ms >= r.p50_ms);
+    }
+
+    #[test]
+    fn bench_sim_reports_engine_counters() {
+        let r = bench_sim("sim-case", 1, 5, || {
+            let mut rt = HubRuntime::new();
+            let link = rt.add_link("l", 100.0, 0);
+            for i in 0..10u64 {
+                rt.submit(i * US, TransferDesc::new().xfer(link, 12_500), |_, _| {});
+            }
+            rt.run().into()
+        });
+        assert_eq!(r.wall.iters, 5);
+        assert!(r.events_per_iter >= 20.0, "{}", r.events_per_iter);
+        assert!(r.events_per_sec > 0.0);
+        assert!(r.sim_wall_ratio > 0.0);
     }
 }

@@ -43,12 +43,19 @@ impl TomlValue {
 }
 
 /// Parse errors carry the line number.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("config parse error at line {line}: {msg}")]
+#[derive(Debug, PartialEq)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// A parsed document: section -> key -> value. Top-level keys live under
 /// the "" section.
@@ -90,9 +97,9 @@ impl TomlDoc {
         Ok(doc)
     }
 
-    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+    pub fn load(path: &std::path::Path) -> crate::anyhow::Result<Self> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+            .map_err(|e| crate::anyhow::anyhow!("reading {}: {e}", path.display()))?;
         Ok(Self::parse(&text)?)
     }
 

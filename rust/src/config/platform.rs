@@ -5,6 +5,7 @@
 
 use std::path::{Path, PathBuf};
 
+use crate::anyhow;
 use crate::config::parse::TomlDoc;
 use crate::constants;
 use crate::devices::fpga::FpgaBoard;

@@ -8,11 +8,11 @@
 //! via the roofline, gradient movement via the FPGA transport + switch
 //! path. Python never runs; all math flows through PJRT.
 
-use anyhow::{Context, Result};
-
-use crate::apps::allreduce::FpgaSwitchAllreduce;
+use crate::anyhow::{Context, Result};
 use crate::constants;
 use crate::devices::gpu::Gpu;
+use crate::hub::collective::CollectiveEngine;
+use crate::hub::transport::FpgaTransport;
 use crate::net::p4::P4Switch;
 use crate::runtime::{exec, Runtime};
 use crate::sim::time::{to_us, Ps};
@@ -88,7 +88,8 @@ pub struct TrainDriver {
     rt: Runtime,
     params: Params,
     data: Vec<DataGen>,
-    allreduce: FpgaSwitchAllreduce,
+    transport_latency: Ps,
+    switch_latency: Ps,
     gpu: Gpu,
     pub logs: Vec<TrainStepLog>,
     sim_now: Ps,
@@ -122,14 +123,17 @@ impl TrainDriver {
             .collect();
         let mut switch = P4Switch::tofino();
         let slots = 4096; // switch-side chunking for the timing model
-        let allreduce = FpgaSwitchAllreduce::new(
+        // validate the aggregation program fits the switch (SRAM/stage
+        // limits) even though the timing below only needs the latencies
+        let _engine = CollectiveEngine::new(
             &mut switch,
             cfg.workers as u32,
             slots,
-            Rng::new(cfg.seed ^ 0x5117),
-            2.0,
+            crate::util::fixed::DEFAULT_SHIFT,
         )
         .context("installing aggregation program")?;
+        let transport_latency = FpgaTransport::new(1, 256).pipeline_latency();
+        let switch_latency = switch.pipeline_latency();
         // pre-compile the three artifacts the loop uses
         rt.ensure_compiled("grad_loss")?;
         rt.ensure_compiled("apply_update")?;
@@ -140,7 +144,8 @@ impl TrainDriver {
             rt,
             params,
             data,
-            allreduce,
+            transport_latency,
+            switch_latency,
             gpu: Gpu::h100(),
             logs: Vec::new(),
             sim_now: 0,
@@ -208,9 +213,7 @@ impl TrainDriver {
         };
         let grad_bytes = (flat_len * 4) as u64;
         let wire = self.gpu.ring_allreduce_time(grad_bytes, w as u32, constants::ETH_GBPS);
-        let transport = self.allreduce.transports[0].pipeline_latency();
-        let switch_lat = self.allreduce.switch_pipeline;
-        let allreduce_time = wire + transport * 2 + switch_lat;
+        let allreduce_time = wire + self.transport_latency * 2 + self.switch_latency;
         let step_time = compute + allreduce_time;
         self.sim_now += step_time;
 

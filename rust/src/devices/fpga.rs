@@ -85,14 +85,25 @@ impl FpgaBoard {
 }
 
 /// Over-budget error: the component that did not fit and what was left.
-#[derive(Debug, thiserror::Error)]
-#[error("component '{component}' does not fit {board:?}: needs {needed:?}, free {free:?}")]
+#[derive(Debug)]
 pub struct PlacementError {
     pub component: String,
     pub board: FpgaBoard,
     pub needed: ResourceUsage,
     pub free: ResourceUsage,
 }
+
+impl std::fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "component '{}' does not fit {:?}: needs {:?}, free {:?}",
+            self.component, self.board, self.needed, self.free
+        )
+    }
+}
+
+impl std::error::Error for PlacementError {}
 
 /// The fabric: a board, a clock, and the placed components.
 #[derive(Debug)]

@@ -61,13 +61,20 @@ pub struct MemBank {
 }
 
 /// Out-of-capacity error.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
-#[error("{tier:?} exhausted: asked {asked} B, free {free} B")]
+#[derive(Debug, PartialEq, Eq)]
 pub struct OutOfMemory {
     pub tier: MemTier,
     pub asked: u64,
     pub free: u64,
 }
+
+impl std::fmt::Display for OutOfMemory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?} exhausted: asked {} B, free {} B", self.tier, self.asked, self.free)
+    }
+}
+
+impl std::error::Error for OutOfMemory {}
 
 impl MemBank {
     pub fn new(tier: MemTier) -> Self {

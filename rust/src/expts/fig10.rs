@@ -5,8 +5,7 @@
 //! Pallas compression kernel* via PJRT when artifacts are available,
 //! falling back to the calibrated default otherwise.
 
-use anyhow::Result;
-
+use crate::anyhow::Result;
 use crate::apps::block_storage::HubMiddleTier;
 use crate::baselines::cpu_pipeline::{CpuOnlyMiddleTier, MiddleTierConfig};
 use crate::config::ExperimentConfig;

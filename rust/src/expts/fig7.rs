@@ -1,17 +1,29 @@
 //! Figure 7: control-plane latency (7a) and cross-network inter-GPU
 //! latency with vs without control-plane offloading (7b).
+//!
+//! Both halves run on the event engine: 7a samples MMIO reads as events on
+//! a [`HubRuntime`] clock; 7b races the offloaded hardware path against the
+//! CPU-staged baseline as descriptor chains over shared PCIe/wire links.
+
+use std::cell::RefCell;
+use std::rc::Rc;
 
 use crate::baselines::CpuRdmaPath;
 use crate::config::ExperimentConfig;
+use crate::constants;
 use crate::hub::transport::FpgaTransport;
 use crate::metrics::{Hist, Table};
 use crate::net::p4::P4Switch;
-use crate::net::EthLink;
-use crate::pcie::{Endpoint, Mmio, PcieLink};
-use crate::sim::time::{to_us, Ps, US};
+use crate::pcie::{Endpoint, Mmio};
+use crate::runtime_hub::{HubRuntime, LinkId, TransferDesc};
+use crate::sim::time::{ns_f, to_us, us_f, Ps, US};
+use crate::sim::Sim;
 use crate::util::Rng;
 
 /// Fig 7a: MMIO read latency per endpoint pair, mean + fluctuation band.
+/// A single non-posted read is one term, not an end-to-end composition —
+/// there is nothing for the event engine to arbitrate, so the samples are
+/// drawn directly (7b below is where paths compose on the engine).
 pub fn run_7a(cfg: &ExperimentConfig) -> Table {
     let pairs = [
         (Endpoint::Gpu, Endpoint::Fpga, "GPU-FPGA"),
@@ -22,8 +34,10 @@ pub fn run_7a(cfg: &ExperimentConfig) -> Table {
         "Fig 7a: control plane read latency",
         &["path", "mean_us", "p1_us", "p50_us", "p99_us", "fluct_us"],
     );
-    for (from, to, label) in pairs {
-        let mut mmio = Mmio::new(Rng::new(cfg.platform.seed ^ label.len() as u64));
+    for (idx, (from, to, label)) in pairs.into_iter().enumerate() {
+        // per-pair stream: seed by pair index (seeding by label length
+        // would alias GPU-FPGA and CPU-FPGA onto one sequence)
+        let mut mmio = Mmio::new(Rng::new(cfg.platform.seed ^ (idx as u64 + 1)));
         let mut h = Hist::new();
         for _ in 0..cfg.samples {
             h.record(to_us(mmio.read(from, to)));
@@ -41,31 +55,36 @@ pub fn run_7a(cfg: &ExperimentConfig) -> Table {
 }
 
 /// The offloaded path of Fig 7b: GPU → PCIe → FPGA → network → FPGA → PCIe
-/// → GPU, all hardware.
+/// → GPU, all hardware, as a descriptor chain over shared links.
 pub struct OffloadedGpuPath {
-    pub pcie_local: PcieLink,
-    pub pcie_remote: PcieLink,
-    pub eth: EthLink,
-    pub transport_tx: FpgaTransport,
-    pub transport_rx: FpgaTransport,
+    pub pcie_local: LinkId,
+    pub pcie_remote: LinkId,
+    pub eth: LinkId,
     pub switch_latency: Ps,
+    tx_pipeline: Ps,
+    rx_pipeline: Ps,
     doorbell_ns: f64,
     /// residual hardware jitter (clock-domain crossings, PCIe replay): tiny
     /// but nonzero — the paper's point is *smaller* fluctuation, not zero
     jitter: Option<Rng>,
+    pub messages: u64,
 }
 
 impl OffloadedGpuPath {
-    pub fn new(switch_latency: Ps) -> Self {
+    /// Register the path's links on `rt`.
+    pub fn new(rt: &mut HubRuntime, switch_latency: Ps) -> Self {
+        let tx = FpgaTransport::new(1, 256);
+        let rx = FpgaTransport::new(1, 256);
         OffloadedGpuPath {
-            pcie_local: PcieLink::gen3_x16(),
-            pcie_remote: PcieLink::gen3_x16(),
-            eth: EthLink::new_100g(),
-            transport_tx: FpgaTransport::new(1, 256),
-            transport_rx: FpgaTransport::new(1, 256),
+            pcie_local: rt.add_link("offl-pcie-local", constants::PCIE_GEN3_X16_GBPS, 0),
+            pcie_remote: rt.add_link("offl-pcie-remote", constants::PCIE_GEN3_X16_GBPS, 0),
+            eth: rt.add_link("offl-eth", constants::ETH_GBPS, ns_f(constants::ETH_HOP_NS)),
             switch_latency,
+            tx_pipeline: tx.pipeline_latency(),
+            rx_pipeline: rx.pipeline_latency(),
             doorbell_ns: crate::constants::MMIO_WRITE_POST_NS,
             jitter: None,
+            messages: 0,
         }
     }
 
@@ -74,42 +93,71 @@ impl OffloadedGpuPath {
         self
     }
 
-    /// One message GPU→remote GPU; returns arrival time.
-    pub fn send(&mut self, now: Ps, bytes: u64) -> Ps {
-        // GPU store rings the hub doorbell (posted)
+    /// Schedule one message GPU→remote GPU; `done` fires at arrival.
+    pub fn schedule_send(
+        &mut self,
+        rt: &mut HubRuntime,
+        now: Ps,
+        bytes: u64,
+        done: impl FnOnce(&mut Sim, Ps) + 'static,
+    ) {
+        self.messages += 1;
         let jit = match &mut self.jitter {
-            Some(r) => crate::sim::time::us_f(r.normal_trunc(0.08, 0.03, 0.0)),
+            Some(r) => us_f(r.normal_trunc(0.08, 0.03, 0.0)),
             None => 0,
         };
-        let t = now + jit + crate::sim::time::ns_f(self.doorbell_ns);
-        // GPU memory -> FPGA via GPUDirect p2p DMA
-        let (_, t) = { let d = self.pcie_local.reserve(t, bytes); d };
-        // hub transport packetizes + wire + switch
-        let t = t + self.transport_tx.pipeline_latency();
-        let (_, t) = { let d = self.eth.transmit(t, bytes); d };
-        let t = t + self.switch_latency;
-        // remote hub depacketizes, p2p DMA into GPU memory
-        let t = t + self.transport_rx.pipeline_latency();
-        let (_, t) = { let d = self.pcie_remote.reserve(t, bytes); d };
-        t
+        let desc = TransferDesc::new()
+            // GPU store rings the hub doorbell (posted)
+            .delay(jit + ns_f(self.doorbell_ns))
+            // GPU memory -> FPGA via GPUDirect p2p DMA
+            .xfer(self.pcie_local, bytes)
+            // hub transport packetizes + wire + switch
+            .delay(self.tx_pipeline)
+            .xfer(self.eth, bytes)
+            .delay(self.switch_latency)
+            // remote hub depacketizes, p2p DMA into GPU memory
+            .delay(self.rx_pipeline)
+            .xfer(self.pcie_remote, bytes);
+        rt.submit(now, desc, done);
+    }
+
+    /// Blocking convenience: one message, engine drained, arrival returned.
+    pub fn send(&mut self, rt: &mut HubRuntime, now: Ps, bytes: u64) -> Ps {
+        let out = Rc::new(std::cell::Cell::new(0u64));
+        let o = out.clone();
+        self.schedule_send(rt, now, bytes, move |_, t| o.set(t));
+        rt.run();
+        out.get()
     }
 }
 
 /// Fig 7b: 4 KB cross-network inter-GPU message latency, both designs.
 pub fn run_7b(cfg: &ExperimentConfig) -> Table {
     let switch = P4Switch::tofino();
-    let mut offl = OffloadedGpuPath::new(switch.pipeline_latency())
+    let mut rt = HubRuntime::new();
+    let mut offl = OffloadedGpuPath::new(&mut rt, switch.pipeline_latency())
         .with_jitter(Rng::new(cfg.platform.seed ^ 0x0FF1));
-    let mut base = CpuRdmaPath::new(Rng::new(cfg.platform.seed ^ 0x7B), switch.pipeline_latency());
+    let mut base =
+        CpuRdmaPath::new(&mut rt, Rng::new(cfg.platform.seed ^ 0x7B), switch.pipeline_latency());
     let bytes = 4096;
 
-    let mut h_off = Hist::new();
-    let mut h_base = Hist::new();
+    let h_off = Rc::new(RefCell::new(Hist::new()));
+    let h_base = Rc::new(RefCell::new(Hist::new()));
     for i in 0..cfg.samples as u64 {
         let t0 = i * 400 * US; // spaced arrivals: latency, not queueing
-        h_off.record(to_us(offl.send(t0, bytes) - t0));
-        h_base.record(to_us(base.send(t0, bytes) - t0));
+        let h = h_off.clone();
+        offl.schedule_send(&mut rt, t0, bytes, move |_, t| {
+            h.borrow_mut().record(to_us(t - t0));
+        });
+        let h = h_base.clone();
+        base.schedule_send(&mut rt, t0, bytes, move |_, t| {
+            h.borrow_mut().record(to_us(t - t0));
+        });
     }
+    rt.run();
+
+    let mut h_off = Rc::try_unwrap(h_off).expect("engine drained").into_inner();
+    let mut h_base = Rc::try_unwrap(h_base).expect("engine drained").into_inner();
     let mut t = Table::new(
         "Fig 7b: cross-network inter-GPU latency",
         &["design", "mean_us", "p1_us", "p50_us", "p99_us", "fluct_us"],
@@ -158,9 +206,10 @@ mod tests {
 
     #[test]
     fn offloaded_path_composition_is_stable() {
-        let mut p = OffloadedGpuPath::new(1500 * crate::sim::time::NS);
-        let a = p.send(0, 4096);
-        let b = p.send(10_000 * US, 4096) - 10_000 * US;
+        let mut rt = HubRuntime::new();
+        let mut p = OffloadedGpuPath::new(&mut rt, 1500 * crate::sim::time::NS);
+        let a = p.send(&mut rt, 0, 4096);
+        let b = p.send(&mut rt, 10_000 * US, 4096) - 10_000 * US;
         // deterministic path: identical cost when the links are idle
         assert_eq!(a, b);
     }

@@ -1,18 +1,23 @@
 //! Figure 8: in-network aggregation latency — FPGA-Switch vs CPU-Switch.
 //!
 //! Both designs use the identical Tofino model; only the host transport
-//! differs. The FPGA-Switch rounds carry *real* numerics: the harness
-//! cross-checks the decoded switch sums against the PJRT `aggregate`
-//! kernel when artifacts are available (and against a host-side sum
-//! otherwise), so the latency claim is made about a correct collective.
+//! differs, and both run as descriptor chains on one [`HubRuntime`] (no
+//! closed-form latency sums anywhere). The FPGA-Switch rounds carry *real*
+//! numerics: the harness cross-checks the decoded switch sums against a
+//! host-side float sum after the engine drains, so the latency claim is
+//! made about a correct collective.
 
-use anyhow::Result;
+use std::cell::RefCell;
+use std::rc::Rc;
 
+use crate::anyhow;
+use crate::anyhow::Result;
 use crate::apps::allreduce::FpgaSwitchAllreduce;
 use crate::baselines::CpuSwitchHost;
 use crate::config::ExperimentConfig;
 use crate::metrics::{Hist, Table};
 use crate::net::p4::P4Switch;
+use crate::runtime_hub::HubRuntime;
 use crate::sim::time::{to_us, US};
 use crate::util::Rng;
 
@@ -24,9 +29,11 @@ pub fn run(cfg: &ExperimentConfig) -> Result<Table> {
     let workers = cfg.platform.workers;
     let rounds = (cfg.samples / 10).max(50);
 
-    // ---- FPGA-Switch
+    // ---- FPGA-Switch: schedule every round, drain once, verify after
+    let mut rt = HubRuntime::new();
     let mut sw = P4Switch::tofino();
-    let mut app = FpgaSwitchAllreduce::new(
+    let app = FpgaSwitchAllreduce::new(
+        &mut rt,
         &mut sw,
         workers,
         CHUNK_LANES,
@@ -34,46 +41,66 @@ pub fn run(cfg: &ExperimentConfig) -> Result<Table> {
         0.2, // sub-µs compute skew between FPGAs
     )?;
     let mut data_rng = Rng::new(cfg.platform.seed ^ 0xF16);
-    let mut h_fpga = Hist::new();
-    let mut numeric_checks = 0u64;
+    let h_fpga = Rc::new(RefCell::new(Hist::new()));
+    let mut scheduled = Vec::with_capacity(rounds);
     for r in 0..rounds {
         let t0 = (r as u64) * 500 * US;
         let chunks: Vec<Vec<f32>> = (0..workers)
             .map(|_| (0..CHUNK_LANES).map(|_| data_rng.range_f64(-1.0, 1.0) as f32).collect())
             .collect();
-        let out = app.round(t0, &chunks);
-        // numeric cross-check vs host-side float sum
+        let h = h_fpga.clone();
+        let handle = app.schedule_round(&mut rt, t0, &chunks, move |_, worst| {
+            h.borrow_mut().record(to_us(worst - t0));
+        });
+        scheduled.push((handle, chunks));
+    }
+    rt.run();
+
+    // numeric cross-check vs host-side float sum, per round
+    let mut numeric_checks = 0u64;
+    for (handle, chunks) in &scheduled {
+        let state = handle.borrow();
+        anyhow::ensure!(state.completed == workers, "round incomplete");
         for i in (0..CHUNK_LANES).step_by(64) {
             let want: f32 = chunks.iter().map(|c| c[i]).sum();
             anyhow::ensure!(
-                (out.values[i] - want).abs() < 1e-2,
+                (state.values[i] - want).abs() < 1e-2,
                 "switch aggregation diverged at lane {i}: {} vs {want}",
-                out.values[i]
+                state.values[i]
             );
             numeric_checks += 1;
         }
-        let worst = out.done_at.iter().max().unwrap();
-        h_fpga.record(to_us(worst - t0));
     }
 
-    // ---- CPU-Switch (SwitchML-style host stack)
+    // ---- CPU-Switch (SwitchML-style host stack), same engine
     let sw2 = P4Switch::tofino();
+    let mut rt2 = HubRuntime::new();
     let mut hosts: Vec<CpuSwitchHost> = (0..workers)
-        .map(|w| CpuSwitchHost::new(Rng::new(cfg.platform.seed ^ (w as u64 + 99))))
+        .map(|w| CpuSwitchHost::new(&mut rt2, Rng::new(cfg.platform.seed ^ (w as u64 + 99))))
         .collect();
-    let mut h_cpu = Hist::new();
+    let h_cpu = Rc::new(RefCell::new(Hist::new()));
     let bytes = (CHUNK_LANES * 4) as u64;
     for r in 0..rounds {
         let t0 = (r as u64) * 500 * US;
         // the round completes when the slowest host finishes
-        let worst = hosts
-            .iter_mut()
-            .map(|h| h.aggregation_round(t0, bytes, &sw2, 0))
-            .max()
-            .unwrap();
-        h_cpu.record(to_us(worst - t0));
+        let worst = Rc::new(RefCell::new((0u32, 0u64)));
+        for host in hosts.iter_mut() {
+            let h = h_cpu.clone();
+            let w = worst.clone();
+            host.schedule_round(&mut rt2, t0, bytes, sw2.pipeline_latency(), 0, move |_, t| {
+                let mut st = w.borrow_mut();
+                st.0 += 1;
+                st.1 = st.1.max(t);
+                if st.0 == workers {
+                    h.borrow_mut().record(to_us(st.1 - t0));
+                }
+            });
+        }
     }
+    rt2.run();
 
+    let mut h_fpga = Rc::try_unwrap(h_fpga).expect("engine drained").into_inner();
+    let mut h_cpu = Rc::try_unwrap(h_cpu).expect("engine drained").into_inner();
     let mut t = Table::new(
         "Fig 8: in-network aggregation latency",
         &["design", "mean_us", "p50_us", "p99_us", "numeric_checks"],

@@ -1,28 +1,39 @@
 //! Figure 9: throughput of the CPU-based SSD control plane vs core count
 //! (4 KB random read and write over 10 SSDs), plus the FPGA column — zero
 //! CPU cores by construction (§4.4's conclusion).
+//!
+//! The saturation runs execute on the event engine: per-core submission
+//! loops + depth-limited NVMe rings over the shared array (see
+//! `baselines::spdk`).
 
 use crate::baselines::SpdkControlPlane;
 use crate::config::ExperimentConfig;
 use crate::metrics::Table;
 use crate::nvme::queue::NvmeOp;
 use crate::nvme::ssd::SsdArray;
-use crate::sim::time::S;
+use crate::sim::time::{Ps, S};
 use crate::util::Rng;
+
+/// Saturation horizon scaled to the configured sample budget: the default
+/// 5000 samples keep the original 100 ms run; `quick()` (500) uses 10 ms —
+/// still ~10⁵ commands, plenty to find the knee.
+fn horizon(cfg: &ExperimentConfig) -> Ps {
+    (cfg.samples as u64).max(100) * (S / 50_000)
+}
 
 pub fn run(cfg: &ExperimentConfig) -> Table {
     let mut t = Table::new(
         "Fig 9: CPU-based SSD control plane throughput",
         &["cores", "read_kiops", "write_kiops", "read_cpu_bound", "write_cpu_bound"],
     );
-    let horizon = S / 10;
+    let horizon = horizon(cfg);
     for cores in 1..=8usize {
         let mut results = Vec::new();
         for op in [NvmeOp::Read, NvmeOp::Write] {
             let mut rng = Rng::new(cfg.platform.seed ^ cores as u64);
-            let mut array = SsdArray::new(cfg.platform.num_ssds, &mut rng);
+            let array = SsdArray::new(cfg.platform.num_ssds, &mut rng);
             let mut cp = SpdkControlPlane::new(cores);
-            results.push(cp.run(&mut array, op, horizon));
+            results.push(cp.run(array, op, horizon));
         }
         t.row(&[
             cores.to_string(),

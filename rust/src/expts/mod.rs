@@ -9,6 +9,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod table1;
 
+use crate::anyhow;
 use crate::config::ExperimentConfig;
 use crate::metrics::{write_csv, Table};
 

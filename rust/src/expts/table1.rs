@@ -1,14 +1,29 @@
 //! Table 1: FPGA resource usage of the SSD control logic on an Alveo U50,
 //! plus the headroom rows §4.4's conclusion gestures at.
+//!
+//! The "used" rows come from a [`HubRuntime`] whose NVMe topology matches
+//! the testbed (one SQ/CQ controlling unit per attached SSD + the shared
+//! engine): resource accounting is driven by the runtime's actual
+//! configuration, not a hand-maintained list.
 
-use anyhow::Result;
-
+use crate::anyhow::Result;
 use crate::config::ExperimentConfig;
-use crate::hub::resources::{place_full_hub, table1_fabric};
+use crate::hub::resources::place_full_hub;
 use crate::metrics::Table;
+use crate::nvme::ssd::SsdArray;
+use crate::runtime_hub::HubRuntime;
+use crate::util::Rng;
 
 pub fn run(cfg: &ExperimentConfig) -> Result<Table> {
-    let fabric = table1_fabric(cfg.platform.num_ssds)?;
+    // stand up the SSD control plane the way the experiments run it, then
+    // let the runtime place its own footprint
+    let mut rt = HubRuntime::new();
+    let mut rng = Rng::new(cfg.platform.seed);
+    let arr = rt.add_array(SsdArray::new(cfg.platform.num_ssds, &mut rng));
+    for ssd in 0..cfg.platform.num_ssds {
+        rt.add_nvme_queue(arr, ssd, 64, 0, 0);
+    }
+    let fabric = rt.fabric(crate::devices::fpga::FpgaBoard::AlveoU50)?;
     let u = fabric.used();
     let (lut_pct, ff_pct, bram_pct, uram_pct) = fabric.utilization_pct();
 

@@ -33,13 +33,24 @@ pub struct DescriptorTable {
 }
 
 /// Errors a misprogrammed table surfaces.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum DescriptorError {
-    #[error("descriptor table full ({0} entries)")]
     Full(usize),
-    #[error("no descriptor installed for flow {0}")]
     UnknownFlow(u64),
 }
+
+impl std::fmt::Display for DescriptorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DescriptorError::Full(n) => write!(f, "descriptor table full ({n} entries)"),
+            DescriptorError::UnknownFlow(flow) => {
+                write!(f, "no descriptor installed for flow {flow}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DescriptorError {}
 
 impl DescriptorTable {
     pub fn new(capacity: usize) -> Self {

@@ -8,20 +8,26 @@
 //! * **Substrates** — a deterministic discrete-event simulator ([`sim`]) and
 //!   calibrated device models: PCIe fabric ([`pcie`]), Ethernet + P4 switch
 //!   ([`net`]), NVMe SSDs ([`nvme`]), CPU/GPU/FPGA ([`devices`]).
-//! * **FpgaHub core** ([`hub`]) — the paper's contribution: NIC-initiated
-//!   user logic, descriptor-driven split/assemble, an FPGA-resident reliable
-//!   transport, the on-FPGA NVMe control plane, offloaded collectives, and
-//!   FPGA resource accounting.
+//! * **FpgaHub core** ([`hub`] + [`runtime_hub`]) — the paper's
+//!   contribution: NIC-initiated user logic, descriptor-driven
+//!   split/assemble, an FPGA-resident reliable transport, the on-FPGA NVMe
+//!   control plane, offloaded collectives, FPGA resource accounting — and
+//!   the [`runtime_hub::HubRuntime`] that executes descriptor-driven
+//!   transfers as events on [`sim::Sim`], so concurrent workloads contend
+//!   for the hub's shared links, DMA engines, and NVMe queues.
 //! * **Evaluation** — baselines ([`baselines`]), applications ([`apps`]),
 //!   experiment harnesses ([`expts`]) reproducing every figure/table of §4,
-//!   and a PJRT [`runtime`] that executes the AOT-lowered JAX/Pallas
-//!   artifacts so real numerics flow through the simulated platform.
+//!   and a PJRT [`runtime`] (behind the `pjrt` feature; deterministic stub
+//!   otherwise) that executes the AOT-lowered JAX/Pallas artifacts so real
+//!   numerics flow through the simulated platform.
 
+pub mod anyhow;
 pub mod apps;
 pub mod baselines;
 pub mod bench_harness;
 pub mod config;
 pub mod constants;
+#[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod devices;
 pub mod expts;
@@ -31,5 +37,6 @@ pub mod net;
 pub mod nvme;
 pub mod pcie;
 pub mod runtime;
+pub mod runtime_hub;
 pub mod sim;
 pub mod util;

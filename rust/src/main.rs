@@ -4,19 +4,21 @@
 //!   fpgahub list                       list experiments
 //!   fpgahub expt <name> [--config F] [--samples N] [--no-csv]
 //!   fpgahub all [--config F]           run every experiment
-//!   fpgahub train [--steps N] [--workers W] [--config F]
+//!   fpgahub train [--steps N] [--workers W] [--config F]   (pjrt feature)
 //!   fpgahub fetch-demo [--requests N]  NIC-initiated storage fetch demo
+//!   fpgahub multi-tenant               shared-hub contention scenario
 //!   fpgahub info                       platform + artifact status
 
+use fpgahub::anyhow;
 use fpgahub::config::ExperimentConfig;
+#[cfg(feature = "pjrt")]
 use fpgahub::coordinator::{TrainConfig, TrainDriver};
 use fpgahub::expts;
 use fpgahub::runtime::Runtime;
-use fpgahub::sim::time::to_us;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: fpgahub <list|expt NAME|all|train|fetch-demo|info> [options]\n\
+        "usage: fpgahub <list|expt NAME|all|train|fetch-demo|multi-tenant|info> [options]\n\
          options: --config FILE --samples N --steps N --workers N --requests N --no-csv"
     );
     std::process::exit(2);
@@ -111,27 +113,48 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "train" => {
-            let rt = Runtime::new(&cfg.platform.artifacts_dir)?;
-            let tc = TrainConfig {
-                workers: cfg.platform.workers as usize,
-                steps: cfg.train_steps,
-                ..Default::default()
-            };
-            let mut driver = TrainDriver::new(rt, tc)?;
-            driver.run()?;
-            println!(
-                "loss: {:.4} -> {:.4} over {} steps ({:.1}ms simulated)",
-                driver.first_loss(),
-                driver.last_loss(),
-                cfg.train_steps,
-                to_us(driver.logs.last().unwrap().sim_time) / 1000.0
-            );
+            #[cfg(feature = "pjrt")]
+            {
+                let rt = Runtime::new(&cfg.platform.artifacts_dir)?;
+                let tc = TrainConfig {
+                    workers: cfg.platform.workers as usize,
+                    steps: cfg.train_steps,
+                    ..Default::default()
+                };
+                let mut driver = TrainDriver::new(rt, tc)?;
+                driver.run()?;
+                println!(
+                    "loss: {:.4} -> {:.4} over {} steps ({:.1}ms simulated)",
+                    driver.first_loss(),
+                    driver.last_loss(),
+                    cfg.train_steps,
+                    fpgahub::sim::time::to_us(driver.logs.last().unwrap().sim_time) / 1000.0
+                );
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                anyhow::bail!(
+                    "the train subcommand needs the `pjrt` feature (see DESIGN.md §6)"
+                );
+            }
         }
         "fetch-demo" => {
             let n = a.requests.unwrap_or(2000);
             let mut r = fpgahub::apps::run_fetch_demo(n, cfg.platform.num_ssds, cfg.platform.seed);
             println!("NIC-initiated: {}", r.nic_initiated.summary("µs"));
             println!("CPU-staged:    {}", r.cpu_staged.summary("µs"));
+        }
+        "multi-tenant" => {
+            let mut mt = fpgahub::apps::MultiTenantConfig {
+                seed: cfg.platform.seed,
+                workers: cfg.platform.workers,
+                ..Default::default()
+            };
+            if let Some(n) = a.requests {
+                mt.fetches = n;
+            }
+            let report = fpgahub::apps::run_multi_tenant(&mt);
+            println!("{}", report.render());
         }
         "info" => {
             println!("platform: {:?}", cfg.platform);

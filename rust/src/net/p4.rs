@@ -45,15 +45,30 @@ pub struct P4Program {
 }
 
 /// Validation errors mirror the paper's three limitations.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum P4Error {
-    #[error("program '{0}' needs {1} dependent stages but the pipeline has {2}")]
     TooManyStages(String, u32, u32),
-    #[error("program '{0}' uses unsupported ALU op {1:?}")]
     UnsupportedOp(String, AluOp),
-    #[error("program '{0}' needs {1} B SRAM but only {2} B available")]
     SramExceeded(String, u64, u64),
 }
+
+impl std::fmt::Display for P4Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            P4Error::TooManyStages(name, need, have) => {
+                write!(f, "program '{name}' needs {need} dependent stages but the pipeline has {have}")
+            }
+            P4Error::UnsupportedOp(name, op) => {
+                write!(f, "program '{name}' uses unsupported ALU op {op:?}")
+            }
+            P4Error::SramExceeded(name, need, avail) => {
+                write!(f, "program '{name}' needs {need} B SRAM but only {avail} B available")
+            }
+        }
+    }
+}
+
+impl std::error::Error for P4Error {}
 
 /// The switch itself.
 #[derive(Debug)]

@@ -50,9 +50,16 @@ pub struct QueuePair {
 }
 
 /// Ring-full error — the submitter must back off (backpressure).
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
-#[error("submission queue full (depth {0})")]
+#[derive(Debug, PartialEq, Eq)]
 pub struct SqFull(pub usize);
+
+impl std::fmt::Display for SqFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "submission queue full (depth {})", self.0)
+    }
+}
+
+impl std::error::Error for SqFull {}
 
 impl QueuePair {
     pub fn new(location: QueueLocation, depth: usize) -> Self {

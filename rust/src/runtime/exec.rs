@@ -1,12 +1,13 @@
 //! Typed literal helpers: rust slices ⇄ xla literals.
 
-use anyhow::{anyhow, Result};
+use crate::anyhow::{anyhow, bail, Result};
 
-/// f32 slice -> literal of the given shape.
-pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+/// Shared shape-check + build + reshape path for every element type (the
+/// f32/i32 wrappers below are one-liners over this).
+fn literal_from<T: xla::NativeType>(data: &[T], dims: &[usize]) -> Result<xla::Literal> {
     let expected: usize = dims.iter().product();
     if data.len() != expected {
-        anyhow::bail!("shape {dims:?} wants {expected} elements, got {}", data.len());
+        bail!("shape {dims:?} wants {expected} elements, got {}", data.len());
     }
     if dims.len() <= 1 {
         return Ok(xla::Literal::vec1(data));
@@ -17,19 +18,14 @@ pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
         .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
 }
 
+/// f32 slice -> literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    literal_from(data, dims)
+}
+
 /// i32 slice -> literal of the given shape.
 pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
-    let expected: usize = dims.iter().product();
-    if data.len() != expected {
-        anyhow::bail!("shape {dims:?} wants {expected} elements, got {}", data.len());
-    }
-    if dims.len() <= 1 {
-        return Ok(xla::Literal::vec1(data));
-    }
-    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(data)
-        .reshape(&dims_i64)
-        .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+    literal_from(data, dims)
 }
 
 /// Scalar f32 literal.

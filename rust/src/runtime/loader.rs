@@ -7,7 +7,7 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::json::JsonValue;
 

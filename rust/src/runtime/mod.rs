@@ -1,9 +1,28 @@
 //! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
 //! once by `make artifacts`) and executes them on the CPU PJRT client.
 //! Python never runs here — the HLO text is the only interchange.
+//!
+//! The real implementation needs the `xla` crate and a libxla_extension
+//! install, neither of which exists in the offline build image, so it is
+//! gated behind the `pjrt` cargo feature (DESIGN.md §6). With default
+//! features the module is a **deterministic stub**: the same public surface
+//! (`Runtime`, `ArtifactIndex`, `exec::*`, `Literal`), literal helpers that
+//! really work on host vectors, and a `Runtime::new` that always reports
+//! artifacts as unavailable — every harness then falls back to calibrated
+//! constants, bit-reproducibly.
 
+#[cfg(feature = "pjrt")]
 pub mod exec;
+#[cfg(feature = "pjrt")]
 pub mod loader;
 
+#[cfg(feature = "pjrt")]
 pub use exec::{literal_f32, literal_i32, to_f32, to_i32};
+#[cfg(feature = "pjrt")]
 pub use loader::{ArtifactIndex, ArtifactMeta, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{exec, ArtifactIndex, ArtifactMeta, Literal, Runtime};

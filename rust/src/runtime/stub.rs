@@ -1,0 +1,164 @@
+//! Deterministic stand-in for the PJRT runtime (default features).
+//!
+//! The literal helpers are real (flat host vectors with shape checking, so
+//! unit tests exercise the same call sites either way); executing an
+//! artifact is the one thing that cannot be stubbed honestly, so
+//! [`Runtime::new`] deterministically fails and callers take their
+//! documented no-artifacts fallback path (see `expts::fig10` for the
+//! pattern).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::anyhow::{bail, Result};
+
+/// Host-side literal: a shaped, row-major flat vector.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Literal {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+/// Metadata mirror of the real loader's per-artifact record.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub num_inputs: usize,
+}
+
+/// Metadata mirror of the real loader's parsed `index.json`.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactIndex {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+}
+
+/// Mirrors the handful of `PjRtClient` calls the CLI makes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StubClient;
+
+impl StubClient {
+    pub fn device_count(&self) -> usize {
+        0
+    }
+}
+
+/// The stub registry. Construction always fails (deterministically), so no
+/// instance ever exists at runtime — but the type checks everywhere the
+/// real one is used.
+pub struct Runtime {
+    pub client: StubClient,
+    pub index: ArtifactIndex,
+    pub executions: u64,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        bail!(
+            "PJRT runtime unavailable: built without the `pjrt` feature \
+             (artifacts dir {}; see DESIGN.md §6)",
+            artifacts_dir.display()
+        );
+    }
+
+    pub fn run(&mut self, name: &str, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        bail!("cannot execute artifact '{name}': built without the `pjrt` feature");
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        0
+    }
+}
+
+/// Typed literal helpers with the same shape-checking contract as the real
+/// `runtime::exec` (one generic checker, per-dtype wrappers).
+pub mod exec {
+    use super::Literal;
+    use crate::anyhow::{anyhow, bail, Result};
+
+    /// Shared shape check: `data_len` must equal the product of `dims`.
+    fn check_shape(data_len: usize, dims: &[usize]) -> Result<()> {
+        let expected: usize = dims.iter().product();
+        if data_len != expected {
+            bail!("shape {dims:?} wants {expected} elements, got {data_len}");
+        }
+        Ok(())
+    }
+
+    /// f32 slice -> literal of the given shape.
+    pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+        check_shape(data.len(), dims)?;
+        Ok(Literal::F32(data.to_vec(), dims.to_vec()))
+    }
+
+    /// i32 slice -> literal of the given shape.
+    pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+        check_shape(data.len(), dims)?;
+        Ok(Literal::I32(data.to_vec(), dims.to_vec()))
+    }
+
+    /// Scalar f32 literal.
+    pub fn scalar_f32(v: f32) -> Literal {
+        Literal::F32(vec![v], vec![])
+    }
+
+    /// Literal -> Vec<f32> (any shape, row-major).
+    pub fn to_f32(lit: &Literal) -> Result<Vec<f32>> {
+        match lit {
+            Literal::F32(v, _) => Ok(v.clone()),
+            Literal::I32(..) => Err(anyhow!("literal is i32, wanted f32")),
+        }
+    }
+
+    /// Literal -> Vec<i32>.
+    pub fn to_i32(lit: &Literal) -> Result<Vec<i32>> {
+        match lit {
+            Literal::I32(v, _) => Ok(v.clone()),
+            Literal::F32(..) => Err(anyhow!("literal is f32, wanted i32")),
+        }
+    }
+
+    /// Scalar f32 out of a literal.
+    pub fn to_scalar_f32(lit: &Literal) -> Result<f32> {
+        let v = to_f32(lit)?;
+        v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::exec::*;
+    use super::*;
+
+    #[test]
+    fn runtime_construction_fails_deterministically() {
+        let a = Runtime::new(Path::new("artifacts")).unwrap_err().to_string();
+        let b = Runtime::new(Path::new("artifacts")).unwrap_err().to_string();
+        assert_eq!(a, b);
+        assert!(a.contains("pjrt"));
+    }
+
+    #[test]
+    fn literal_roundtrips() {
+        let data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let lit = literal_f32(&data, &[3, 4]).unwrap();
+        assert_eq!(to_f32(&lit).unwrap(), data);
+        let ints = vec![1i32, -2, 3];
+        let lit = literal_i32(&ints, &[3]).unwrap();
+        assert_eq!(to_i32(&lit).unwrap(), ints);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_i32(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip_and_dtype_errors() {
+        assert_eq!(to_scalar_f32(&scalar_f32(2.5)).unwrap(), 2.5);
+        let i = literal_i32(&[1], &[1]).unwrap();
+        assert!(to_f32(&i).is_err());
+    }
+}

@@ -1,0 +1,789 @@
+//! `HubRuntime` — the event-driven data plane.
+//!
+//! Every workload in the evaluation tier executes as *descriptor-driven
+//! transfers* on the discrete-event engine ([`crate::sim::Sim`]): a
+//! [`TransferDesc`] is a chain of [`Stage`]s (fixed pipeline delays, shared
+//! FIFO links, CPU core pools, depth-limited NVMe queues, barriers), and the
+//! runtime advances each descriptor one stage per event. Shared resources
+//! ([`sched`]) are *stateful*: N in-flight descriptors on the same link
+//! serialize behind each other, NVMe rings backpressure at their queue
+//! depth, and — the point of the whole layer — descriptors from *different
+//! workloads* contend for the same hub interfaces, which closed-form
+//! per-app latency arithmetic can never show (cf. ISSUE 1; Jiang et al.
+//! 2023 on shared-interface contention).
+//!
+//! Determinism: single-threaded, seeded RNGs, FIFO tie-breaking in the
+//! event queue — two identical schedules produce bit-identical completion
+//! logs.
+
+pub mod sched;
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::devices::cpu::CorePool;
+use crate::devices::fpga::{FpgaBoard, FpgaFabric, PlacementError};
+use crate::hub::resources::hub_component_cost;
+use crate::metrics::Hist;
+use crate::nvme::queue::NvmeOp;
+use crate::nvme::ssd::SsdArray;
+use crate::sim::time::Ps;
+use crate::sim::Sim;
+
+pub use sched::{dispatch_io, Barrier, FifoLink, NvmeQueue};
+
+/// Handle to a registered [`FifoLink`].
+pub type LinkId = usize;
+/// Handle to a registered [`CorePool`].
+pub type PoolId = usize;
+/// Handle to a registered [`SsdArray`].
+pub type ArrayId = usize;
+/// Handle to a registered [`NvmeQueue`].
+pub type NvmeId = usize;
+/// Handle to a registered [`Barrier`].
+pub type BarrierId = usize;
+
+/// One step of a descriptor's journey through the hub.
+#[derive(Clone, Copy, Debug)]
+pub enum Stage {
+    /// fixed latency (pipeline traversal, pre-sampled software jitter)
+    Delay(Ps),
+    /// wait until an absolute simulated time (straggler lag, release gates)
+    Until(Ps),
+    /// occupy a shared FIFO link for `bytes` (serialization + post latency)
+    Xfer { link: LinkId, bytes: u64 },
+    /// occupy the earliest-free core of a pool for `work`
+    Core { pool: PoolId, work: Ps },
+    /// submit to a depth-limited NVMe ring; continues at completion capture
+    Nvme { q: NvmeId, op: NvmeOp },
+    /// rendezvous with the other participants of a barrier
+    Barrier(BarrierId),
+}
+
+/// A descriptor: an ordered stage list plus an app-defined label.
+#[derive(Clone, Debug, Default)]
+pub struct TransferDesc {
+    pub label: u64,
+    stages: Vec<Stage>,
+}
+
+impl TransferDesc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_label(label: u64) -> Self {
+        TransferDesc { label, stages: Vec::new() }
+    }
+
+    pub fn delay(mut self, ps: Ps) -> Self {
+        self.stages.push(Stage::Delay(ps));
+        self
+    }
+
+    pub fn until(mut self, at: Ps) -> Self {
+        self.stages.push(Stage::Until(at));
+        self
+    }
+
+    pub fn xfer(mut self, link: LinkId, bytes: u64) -> Self {
+        self.stages.push(Stage::Xfer { link, bytes });
+        self
+    }
+
+    pub fn on_core(mut self, pool: PoolId, work: Ps) -> Self {
+        self.stages.push(Stage::Core { pool, work });
+        self
+    }
+
+    pub fn nvme(mut self, q: NvmeId, op: NvmeOp) -> Self {
+        self.stages.push(Stage::Nvme { q, op });
+        self
+    }
+
+    pub fn barrier(mut self, b: BarrierId) -> Self {
+        self.stages.push(Stage::Barrier(b));
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+}
+
+/// A finished descriptor, as logged by the runtime.
+#[derive(Clone, Copy, Debug)]
+pub struct Completion {
+    pub label: u64,
+    pub submitted_at: Ps,
+    pub done_at: Ps,
+}
+
+/// Boxed completion callback: what every descriptor runs when it finishes.
+pub type DoneFn = Box<dyn FnOnce(&mut Sim, Ps)>;
+
+/// A descriptor in flight: remaining stages + completion callback.
+struct Continuation {
+    stages: std::vec::IntoIter<Stage>,
+    done: DoneFn,
+    label: u64,
+    t0: Ps,
+}
+
+struct NvmePending {
+    op: NvmeOp,
+    cont: Continuation,
+}
+
+/// All shared-resource state, behind one `Rc<RefCell<_>>` cell so event
+/// closures can reach it.
+pub struct HubState {
+    pub links: Vec<FifoLink>,
+    pub pools: Vec<CorePool>,
+    pub arrays: Vec<SsdArray>,
+    pub nvme: Vec<NvmeQueue>,
+    nvme_pending: Vec<VecDeque<NvmePending>>,
+    barriers: Vec<Barrier>,
+    barrier_waiters: Vec<Vec<Continuation>>,
+    pub completions: Vec<Completion>,
+    pub submitted: u64,
+    pub completed: u64,
+}
+
+impl HubState {
+    fn new() -> Self {
+        HubState {
+            links: Vec::new(),
+            pools: Vec::new(),
+            arrays: Vec::new(),
+            nvme: Vec::new(),
+            nvme_pending: Vec::new(),
+            barriers: Vec::new(),
+            barrier_waiters: Vec::new(),
+            completions: Vec::new(),
+            submitted: 0,
+            completed: 0,
+        }
+    }
+}
+
+/// Counters from one `run()` (drain-the-queue) call.
+#[derive(Clone, Copy, Debug)]
+pub struct RunStats {
+    /// events executed during this run
+    pub events: u64,
+    /// simulated time that elapsed during this run
+    pub sim_elapsed: Ps,
+    /// absolute simulated time after the run
+    pub sim_now: Ps,
+}
+
+/// The event-driven hub: a [`Sim`] plus the shared-resource state.
+pub struct HubRuntime {
+    pub sim: Sim,
+    state: Rc<RefCell<HubState>>,
+}
+
+impl Default for HubRuntime {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HubRuntime {
+    pub fn new() -> Self {
+        HubRuntime { sim: Sim::new(), state: Rc::new(RefCell::new(HubState::new())) }
+    }
+
+    /// Clone of the shared state cell, for app closures that submit
+    /// follow-up descriptors from completion callbacks.
+    pub fn state(&self) -> Rc<RefCell<HubState>> {
+        self.state.clone()
+    }
+
+    pub fn add_link(&mut self, name: &'static str, gbps: f64, post_ps: Ps) -> LinkId {
+        let mut st = self.state.borrow_mut();
+        st.links.push(FifoLink::new(name, gbps, post_ps));
+        st.links.len() - 1
+    }
+
+    pub fn add_pool(&mut self, cores: usize) -> PoolId {
+        let mut st = self.state.borrow_mut();
+        st.pools.push(CorePool::new(cores));
+        st.pools.len() - 1
+    }
+
+    pub fn add_array(&mut self, array: SsdArray) -> ArrayId {
+        let mut st = self.state.borrow_mut();
+        st.arrays.push(array);
+        st.arrays.len() - 1
+    }
+
+    pub fn add_nvme_queue(
+        &mut self,
+        array: ArrayId,
+        ssd: usize,
+        depth: usize,
+        submit_ps: Ps,
+        complete_ps: Ps,
+    ) -> NvmeId {
+        let mut st = self.state.borrow_mut();
+        assert!(array < st.arrays.len(), "unknown array {array}");
+        assert!(ssd < st.arrays[array].len(), "array {array} has no SSD {ssd}");
+        st.nvme.push(NvmeQueue::new(array, ssd, depth, submit_ps, complete_ps));
+        st.nvme_pending.push(VecDeque::new());
+        st.nvme.len() - 1
+    }
+
+    pub fn add_barrier(&mut self, need: usize) -> BarrierId {
+        let mut st = self.state.borrow_mut();
+        st.barriers.push(Barrier::new(need));
+        st.barrier_waiters.push(Vec::new());
+        st.barriers.len() - 1
+    }
+
+    /// Submit a descriptor at absolute time `at`; `done` fires when the
+    /// last stage completes.
+    pub fn submit(
+        &mut self,
+        at: Ps,
+        desc: TransferDesc,
+        done: impl FnOnce(&mut Sim, Ps) + 'static,
+    ) {
+        submit_on(&self.state, &mut self.sim, at, desc, done);
+    }
+
+    /// Submit two descriptors at `at` and call `done` when *both* have
+    /// completed, with the later completion time.
+    pub fn join2(
+        &mut self,
+        at: Ps,
+        a: TransferDesc,
+        b: TransferDesc,
+        done: impl FnOnce(&mut Sim, Ps) + 'static,
+    ) {
+        join2_on(&self.state, &mut self.sim, at, a, b, done);
+    }
+
+    /// Drain the event queue; returns counters for this run.
+    pub fn run(&mut self) -> RunStats {
+        let events_before = self.sim.events_processed();
+        let now_before = self.sim.now();
+        self.sim.run();
+        RunStats {
+            events: self.sim.events_processed() - events_before,
+            sim_elapsed: self.sim.now() - now_before,
+            sim_now: self.sim.now(),
+        }
+    }
+
+    pub fn now(&self) -> Ps {
+        self.sim.now()
+    }
+
+    /// Read-only access to the shared state (stats, assertions).
+    pub fn with_state<R>(&self, f: impl FnOnce(&HubState) -> R) -> R {
+        f(&self.state.borrow())
+    }
+
+    /// Bytes moved so far on a link.
+    pub fn link_bytes_moved(&self, link: LinkId) -> u64 {
+        self.state.borrow().links[link].bytes_moved
+    }
+
+    /// Place the fabric footprint of this runtime's *hub-side* resources on
+    /// `board`: the shared SSD-control engine plus one SQ/CQ controlling
+    /// unit per registered NVMe ring (Table 1's accounting, driven by the
+    /// actual runtime topology).
+    pub fn fabric(&self, board: FpgaBoard) -> Result<FpgaFabric, PlacementError> {
+        let st = self.state.borrow();
+        let mut fabric = FpgaFabric::new(board);
+        if !st.nvme.is_empty() {
+            fabric.place("ssd_shared_engine", hub_component_cost("ssd_shared_engine"))?;
+            for (i, _) in st.nvme.iter().enumerate() {
+                fabric
+                    .place(&format!("ssd_control_unit[{i}]"), hub_component_cost("ssd_control_unit"))?;
+            }
+        }
+        Ok(fabric)
+    }
+}
+
+/// Submit a descriptor from inside an event closure (which has `&mut Sim`
+/// and a clone of the state cell, but not the `HubRuntime`).
+pub fn submit_on(
+    state: &Rc<RefCell<HubState>>,
+    sim: &mut Sim,
+    at: Ps,
+    desc: TransferDesc,
+    done: impl FnOnce(&mut Sim, Ps) + 'static,
+) {
+    state.borrow_mut().submitted += 1;
+    let label = desc.label;
+    let st = state.clone();
+    sim.at(at, move |s| {
+        let cont = Continuation {
+            stages: desc.stages.into_iter(),
+            done: Box::new(done),
+            label,
+            t0: s.now(),
+        };
+        advance(st, s, cont);
+    });
+}
+
+/// [`HubRuntime::join2`], callable from event closures.
+pub fn join2_on(
+    state: &Rc<RefCell<HubState>>,
+    sim: &mut Sim,
+    at: Ps,
+    a: TransferDesc,
+    b: TransferDesc,
+    done: impl FnOnce(&mut Sim, Ps) + 'static,
+) {
+    let remaining = Rc::new(Cell::new(2u32));
+    let latest = Rc::new(Cell::new(0u64));
+    let done: Rc<RefCell<Option<DoneFn>>> = Rc::new(RefCell::new(Some(Box::new(done))));
+    for desc in [a, b] {
+        let (rem, lat, dn) = (remaining.clone(), latest.clone(), done.clone());
+        submit_on(state, sim, at, desc, move |s, t| {
+            lat.set(lat.get().max(t));
+            rem.set(rem.get() - 1);
+            if rem.get() == 0 {
+                if let Some(f) = dn.borrow_mut().take() {
+                    f(s, lat.get());
+                }
+            }
+        });
+    }
+}
+
+/// Drive a Poisson arrival process without materializing the whole
+/// schedule up front: each arrival event spawns the workload for its
+/// arrival time and schedules the next arrival — O(outstanding) memory
+/// instead of O(total arrivals), with the exact RNG draw order of a
+/// closed-form `t += exp(gap)` loop.
+pub fn poisson_arrivals(
+    state: &Rc<RefCell<HubState>>,
+    sim: &mut Sim,
+    rng: crate::util::Rng,
+    mean_gap_us: f64,
+    horizon: Ps,
+    spawn: impl FnMut(&Rc<RefCell<HubState>>, &mut Sim, Ps) + 'static,
+) {
+    next_arrival(state.clone(), sim, rng, mean_gap_us, horizon, spawn, 0);
+}
+
+fn next_arrival<F: FnMut(&Rc<RefCell<HubState>>, &mut Sim, Ps) + 'static>(
+    st: Rc<RefCell<HubState>>,
+    sim: &mut Sim,
+    mut rng: crate::util::Rng,
+    mean_gap_us: f64,
+    horizon: Ps,
+    mut spawn: F,
+    t_prev: Ps,
+) {
+    let t = t_prev + crate::sim::time::us_f(rng.exponential(mean_gap_us));
+    if t >= horizon {
+        return;
+    }
+    sim.at(t, move |s| {
+        spawn(&st, s, t);
+        next_arrival(st, s, rng, mean_gap_us, horizon, spawn, t);
+    });
+}
+
+/// Outcome of a [`run_closed_loop`] experiment: completion-latency samples
+/// and the number of messages that finished inside the horizon.
+pub struct ClosedLoopResult {
+    pub lat: Hist,
+    pub processed: u64,
+}
+
+/// Closed-loop protocol shared by the middle-tier experiments: Poisson
+/// arrivals at `mean_gap_us` until `horizon`; for each arrival, `per_msg`
+/// schedules that message's descriptors and passes the provided recorder
+/// as their completion callback. The recorder applies the common
+/// accounting (count + record latency only when the message finishes
+/// inside the horizon), so baseline and hub variants provably share it.
+pub fn run_closed_loop(
+    rt: &mut HubRuntime,
+    rng: crate::util::Rng,
+    mean_gap_us: f64,
+    horizon: Ps,
+    per_msg: impl FnMut(&Rc<RefCell<HubState>>, &mut Sim, Ps, DoneFn) + 'static,
+) -> ClosedLoopResult {
+    let lat = Rc::new(RefCell::new(Hist::new()));
+    let processed = Rc::new(Cell::new(0u64));
+    let (l, p) = (lat.clone(), processed.clone());
+    let mut per_msg = per_msg;
+    poisson_arrivals(
+        &rt.state(),
+        &mut rt.sim,
+        rng,
+        mean_gap_us,
+        horizon,
+        move |st, sim, t_arrive| {
+            let (l2, p2) = (l.clone(), p.clone());
+            let record: DoneFn = Box::new(move |_s: &mut Sim, done: Ps| {
+                if done <= horizon {
+                    p2.set(p2.get() + 1);
+                    l2.borrow_mut().record(crate::sim::time::to_us(done - t_arrive));
+                }
+            });
+            per_msg(st, sim, t_arrive, record);
+        },
+    );
+    rt.run();
+    ClosedLoopResult {
+        lat: Rc::try_unwrap(lat).expect("engine drained").into_inner(),
+        processed: processed.get(),
+    }
+}
+
+/// Execute the next stage of a descriptor; every transition is an event on
+/// the shared clock, so competing descriptors interleave in time order.
+fn advance(st: Rc<RefCell<HubState>>, sim: &mut Sim, mut c: Continuation) {
+    let now = sim.now();
+    match c.stages.next() {
+        None => {
+            {
+                let mut state = st.borrow_mut();
+                state.completed += 1;
+                let entry =
+                    Completion { label: c.label, submitted_at: c.t0, done_at: now };
+                state.completions.push(entry);
+            }
+            (c.done)(sim, now);
+        }
+        Some(Stage::Delay(d)) => {
+            sim.after(d, move |s| advance(st, s, c));
+        }
+        Some(Stage::Until(at)) => {
+            sim.at(at, move |s| advance(st, s, c));
+        }
+        Some(Stage::Xfer { link, bytes }) => {
+            let (_, delivered) = st.borrow_mut().links[link].reserve(now, bytes);
+            sim.at(delivered, move |s| advance(st, s, c));
+        }
+        Some(Stage::Core { pool, work }) => {
+            let (_, _, end) = st.borrow_mut().pools[pool].run(now, work);
+            sim.at(end, move |s| advance(st, s, c));
+        }
+        Some(Stage::Nvme { q, op }) => {
+            let dispatched = {
+                let mut guard = st.borrow_mut();
+                let state = &mut *guard;
+                if state.nvme[q].has_slot() {
+                    Some(dispatch_io(&mut state.nvme[q], &mut state.arrays, now, op))
+                } else {
+                    None
+                }
+            };
+            match dispatched {
+                Some(visible_at) => {
+                    let st2 = st.clone();
+                    sim.at(visible_at, move |s| {
+                        on_nvme_complete(&st2, s, q);
+                        advance(st2, s, c);
+                    });
+                }
+                // ring full: park until a completion rings the doorbell
+                None => st.borrow_mut().nvme_pending[q].push_back(NvmePending { op, cont: c }),
+            }
+        }
+        Some(Stage::Barrier(b)) => {
+            let release = st.borrow_mut().barriers[b].arrive();
+            if release {
+                let waiters = std::mem::take(&mut st.borrow_mut().barrier_waiters[b]);
+                for w in waiters {
+                    let st2 = st.clone();
+                    sim.at(now, move |s| advance(st2, s, w));
+                }
+                let st2 = st.clone();
+                sim.at(now, move |s| advance(st2, s, c));
+            } else {
+                st.borrow_mut().barrier_waiters[b].push(c);
+            }
+        }
+    }
+}
+
+/// One NVMe completion was captured: free the slot and, doorbell-style,
+/// dispatch the head-of-line parked descriptor if any.
+fn on_nvme_complete(st: &Rc<RefCell<HubState>>, sim: &mut Sim, q: NvmeId) {
+    let now = sim.now();
+    let next = {
+        let mut guard = st.borrow_mut();
+        let state = &mut *guard;
+        state.nvme[q].complete_one();
+        if state.nvme[q].has_slot() {
+            if let Some(p) = state.nvme_pending[q].pop_front() {
+                let visible_at = dispatch_io(&mut state.nvme[q], &mut state.arrays, now, p.op);
+                Some((visible_at, p.cont))
+            } else {
+                None
+            }
+        } else {
+            None
+        }
+    };
+    if let Some((visible_at, cont)) = next {
+        let st2 = st.clone();
+        sim.at(visible_at, move |s| {
+            on_nvme_complete(&st2, s, q);
+            advance(st2, s, cont);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::{NS, US};
+    use crate::util::Rng;
+
+    fn collect_order() -> (Rc<RefCell<Vec<(u64, Ps)>>>, impl Fn(u64) -> DoneFn) {
+        let order: Rc<RefCell<Vec<(u64, Ps)>>> = Rc::new(RefCell::new(Vec::new()));
+        let o2 = order.clone();
+        let make = move |label: u64| -> DoneFn {
+            let o = o2.clone();
+            Box::new(move |_s: &mut Sim, t: Ps| o.borrow_mut().push((label, t)))
+        };
+        (order, make)
+    }
+
+    #[test]
+    fn same_time_descriptors_fifo_on_one_link() {
+        let mut rt = HubRuntime::new();
+        let link = rt.add_link("eth", 100.0, 0);
+        let (order, make) = collect_order();
+        for i in 0..5u64 {
+            let done = make(i);
+            rt.submit(0, TransferDesc::with_label(i).xfer(link, 12_500), move |s, t| {
+                done(s, t)
+            });
+        }
+        rt.run();
+        let got = order.borrow().clone();
+        // FIFO: completion order == submission order, 1 µs apart
+        for (i, &(label, t)) in got.iter().enumerate() {
+            assert_eq!(label, i as u64);
+            assert_eq!(t, (i as u64 + 1) * US);
+        }
+        assert_eq!(rt.link_bytes_moved(link), 5 * 12_500);
+    }
+
+    #[test]
+    fn cross_descriptor_contention_is_observable() {
+        // a lone 1 µs transfer vs the same transfer behind a 10 µs elephant
+        let mut rt = HubRuntime::new();
+        let link = rt.add_link("eth", 100.0, 0);
+        let alone = Rc::new(Cell::new(0u64));
+        let a = alone.clone();
+        rt.submit(0, TransferDesc::new().xfer(link, 12_500), move |_, t| a.set(t));
+        rt.run();
+
+        let mut rt2 = HubRuntime::new();
+        let link2 = rt2.add_link("eth", 100.0, 0);
+        rt2.submit(0, TransferDesc::new().xfer(link2, 125_000), |_, _| {});
+        let contended = Rc::new(Cell::new(0u64));
+        let c = contended.clone();
+        rt2.submit(0, TransferDesc::new().xfer(link2, 12_500), move |_, t| c.set(t));
+        rt2.run();
+
+        assert_eq!(alone.get(), US);
+        assert_eq!(contended.get(), 11 * US, "must queue behind the elephant");
+    }
+
+    #[test]
+    fn nvme_depth_limits_and_doorbell_dispatch() {
+        let mut rt = HubRuntime::new();
+        let mut rng = Rng::new(3);
+        let arr = rt.add_array(SsdArray::new(1, &mut rng));
+        let q = rt.add_nvme_queue(arr, 0, 2, 0, 0);
+        let done_times: Rc<RefCell<Vec<Ps>>> = Rc::new(RefCell::new(Vec::new()));
+        for _ in 0..6 {
+            let d = done_times.clone();
+            rt.submit(0, TransferDesc::new().nvme(q, NvmeOp::Read), move |s, _| {
+                d.borrow_mut().push(s.now())
+            });
+        }
+        rt.run();
+        let times = done_times.borrow();
+        assert_eq!(times.len(), 6, "parked descriptors must eventually run");
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+        rt.with_state(|st| {
+            assert_eq!(st.nvme[q].submitted, 6);
+            assert_eq!(st.nvme[q].completed, 6);
+            assert_eq!(st.nvme[q].outstanding, 0);
+        });
+        // with depth 2, the 6 reads can never finish in one service window
+        assert!(times[5] > times[0]);
+    }
+
+    #[test]
+    fn barrier_rendezvous_then_fanout() {
+        let mut rt = HubRuntime::new();
+        let b = rt.add_barrier(3);
+        let (order, make) = collect_order();
+        for (i, at) in [(0u64, 10 * NS), (1, 30 * NS), (2, 20 * NS)] {
+            let done = make(i);
+            rt.submit(at, TransferDesc::with_label(i).barrier(b), move |s, t| done(s, t));
+        }
+        rt.run();
+        let got = order.borrow().clone();
+        assert_eq!(got.len(), 3);
+        // everyone released at the last arrival time
+        assert!(got.iter().all(|&(_, t)| t == 30 * NS), "{got:?}");
+    }
+
+    #[test]
+    fn core_pool_stage_matches_pool_semantics() {
+        let mut rt = HubRuntime::new();
+        let pool = rt.add_pool(2);
+        let (order, make) = collect_order();
+        for i in 0..3u64 {
+            let done = make(i);
+            rt.submit(0, TransferDesc::with_label(i).on_core(pool, 10 * US), move |s, t| {
+                done(s, t)
+            });
+        }
+        rt.run();
+        let got = order.borrow().clone();
+        // two cores: jobs 0 and 1 at 10 µs, job 2 queued to 20 µs
+        assert_eq!(got[0].1, 10 * US);
+        assert_eq!(got[1].1, 10 * US);
+        assert_eq!(got[2].1, 20 * US);
+    }
+
+    #[test]
+    fn join2_fires_at_the_later_completion() {
+        let mut rt = HubRuntime::new();
+        let joined = Rc::new(Cell::new(0u64));
+        let j = joined.clone();
+        rt.join2(
+            0,
+            TransferDesc::new().delay(5 * US),
+            TransferDesc::new().delay(2 * US),
+            move |_, t| j.set(t),
+        );
+        rt.run();
+        assert_eq!(joined.get(), 5 * US);
+    }
+
+    #[test]
+    fn until_stage_clamps_to_now() {
+        let mut rt = HubRuntime::new();
+        let done = Rc::new(Cell::new(0u64));
+        let d = done.clone();
+        rt.submit(
+            0,
+            TransferDesc::new().delay(10 * US).until(3 * US),
+            move |_, t| d.set(t),
+        );
+        rt.run();
+        assert_eq!(done.get(), 10 * US, "an already-passed gate costs nothing");
+    }
+
+    #[test]
+    fn completion_log_is_monotone_and_counts_match() {
+        let mut rt = HubRuntime::new();
+        let link = rt.add_link("eth", 100.0, 0);
+        for i in 0..20u64 {
+            rt.submit(
+                i * 100 * NS,
+                TransferDesc::with_label(i).xfer(link, 1000 + i * 100),
+                |_, _| {},
+            );
+        }
+        let stats = rt.run();
+        assert!(stats.events > 0);
+        rt.with_state(|st| {
+            assert_eq!(st.submitted, 20);
+            assert_eq!(st.completed, 20);
+            assert_eq!(st.completions.len(), 20);
+            assert!(st.completions.windows(2).all(|w| w[0].done_at <= w[1].done_at));
+            for comp in &st.completions {
+                assert!(comp.done_at >= comp.submitted_at);
+            }
+        });
+    }
+
+    #[test]
+    fn identical_schedules_are_bit_identical() {
+        let build = || {
+            let mut rt = HubRuntime::new();
+            let link = rt.add_link("eth", 100.0, 120 * NS);
+            let pool = rt.add_pool(2);
+            for i in 0..10u64 {
+                rt.submit(
+                    i * 777 * NS,
+                    TransferDesc::with_label(i)
+                        .delay(50 * NS)
+                        .xfer(link, 4096)
+                        .on_core(pool, 3 * US),
+                    |_, _| {},
+                );
+            }
+            rt.run();
+            rt.with_state(|st| {
+                st.completions.iter().map(|cp| (cp.label, cp.done_at)).collect::<Vec<_>>()
+            })
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn poisson_arrivals_match_a_closed_form_loop() {
+        // the chained arrival process must reproduce the exact arrival
+        // times a closed-form `t += exp(gap)` loop would generate
+        let horizon = 2_000 * US;
+        let mut expect = Vec::new();
+        let mut rng = Rng::new(11);
+        let mut t = 0u64;
+        loop {
+            t += crate::sim::time::us_f(rng.exponential(37.0));
+            if t >= horizon {
+                break;
+            }
+            expect.push(t);
+        }
+        let mut rt = HubRuntime::new();
+        let got: Rc<RefCell<Vec<Ps>>> = Rc::new(RefCell::new(Vec::new()));
+        let g = got.clone();
+        poisson_arrivals(
+            &rt.state(),
+            &mut rt.sim,
+            Rng::new(11),
+            37.0,
+            horizon,
+            move |_, _, at| g.borrow_mut().push(at),
+        );
+        rt.run();
+        assert!(!expect.is_empty());
+        assert_eq!(*got.borrow(), expect);
+    }
+
+    #[test]
+    fn fabric_accounting_tracks_nvme_topology() {
+        let mut rt = HubRuntime::new();
+        let mut rng = Rng::new(7);
+        let arr = rt.add_array(SsdArray::new(10, &mut rng));
+        for ssd in 0..10 {
+            rt.add_nvme_queue(arr, ssd, 64, 0, 0);
+        }
+        let fabric = rt.fabric(FpgaBoard::AlveoU50).unwrap();
+        let used = fabric.used();
+        // Table 1: shared engine + 10 SQ/CQ units
+        assert_eq!(used.lut, 45_000);
+        assert_eq!(used.ff, 109_000);
+        assert_eq!(used.bram, 164);
+        assert_eq!(used.uram, 2);
+    }
+}

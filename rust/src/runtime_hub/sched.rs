@@ -1,0 +1,245 @@
+//! Stateful shared resources with FIFO/arbitrated queuing — the scheduling
+//! substrate under [`super::HubRuntime`].
+//!
+//! Three resource classes cover the hub's shared interfaces:
+//!
+//! * [`FifoLink`] — a bandwidth-serialized wire (Ethernet port, PCIe link,
+//!   the hardwired compression engine): requests occupy the wire for
+//!   `bytes/rate`, back to back, in arrival order (`busy_until`), then pay a
+//!   fixed post-serialization latency (propagation / pipeline flush).
+//! * [`NvmeQueue`] — a depth-limited SQ/CQ ring in front of one SSD of a
+//!   shared [`SsdArray`](crate::nvme::ssd::SsdArray): at most `depth`
+//!   commands in flight; excess descriptors park until a completion rings
+//!   the doorbell (the dispatch itself lives in `super`, which owns the
+//!   parked continuations).
+//! * [`Barrier`] — an N-way rendezvous (collective rounds): the first
+//!   `need-1` arrivals park, the last one releases everyone.
+//!
+//! Requests are made *at event time* by the runtime, so FIFO order across
+//! competing workloads is exactly simulator event order — which is what
+//! makes cross-tenant contention observable at all.
+
+use crate::nvme::queue::{CompletionEntry, NvmeCommand, NvmeOp, QueueLocation, QueuePair};
+use crate::nvme::ssd::SsdArray;
+use crate::sim::time::{ns_f, Ps};
+
+/// A bandwidth-serialized FIFO resource (wire, PCIe link, streaming engine).
+#[derive(Clone, Debug)]
+pub struct FifoLink {
+    pub name: &'static str,
+    /// serialization rate in Gb/s
+    pub gbps: f64,
+    /// fixed latency paid after serialization (propagation, pipeline flush)
+    pub post_ps: Ps,
+    busy_until: Ps,
+    pub bytes_moved: u64,
+    pub grants: u64,
+}
+
+impl FifoLink {
+    pub fn new(name: &'static str, gbps: f64, post_ps: Ps) -> Self {
+        assert!(gbps > 0.0, "link rate must be positive");
+        FifoLink { name, gbps, post_ps, busy_until: 0, bytes_moved: 0, grants: 0 }
+    }
+
+    /// Pure serialization time of `bytes` at this link's rate.
+    pub fn ser_time(&self, bytes: u64) -> Ps {
+        ns_f(bytes as f64 * 8.0 / self.gbps)
+    }
+
+    /// Occupy the link for a transfer arriving at `now`. Returns
+    /// (start, delivered): `start ≥ now` waits out earlier grants (FIFO),
+    /// `delivered` includes the post-serialization latency.
+    pub fn reserve(&mut self, now: Ps, bytes: u64) -> (Ps, Ps) {
+        let start = now.max(self.busy_until);
+        let ser_done = start + self.ser_time(bytes);
+        self.busy_until = ser_done;
+        self.bytes_moved += bytes;
+        self.grants += 1;
+        (start, ser_done + self.post_ps)
+    }
+
+    pub fn busy_until(&self) -> Ps {
+        self.busy_until
+    }
+}
+
+/// A depth-limited NVMe submission/completion ring in front of one SSD.
+///
+/// The ring bookkeeping uses the real [`QueuePair`] (doorbell counters and
+/// all); the in-flight cap (`outstanding < depth`) is what creates
+/// backpressure, and the runtime parks excess descriptors until a
+/// completion frees a slot.
+#[derive(Debug)]
+pub struct NvmeQueue {
+    /// index of the owning [`SsdArray`] in the runtime state
+    pub array: usize,
+    /// SSD index within that array
+    pub ssd: usize,
+    pub depth: usize,
+    pub outstanding: usize,
+    /// fabric-side submit cost (command build + doorbell + p2p fetch)
+    pub submit_ps: Ps,
+    /// completion-path cost (CQ write + native capture)
+    pub complete_ps: Ps,
+    qp: QueuePair,
+    pub submitted: u64,
+    pub completed: u64,
+}
+
+impl NvmeQueue {
+    pub fn new(array: usize, ssd: usize, depth: usize, submit_ps: Ps, complete_ps: Ps) -> Self {
+        assert!(depth > 0, "queue depth must be positive");
+        NvmeQueue {
+            array,
+            ssd,
+            depth,
+            outstanding: 0,
+            submit_ps,
+            complete_ps,
+            qp: QueuePair::new(QueueLocation::FpgaBram, depth),
+            submitted: 0,
+            completed: 0,
+        }
+    }
+
+    pub fn has_slot(&self) -> bool {
+        self.outstanding < self.depth
+    }
+
+    /// Ring bookkeeping for one command entering service.
+    fn begin_io(&mut self, op: NvmeOp) {
+        debug_assert!(self.has_slot());
+        self.outstanding += 1;
+        self.submitted += 1;
+        let cmd = NvmeCommand {
+            id: self.submitted,
+            op,
+            lba: self.submitted * 8,
+            blocks: 8,
+            buffer_addr: 0,
+        };
+        self.qp.submit(cmd).expect("outstanding < depth implies SQ space");
+        let _ = self.qp.fetch();
+    }
+
+    /// Ring bookkeeping for one completed command (frees an in-flight slot).
+    pub fn complete_one(&mut self) {
+        debug_assert!(self.outstanding > 0);
+        self.qp.complete(CompletionEntry { command_id: self.completed + 1, status_ok: true });
+        let _ = self.qp.pop_completion();
+        self.completed += 1;
+        self.outstanding -= 1;
+    }
+
+    /// Total doorbells rung on the underlying ring (SQ + CQ).
+    pub fn doorbells(&self) -> u64 {
+        self.qp.sq_doorbells + self.qp.cq_doorbells
+    }
+}
+
+/// Dispatch one command on `nq` at `now`: occupy a slot, run the media
+/// through the shared array ceiling, and return the time the completion
+/// becomes visible to the fabric.
+pub fn dispatch_io(nq: &mut NvmeQueue, arrays: &mut [SsdArray], now: Ps, op: NvmeOp) -> Ps {
+    nq.begin_io(op);
+    let media_done = arrays[nq.array].process(now + nq.submit_ps, nq.ssd, op);
+    media_done + nq.complete_ps
+}
+
+/// An N-way rendezvous. Arrival bookkeeping only — parked continuations
+/// live in the runtime state.
+#[derive(Clone, Copy, Debug)]
+pub struct Barrier {
+    pub need: usize,
+    pub arrived: usize,
+    pub released: bool,
+}
+
+impl Barrier {
+    pub fn new(need: usize) -> Self {
+        assert!(need > 0, "a barrier needs at least one participant");
+        Barrier { need, arrived: 0, released: false }
+    }
+
+    /// Register one arrival; returns true when this arrival releases the
+    /// barrier (or it is already released — late arrivals pass through).
+    pub fn arrive(&mut self) -> bool {
+        self.arrived += 1;
+        if self.released {
+            return true;
+        }
+        if self.arrived >= self.need {
+            self.released = true;
+            return true;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::{NS, US};
+    use crate::util::Rng;
+
+    #[test]
+    fn fifo_link_serializes_back_to_back() {
+        let mut l = FifoLink::new("eth", 100.0, 120 * NS);
+        let (s1, d1) = l.reserve(0, 12_500); // 1 µs on the wire
+        let (s2, d2) = l.reserve(0, 12_500); // queued behind
+        assert_eq!((s1, d1), (0, US + 120 * NS));
+        assert_eq!(s2, US); // waits for the wire, not the propagation
+        assert_eq!(d2, 2 * US + 120 * NS);
+        assert_eq!(l.bytes_moved, 25_000);
+        assert_eq!(l.grants, 2);
+    }
+
+    #[test]
+    fn fifo_link_idle_gap_not_charged() {
+        let mut l = FifoLink::new("pcie", 100.0, 0);
+        l.reserve(0, 1250);
+        let (s, _) = l.reserve(10 * US, 1250);
+        assert_eq!(s, 10 * US);
+    }
+
+    #[test]
+    fn nvme_queue_slots_and_rings() {
+        let mut rng = Rng::new(1);
+        let mut arrays = vec![SsdArray::new(1, &mut rng)];
+        let mut q = NvmeQueue::new(0, 0, 2, 0, 0);
+        assert!(q.has_slot());
+        let d1 = dispatch_io(&mut q, &mut arrays, 0, NvmeOp::Read);
+        let _d2 = dispatch_io(&mut q, &mut arrays, 0, NvmeOp::Read);
+        assert!(!q.has_slot(), "depth 2 reached");
+        assert!(d1 > 0);
+        q.complete_one();
+        assert!(q.has_slot());
+        assert_eq!(q.submitted, 2);
+        assert_eq!(q.completed, 1);
+        assert!(q.doorbells() >= 3); // 2 SQ rings + 1 CQ ring
+    }
+
+    #[test]
+    fn nvme_submit_and_complete_costs_applied() {
+        let mut rng = Rng::new(2);
+        let mut arrays = vec![SsdArray::new(1, &mut rng)];
+        let mut cheap = NvmeQueue::new(0, 0, 8, 0, 0);
+        let d_cheap = dispatch_io(&mut cheap, &mut arrays, 0, NvmeOp::Write);
+        let mut rng2 = Rng::new(2);
+        let mut arrays2 = vec![SsdArray::new(1, &mut rng2)];
+        let mut costly = NvmeQueue::new(0, 0, 8, 500 * NS, 500 * NS);
+        let d_costly = dispatch_io(&mut costly, &mut arrays2, 0, NvmeOp::Write);
+        assert_eq!(d_costly, d_cheap + 1000 * NS);
+    }
+
+    #[test]
+    fn barrier_releases_on_last_arrival() {
+        let mut b = Barrier::new(3);
+        assert!(!b.arrive());
+        assert!(!b.arrive());
+        assert!(b.arrive());
+        assert!(b.released);
+        assert!(b.arrive(), "late arrivals pass through");
+    }
+}

@@ -200,6 +200,23 @@ fn platform_config_roundtrip_through_toml() {
     assert_eq!(p.fpga_board, fpgahub::devices::fpga::FpgaBoard::Vpk180);
 }
 
+/// The new multi-tenant scenario: sharing one hub demonstrably changes
+/// completion times vs isolated runs — the effect the event-driven
+/// HubRuntime exists to expose (and closed-form models cannot).
+#[test]
+fn multi_tenant_contention_changes_completion_times() {
+    use fpgahub::apps::{run_multi_tenant, MultiTenantConfig};
+    let r = run_multi_tenant(&MultiTenantConfig::default());
+    assert!(
+        r.shared_allreduce.mean_us > r.isolated_allreduce.mean_us,
+        "shared {:.3}µs vs isolated {:.3}µs",
+        r.shared_allreduce.mean_us,
+        r.isolated_allreduce.mean_us
+    );
+    assert!(r.shared_run.events > 0);
+    assert_eq!(r.shared_allreduce.n, r.isolated_allreduce.n);
+}
+
 /// The paper's headline claims, asserted end to end in one place.
 #[test]
 fn paper_headline_shapes() {

@@ -1,6 +1,8 @@
 //! PJRT runtime end-to-end: every AOT artifact loads, compiles, and
 //! produces numbers that match rust-side oracles — the cross-language
-//! correctness seal on the L1/L2/L3 stack. Requires `make artifacts`.
+//! correctness seal on the L1/L2/L3 stack. Requires `make artifacts` and
+//! the `pjrt` cargo feature (DESIGN.md §6).
+#![cfg(feature = "pjrt")]
 
 use fpgahub::coordinator::{TrainConfig, TrainDriver};
 use fpgahub::runtime::{exec, Runtime};
