@@ -1,0 +1,63 @@
+//! Arbitration hot-path bench: the park/grant machinery under heavy
+//! backlog — deep NVMe ring queues and contended links under each policy.
+//! This is the workload the slab-pooled waiter queues exist for; its
+//! events/s line (and the `--json` output) is the number to watch across
+//! PRs for the parked-wake path.
+
+use fpgahub::bench_harness::{banner, bench_sim, SimMetrics};
+use fpgahub::nvme::queue::NvmeOp;
+use fpgahub::nvme::ssd::SsdArray;
+use fpgahub::runtime_hub::{ArbPolicy, HubRuntime, QosSpec, TenantId, TransferDesc};
+use fpgahub::sim::time::US;
+use fpgahub::util::Rng;
+
+/// 20k commands into a depth-8 ring: ~19 992 park/wake cycles per run.
+fn nvme_backlog(policy: ArbPolicy) -> SimMetrics {
+    let mut rt = HubRuntime::with_policy(policy);
+    let mut rng = Rng::new(7);
+    let arr = rt.add_array(SsdArray::new(4, &mut rng));
+    let queues: Vec<_> = (0..4).map(|ssd| rt.add_nvme_queue(arr, ssd, 8, 0, 0)).collect();
+    for i in 0..20_000u64 {
+        let qos = QosSpec::new(TenantId(1 + (i % 3) as u32), (i % 4) as u8, 1 + (i % 5) as u32);
+        let q = queues[(i % 4) as usize];
+        rt.submit(0, TransferDesc::with_label(i).qos(qos).nvme(q, NvmeOp::Read), |_, _| {});
+    }
+    rt.run().into()
+}
+
+/// 4 bursty tenants fighting for one 100G port: every transfer but the
+/// first in each burst parks.
+fn link_backlog(policy: ArbPolicy) -> SimMetrics {
+    let mut rt = HubRuntime::with_policy(policy);
+    let link = rt.add_link("contended-port", 100.0, 0);
+    for burst in 0..500u64 {
+        let t0 = burst * 40 * US;
+        for k in 0..16u64 {
+            let qos = QosSpec::new(TenantId(1 + (k % 4) as u32), (k % 4) as u8, 1 + (k % 4) as u32);
+            rt.submit(
+                t0,
+                TransferDesc::with_label(burst * 16 + k).qos(qos).xfer(link, 4096 + k * 512),
+                |_, _| {},
+            );
+        }
+    }
+    rt.run().into()
+}
+
+fn main() {
+    banner("arbiter: NVMe ring backlog (20k cmds, depth 8, 4 rings)");
+    for policy in ArbPolicy::ALL {
+        bench_sim(&format!("arbiter/nvme_backlog_{}", policy.name()), 2, 10, || {
+            nvme_backlog(policy)
+        });
+    }
+
+    banner("arbiter: contended 100G port (500 bursts x 16 transfers)");
+    for policy in ArbPolicy::ALL {
+        bench_sim(&format!("arbiter/link_backlog_{}", policy.name()), 2, 10, || {
+            link_backlog(policy)
+        });
+    }
+
+    fpgahub::bench_harness::finish().expect("bench json");
+}

@@ -19,4 +19,6 @@ fn main() {
     bench("fig10/hub_2cores_100ms", 2, 15, || {
         std::hint::black_box(HubMiddleTier::new(mt).run(2, 1));
     });
+
+    fpgahub::bench_harness::finish().expect("bench json");
 }

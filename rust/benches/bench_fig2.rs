@@ -28,4 +28,6 @@ fn main() {
     bench("fig2/compare", 10, 200, || {
         let _ = std::hint::black_box(compare(&LlmStepConfig::default()));
     });
+
+    fpgahub::bench_harness::finish().expect("bench json");
 }

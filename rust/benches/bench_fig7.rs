@@ -33,4 +33,6 @@ fn main() {
         t2 += 400_000_000;
         std::hint::black_box(base.send(&mut rt2, t2, 4096));
     });
+
+    fpgahub::bench_harness::finish().expect("bench json");
 }

@@ -86,4 +86,6 @@ fn main() {
         app.schedule_round(&mut rt, t, &chunks, |_, _| {});
         rt.run().into()
     });
+
+    fpgahub::bench_harness::finish().expect("bench json");
 }

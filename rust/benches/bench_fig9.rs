@@ -19,4 +19,6 @@ fn main() {
         let mut cp = SpdkControlPlane::new(5);
         std::hint::black_box(cp.run(array, NvmeOp::Read, fpgahub::sim::time::S / 10));
     });
+
+    fpgahub::bench_harness::finish().expect("bench json");
 }

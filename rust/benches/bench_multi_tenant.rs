@@ -34,4 +34,6 @@ fn main() {
             r.shared_fetch.p99_us,
         );
     }
+
+    fpgahub::bench_harness::finish().expect("bench json");
 }

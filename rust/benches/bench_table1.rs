@@ -27,4 +27,6 @@ fn main() {
     bench("table1/place_full_hub_u280", 10, 500, || {
         std::hint::black_box(place_full_hub(FpgaBoard::AlveoU280, 10).unwrap());
     });
+
+    fpgahub::bench_harness::finish().expect("bench json");
 }

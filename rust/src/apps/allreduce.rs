@@ -18,7 +18,7 @@ use crate::hub::collective::CollectiveEngine;
 use crate::hub::transport::FpgaTransport;
 use crate::net::p4::{P4Error, P4Switch};
 use crate::net::packet::packetize;
-use crate::runtime_hub::{submit_on, HubRuntime, LinkId, TransferDesc};
+use crate::runtime_hub::{submit_on, HubRuntime, LinkId, QosSpec, TransferDesc};
 use crate::sim::time::{ns_f, us_f, Ps};
 use crate::sim::Sim;
 use crate::util::Rng;
@@ -57,6 +57,8 @@ pub struct FpgaSwitchAllreduce {
     pub switch_pipeline: Ps,
     /// per-worker arrival spread (compute imbalance before the collective)
     pub skew_us: f64,
+    /// QoS identity every round descriptor carries (tenant, class, weight)
+    pub qos: QosSpec,
     uplinks: Vec<LinkId>,
     downlinks: Vec<LinkId>,
     inner: Rc<RefCell<AllreduceInner>>,
@@ -86,6 +88,7 @@ impl FpgaSwitchAllreduce {
             workers,
             switch_pipeline: switch.pipeline_latency(),
             skew_us,
+            qos: QosSpec::default(),
             uplinks,
             downlinks,
             inner: Rc::new(RefCell::new(AllreduceInner {
@@ -95,6 +98,12 @@ impl FpgaSwitchAllreduce {
                 rounds_scheduled: 0,
             })),
         })
+    }
+
+    /// Label every descriptor this app schedules with `qos` (builder).
+    pub fn with_qos(mut self, qos: QosSpec) -> Self {
+        self.qos = qos;
+        self
     }
 
     /// Rounds the switch aggregation program has completed.
@@ -156,7 +165,8 @@ impl FpgaSwitchAllreduce {
                 let pkts = inner.transports[w].send_message(0, bytes);
                 (skew, pipeline, pkts)
             };
-            let mut desc = TransferDesc::with_label(w as u64).delay(skew + pipeline);
+            let mut desc =
+                TransferDesc::with_label(w as u64).qos(self.qos).delay(skew + pipeline);
             for p in &pkts {
                 desc = desc.xfer(self.uplinks[w], p.wire_bytes());
             }
@@ -170,6 +180,7 @@ impl FpgaSwitchAllreduce {
             let downlinks = self.downlinks.clone();
             let switch_pipeline = self.switch_pipeline;
             let workers = self.workers;
+            let qos = self.qos;
             rt.submit(t0, desc, move |sim, _arrived| {
                 let result = {
                     let mut ir = inner.borrow_mut();
@@ -193,6 +204,7 @@ impl FpgaSwitchAllreduce {
                     for w2 in 0..workers as usize {
                         let rx_pipeline = inner.borrow().transports[w2].pipeline_latency();
                         let dl = TransferDesc::with_label(w2 as u64)
+                            .qos(qos)
                             .xfer(downlinks[w2], bytes + 64)
                             .delay(rx_pipeline);
                         let inner2 = inner.clone();

@@ -18,7 +18,7 @@ use crate::devices::cpu::SwCost;
 use crate::hub::descriptor::{Descriptor, DescriptorTable, PayloadDest};
 use crate::hub::split_assemble::SplitAssemble;
 use crate::hub::transport::FpgaTransport;
-use crate::runtime_hub::{join2_on, run_closed_loop, HubRuntime, TransferDesc};
+use crate::runtime_hub::{join2_on, run_closed_loop, HubRuntime, QosSpec, TenantId, TransferDesc};
 use crate::sim::time::{ns_f, Ps};
 use crate::util::Rng;
 
@@ -102,8 +102,9 @@ impl HubMiddleTier {
             mean_gap_us,
             cfg.horizon,
             move |st, sim, t_arrive, record| {
-                let ctrl_desc = TransferDesc::with_label(1).on_core(pool, ctrl);
-                let data_desc = TransferDesc::with_label(2).xfer(engine, payload);
+                let qos = QosSpec::new(TenantId(1), crate::runtime_hub::CLASS_NORMAL, 1);
+                let ctrl_desc = TransferDesc::with_label(1).qos(qos).on_core(pool, ctrl);
+                let data_desc = TransferDesc::with_label(2).qos(qos).xfer(engine, payload);
                 join2_on(st, sim, t_arrive, ctrl_desc, data_desc, record);
             },
         );

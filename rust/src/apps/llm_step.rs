@@ -15,7 +15,7 @@ use std::rc::Rc;
 use crate::constants;
 use crate::devices::gpu::Gpu;
 use crate::hub::transport::FpgaTransport;
-use crate::runtime_hub::{HubRuntime, TransferDesc};
+use crate::runtime_hub::{HubRuntime, QosSpec, TenantId, TransferDesc};
 use crate::sim::time::{ns_f, to_us, Ps};
 
 /// Step workload description.
@@ -61,7 +61,8 @@ fn run_step_events(gemm_each: Ps, gemms: u32, lead_in: Ps, collective: Ps) -> (P
     let mut rt = HubRuntime::new();
     let gemm_done = Rc::new(Cell::new(0u64));
     let coll_done = Rc::new(Cell::new(0u64));
-    let mut gemm_desc = TransferDesc::with_label(1);
+    let mut gemm_desc =
+        TransferDesc::with_label(1).qos(QosSpec::new(TenantId(1), 1, 1));
     for _ in 0..gemms {
         gemm_desc = gemm_desc.delay(gemm_each);
     }
@@ -70,7 +71,10 @@ fn run_step_events(gemm_each: Ps, gemms: u32, lead_in: Ps, collective: Ps) -> (P
     let c = coll_done.clone();
     rt.submit(
         0,
-        TransferDesc::with_label(2).delay(lead_in).delay(collective),
+        TransferDesc::with_label(2)
+            .qos(QosSpec::new(TenantId(2), 1, 1))
+            .delay(lead_in)
+            .delay(collective),
         move |_, t| c.set(t),
     );
     let stats = rt.run();

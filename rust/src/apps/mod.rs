@@ -11,5 +11,8 @@ pub mod storage_fetch;
 pub use allreduce::FpgaSwitchAllreduce;
 pub use block_storage::HubMiddleTier;
 pub use llm_step::{LlmStepConfig, LlmStepReport};
-pub use multi_tenant::{run_multi_tenant, MultiTenantConfig, MultiTenantReport};
+pub use multi_tenant::{
+    run_multi_tenant, run_qos, MultiTenantConfig, MultiTenantReport, QosConfig, QosOutcome,
+    TENANT_COLLECTIVE, TENANT_FETCH,
+};
 pub use storage_fetch::run_fetch_demo;

@@ -19,7 +19,7 @@ use crate::hub::transport::FpgaTransport;
 use crate::metrics::Hist;
 use crate::nvme::queue::NvmeOp;
 use crate::nvme::ssd::SsdArray;
-use crate::runtime_hub::{ArrayId, HubRuntime, LinkId, NvmeId, TransferDesc};
+use crate::runtime_hub::{ArrayId, HubRuntime, LinkId, NvmeId, QosSpec, TenantId, TransferDesc};
 use crate::sim::time::{cycles, ns_f, to_us, us_f, Ps, US};
 use crate::util::Rng;
 
@@ -42,6 +42,8 @@ pub struct NicFetchPath {
     pub queues: Vec<NvmeId>,
     pub pcie: LinkId,
     pub transport_pipeline: Ps,
+    /// QoS identity every fetch descriptor carries
+    pub qos: QosSpec,
 }
 
 /// Register the NIC-initiated fetch path (§3.3 calibration: 8-cycle
@@ -52,14 +54,28 @@ pub fn register_nic_fetch_path(
     array: ArrayId,
     num_ssds: usize,
 ) -> NicFetchPath {
+    register_nic_fetch_path_ssds(rt, array, &(0..num_ssds).collect::<Vec<_>>())
+}
+
+/// Like [`register_nic_fetch_path`], but serving only the listed SSDs
+/// (rings are registered for exactly those; `fetch_desc`'s `ssd` argument
+/// indexes into this list). Lets a caller stripe one path — one p2p DMA
+/// engine — per SSD without registering unused rings.
+pub fn register_nic_fetch_path_ssds(
+    rt: &mut HubRuntime,
+    array: ArrayId,
+    ssds: &[usize],
+) -> NicFetchPath {
     let submit_ps = cycles(8, constants::FPGA_FREQ_MHZ) + ns_f(P2P_NS);
     let complete_ps = ns_f(P2P_NS) + cycles(1, constants::FPGA_FREQ_MHZ);
     NicFetchPath {
-        queues: (0..num_ssds)
-            .map(|i| rt.add_nvme_queue(array, i, 256, submit_ps, complete_ps))
+        queues: ssds
+            .iter()
+            .map(|&i| rt.add_nvme_queue(array, i, 256, submit_ps, complete_ps))
             .collect(),
         pcie: rt.add_link("pcie-gpu-direct", constants::PCIE_GEN3_X16_GBPS, 0),
         transport_pipeline: FpgaTransport::new(1, 64).pipeline_latency(),
+        qos: QosSpec::default(),
     }
 }
 
@@ -70,6 +86,7 @@ impl NicFetchPath {
     /// append further stages (e.g. the reply's egress packets).
     pub fn fetch_desc(&self, label: u64, ssd: usize, blocks_4k: u32) -> TransferDesc {
         TransferDesc::with_label(label)
+            .qos(self.qos)
             .delay(self.transport_pipeline)
             .nvme(self.queues[ssd], NvmeOp::Read)
             .delay(ns_f(constants::PCIE_DMA_SETUP_NS))
@@ -86,7 +103,9 @@ pub fn run_fetch_demo(n: u64, num_ssds: usize, seed: u64) -> FetchDemoReport {
 
     // NIC-initiated: on-FPGA rings (submit = build+doorbell+p2p fetch,
     // complete = p2p CQ write + one-cycle native capture)
-    let nic = register_nic_fetch_path(&mut rt, arr, num_ssds);
+    let mut nic = register_nic_fetch_path(&mut rt, arr, num_ssds);
+    nic.qos = QosSpec::new(TenantId(1), crate::runtime_hub::CLASS_NORMAL, 1);
+    let cpu_qos = QosSpec::new(TenantId(2), crate::runtime_hub::CLASS_NORMAL, 1);
     // CPU-staged: host-DRAM rings; the software costs ride as delays
     let cpu_q: Vec<NvmeId> = (0..num_ssds)
         .map(|i| rt.add_nvme_queue(arr, i, constants::SSD_QUEUE_DEPTH, 0, 0))
@@ -117,6 +136,7 @@ pub fn run_fetch_demo(n: u64, num_ssds: usize, seed: u64) -> FetchDemoReport {
         let j_ctx = us_f(jrng.normal_trunc(cm, cs, cm * 0.3));
         let j_reply = us_f(jrng.lognormal(m, s / m));
         let cpu = TransferDesc::with_label(i)
+            .qos(cpu_qos)
             .delay(j_consume + SwCost::spdk_cmd(false))
             .nvme(cpu_q[ssd], NvmeOp::Read)
             .delay(j_ctx + SwCost::memcpy(4096))
@@ -161,5 +181,15 @@ mod tests {
         assert_eq!(r.requests, 100);
         assert_eq!(r.nic_initiated.len(), 100);
         assert_eq!(r.cpu_staged.len(), 100);
+    }
+
+    #[test]
+    fn fetch_descs_carry_the_path_qos() {
+        let mut rt = crate::runtime_hub::HubRuntime::new();
+        let mut rng = crate::util::Rng::new(3);
+        let arr = rt.add_array(SsdArray::new(1, &mut rng));
+        let mut path = register_nic_fetch_path(&mut rt, arr, 1);
+        path.qos = QosSpec::bulk(TenantId(7));
+        assert_eq!(path.fetch_desc(0, 0, 1).qos.tenant, TenantId(7));
     }
 }

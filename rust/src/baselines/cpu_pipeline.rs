@@ -10,7 +10,9 @@
 //!    latency rises as cores are added — the paper's second observation.
 
 use crate::devices::cpu::SwCost;
-use crate::runtime_hub::{run_closed_loop, submit_on, HubRuntime, TransferDesc};
+use crate::runtime_hub::{
+    run_closed_loop, submit_on, HubRuntime, QosSpec, TenantId, TransferDesc,
+};
 use crate::sim::time::Ps;
 use crate::util::Rng;
 
@@ -99,7 +101,9 @@ impl CpuOnlyMiddleTier {
             mean_gap_us,
             cfg.horizon,
             move |st, sim, t_arrive, record| {
-                submit_on(st, sim, t_arrive, TransferDesc::new().on_core(pool, service), record);
+                let qos = QosSpec::new(TenantId(1), crate::runtime_hub::CLASS_NORMAL, 1);
+                let desc = TransferDesc::new().qos(qos).on_core(pool, service);
+                submit_on(st, sim, t_arrive, desc, record);
             },
         );
         let bytes = r.processed * cfg.msg_bytes;

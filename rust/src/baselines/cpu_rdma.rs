@@ -17,7 +17,7 @@ use std::cell::Cell;
 use std::rc::Rc;
 
 use crate::constants;
-use crate::runtime_hub::{HubRuntime, LinkId, TransferDesc};
+use crate::runtime_hub::{HubRuntime, LinkId, QosSpec, TransferDesc};
 use crate::sim::time::{ns_f, us_f, Ps};
 use crate::sim::Sim;
 use crate::util::Rng;
@@ -29,6 +29,8 @@ pub struct CpuRdmaPath {
     pub pcie_local: LinkId,
     pub pcie_remote: LinkId,
     pub switch_latency: Ps,
+    /// QoS identity every staged message carries
+    pub qos: QosSpec,
     pub messages: u64,
 }
 
@@ -41,6 +43,7 @@ impl CpuRdmaPath {
             pcie_local: rt.add_link("rdma-pcie-local", constants::PCIE_GEN3_X16_GBPS, 0),
             pcie_remote: rt.add_link("rdma-pcie-remote", constants::PCIE_GEN3_X16_GBPS, 0),
             switch_latency,
+            qos: QosSpec::default(),
             messages: 0,
         }
     }
@@ -65,6 +68,7 @@ impl CpuRdmaPath {
         let (m, s) = constants::CPU_CTX_SWITCH_US;
         let j_ctx = us_f(self.rng.normal_trunc(m, s, m * 0.3));
         let desc = TransferDesc::new()
+            .qos(self.qos)
             // 1. GPU -> CPU notification (CUDA runtime on CPU, §2.2.2)
             .delay(j_notify)
             // 2. GPU memory -> host staging buffer over PCIe

@@ -15,7 +15,7 @@ use std::rc::Rc;
 
 use crate::constants;
 use crate::net::p4::P4Switch;
-use crate::runtime_hub::{HubRuntime, LinkId, TransferDesc};
+use crate::runtime_hub::{HubRuntime, LinkId, QosSpec, TransferDesc};
 use crate::sim::time::{ns_f, us_f, Ps};
 use crate::sim::Sim;
 use crate::util::Rng;
@@ -24,6 +24,8 @@ use crate::util::Rng;
 pub struct CpuSwitchHost {
     rng: Rng,
     pub nic_link: LinkId,
+    /// QoS identity this host's round descriptors carry
+    pub qos: QosSpec,
     pub rounds: u64,
 }
 
@@ -33,6 +35,7 @@ impl CpuSwitchHost {
         CpuSwitchHost {
             rng,
             nic_link: rt.add_link("cpu-switch-nic", constants::ETH_GBPS, ns_f(constants::ETH_HOP_NS)),
+            qos: QosSpec::default(),
             rounds: 0,
         }
     }
@@ -70,6 +73,7 @@ impl CpuSwitchHost {
         let tx = self.tx_stack_cost();
         let rx = self.rx_stack_cost();
         let desc = TransferDesc::new()
+            .qos(self.qos)
             .delay(tx)
             .xfer(self.nic_link, chunk_bytes)
             .until(now + straggler_lag)

@@ -19,7 +19,9 @@ use crate::constants;
 use crate::devices::cpu::SwCost;
 use crate::nvme::queue::NvmeOp;
 use crate::nvme::ssd::SsdArray;
-use crate::runtime_hub::{submit_on, HubRuntime, HubState, NvmeId, TransferDesc};
+use crate::runtime_hub::{
+    submit_on, HubRuntime, HubState, NvmeId, QosSpec, TenantId, TransferDesc,
+};
 use crate::sim::time::Ps;
 use crate::sim::Sim;
 
@@ -101,7 +103,8 @@ fn core_loop(
     next_cmd.set(i + 1);
     let q = queues[(i as usize) % queues.len()];
     let cp = completed.clone();
-    submit_on(&hub, sim, cpu_done, TransferDesc::new().nvme(q, op), move |_, done| {
+    let qos = QosSpec::new(TenantId(1), crate::runtime_hub::CLASS_NORMAL, 1);
+    submit_on(&hub, sim, cpu_done, TransferDesc::new().qos(qos).nvme(q, op), move |_, done| {
         if done <= horizon {
             cp.set(cp.get() + 1);
         }

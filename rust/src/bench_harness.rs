@@ -6,11 +6,40 @@
 //! simulated-time metrics: events processed per iteration, engine
 //! throughput (events/s of wallclock), and the simulated-time/wall-time
 //! ratio — the §Perf numbers for the `HubRuntime` hot path.
+//!
+//! Every result is also collected in-process; a bench binary that ends
+//! with [`finish`] writes them as machine-readable JSON when invoked as
+//! `cargo bench --bench <name> -- --json BENCH_<name>.json`, so the perf
+//! trajectory (events/s, sim/wall ratio) is tracked across PRs.
 
+use std::path::Path;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::metrics::Hist;
 use crate::sim::time::Ps;
+
+/// Results collected by [`bench`]/[`bench_sim`] in this process, as
+/// pre-rendered JSON objects.
+static JSON_RESULTS: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn record_json(entry: String) {
+    JSON_RESULTS.lock().unwrap_or_else(|e| e.into_inner()).push(entry);
+}
 
 /// Timing result of one benchmark case.
 pub struct BenchResult {
@@ -27,6 +56,17 @@ impl BenchResult {
             "bench {:<44} iters={:<4} mean={:>9.3}ms p50={:>9.3}ms p99={:>9.3}ms",
             self.name, self.iters, self.mean_ms, self.p50_ms, self.p99_ms
         );
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_ms\":{:.6},\"p50_ms\":{:.6},\"p99_ms\":{:.6}}}",
+            json_escape(&self.name),
+            self.iters,
+            self.mean_ms,
+            self.p50_ms,
+            self.p99_ms
+        )
     }
 }
 
@@ -49,6 +89,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
         p99_ms: h.p99(),
     };
     r.print();
+    record_json(r.json());
     r
 }
 
@@ -85,6 +126,17 @@ impl SimBenchResult {
             "      {:<44} events/iter={:<11.0} events/s={:>12.0} sim/wall={:>8.1}x",
             self.wall.name, self.events_per_iter, self.events_per_sec, self.sim_wall_ratio
         );
+    }
+
+    fn json(&self) -> String {
+        let wall = self.wall.json();
+        format!(
+            "{},\"events_per_iter\":{:.1},\"events_per_sec\":{:.1},\"sim_wall_ratio\":{:.3}}}",
+            &wall[..wall.len() - 1],
+            self.events_per_iter,
+            self.events_per_sec,
+            self.sim_wall_ratio
+        )
     }
 }
 
@@ -126,12 +178,56 @@ pub fn bench_sim<F: FnMut() -> SimMetrics>(
         sim_wall_ratio: if wall_total > 0.0 { sim_total / wall_total } else { 0.0 },
     };
     r.print();
+    record_json(r.json());
     r
 }
 
 /// Standard banner so `cargo bench` output groups cleanly per figure.
 pub fn banner(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Write every result recorded so far as one JSON document.
+pub fn write_json(path: &Path) -> std::io::Result<()> {
+    let suite = std::env::args()
+        .next()
+        .and_then(|p| {
+            Path::new(&p).file_stem().map(|s| s.to_string_lossy().into_owned())
+        })
+        .unwrap_or_else(|| "bench".to_string());
+    // cargo names bench binaries `<name>-<hash>`; strip the hash
+    let suite = suite.split('-').next().unwrap_or(&suite).to_string();
+    let entries = JSON_RESULTS.lock().unwrap_or_else(|e| e.into_inner());
+    let mut body = String::from("{\"schema\":1,\"suite\":\"");
+    body.push_str(&json_escape(&suite));
+    body.push_str("\",\"benches\":[");
+    body.push_str(&entries.join(","));
+    body.push_str("]}\n");
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, body)
+}
+
+/// End-of-main hook for every bench binary: when the binary was invoked
+/// with `--json <path>` (e.g. `cargo bench --bench bench_fig8 -- --json
+/// BENCH_fig8.json`), persist the collected results there; otherwise a
+/// no-op.
+pub fn finish() -> std::io::Result<()> {
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            if let Some(path) = args.next() {
+                let path = std::path::PathBuf::from(path);
+                write_json(&path)?;
+                println!("wrote bench json: {}", path.display());
+            }
+            break;
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -167,5 +263,31 @@ mod tests {
         assert!(r.events_per_iter >= 20.0, "{}", r.events_per_iter);
         assert!(r.events_per_sec > 0.0);
         assert!(r.sim_wall_ratio > 0.0);
+        // the JSON entry carries the engine counters
+        let j = r.json();
+        assert!(j.contains("\"events_per_iter\""), "{j}");
+        assert!(j.contains("\"sim_wall_ratio\""), "{j}");
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+    }
+
+    #[test]
+    fn json_escapes_and_writes_a_document() {
+        let r = bench("json \"quoted\\case\"", 0, 2, || {});
+        let j = r.json();
+        assert!(j.contains("\\\"quoted\\\\case\\\""), "{j}");
+        let dir = std::env::temp_dir().join("fpgahub_bench_json_test");
+        let path = dir.join("BENCH_test.json");
+        write_json(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("{\"schema\":1,\"suite\":"));
+        assert!(body.contains("\"benches\":["));
+        assert!(body.contains("json \\\"quoted"));
+        assert!(body.trim_end().ends_with("]}"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn finish_without_json_flag_is_a_noop() {
+        finish().unwrap();
     }
 }

@@ -9,6 +9,7 @@ use crate::anyhow;
 use crate::config::parse::TomlDoc;
 use crate::constants;
 use crate::devices::fpga::FpgaBoard;
+use crate::runtime_hub::{ArbPolicy, ResourcePolicies};
 
 /// The simulated platform (one §4.1 server/cluster).
 #[derive(Clone, Debug)]
@@ -19,6 +20,9 @@ pub struct PlatformConfig {
     pub num_ssds: usize,
     pub fpga_board: FpgaBoard,
     pub eth_gbps: f64,
+    /// arbitration policy per shared-resource kind (`[arbitration]`):
+    /// `policy` sets all three, `links`/`pools`/`nvme` override per kind
+    pub arb: ResourcePolicies,
     pub artifacts_dir: PathBuf,
     pub results_dir: PathBuf,
 }
@@ -32,10 +36,17 @@ impl Default for PlatformConfig {
             num_ssds: 10,
             fpga_board: FpgaBoard::AlveoU50,
             eth_gbps: constants::ETH_GBPS,
+            arb: ResourcePolicies::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             results_dir: PathBuf::from("results"),
         }
     }
+}
+
+fn policy_or(doc: &TomlDoc, key: &str, default: ArbPolicy) -> anyhow::Result<ArbPolicy> {
+    let s = doc.str_or("arbitration", key, default.name());
+    ArbPolicy::parse(&s)
+        .ok_or_else(|| anyhow::anyhow!("unknown arbitration policy '{s}' (fcfs|priority|wfq)"))
 }
 
 impl PlatformConfig {
@@ -47,6 +58,12 @@ impl PlatformConfig {
             "vpk180" => FpgaBoard::Vpk180,
             other => anyhow::bail!("unknown fpga board '{other}' (u50|u280|vpk180)"),
         };
+        let default_policy = policy_or(doc, "policy", ArbPolicy::Fcfs)?;
+        let arb = ResourcePolicies {
+            links: policy_or(doc, "links", default_policy)?,
+            pools: policy_or(doc, "pools", default_policy)?,
+            nvme: policy_or(doc, "nvme", default_policy)?,
+        };
         Ok(PlatformConfig {
             seed: doc.i64_or("", "seed", d.seed as i64) as u64,
             workers: doc.i64_or("cluster", "workers", d.workers as i64) as u32,
@@ -54,6 +71,7 @@ impl PlatformConfig {
             num_ssds: doc.i64_or("ssd", "count", d.num_ssds as i64) as usize,
             fpga_board: board,
             eth_gbps: doc.f64_or("net", "gbps", d.eth_gbps),
+            arb,
             artifacts_dir: PathBuf::from(doc.str_or("", "artifacts_dir", "artifacts")),
             results_dir: PathBuf::from(doc.str_or("", "results_dir", "results")),
         })
@@ -135,6 +153,30 @@ mod tests {
     #[test]
     fn bad_board_rejected() {
         let doc = TomlDoc::parse("[fpga]\nboard = \"zynq\"\n").unwrap();
+        assert!(PlatformConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn arbitration_defaults_to_fcfs_everywhere() {
+        let p = PlatformConfig::default();
+        assert_eq!(p.arb, ResourcePolicies::default());
+        assert_eq!(p.arb.links, ArbPolicy::Fcfs);
+        assert_eq!(p.arb.nvme, ArbPolicy::Fcfs);
+    }
+
+    #[test]
+    fn arbitration_policy_and_per_kind_overrides() {
+        let doc = TomlDoc::parse("[arbitration]\npolicy = \"wfq\"\nnvme = \"priority\"\n")
+            .unwrap();
+        let p = PlatformConfig::from_doc(&doc).unwrap();
+        assert_eq!(p.arb.links, ArbPolicy::WeightedFair);
+        assert_eq!(p.arb.pools, ArbPolicy::WeightedFair);
+        assert_eq!(p.arb.nvme, ArbPolicy::StrictPriority);
+    }
+
+    #[test]
+    fn bad_arbitration_policy_rejected() {
+        let doc = TomlDoc::parse("[arbitration]\npolicy = \"lifo\"\n").unwrap();
         assert!(PlatformConfig::from_doc(&doc).is_err());
     }
 

@@ -29,7 +29,7 @@ pub fn measured_compress_ratio(cfg: &ExperimentConfig) -> Result<f64> {
     }
     let out = rt.run("compress_b64_s256", &[exec::literal_i32(&data, &[64, 256])?])?;
     let bits = exec::to_i32(&out[1])?;
-    let payload_bytes: i64 = bits.iter().map(|&b| (b as i64 * 256 + 7) / 8).sum();
+    let payload_bytes: i64 = bits.iter().map(|&b| (b as i64 * 256).div_ceil(8)).sum();
     let header = 2 * 64; // 2 B/row metadata
     Ok((payload_bytes + header) as f64 / (64.0 * 256.0 * 4.0))
 }

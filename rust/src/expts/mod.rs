@@ -7,6 +7,7 @@ pub mod fig2;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod qos;
 pub mod table1;
 
 use crate::anyhow;
@@ -14,7 +15,8 @@ use crate::config::ExperimentConfig;
 use crate::metrics::{write_csv, Table};
 
 /// All experiment names (CLI `fpgahub expt <name>`).
-pub const ALL: &[&str] = &["fig2", "fig7a", "fig7b", "fig8", "fig9", "fig10a", "fig10b", "table1"];
+pub const ALL: &[&str] =
+    &["fig2", "fig7a", "fig7b", "fig8", "fig9", "fig10a", "fig10b", "table1", "qos"];
 
 /// Dispatch by name.
 pub fn run(name: &str, cfg: &ExperimentConfig) -> anyhow::Result<Vec<Table>> {
@@ -27,6 +29,7 @@ pub fn run(name: &str, cfg: &ExperimentConfig) -> anyhow::Result<Vec<Table>> {
         "fig9" => vec![fig9::run(cfg)],
         "fig10a" | "fig10b" | "fig10" => fig10::run(cfg)?,
         "table1" => vec![table1::run(cfg)?],
+        "qos" => vec![qos::run(cfg)],
         other => anyhow::bail!("unknown experiment '{other}' (have {ALL:?})"),
     };
     for t in &tables {

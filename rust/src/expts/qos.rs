@@ -1,0 +1,102 @@
+//! QoS isolation experiment (`fpgahub qos`): the latency-sensitive
+//! collective vs an aggressor storage tenant on one hub, repeated under
+//! every arbitration policy. One row per policy: the collective's isolated
+//! and shared p99 round times, the isolation gap between them, and the
+//! aggressor's own service picture (it must not be starved either).
+//!
+//! The acceptance story: under FCFS the collective's p99 absorbs the
+//! aggressor's queued replies; `WeightedFair` caps the wait at roughly one
+//! reply per DRR round, `StrictPriority` at the non-preemptible remainder
+//! of the reply already in service.
+
+use crate::apps::multi_tenant::{run_qos, QosConfig, QosOutcome};
+use crate::config::ExperimentConfig;
+use crate::metrics::Table;
+use crate::runtime_hub::ArbPolicy;
+
+/// Scale the round count to the configured sample budget: the default
+/// 5000 samples run 161 rounds; `quick()` (500) hits the 60-round floor —
+/// both sweep the full round/burst phase pattern several times.
+fn rounds(cfg: &ExperimentConfig) -> u64 {
+    ((cfg.samples as u64) / 31).clamp(60, 400)
+}
+
+/// Run the scenario under one policy.
+pub fn run_policy(cfg: &ExperimentConfig, policy: ArbPolicy) -> QosOutcome {
+    run_qos(&QosConfig {
+        workers: cfg.platform.workers,
+        rounds: rounds(cfg),
+        seed: cfg.platform.seed,
+        policy,
+        ..Default::default()
+    })
+}
+
+/// Run every policy; returns the comparison table plus each policy's full
+/// outcome (tenant accounts included), so callers need not re-simulate.
+pub fn run_with_outcomes(cfg: &ExperimentConfig) -> (Table, Vec<QosOutcome>) {
+    let mut t = Table::new(
+        "QoS isolation: aggressor fetch vs latency-sensitive collective",
+        &[
+            "policy",
+            "round_p99_iso_us",
+            "round_p99_shared_us",
+            "p99_gap_us",
+            "round_mean_shared_us",
+            "fetch_p99_us",
+            "fetch_n",
+        ],
+    );
+    let mut outcomes = Vec::with_capacity(ArbPolicy::ALL.len());
+    for policy in ArbPolicy::ALL {
+        let q = run_policy(cfg, policy);
+        t.row(&[
+            policy.name().into(),
+            format!("{:.2}", q.isolated_round.p99_us),
+            format!("{:.2}", q.shared_round.p99_us),
+            format!("{:.2}", q.p99_degradation_us()),
+            format!("{:.2}", q.shared_round.mean_us),
+            format!("{:.2}", q.fetch.p99_us),
+            q.fetch.n.to_string(),
+        ]);
+        outcomes.push(q);
+    }
+    (t, outcomes)
+}
+
+pub fn run(cfg: &ExperimentConfig) -> Table {
+    run_with_outcomes(cfg).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gap(t: &Table, row: usize) -> f64 {
+        t.rows[row][3].parse().unwrap()
+    }
+
+    #[test]
+    fn table_has_one_row_per_policy_in_order() {
+        let t = run(&ExperimentConfig::quick());
+        assert_eq!(t.rows.len(), ArbPolicy::ALL.len());
+        assert_eq!(t.rows[0][0], "fcfs");
+        assert_eq!(t.rows[1][0], "priority");
+        assert_eq!(t.rows[2][0], "wfq");
+    }
+
+    #[test]
+    fn arbitration_shrinks_the_isolation_gap() {
+        let t = run(&ExperimentConfig::quick());
+        // rows: 0 fcfs, 1 priority, 2 wfq
+        assert!(gap(&t, 0) > 1.0, "FCFS gap {:.2}µs must absorb the backlog", gap(&t, 0));
+        assert!(gap(&t, 2) < gap(&t, 0), "wfq {:.2} vs fcfs {:.2}", gap(&t, 2), gap(&t, 0));
+        assert!(gap(&t, 1) < gap(&t, 0), "priority {:.2} vs fcfs {:.2}", gap(&t, 1), gap(&t, 0));
+        // the aggressor is served under every policy
+        let n: u64 = t.rows[0][6].parse().unwrap();
+        assert!(n > 0);
+        for row in 1..3 {
+            assert_eq!(t.rows[row][6], t.rows[0][6], "aggressor fully served");
+        }
+    }
+}

@@ -6,7 +6,12 @@
 //!   fpgahub all [--config F]           run every experiment
 //!   fpgahub train [--steps N] [--workers W] [--config F]   (pjrt feature)
 //!   fpgahub fetch-demo [--requests N]  NIC-initiated storage fetch demo
-//!   fpgahub multi-tenant               shared-hub contention scenario
+//!   fpgahub multi-tenant [--arb P]     shared-hub contention scenario
+//!                                      (P: fcfs|priority|wfq)
+//!   fpgahub qos                        QoS isolation experiment: aggressor
+//!                                      fetch vs latency-sensitive
+//!                                      collective under every arbitration
+//!                                      policy, with per-tenant reports
 //!   fpgahub info                       platform + artifact status
 
 use fpgahub::anyhow;
@@ -15,11 +20,13 @@ use fpgahub::config::ExperimentConfig;
 use fpgahub::coordinator::{TrainConfig, TrainDriver};
 use fpgahub::expts;
 use fpgahub::runtime::Runtime;
+use fpgahub::runtime_hub::ArbPolicy;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: fpgahub <list|expt NAME|all|train|fetch-demo|multi-tenant|info> [options]\n\
-         options: --config FILE --samples N --steps N --workers N --requests N --no-csv"
+        "usage: fpgahub <list|expt NAME|all|train|fetch-demo|multi-tenant|qos|info> [options]\n\
+         options: --config FILE --samples N --steps N --workers N --requests N\n\
+         \x20        --arb fcfs|priority|wfq --no-csv"
     );
     std::process::exit(2);
 }
@@ -32,6 +39,7 @@ struct Args {
     steps: Option<usize>,
     workers: Option<usize>,
     requests: Option<u64>,
+    arb: Option<ArbPolicy>,
     no_csv: bool,
 }
 
@@ -46,6 +54,7 @@ fn parse_args() -> Args {
         steps: None,
         workers: None,
         requests: None,
+        arb: None,
         no_csv: false,
     };
     let mut positional: Vec<String> = Vec::new();
@@ -64,6 +73,16 @@ fn parse_args() -> Args {
             "--steps" => a.steps = need("--steps").parse().ok(),
             "--workers" => a.workers = need("--workers").parse().ok(),
             "--requests" => a.requests = need("--requests").parse().ok(),
+            "--arb" => {
+                let s = need("--arb");
+                match ArbPolicy::parse(&s) {
+                    Some(p) => a.arb = Some(p),
+                    None => {
+                        eprintln!("unknown arbitration policy '{s}' (fcfs|priority|wfq)");
+                        std::process::exit(2);
+                    }
+                }
+            }
             "--no-csv" => a.no_csv = true,
             other if !other.starts_with("--") => positional.push(other.to_string()),
             other => {
@@ -148,13 +167,37 @@ fn main() -> anyhow::Result<()> {
             let mut mt = fpgahub::apps::MultiTenantConfig {
                 seed: cfg.platform.seed,
                 workers: cfg.platform.workers,
+                policy: a.arb.unwrap_or(cfg.platform.arb.links),
                 ..Default::default()
             };
             if let Some(n) = a.requests {
                 mt.fetches = n;
             }
+            println!("arbitration: {}", mt.policy.name());
             let report = fpgahub::apps::run_multi_tenant(&mt);
             println!("{}", report.render());
+        }
+        "qos" => {
+            let (t, outcomes) = expts::qos::run_with_outcomes(&cfg);
+            println!("{}", t.render());
+            // per-tenant runtime accounts of one shared run (--arb selects
+            // which; default the FCFS baseline)
+            let want = a.arb.unwrap_or(ArbPolicy::Fcfs);
+            if let Some(q) = outcomes.iter().find(|q| q.policy == want) {
+                println!("per-tenant accounts ({} shared run):", q.policy.name());
+                for r in &q.tenant_reports {
+                    println!(
+                        "  tenant {:>2}: {} descriptors, {:.1} MB moved, \
+                         lat p50 {:.2}µs p95 {:.2}µs p99 {:.2}µs",
+                        r.tenant.0,
+                        r.completed,
+                        r.bytes_moved as f64 / 1e6,
+                        r.lat_us.p50,
+                        r.lat_us.p95,
+                        r.lat_us.p99,
+                    );
+                }
+            }
         }
         "info" => {
             println!("platform: {:?}", cfg.platform);

@@ -9,6 +9,17 @@ pub struct Hist {
     sum: f64,
 }
 
+/// Headline quantiles of one histogram, as a plain value (no samples).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Quantiles {
+    pub n: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
 impl Hist {
     pub fn new() -> Self {
         Self::default()
@@ -83,8 +94,28 @@ impl Hist {
     pub fn p50(&mut self) -> f64 {
         self.percentile(50.0)
     }
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
     pub fn p99(&mut self) -> f64 {
         self.percentile(99.0)
+    }
+
+    /// One-shot snapshot of the distribution's headline quantiles (what
+    /// the per-tenant runtime reports carry). Empty histograms yield all
+    /// zeros; a single sample pins every quantile to itself.
+    pub fn quantiles(&mut self) -> Quantiles {
+        if self.samples.is_empty() {
+            return Quantiles::default();
+        }
+        Quantiles {
+            n: self.samples.len() as u64,
+            mean: self.mean(),
+            p50: self.percentile(50.0),
+            p95: self.percentile(95.0),
+            p99: self.percentile(99.0),
+            max: self.max(),
+        }
     }
 
     /// "Fluctuation" as the paper plots it: p99 − p1 band width.
@@ -172,5 +203,48 @@ mod tests {
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.p50(), 0.0);
         assert!(h.is_empty());
+    }
+
+    #[test]
+    fn quantiles_empty_is_all_zero() {
+        let q = Hist::new().quantiles();
+        assert_eq!(q, Quantiles::default());
+        assert_eq!(q.n, 0);
+        assert_eq!(q.p99, 0.0);
+    }
+
+    #[test]
+    fn quantiles_single_sample_pins_everything() {
+        let q = filled(&[42.5]).quantiles();
+        assert_eq!(q.n, 1);
+        assert_eq!(q.mean, 42.5);
+        assert_eq!(q.p50, 42.5);
+        assert_eq!(q.p95, 42.5);
+        assert_eq!(q.p99, 42.5);
+        assert_eq!(q.max, 42.5);
+    }
+
+    #[test]
+    fn quantiles_with_ties_interpolate_to_the_tied_value() {
+        // heavy ties: every interpolation lands on the repeated value
+        let q = filled(&[7.0; 50]).quantiles();
+        assert_eq!(q.p50, 7.0);
+        assert_eq!(q.p95, 7.0);
+        assert_eq!(q.p99, 7.0);
+        // a two-value tie band: p50 sits inside, p99 at the upper band
+        let q2 = filled(&[1.0, 1.0, 1.0, 9.0, 9.0, 9.0]).quantiles();
+        assert_eq!(q2.p50, 5.0, "linear interpolation across the band");
+        assert_eq!(q2.p99, 9.0);
+    }
+
+    #[test]
+    fn quantiles_ordered_on_spread_data() {
+        let mut h = filled(&(0..1000).map(|x| x as f64).collect::<Vec<_>>());
+        let q = h.quantiles();
+        assert!(q.p50 < q.p95 && q.p95 < q.p99 && q.p99 <= q.max);
+        assert_eq!(q.n, 1000);
+        assert!((q.p95 - 949.05).abs() < 1e-9);
+        // snapshot matches the mutable accessors
+        assert_eq!(q.p95, h.p95());
     }
 }

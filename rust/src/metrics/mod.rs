@@ -6,6 +6,6 @@ pub mod hist;
 pub mod report;
 pub mod series;
 
-pub use hist::Hist;
+pub use hist::{Hist, Quantiles};
 pub use report::{write_csv, Table};
 pub use series::Series;

@@ -18,10 +18,357 @@
 //! Requests are made *at event time* by the runtime, so FIFO order across
 //! competing workloads is exactly simulator event order — which is what
 //! makes cross-tenant contention observable at all.
+//!
+//! Since ISSUE 2 the *order* in which parked requests are granted is a
+//! swappable policy: every shared resource owns an [`Arbiter`]
+//! ([`ArbPolicy::Fcfs`] reproduces the pre-arbitration `busy_until`
+//! semantics bit-for-bit; [`ArbPolicy::StrictPriority`] and the
+//! deficit-round-robin [`ArbPolicy::WeightedFair`] turn contention from an
+//! observable into a controllable), and every descriptor carries a
+//! [`QosSpec`] (tenant, service class, weight) that the arbiter reads.
+
+use std::collections::VecDeque;
 
 use crate::nvme::queue::{CompletionEntry, NvmeCommand, NvmeOp, QueueLocation, QueuePair};
 use crate::nvme::ssd::SsdArray;
 use crate::sim::time::{ns_f, Ps};
+
+// ------------------------------------------------------------- tenancy ----
+
+/// A workload identity for accounting and arbitration. Tenant 0 is the
+/// implicit "system" tenant every unlabeled descriptor belongs to.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(pub u32);
+
+/// Highest-urgency service class (never queued behind lower classes).
+pub const CLASS_REALTIME: u8 = 0;
+/// Default service class.
+pub const CLASS_NORMAL: u8 = 1;
+/// Throughput-oriented background class.
+pub const CLASS_BULK: u8 = 3;
+/// Service classes are clamped to `0..NUM_CLASSES`.
+pub const NUM_CLASSES: usize = 4;
+
+/// Per-descriptor QoS label: who is asking, how urgent, and what share.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QosSpec {
+    pub tenant: TenantId,
+    /// strict-priority class, 0 = most urgent (see [`CLASS_REALTIME`])
+    pub class: u8,
+    /// weighted-fair share (deficit quantum multiplier), ≥ 1
+    pub weight: u32,
+}
+
+impl Default for QosSpec {
+    fn default() -> Self {
+        QosSpec { tenant: TenantId(0), class: CLASS_NORMAL, weight: 1 }
+    }
+}
+
+impl QosSpec {
+    pub fn new(tenant: TenantId, class: u8, weight: u32) -> Self {
+        QosSpec { tenant, class, weight: weight.max(1) }
+    }
+
+    /// A latency-sensitive tenant: realtime class, heavyweight fair share.
+    pub fn latency_sensitive(tenant: TenantId) -> Self {
+        QosSpec::new(tenant, CLASS_REALTIME, 8)
+    }
+
+    /// A background/bulk tenant: lowest class, unit fair share.
+    pub fn bulk(tenant: TenantId) -> Self {
+        QosSpec::new(tenant, CLASS_BULK, 1)
+    }
+}
+
+// ---------------------------------------------------------- arbitration ----
+
+/// One parked request as the arbiter sees it: QoS label and grant cost in
+/// the resource's own units (bytes for links, picoseconds for core pools,
+/// one command for NVMe rings). Arrival order is the order of
+/// [`Arbiter::push`] calls — simulator event order — which every shipped
+/// policy preserves within its queues.
+#[derive(Clone, Copy, Debug)]
+pub struct GrantMeta {
+    pub qos: QosSpec,
+    pub cost: u64,
+}
+
+/// Selectable arbitration policy for a shared resource.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ArbPolicy {
+    /// First-come-first-served in simulator event order — exactly the
+    /// pre-arbitration `busy_until` chain (regression-pinned).
+    #[default]
+    Fcfs,
+    /// Lower [`QosSpec::class`] always granted first; FIFO within a class.
+    StrictPriority,
+    /// Deficit round robin across tenants, shares ∝ [`QosSpec::weight`].
+    WeightedFair,
+}
+
+impl ArbPolicy {
+    /// Every shipped policy, in reporting order.
+    pub const ALL: [ArbPolicy; 3] =
+        [ArbPolicy::Fcfs, ArbPolicy::StrictPriority, ArbPolicy::WeightedFair];
+
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<ArbPolicy> {
+        match s {
+            "fcfs" => Some(ArbPolicy::Fcfs),
+            "priority" | "strict-priority" => Some(ArbPolicy::StrictPriority),
+            "wfq" | "weighted-fair" | "drr" => Some(ArbPolicy::WeightedFair),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArbPolicy::Fcfs => "fcfs",
+            ArbPolicy::StrictPriority => "priority",
+            ArbPolicy::WeightedFair => "wfq",
+        }
+    }
+
+    /// Instantiate the arbiter for one resource.
+    pub fn build(&self) -> Box<dyn Arbiter> {
+        match self {
+            ArbPolicy::Fcfs => Box::new(Fcfs::new()),
+            ArbPolicy::StrictPriority => Box::new(StrictPriority::new()),
+            ArbPolicy::WeightedFair => Box::new(WeightedFair::new()),
+        }
+    }
+}
+
+/// Per-resource-kind policy selection (what `PlatformConfig` carries).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResourcePolicies {
+    pub links: ArbPolicy,
+    pub pools: ArbPolicy,
+    pub nvme: ArbPolicy,
+}
+
+impl ResourcePolicies {
+    /// The same policy on every resource kind.
+    pub fn uniform(policy: ArbPolicy) -> Self {
+        ResourcePolicies { links: policy, pools: policy, nvme: policy }
+    }
+}
+
+/// The pluggable grant-ordering policy of one shared resource. Parked
+/// requests are identified by a slot token into the runtime's waiter slab;
+/// the arbiter only orders `(meta, slot)` pairs — it never owns a
+/// continuation, so swapping policies cannot leak or duplicate work.
+pub trait Arbiter: std::fmt::Debug {
+    fn policy(&self) -> ArbPolicy;
+
+    /// Eager arbiters never park: requests reserve the resource at arrival
+    /// in event order (the FCFS `busy_until` chain). Non-eager arbiters
+    /// park every request that finds the resource busy or contended and
+    /// grant from [`Arbiter::pop`] when it frees.
+    fn eager(&self) -> bool {
+        false
+    }
+
+    /// Park one request.
+    fn push(&mut self, meta: GrantMeta, slot: u32);
+
+    /// Choose the next request to grant, or `None` when nothing is parked.
+    fn pop(&mut self) -> Option<(GrantMeta, u32)>;
+
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// FCFS: grants in arrival order. Marked [`Arbiter::eager`], so on links
+/// and pools it short-circuits to the pre-arbitration reservation path;
+/// NVMe rings (which must park on a full ring regardless of policy) use
+/// the queue, which pops in exactly the order the old `VecDeque` did.
+#[derive(Debug, Default)]
+pub struct Fcfs {
+    q: VecDeque<(GrantMeta, u32)>,
+}
+
+impl Fcfs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Arbiter for Fcfs {
+    fn policy(&self) -> ArbPolicy {
+        ArbPolicy::Fcfs
+    }
+
+    fn eager(&self) -> bool {
+        true
+    }
+
+    fn push(&mut self, meta: GrantMeta, slot: u32) {
+        self.q.push_back((meta, slot));
+    }
+
+    fn pop(&mut self) -> Option<(GrantMeta, u32)> {
+        self.q.pop_front()
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+}
+
+/// Strict priority: class 0 drains before class 1 before class 2…; FIFO
+/// within a class (never inverts same-class arrival order). Starvation of
+/// lower classes under sustained high-class load is the documented
+/// trade-off.
+#[derive(Debug, Default)]
+pub struct StrictPriority {
+    classes: [VecDeque<(GrantMeta, u32)>; NUM_CLASSES],
+    len: usize,
+}
+
+impl StrictPriority {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Arbiter for StrictPriority {
+    fn policy(&self) -> ArbPolicy {
+        ArbPolicy::StrictPriority
+    }
+
+    fn push(&mut self, meta: GrantMeta, slot: u32) {
+        let class = (meta.qos.class as usize).min(NUM_CLASSES - 1);
+        self.classes[class].push_back((meta, slot));
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<(GrantMeta, u32)> {
+        for q in self.classes.iter_mut() {
+            if let Some(item) = q.pop_front() {
+                self.len -= 1;
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+/// Deficit round robin across tenants: each backlogged tenant holds a FIFO
+/// queue and a byte (or cost-unit) deficit; a visit at the front of the
+/// round credits `weight × scale` and serves while the head is affordable.
+/// `scale` adapts to the largest cost seen so every head is affordable
+/// within ~one visit per unit weight — proportionality only depends on the
+/// *ratio* of quanta, which stays `weight_i : weight_j`.
+#[derive(Debug)]
+pub struct WeightedFair {
+    queues: Vec<TenantQueue>,
+    /// round order: indices into `queues` with non-empty backlogs
+    active: VecDeque<usize>,
+    len: usize,
+    /// adaptive quantum unit: max grant cost seen so far (≥ 1)
+    scale: u64,
+}
+
+#[derive(Debug)]
+struct TenantQueue {
+    tenant: TenantId,
+    weight: u32,
+    q: VecDeque<(GrantMeta, u32)>,
+    deficit: u64,
+    /// whether this queue has received its credit for the current visit at
+    /// the front of the round (credited once per visit, not once per grant)
+    credited: bool,
+}
+
+impl Default for WeightedFair {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WeightedFair {
+    pub fn new() -> Self {
+        WeightedFair { queues: Vec::new(), active: VecDeque::new(), len: 0, scale: 1 }
+    }
+}
+
+impl Arbiter for WeightedFair {
+    fn policy(&self) -> ArbPolicy {
+        ArbPolicy::WeightedFair
+    }
+
+    fn push(&mut self, meta: GrantMeta, slot: u32) {
+        self.scale = self.scale.max(meta.cost.max(1));
+        let idx = match self.queues.iter().position(|tq| tq.tenant == meta.qos.tenant) {
+            Some(i) => i,
+            None => {
+                self.queues.push(TenantQueue {
+                    tenant: meta.qos.tenant,
+                    weight: meta.qos.weight.max(1),
+                    q: VecDeque::new(),
+                    deficit: 0,
+                    credited: false,
+                });
+                self.queues.len() - 1
+            }
+        };
+        // latest label wins if a tenant changes its weight mid-run
+        self.queues[idx].weight = meta.qos.weight.max(1);
+        if self.queues[idx].q.is_empty() {
+            // re-entering the round: no hoarded credit from the idle period
+            self.queues[idx].deficit = 0;
+            self.queues[idx].credited = false;
+            self.active.push_back(idx);
+        }
+        self.queues[idx].q.push_back((meta, slot));
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<(GrantMeta, u32)> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            let idx = *self.active.front().expect("len > 0 implies an active queue");
+            let tq = &mut self.queues[idx];
+            let cost = tq.q.front().expect("active queues are non-empty").0.cost.max(1);
+            if !tq.credited {
+                // one credit per visit at the front of the round
+                tq.deficit += tq.weight as u64 * self.scale;
+                tq.credited = true;
+            }
+            if tq.deficit < cost {
+                // deficit exhausted: the turn ends, credit carries over
+                tq.credited = false;
+                let i = self.active.pop_front().expect("front exists");
+                self.active.push_back(i);
+                continue;
+            }
+            tq.deficit -= cost;
+            let item = tq.q.pop_front().expect("head exists");
+            if tq.q.is_empty() {
+                tq.deficit = 0;
+                tq.credited = false;
+                self.active.pop_front();
+            }
+            self.len -= 1;
+            return Some(item);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
 
 /// A bandwidth-serialized FIFO resource (wire, PCIe link, streaming engine).
 #[derive(Clone, Debug)]
@@ -241,5 +588,116 @@ mod tests {
         assert!(b.arrive());
         assert!(b.released);
         assert!(b.arrive(), "late arrivals pass through");
+    }
+
+    // ------------------------------------------------------- arbiters ----
+
+    fn meta(tenant: u32, class: u8, weight: u32, cost: u64) -> GrantMeta {
+        GrantMeta { qos: QosSpec::new(TenantId(tenant), class, weight), cost }
+    }
+
+    #[test]
+    fn policy_parse_roundtrips() {
+        for p in ArbPolicy::ALL {
+            assert_eq!(ArbPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(ArbPolicy::parse("weighted-fair"), Some(ArbPolicy::WeightedFair));
+        assert_eq!(ArbPolicy::parse("strict-priority"), Some(ArbPolicy::StrictPriority));
+        assert_eq!(ArbPolicy::parse("lifo"), None);
+        assert_eq!(ArbPolicy::default(), ArbPolicy::Fcfs);
+    }
+
+    #[test]
+    fn fcfs_is_eager_and_fifo() {
+        let mut a = ArbPolicy::Fcfs.build();
+        assert!(a.eager());
+        for i in 0..5u64 {
+            a.push(meta(i as u32 % 2, 0, 1, 100), i as u32);
+        }
+        for i in 0..5u32 {
+            assert_eq!(a.pop().unwrap().1, i);
+        }
+        assert!(a.pop().is_none());
+    }
+
+    #[test]
+    fn strict_priority_orders_by_class_fifo_within() {
+        let mut a = ArbPolicy::StrictPriority.build();
+        assert!(!a.eager());
+        a.push(meta(1, CLASS_BULK, 1, 10), 0);
+        a.push(meta(2, CLASS_REALTIME, 1, 10), 1);
+        a.push(meta(1, CLASS_BULK, 1, 10), 2);
+        a.push(meta(2, CLASS_REALTIME, 1, 10), 3);
+        let order: Vec<u32> = std::iter::from_fn(|| a.pop().map(|(_, s)| s)).collect();
+        assert_eq!(order, vec![1, 3, 0, 2], "realtime first, FIFO within class");
+    }
+
+    #[test]
+    fn strict_priority_clamps_out_of_range_class() {
+        let mut a = StrictPriority::new();
+        a.push(meta(1, 250, 1, 1), 7);
+        assert_eq!(a.pop().unwrap().1, 7);
+    }
+
+    #[test]
+    fn weighted_fair_shares_track_weights() {
+        // two fully-backlogged tenants with equal costs: grants over a long
+        // horizon split ~ weight 3 : 1
+        let mut a = WeightedFair::new();
+        let mut slot = 0u32;
+        for i in 0..400u64 {
+            a.push(meta(1, 1, 3, 1000), slot);
+            slot += 1;
+            a.push(meta(2, 1, 1, 1000), slot);
+            slot += 1;
+        }
+        let mut served = [0u64; 2];
+        for _ in 0..400 {
+            let (m, _) = a.pop().unwrap();
+            served[(m.qos.tenant.0 - 1) as usize] += 1;
+        }
+        let ratio = served[0] as f64 / served[1] as f64;
+        assert!((2.5..3.5).contains(&ratio), "3:1 weights served {served:?}");
+    }
+
+    #[test]
+    fn weighted_fair_drains_everything_pushed() {
+        let mut a = WeightedFair::new();
+        let mut pushed_cost = 0u64;
+        for i in 0..50u64 {
+            let c = 1 + (i * 37) % 5000;
+            pushed_cost += c;
+            a.push(meta((i % 7) as u32, 1, 1 + (i % 3) as u32, c), i as u32);
+        }
+        let mut popped_cost = 0u64;
+        let mut seen = std::collections::BTreeSet::new();
+        while let Some((m, slot)) = a.pop() {
+            popped_cost += m.cost;
+            assert!(seen.insert(slot), "slot granted twice");
+        }
+        assert_eq!(seen.len(), 50);
+        assert_eq!(popped_cost, pushed_cost, "DRR conserves cost");
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn weighted_fair_small_tenant_not_starved_behind_elephants() {
+        // an elephant backlog (tenant 2) and one mouse (tenant 1): the
+        // mouse must be granted within the first DRR round, not after the
+        // whole elephant queue
+        let mut a = WeightedFair::new();
+        for i in 0..10u64 {
+            a.push(meta(2, CLASS_BULK, 1, 65_536), i as u32);
+        }
+        a.push(meta(1, CLASS_REALTIME, 8, 2_048), 99);
+        let mut pos = None;
+        for k in 0..11 {
+            let (_, slot) = a.pop().unwrap();
+            if slot == 99 {
+                pos = Some(k);
+                break;
+            }
+        }
+        assert!(pos.unwrap() <= 2, "mouse granted at position {pos:?}");
     }
 }

@@ -1,9 +1,12 @@
 //! Small self-contained utilities: deterministic RNG, a mini property-test
-//! harness (the environment has no `proptest`; see DESIGN.md §6), and
-//! fixed-point helpers used by the switch-aggregation path.
+//! harness (the environment has no `proptest`; see DESIGN.md §6), a slab
+//! arena for the runtime's parked-waiter queues, and fixed-point helpers
+//! used by the switch-aggregation path.
 
 pub mod fixed;
 pub mod quickcheck;
 pub mod rng;
+pub mod slab;
 
 pub use rng::Rng;
+pub use slab::Slab;

@@ -1,0 +1,132 @@
+//! A minimal slab allocator: stable `u32` keys into a reusable arena.
+//!
+//! The runtime parks in-flight descriptors here while they wait for an
+//! arbiter grant (`runtime_hub::sched`): arbiter queues then carry a 4-byte
+//! slot token instead of moving the whole continuation through a fresh
+//! heap allocation on every park/wake, and freed slots are recycled so a
+//! long run's waiter churn settles into a fixed arena.
+
+/// A vec-backed slab with a free list. Keys are stable until `remove`.
+#[derive(Debug)]
+pub struct Slab<T> {
+    entries: Vec<Option<T>>,
+    free: Vec<u32>,
+    len: usize,
+}
+
+// not derived: a derived Default would demand `T: Default` it never uses
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Self {
+        Slab { entries: Vec::new(), free: Vec::new(), len: 0 }
+    }
+
+    /// Store `value`, returning its slot key. Reuses freed slots.
+    pub fn insert(&mut self, value: T) -> u32 {
+        self.len += 1;
+        match self.free.pop() {
+            Some(key) => {
+                debug_assert!(self.entries[key as usize].is_none());
+                self.entries[key as usize] = Some(value);
+                key
+            }
+            None => {
+                self.entries.push(Some(value));
+                (self.entries.len() - 1) as u32
+            }
+        }
+    }
+
+    /// Take the value out of `key`, freeing the slot for reuse.
+    ///
+    /// Panics on a vacant or out-of-range key — a waiter token is granted
+    /// exactly once, so a double-remove is a scheduling bug.
+    pub fn remove(&mut self, key: u32) -> T {
+        let v = self.entries[key as usize].take().expect("slab slot already vacated");
+        self.free.push(key);
+        self.len -= 1;
+        v
+    }
+
+    pub fn get(&self, key: u32) -> Option<&T> {
+        self.entries.get(key as usize).and_then(|e| e.as_ref())
+    }
+
+    /// Occupied slots.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Total slots ever allocated (occupied + reusable).
+    pub fn capacity(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_roundtrip() {
+        let mut s = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.remove(a), "a");
+        assert_eq!(s.remove(b), "b");
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn slots_are_recycled() {
+        let mut s = Slab::new();
+        let a = s.insert(1u64);
+        let _b = s.insert(2);
+        s.remove(a);
+        let c = s.insert(3);
+        assert_eq!(c, a, "freed slot must be reused");
+        assert_eq!(s.capacity(), 2, "arena does not grow while slots are free");
+        assert_eq!(*s.get(c).unwrap(), 3);
+    }
+
+    #[test]
+    fn get_on_vacant_is_none() {
+        let mut s = Slab::new();
+        let a = s.insert(7u32);
+        s.remove(a);
+        assert!(s.get(a).is_none());
+        assert!(s.get(99).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "already vacated")]
+    fn double_remove_panics() {
+        let mut s = Slab::new();
+        let a = s.insert(1u8);
+        s.remove(a);
+        s.remove(a);
+    }
+
+    #[test]
+    fn heavy_churn_keeps_arena_bounded() {
+        let mut s = Slab::new();
+        for round in 0..100u32 {
+            let keys: Vec<u32> = (0..8).map(|i| s.insert(round * 8 + i)).collect();
+            for k in keys {
+                s.remove(k);
+            }
+        }
+        assert!(s.capacity() <= 8, "arena grew to {}", s.capacity());
+        assert!(s.is_empty());
+    }
+}
