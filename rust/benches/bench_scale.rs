@@ -1,0 +1,73 @@
+//! Fabric scale-out bench: hierarchical allreduce at 1/2/4/8 hubs and the
+//! sharded cross-hub fetch, reported with wall-clock *and* engine
+//! throughput (events/s, sim-time/wall-time). `-- --json BENCH_scale.json`
+//! persists the numbers for the cross-PR perf trajectory.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use fpgahub::apps::allreduce::{HierConfig, HierarchicalAllreduce};
+use fpgahub::apps::{run_sharded_fetch, ShardedFetchConfig};
+use fpgahub::bench_harness::{banner, bench_sim, SimMetrics};
+use fpgahub::metrics::Hist;
+use fpgahub::runtime_hub::{Fabric, QosSpec};
+use fpgahub::sim::time::to_us;
+use fpgahub::sim::US;
+
+/// One measured fabric run: R hierarchical rounds at the given scale.
+fn allreduce_rounds(hubs: usize, rounds: u64) -> (SimMetrics, f64) {
+    let mut fab = Fabric::new(hubs);
+    let app = HierarchicalAllreduce::new(
+        &mut fab,
+        HierConfig {
+            hubs,
+            workers_per_hub: 8,
+            chunk_lanes: 512,
+            skew_us: 0.2,
+            seed: 7,
+            qos: QosSpec::default(),
+        },
+    );
+    let total = app.total_workers();
+    let hist = Rc::new(RefCell::new(Hist::new()));
+    for r in 0..rounds {
+        let t0 = r * 50 * US;
+        let chunks: Vec<Vec<f32>> = vec![vec![1.0f32; 512]; total];
+        let h = hist.clone();
+        app.schedule_round(&mut fab, t0, &chunks, move |_, worst| {
+            h.borrow_mut().record(to_us(worst - t0));
+        });
+    }
+    let stats = fab.run();
+    let mean = hist.borrow_mut().mean();
+    (SimMetrics { events: stats.events, sim_ps: stats.sim_elapsed }, mean)
+}
+
+fn main() {
+    banner("fabric scale-out: hierarchical allreduce round times");
+    for hubs in [1usize, 2, 4, 8] {
+        let (_, mean) = allreduce_rounds(hubs, 40);
+        println!("{hubs:>2} hubs ({:>3} workers): {mean:.2}µs/round", hubs * 8);
+    }
+
+    banner("fabric scale-out: engine throughput per hub count");
+    for hubs in [1usize, 2, 4, 8] {
+        bench_sim(&format!("scale/allreduce_{hubs}hubs"), 2, 10, || {
+            allreduce_rounds(hubs, 40).0
+        });
+    }
+
+    banner("sharded fetch: 4 hubs, partitioned SSD arrays");
+    bench_sim("scale/sharded_fetch_4hubs", 2, 10, || {
+        let r = run_sharded_fetch(&ShardedFetchConfig {
+            hubs: 4,
+            ssds_per_hub: 4,
+            requests: 400,
+            ..Default::default()
+        });
+        assert_eq!(r.requests(), 400);
+        SimMetrics { events: r.run.events, sim_ps: r.run.sim_elapsed }
+    });
+
+    fpgahub::bench_harness::finish().expect("bench json");
+}

@@ -10,18 +10,20 @@
 //! (`apps::multi_tenant`), which the old closed-form `round()` arithmetic
 //! could never show.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
 use crate::constants;
 use crate::hub::collective::CollectiveEngine;
 use crate::hub::transport::FpgaTransport;
 use crate::net::p4::{P4Error, P4Switch};
-use crate::net::packet::packetize;
-use crate::runtime_hub::{submit_on, HubRuntime, LinkId, QosSpec, TransferDesc};
+use crate::net::packet::{packetize, HEADER_BYTES};
+use crate::runtime_hub::{
+    submit_on, BarrierId, Fabric, HubId, HubRuntime, HubState, LinkId, QosSpec, TransferDesc,
+};
 use crate::sim::time::{ns_f, us_f, Ps};
 use crate::sim::Sim;
-use crate::util::Rng;
+use crate::util::{fixed, Rng};
 
 /// One round's outcome: the aggregated vector + per-worker completion times.
 #[derive(Clone, Debug)]
@@ -254,6 +256,333 @@ impl FpgaSwitchAllreduce {
     }
 }
 
+// ------------------------------------------ hierarchical (multi-hub) ----
+
+/// Label block size per hierarchical round (uplink/ring/broadcast labels
+/// of round *r* live in `r * STRIDE ..`).
+pub const HIER_LABEL_STRIDE: u64 = 1_000_000;
+/// Label offset of ring-step descriptors within a round's block.
+const RING_LABEL: u64 = 10_000;
+/// Label offset of broadcast descriptors within a round's block.
+const BCAST_LABEL: u64 = 20_000;
+
+/// Shape of a [`HierarchicalAllreduce`]: H hubs × W workers each.
+#[derive(Clone, Copy, Debug)]
+pub struct HierConfig {
+    pub hubs: usize,
+    pub workers_per_hub: u32,
+    pub chunk_lanes: usize,
+    /// per-worker arrival spread before the collective (µs)
+    pub skew_us: f64,
+    pub seed: u64,
+    /// QoS identity every round descriptor carries
+    pub qos: QosSpec,
+}
+
+impl Default for HierConfig {
+    fn default() -> Self {
+        HierConfig {
+            hubs: 2,
+            workers_per_hub: 4,
+            chunk_lanes: 512,
+            skew_us: 0.0,
+            seed: 1,
+            qos: QosSpec::default(),
+        }
+    }
+}
+
+/// Live state of one hierarchical round, filled in as events complete.
+pub struct HierRoundState {
+    pub t0: Ps,
+    /// decoded full sum (first hub to finish the ring writes it; the
+    /// others must agree bit-for-bit)
+    pub values: Vec<f32>,
+    /// per worker (`hub * W + w`): when the broadcast reached it
+    pub done_at: Vec<Ps>,
+    pub saturated: bool,
+    pub completed: u32,
+    on_done: Option<Box<dyn FnOnce(&mut Sim, Ps)>>,
+}
+
+/// Mutable per-round numerics: per-hub fixed-point accumulators and the
+/// intra-hub arrival counts.
+struct HierAccum {
+    acc: Vec<Vec<i64>>,
+    arrived: Vec<u32>,
+}
+
+/// Everything the round's event closures share.
+struct HierEnv {
+    hubs: usize,
+    workers: usize,
+    base: u64,
+    qos: QosSpec,
+    tp: Ps,
+    chunk_bytes: u64,
+    ring_bytes: u64,
+    /// cross-hub rendezvous after the intra-hub reduce (unused for H = 1)
+    bar: BarrierId,
+    /// ring link of hub h: `h → (h+1) mod H`
+    ring_links: Vec<LinkId>,
+    egress: Vec<LinkId>,
+    hub_states: Vec<Rc<RefCell<HubState>>>,
+    net: Rc<RefCell<HubState>>,
+    num: RefCell<HierAccum>,
+    round: Rc<RefCell<HierRoundState>>,
+}
+
+/// The paper's collective, scaled out (ISSUE 3): H hubs × W workers run
+/// one allreduce as **intra-hub reduce → inter-hub ring → broadcast**.
+///
+/// Phase 1: every worker's chunk serializes into its hub's shared ingress
+/// port and is folded into the hub's fixed-point accumulator — intra-hub
+/// contention is the port FIFO. Phase 2: after a cross-hub barrier, the
+/// hubs exchange partials around the ring (H−1 steps of i64 lanes on the
+/// directed interconnect links, each step chained on the previous
+/// receive). Phase 3: each hub fans the decoded sum out to its workers
+/// over its shared egress port. The numerics are real (fixed-point encode
+/// → i64 adds → decode), so contention can delay but never corrupt a
+/// round.
+pub struct HierarchicalAllreduce {
+    pub cfg: HierConfig,
+    ingress: Vec<LinkId>,
+    egress: Vec<LinkId>,
+    tp: Ps,
+    rng: Rc<RefCell<Rng>>,
+    rounds_scheduled: Cell<u64>,
+}
+
+impl HierarchicalAllreduce {
+    /// Register per-hub ingress/egress ports on `fab` (which must have at
+    /// least `cfg.hubs` hubs).
+    pub fn new(fab: &mut Fabric, cfg: HierConfig) -> Self {
+        assert!(cfg.hubs >= 1 && cfg.hubs <= fab.num_hubs(), "fabric too small");
+        assert!(cfg.workers_per_hub >= 1);
+        assert!(cfg.chunk_lanes >= 1);
+        let hop = ns_f(constants::ETH_HOP_NS);
+        let ingress = (0..cfg.hubs)
+            .map(|h| fab.add_link(HubId(h as u32), "hub-ingress", constants::ETH_GBPS, hop))
+            .collect();
+        let egress = (0..cfg.hubs)
+            .map(|h| fab.add_link(HubId(h as u32), "hub-egress", constants::ETH_GBPS, hop))
+            .collect();
+        HierarchicalAllreduce {
+            cfg,
+            ingress,
+            egress,
+            tp: FpgaTransport::new(1, 64).pipeline_latency(),
+            rng: Rc::new(RefCell::new(Rng::new(cfg.seed))),
+            rounds_scheduled: Cell::new(0),
+        }
+    }
+
+    pub fn total_workers(&self) -> usize {
+        self.cfg.hubs * self.cfg.workers_per_hub as usize
+    }
+
+    /// One transport traversal's pipeline latency.
+    pub fn transport_pipeline(&self) -> Ps {
+        self.tp
+    }
+
+    /// Hub `h`'s shared ingress port — exported so co-tenants can contend.
+    pub fn ingress(&self, h: usize) -> LinkId {
+        self.ingress[h]
+    }
+
+    /// Hub `h`'s shared egress port.
+    pub fn egress(&self, h: usize) -> LinkId {
+        self.egress[h]
+    }
+
+    /// Schedule one round at `t0`; `chunks[hub * W + w]` is worker w's
+    /// contribution. `on_done` fires when the last worker anywhere holds
+    /// the result (with that worst time).
+    pub fn schedule_round(
+        &self,
+        fab: &mut Fabric,
+        t0: Ps,
+        chunks: &[Vec<f32>],
+        on_done: impl FnOnce(&mut Sim, Ps) + 'static,
+    ) -> Rc<RefCell<HierRoundState>> {
+        let hubs = self.cfg.hubs;
+        let workers = self.cfg.workers_per_hub as usize;
+        let lanes = self.cfg.chunk_lanes;
+        assert_eq!(chunks.len(), hubs * workers, "one chunk per worker");
+        assert!(chunks.iter().all(|c| c.len() == lanes), "uniform chunk width");
+
+        let base = self.rounds_scheduled.get() * HIER_LABEL_STRIDE;
+        self.rounds_scheduled.set(self.rounds_scheduled.get() + 1);
+
+        let round = Rc::new(RefCell::new(HierRoundState {
+            t0,
+            values: Vec::new(),
+            done_at: vec![0; hubs * workers],
+            saturated: false,
+            completed: 0,
+            on_done: Some(Box::new(on_done)),
+        }));
+
+        let bar = if hubs > 1 { fab.add_fabric_barrier(hubs) } else { 0 };
+        let ring_links = (0..hubs)
+            .map(|h| {
+                if hubs > 1 {
+                    fab.hub_link(HubId(h as u32), HubId(((h + 1) % hubs) as u32))
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let env = Rc::new(HierEnv {
+            hubs,
+            workers,
+            base,
+            qos: self.cfg.qos,
+            tp: self.tp,
+            chunk_bytes: (lanes * 4) as u64,
+            ring_bytes: (lanes * 8) as u64 + HEADER_BYTES,
+            bar,
+            ring_links,
+            egress: self.egress.clone(),
+            hub_states: (0..hubs).map(|h| fab.state(HubId(h as u32))).collect(),
+            net: fab.net_state(),
+            num: RefCell::new(HierAccum {
+                acc: vec![vec![0i64; lanes]; hubs],
+                arrived: vec![0; hubs],
+            }),
+            round: round.clone(),
+        });
+
+        for hub in 0..hubs {
+            for w in 0..workers {
+                let gw = hub * workers + w;
+                let skew = us_f(self.rng.borrow_mut().f64() * self.cfg.skew_us);
+                let desc = TransferDesc::with_label(base + gw as u64)
+                    .qos(self.cfg.qos)
+                    .delay(skew + self.tp)
+                    .xfer(self.ingress[hub], (lanes * 4) as u64 + HEADER_BYTES);
+                let chunk = chunks[gw].clone();
+                let env2 = env.clone();
+                fab.submit(HubId(hub as u32), t0, desc, move |sim, _| {
+                    hier_chunk_arrived(env2, sim, hub, &chunk);
+                });
+            }
+        }
+        round
+    }
+
+    /// Blocking convenience: schedule one round, drain the fabric, return
+    /// the outcome.
+    pub fn round(&self, fab: &mut Fabric, t0: Ps, chunks: &[Vec<f32>]) -> RoundOutcome {
+        let handle = self.schedule_round(fab, t0, chunks, |_, _| {});
+        fab.run();
+        let rs = handle.borrow();
+        assert_eq!(rs.completed as usize, self.total_workers(), "round did not complete");
+        RoundOutcome {
+            values: rs.values.clone(),
+            done_at: rs.done_at.clone(),
+            saturated: rs.saturated,
+        }
+    }
+}
+
+/// One worker's chunk landed on its hub: fold it into the hub accumulator;
+/// the last arrival of the hub starts the ring (or, single-hub, the
+/// broadcast).
+fn hier_chunk_arrived(env: Rc<HierEnv>, sim: &mut Sim, hub: usize, chunk: &[f32]) {
+    let ready = {
+        let mut num = env.num.borrow_mut();
+        let (enc, sat) = fixed::encode_slice(chunk, fixed::DEFAULT_SHIFT);
+        for (a, e) in num.acc[hub].iter_mut().zip(enc) {
+            *a += e as i64;
+        }
+        if sat {
+            env.round.borrow_mut().saturated = true;
+        }
+        num.arrived[hub] += 1;
+        num.arrived[hub] as usize == env.workers
+    };
+    if ready {
+        let now = sim.now();
+        if env.hubs == 1 {
+            hier_broadcast(env, sim, now, hub);
+        } else {
+            let partial = env.num.borrow().acc[hub].clone();
+            hier_ring_send(env, sim, now, hub, 0, partial);
+        }
+    }
+}
+
+/// Hub `h` sends `msg` (an i64 partial) around the ring at `step`. Step 0
+/// first rendezvous on the cross-hub barrier; the receive of step *s*
+/// chains the send of step *s+1*, and the last receive starts that hub's
+/// broadcast.
+fn hier_ring_send(env: Rc<HierEnv>, sim: &mut Sim, at: Ps, h: usize, step: usize, msg: Vec<i64>) {
+    let mut desc = TransferDesc::with_label(env.base + RING_LABEL + (step * env.hubs + h) as u64)
+        .qos(env.qos);
+    if step == 0 {
+        desc = desc.barrier(env.bar);
+    }
+    desc = desc.xfer(env.ring_links[h], env.ring_bytes);
+    let net = env.net.clone();
+    let env2 = env.clone();
+    submit_on(&net, sim, at, desc, move |s, t| {
+        let dst = (h + 1) % env2.hubs;
+        {
+            let mut num = env2.num.borrow_mut();
+            for (a, e) in num.acc[dst].iter_mut().zip(&msg) {
+                *a += *e;
+            }
+        }
+        if step < env2.hubs - 2 {
+            hier_ring_send(env2, s, t, dst, step + 1, msg);
+        } else {
+            hier_broadcast(env2, s, t, dst);
+        }
+    });
+}
+
+/// Hub `hub` holds the full sum: decode it and fan it out to the hub's
+/// workers over the shared egress port.
+fn hier_broadcast(env: Rc<HierEnv>, sim: &mut Sim, at: Ps, hub: usize) {
+    let values = {
+        let num = env.num.borrow();
+        fixed::decode_slice(&num.acc[hub], fixed::DEFAULT_SHIFT)
+    };
+    {
+        let mut rs = env.round.borrow_mut();
+        if rs.values.is_empty() {
+            rs.values = values;
+        } else {
+            debug_assert_eq!(rs.values, values, "ring must converge identically");
+        }
+    }
+    let total = (env.hubs * env.workers) as u32;
+    for w in 0..env.workers {
+        let gw = hub * env.workers + w;
+        let desc = TransferDesc::with_label(env.base + BCAST_LABEL + gw as u64)
+            .qos(env.qos)
+            .xfer(env.egress[hub], env.chunk_bytes + HEADER_BYTES)
+            .delay(env.tp);
+        let round = env.round.clone();
+        let st = env.hub_states[hub].clone();
+        submit_on(&st, sim, at, desc, move |s, t| {
+            let mut rs = round.borrow_mut();
+            rs.done_at[gw] = t;
+            rs.completed += 1;
+            if rs.completed == total {
+                let worst = *rs.done_at.iter().max().expect("non-empty");
+                let cb = rs.on_done.take();
+                drop(rs);
+                if let Some(cb) = cb {
+                    cb(s, worst);
+                }
+            }
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -334,5 +663,106 @@ mod tests {
         // 4 uplink descriptors + 4 downlink descriptors, multiple stages each
         assert!(stats.events >= 16, "only {} events", stats.events);
         assert_eq!(handle.borrow().completed, 4);
+    }
+
+    // ---------------------------------------------- hierarchical ----
+
+    fn hier(hubs: usize, workers: u32, lanes: usize, skew: f64) -> (Fabric, HierarchicalAllreduce) {
+        let mut fab = Fabric::new(hubs);
+        let cfg = HierConfig {
+            hubs,
+            workers_per_hub: workers,
+            chunk_lanes: lanes,
+            skew_us: skew,
+            seed: 3,
+            qos: QosSpec::default(),
+        };
+        let app = HierarchicalAllreduce::new(&mut fab, cfg);
+        (fab, app)
+    }
+
+    #[test]
+    fn hier_sums_are_exact_across_hubs() {
+        let (mut fab, app) = hier(4, 2, 64, 0.0);
+        let chunks: Vec<Vec<f32>> = (0..8)
+            .map(|g| (0..64).map(|i| (g as f32 + 1.0) * 0.001 * i as f32).collect())
+            .collect();
+        let out = app.round(&mut fab, 0, &chunks);
+        assert!(!out.saturated);
+        assert_eq!(out.done_at.len(), 8);
+        for i in 0..64 {
+            let want: f32 = chunks.iter().map(|c| c[i]).sum();
+            assert!((out.values[i] - want).abs() < 1e-3, "{i}: {} vs {want}", out.values[i]);
+        }
+    }
+
+    #[test]
+    fn hier_single_hub_skips_the_ring() {
+        let (mut fab, app) = hier(1, 4, 32, 0.0);
+        let out = app.round(&mut fab, 0, &vec![vec![1.0f32; 32]; 4]);
+        for v in &out.values {
+            assert!((v - 4.0).abs() < 1e-3);
+        }
+        assert_eq!(fab.total_submitted(), fab.total_completed());
+        // a 1-hub fabric has no interconnect links at all
+        fab.with_net(|st| assert!(st.links.is_empty()));
+    }
+
+    #[test]
+    fn hier_ring_grows_with_hub_count() {
+        let run = |hubs: usize| {
+            let (mut fab, app) = hier(hubs, 2, 64, 0.0);
+            let chunks = vec![vec![0.5f32; 64]; hubs * 2];
+            let out = app.round(&mut fab, 0, &chunks);
+            *out.done_at.iter().max().unwrap()
+        };
+        let w2 = run(2);
+        let w4 = run(4);
+        // with zero skew the only difference is two extra ring legs
+        let ring_leg = crate::sim::time::wire_time(64 * 8 + 64, constants::FABRIC_GBPS)
+            + ns_f(constants::FABRIC_HOP_NS);
+        assert_eq!(w4, w2 + 2 * ring_leg, "w2={w2} w4={w4} leg={ring_leg}");
+    }
+
+    #[test]
+    fn hier_beats_flat_at_equal_worker_count() {
+        // 16 workers as 4 hubs × 4 vs one flat hub: the flat hub serializes
+        // all 16 chunks through a single port; sharding wins despite the
+        // extra ring legs
+        let chunks: Vec<Vec<f32>> = vec![vec![0.25f32; 512]; 16];
+        let (mut fab4, app4) = hier(4, 4, 512, 0.0);
+        let w_hier = *app4.round(&mut fab4, 0, &chunks).done_at.iter().max().unwrap();
+        let (mut fab1, app1) = hier(1, 16, 512, 0.0);
+        let out_flat = app1.round(&mut fab1, 0, &chunks);
+        let w_flat = *out_flat.done_at.iter().max().unwrap();
+        assert!(w_hier < w_flat, "hier {w_hier}ps vs flat {w_flat}ps");
+        for v in &out_flat.values {
+            assert!((v - 4.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn hier_skew_delays_completion() {
+        let (mut fab1, fast) = hier(2, 2, 64, 0.0);
+        let (mut fab2, slow) = hier(2, 2, 64, 50.0);
+        let chunks = vec![vec![1.0f32; 64]; 4];
+        let w1 = *fast.round(&mut fab1, 0, &chunks).done_at.iter().max().unwrap();
+        let w2 = *slow.round(&mut fab2, 0, &chunks).done_at.iter().max().unwrap();
+        assert!(w2 > w1 + 10 * US, "skewed {w2} vs tight {w1}");
+    }
+
+    #[test]
+    fn hier_rounds_carry_the_app_qos() {
+        let mut fab = Fabric::new(2);
+        let qos = QosSpec::latency_sensitive(crate::runtime_hub::TenantId(9));
+        let cfg = HierConfig { qos, chunk_lanes: 32, workers_per_hub: 2, ..Default::default() };
+        let app = HierarchicalAllreduce::new(&mut fab, cfg);
+        app.round(&mut fab, 0, &vec![vec![1.0f32; 32]; 4]);
+        let reports = fab.tenant_reports();
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].tenant, crate::runtime_hub::TenantId(9));
+        // uplinks + ring sends + broadcasts all accounted to the tenant
+        assert_eq!(reports[0].submitted, 4 + 2 + 4);
+        assert_eq!(reports[0].completed, 4 + 2 + 4);
     }
 }

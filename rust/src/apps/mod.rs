@@ -8,11 +8,11 @@ pub mod llm_step;
 pub mod multi_tenant;
 pub mod storage_fetch;
 
-pub use allreduce::FpgaSwitchAllreduce;
+pub use allreduce::{FpgaSwitchAllreduce, HierConfig, HierarchicalAllreduce};
 pub use block_storage::HubMiddleTier;
 pub use llm_step::{LlmStepConfig, LlmStepReport};
 pub use multi_tenant::{
-    run_multi_tenant, run_qos, MultiTenantConfig, MultiTenantReport, QosConfig, QosOutcome,
-    TENANT_COLLECTIVE, TENANT_FETCH,
+    run_fabric_tenants, run_multi_tenant, run_qos, FabricTenantsConfig, FabricTenantsReport,
+    MultiTenantConfig, MultiTenantReport, QosConfig, QosOutcome, TENANT_COLLECTIVE, TENANT_FETCH,
 };
-pub use storage_fetch::run_fetch_demo;
+pub use storage_fetch::{run_fetch_demo, run_sharded_fetch, ShardedFetchConfig, ShardedFetchReport};

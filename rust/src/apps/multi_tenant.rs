@@ -23,15 +23,21 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use crate::apps::allreduce::{FpgaSwitchAllreduce, RoundState};
-use crate::apps::storage_fetch::{register_nic_fetch_path, register_nic_fetch_path_ssds};
+use crate::apps::allreduce::{
+    FpgaSwitchAllreduce, HierConfig, HierRoundState, HierarchicalAllreduce, RoundState,
+};
+use crate::apps::storage_fetch::{
+    register_nic_fetch_path, register_nic_fetch_path_fabric, register_nic_fetch_path_ssds,
+    FETCH_CMD_BYTES,
+};
 use crate::constants;
 use crate::metrics::Hist;
 use crate::net::p4::P4Switch;
 use crate::net::packet::{packetize, HEADER_BYTES};
 use crate::nvme::ssd::SsdArray;
 use crate::runtime_hub::{
-    ArbPolicy, HubRuntime, LinkId, QosSpec, RunStats, TenantId, TenantReport,
+    ArbPolicy, Fabric, FabricConfig, HubId, HubRuntime, LinkId, QosSpec, ResourcePolicies,
+    RouteDesc, RunStats, Site, TenantId, TenantReport,
 };
 use crate::sim::time::{ns_f, to_us, Ps, US};
 use crate::util::Rng;
@@ -410,6 +416,227 @@ pub fn run_qos(cfg: &QosConfig) -> QosOutcome {
     }
 }
 
+// -------------------------------------------- fabric-spanning tenants ----
+
+/// Multi-hub contention scenario (ISSUE 3): the hierarchical collective
+/// spans every hub of a [`Fabric`] while a cross-hub storage-fetch
+/// aggressor pushes whole replies over the *same* interconnect links the
+/// ring uses and out through the *same* per-hub egress ports the
+/// broadcast uses.
+#[derive(Clone, Copy, Debug)]
+pub struct FabricTenantsConfig {
+    pub hubs: usize,
+    pub workers_per_hub: u32,
+    pub chunk_lanes: usize,
+    pub rounds: u64,
+    pub round_gap: Ps,
+    pub fetches: u64,
+    pub fetch_gap: Ps,
+    pub fetch_blocks_4k: u32,
+    pub ssds_per_hub: usize,
+    pub seed: u64,
+    /// arbitration policy on every shared resource, hubs and interconnect
+    pub policy: ArbPolicy,
+}
+
+impl Default for FabricTenantsConfig {
+    fn default() -> Self {
+        FabricTenantsConfig {
+            hubs: 2,
+            workers_per_hub: 4,
+            chunk_lanes: 512,
+            rounds: 30,
+            round_gap: 40 * US,
+            fetches: 80,
+            fetch_gap: 12 * US,
+            fetch_blocks_4k: 16,
+            ssds_per_hub: 2,
+            seed: 0xF26A,
+            policy: ArbPolicy::Fcfs,
+        }
+    }
+}
+
+/// Shared-vs-isolated picture of the fabric scenario.
+#[derive(Clone, Copy, Debug)]
+pub struct FabricTenantsReport {
+    pub hubs: usize,
+    pub shared_round: TenantStats,
+    pub isolated_round: TenantStats,
+    pub fetch: TenantStats,
+    pub shared_run: RunStats,
+    /// bytes both tenants moved over the interconnect in the shared run
+    pub fabric_bytes: u64,
+}
+
+impl FabricTenantsReport {
+    /// Mean slowdown the collective suffers from sharing the fabric.
+    pub fn round_slowdown_us(&self) -> f64 {
+        self.shared_round.mean_us - self.isolated_round.mean_us
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "fabric tenants ({} hubs: hierarchical allreduce + cross-hub fetch)\n\
+             rounds  : isolated {:.2}µs -> shared {:.2}µs (+{:.2}µs, p99 {:.2}µs)\n\
+             fetches : {} done, mean {:.2}µs, p99 {:.2}µs\n\
+             fabric  : {:.1} MB over the interconnect, {} events shared run",
+            self.hubs,
+            self.isolated_round.mean_us,
+            self.shared_round.mean_us,
+            self.round_slowdown_us(),
+            self.shared_round.p99_us,
+            self.fetch.n,
+            self.fetch.mean_us,
+            self.fetch.p99_us,
+            self.fabric_bytes as f64 / 1e6,
+            self.shared_run.events,
+        )
+    }
+}
+
+fn build_fabric(cfg: &FabricTenantsConfig) -> Fabric {
+    Fabric::with_config(FabricConfig {
+        hubs: cfg.hubs,
+        policies: ResourcePolicies::uniform(cfg.policy),
+        ..Default::default()
+    })
+}
+
+/// Schedule the hierarchical collective tenant; every worker `g`
+/// contributes 0.001·(g+1) per lane, so a correct round decodes to
+/// 0.001·T(T+1)/2 everywhere.
+#[allow(clippy::type_complexity)]
+fn schedule_hier_tenant(
+    fab: &mut Fabric,
+    cfg: &FabricTenantsConfig,
+) -> (HierarchicalAllreduce, Rc<RefCell<Hist>>, Vec<Rc<RefCell<HierRoundState>>>) {
+    let app = HierarchicalAllreduce::new(
+        fab,
+        HierConfig {
+            hubs: cfg.hubs,
+            workers_per_hub: cfg.workers_per_hub,
+            chunk_lanes: cfg.chunk_lanes,
+            skew_us: 0.2,
+            seed: cfg.seed ^ 0xA11,
+            qos: QosSpec::latency_sensitive(TENANT_COLLECTIVE),
+        },
+    );
+    let total = app.total_workers();
+    let hist = Rc::new(RefCell::new(Hist::new()));
+    let mut handles = Vec::with_capacity(cfg.rounds as usize);
+    for r in 0..cfg.rounds {
+        let t0 = r * cfg.round_gap;
+        let chunks: Vec<Vec<f32>> = (0..total)
+            .map(|g| vec![0.001 * (g + 1) as f32; cfg.chunk_lanes])
+            .collect();
+        let h = hist.clone();
+        handles.push(app.schedule_round(fab, t0, &chunks, move |_, worst| {
+            h.borrow_mut().record(to_us(worst - t0));
+        }));
+    }
+    (app, hist, handles)
+}
+
+/// Every hierarchical round must have completed on every worker and
+/// decoded to the exact expected sums, contended or not.
+fn verify_hier_rounds(handles: &[Rc<RefCell<HierRoundState>>], total: usize, mode: &str) {
+    let want = 0.001 * (total * (total + 1) / 2) as f32;
+    for (r, handle) in handles.iter().enumerate() {
+        let state = handle.borrow();
+        assert_eq!(
+            state.completed as usize, total,
+            "{mode}: round {r} did not complete on all workers"
+        );
+        for (lane, v) in state.values.iter().enumerate() {
+            assert!(
+                (v - want).abs() < 1e-3,
+                "{mode}: round {r} lane {lane} decoded {v}, expected {want}"
+            );
+        }
+    }
+}
+
+/// Schedule the cross-hub aggressor: fetch `i` enters at hub `i mod H`,
+/// targets a *remote* hub when one exists, and its reply finally egresses
+/// through the origin hub's shared port (`egress[origin]` — the
+/// collective's broadcast port).
+fn schedule_fabric_aggressor(
+    fab: &mut Fabric,
+    cfg: &FabricTenantsConfig,
+    egress: &[LinkId],
+) -> Rc<RefCell<Hist>> {
+    let mut rng = Rng::new(cfg.seed ^ 0x57E0);
+    let all_ssds: Vec<usize> = (0..cfg.ssds_per_hub).collect();
+    let paths: Vec<_> = (0..cfg.hubs)
+        .map(|h| {
+            let hub = HubId(h as u32);
+            let arr = fab.add_array(hub, SsdArray::new(cfg.ssds_per_hub, &mut rng));
+            let mut p = register_nic_fetch_path_fabric(fab, hub, arr, &all_ssds);
+            p.qos = QosSpec::bulk(TENANT_FETCH);
+            p
+        })
+        .collect();
+    let reply_bytes = cfg.fetch_blocks_4k as u64 * 4096 + HEADER_BYTES;
+
+    let hist = Rc::new(RefCell::new(Hist::new()));
+    for i in 0..cfg.fetches {
+        let t0 = i * cfg.fetch_gap;
+        let origin = (i % cfg.hubs as u64) as usize;
+        let owner = if cfg.hubs > 1 {
+            (origin + 1 + (i as usize % (cfg.hubs - 1))) % cfg.hubs
+        } else {
+            origin
+        };
+        let ssd = i as usize % cfg.ssds_per_hub;
+        let qos = paths[owner].qos;
+        let fetch = paths[owner].fetch_desc(i, ssd, cfg.fetch_blocks_4k);
+        let (src, dst) = (HubId(origin as u32), HubId(owner as u32));
+        let route = if owner == origin {
+            let local = fetch.xfer(egress[origin], reply_bytes);
+            RouteDesc::new().hop(Site::Hub(src), local)
+        } else {
+            let deliver = TransferDesc::with_label(i)
+                .qos(qos)
+                .xfer(egress[origin], reply_bytes);
+            RouteDesc::new()
+                .hop(Site::Net, fab.hop_desc(i, qos, src, dst, FETCH_CMD_BYTES))
+                .hop(Site::Hub(dst), fetch)
+                .hop(Site::Net, fab.hop_desc(i, qos, dst, src, reply_bytes))
+                .hop(Site::Hub(src), deliver)
+        };
+        let h = hist.clone();
+        fab.submit_route(t0, route, move |_, done| h.borrow_mut().record(to_us(done - t0)));
+    }
+    hist
+}
+
+/// Run the fabric scenario twice — both tenants sharing the fabric, then
+/// the collective alone — and report the contention picture.
+pub fn run_fabric_tenants(cfg: &FabricTenantsConfig) -> FabricTenantsReport {
+    let mut fab = build_fabric(cfg);
+    let (app, round_hist, handles) = schedule_hier_tenant(&mut fab, cfg);
+    let egress: Vec<LinkId> = (0..cfg.hubs).map(|h| app.egress(h)).collect();
+    let fetch_hist = schedule_fabric_aggressor(&mut fab, cfg, &egress);
+    let shared_run = fab.run();
+    verify_hier_rounds(&handles, app.total_workers(), "fabric-shared");
+    let fabric_bytes = fab.with_net(|st| st.links.iter().map(|l| l.bytes_moved).sum());
+
+    let mut fab_iso = build_fabric(cfg);
+    let (app_iso, round_iso, handles_iso) = schedule_hier_tenant(&mut fab_iso, cfg);
+    fab_iso.run();
+    verify_hier_rounds(&handles_iso, app_iso.total_workers(), "fabric-isolated");
+
+    FabricTenantsReport {
+        hubs: cfg.hubs,
+        shared_round: TenantStats::from_hist(&mut round_hist.borrow_mut()),
+        isolated_round: TenantStats::from_hist(&mut round_iso.borrow_mut()),
+        fetch: TenantStats::from_hist(&mut fetch_hist.borrow_mut()),
+        shared_run,
+        fabric_bytes,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -514,5 +741,41 @@ mod tests {
         assert!(fetch.bytes_moved > coll.bytes_moved, "aggressor moves more bytes");
         assert!(coll.lat_us.p99 >= coll.lat_us.p50);
         assert!(q.shared_run.events > 0);
+    }
+
+    // ------------------------------------------------ fabric tenants ----
+
+    #[test]
+    fn fabric_contention_delays_the_hierarchical_collective() {
+        let r = run_fabric_tenants(&FabricTenantsConfig::default());
+        assert_eq!(r.hubs, 2);
+        // replies on the ring links and egress ports must measurably
+        // delay the collective vs running the fabric alone
+        assert!(
+            r.shared_round.mean_us > r.isolated_round.mean_us + 0.01,
+            "shared {:.4}µs vs isolated {:.4}µs",
+            r.shared_round.mean_us,
+            r.isolated_round.mean_us
+        );
+        assert!(r.fabric_bytes > 0, "the aggressor must actually cross the fabric");
+    }
+
+    #[test]
+    fn fabric_tenants_complete_under_every_policy() {
+        for policy in ArbPolicy::ALL {
+            let cfg = FabricTenantsConfig { rounds: 8, fetches: 24, policy, ..Default::default() };
+            let r = run_fabric_tenants(&cfg);
+            assert_eq!(r.shared_round.n, 8, "{policy:?}");
+            assert_eq!(r.isolated_round.n, 8, "{policy:?}");
+            assert_eq!(r.fetch.n, 24, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn fabric_report_renders() {
+        let cfg = FabricTenantsConfig { rounds: 4, fetches: 8, ..Default::default() };
+        let s = run_fabric_tenants(&cfg).render();
+        assert!(s.contains("fabric tenants"));
+        assert!(s.contains("interconnect"));
     }
 }

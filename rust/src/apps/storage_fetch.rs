@@ -17,9 +17,13 @@ use crate::constants;
 use crate::devices::cpu::SwCost;
 use crate::hub::transport::FpgaTransport;
 use crate::metrics::Hist;
+use crate::net::packet::HEADER_BYTES;
 use crate::nvme::queue::NvmeOp;
 use crate::nvme::ssd::SsdArray;
-use crate::runtime_hub::{ArrayId, HubRuntime, LinkId, NvmeId, QosSpec, TenantId, TransferDesc};
+use crate::runtime_hub::{
+    ArrayId, Fabric, HubId, HubRuntime, LinkId, NvmeId, QosSpec, RouteDesc, RunStats, Site,
+    TenantId, TransferDesc,
+};
 use crate::sim::time::{cycles, ns_f, to_us, us_f, Ps, US};
 use crate::util::Rng;
 
@@ -66,14 +70,43 @@ pub fn register_nic_fetch_path_ssds(
     array: ArrayId,
     ssds: &[usize],
 ) -> NicFetchPath {
-    let submit_ps = cycles(8, constants::FPGA_FREQ_MHZ) + ns_f(P2P_NS);
-    let complete_ps = ns_f(P2P_NS) + cycles(1, constants::FPGA_FREQ_MHZ);
+    let (submit_ps, complete_ps) = fetch_ring_costs();
     NicFetchPath {
         queues: ssds
             .iter()
             .map(|&i| rt.add_nvme_queue(array, i, 256, submit_ps, complete_ps))
             .collect(),
         pcie: rt.add_link("pcie-gpu-direct", constants::PCIE_GEN3_X16_GBPS, 0),
+        transport_pipeline: FpgaTransport::new(1, 64).pipeline_latency(),
+        qos: QosSpec::default(),
+    }
+}
+
+/// §3.3 NVMe-ring calibration shared by every fetch-path variant:
+/// (submit, complete) fabric-side costs.
+fn fetch_ring_costs() -> (Ps, Ps) {
+    (
+        cycles(8, constants::FPGA_FREQ_MHZ) + ns_f(P2P_NS),
+        ns_f(P2P_NS) + cycles(1, constants::FPGA_FREQ_MHZ),
+    )
+}
+
+/// Like [`register_nic_fetch_path_ssds`], but on one hub of a multi-hub
+/// [`Fabric`] (identical calibration; ids are hub-local, so the returned
+/// [`NicFetchPath`] descriptors must be submitted on that hub).
+pub fn register_nic_fetch_path_fabric(
+    fab: &mut Fabric,
+    hub: HubId,
+    array: ArrayId,
+    ssds: &[usize],
+) -> NicFetchPath {
+    let (submit_ps, complete_ps) = fetch_ring_costs();
+    NicFetchPath {
+        queues: ssds
+            .iter()
+            .map(|&i| fab.add_nvme_queue(hub, array, i, 256, submit_ps, complete_ps))
+            .collect(),
+        pcie: fab.add_link(hub, "pcie-gpu-direct", constants::PCIE_GEN3_X16_GBPS, 0),
         transport_pipeline: FpgaTransport::new(1, 64).pipeline_latency(),
         qos: QosSpec::default(),
     }
@@ -153,6 +186,106 @@ pub fn run_fetch_demo(n: u64, num_ssds: usize, seed: u64) -> FetchDemoReport {
     FetchDemoReport { nic_initiated, cpu_staged, requests: n }
 }
 
+// ------------------------------------------------- sharded (multi-hub) ----
+
+/// Command-message size of one remote fetch request on the interconnect.
+pub const FETCH_CMD_BYTES: u64 = 128;
+
+/// Shard layout + workload of [`run_sharded_fetch`]: the SSD arrays are
+/// partitioned across hubs, shard `g` living on hub `g / ssds_per_hub`.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardedFetchConfig {
+    pub hubs: usize,
+    pub ssds_per_hub: usize,
+    pub requests: u64,
+    /// arrival spacing between consecutive requests
+    pub gap: Ps,
+    /// 4 KB blocks per fetch
+    pub blocks_4k: u32,
+    pub seed: u64,
+}
+
+impl Default for ShardedFetchConfig {
+    fn default() -> Self {
+        ShardedFetchConfig {
+            hubs: 2,
+            ssds_per_hub: 4,
+            requests: 200,
+            gap: 20 * US,
+            blocks_4k: 16,
+            seed: 0xF26A,
+        }
+    }
+}
+
+/// Outcome of a sharded-fetch run, split by locality.
+pub struct ShardedFetchReport {
+    /// requests whose shard lived on the origin hub
+    pub local: Hist,
+    /// requests that crossed the interconnect (cmd out, reply back)
+    pub remote: Hist,
+    pub run: RunStats,
+}
+
+impl ShardedFetchReport {
+    pub fn requests(&self) -> u64 {
+        (self.local.len() + self.remote.len()) as u64
+    }
+}
+
+/// §3.3 at rack scale: the SSD arrays are partitioned across a fabric of
+/// hubs. Request `i` enters at hub `i mod H` and targets shard
+/// `i mod (H·S)`; a remote shard costs a command hop to the owner, the
+/// NIC-initiated fetch there, and the reply hop back — every leg a
+/// contended resource.
+pub fn run_sharded_fetch(cfg: &ShardedFetchConfig) -> ShardedFetchReport {
+    assert!(cfg.hubs >= 1 && cfg.ssds_per_hub >= 1);
+    let mut rng = Rng::new(cfg.seed);
+    let mut fab = Fabric::new(cfg.hubs);
+    let all_ssds: Vec<usize> = (0..cfg.ssds_per_hub).collect();
+    let paths: Vec<NicFetchPath> = (0..cfg.hubs)
+        .map(|h| {
+            let hub = HubId(h as u32);
+            let arr = fab.add_array(hub, SsdArray::new(cfg.ssds_per_hub, &mut rng));
+            let mut p = register_nic_fetch_path_fabric(&mut fab, hub, arr, &all_ssds);
+            p.qos = QosSpec::new(TenantId(1), crate::runtime_hub::CLASS_NORMAL, 1);
+            p
+        })
+        .collect();
+
+    let total_shards = (cfg.hubs * cfg.ssds_per_hub) as u64;
+    let reply_bytes = cfg.blocks_4k as u64 * 4096 + HEADER_BYTES;
+    let local = Rc::new(RefCell::new(Hist::new()));
+    let remote = Rc::new(RefCell::new(Hist::new()));
+    for i in 0..cfg.requests {
+        let t0 = i * cfg.gap;
+        let origin = HubId((i % cfg.hubs as u64) as u32);
+        let shard = i % total_shards;
+        let owner = HubId((shard / cfg.ssds_per_hub as u64) as u32);
+        let ssd = (shard % cfg.ssds_per_hub as u64) as usize;
+        let qos = paths[owner.index()].qos;
+        let fetch = paths[owner.index()].fetch_desc(i, ssd, cfg.blocks_4k);
+        let (route, hist) = if origin == owner {
+            (RouteDesc::new().hop(Site::Hub(owner), fetch), local.clone())
+        } else {
+            let route = RouteDesc::new()
+                .hop(Site::Net, fab.hop_desc(i, qos, origin, owner, FETCH_CMD_BYTES))
+                .hop(Site::Hub(owner), fetch)
+                .hop(Site::Net, fab.hop_desc(i, qos, owner, origin, reply_bytes));
+            (route, remote.clone())
+        };
+        fab.submit_route(t0, route, move |_, done| {
+            hist.borrow_mut().record(to_us(done - t0))
+        });
+    }
+    let run = fab.run();
+    ShardedFetchReport {
+        local: Rc::try_unwrap(local).expect("engine drained").into_inner(),
+        remote: Rc::try_unwrap(remote).expect("engine drained").into_inner(),
+        run,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,5 +324,38 @@ mod tests {
         let mut path = register_nic_fetch_path(&mut rt, arr, 1);
         path.qos = QosSpec::bulk(TenantId(7));
         assert_eq!(path.fetch_desc(0, 0, 1).qos.tenant, TenantId(7));
+    }
+
+    #[test]
+    fn sharded_fetch_completes_every_request() {
+        let cfg =
+            ShardedFetchConfig { hubs: 2, ssds_per_hub: 2, requests: 40, ..Default::default() };
+        let r = run_sharded_fetch(&cfg);
+        assert_eq!(r.requests(), 40);
+        assert!(!r.local.is_empty() && !r.remote.is_empty());
+        assert!(r.run.events > 0);
+    }
+
+    #[test]
+    fn single_hub_sharding_is_all_local() {
+        let cfg =
+            ShardedFetchConfig { hubs: 1, ssds_per_hub: 2, requests: 30, ..Default::default() };
+        let r = run_sharded_fetch(&cfg);
+        assert_eq!(r.remote.len(), 0);
+        assert_eq!(r.local.len(), 30);
+    }
+
+    #[test]
+    fn remote_fetches_pay_the_fabric_crossing() {
+        // 16-block replies: the two interconnect legs add ~6µs, far above
+        // the ±6µs per-command media noise averaged over ~200 samples
+        let cfg =
+            ShardedFetchConfig { hubs: 4, ssds_per_hub: 2, requests: 400, ..Default::default() };
+        let mut r = run_sharded_fetch(&cfg);
+        assert!(r.remote.len() > 100 && r.local.len() > 50);
+        let delta = r.remote.mean() - r.local.mean();
+        assert!((2.0..15.0).contains(&delta), "remote-local delta {delta}µs");
+        // both dominated by media latency
+        assert!(r.local.p50() > 60.0 && r.remote.p50() > 60.0);
     }
 }

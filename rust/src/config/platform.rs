@@ -9,7 +9,7 @@ use crate::anyhow;
 use crate::config::parse::TomlDoc;
 use crate::constants;
 use crate::devices::fpga::FpgaBoard;
-use crate::runtime_hub::{ArbPolicy, ResourcePolicies};
+use crate::runtime_hub::{ArbPolicy, FabricConfig, ResourcePolicies};
 
 /// The simulated platform (one §4.1 server/cluster).
 #[derive(Clone, Debug)]
@@ -21,8 +21,12 @@ pub struct PlatformConfig {
     pub fpga_board: FpgaBoard,
     pub eth_gbps: f64,
     /// arbitration policy per shared-resource kind (`[arbitration]`):
-    /// `policy` sets all three, `links`/`pools`/`nvme` override per kind
+    /// `policy` sets all four, `links`/`pools`/`nvme`/`fabric` override
+    /// per kind
     pub arb: ResourcePolicies,
+    /// multi-hub scale-out plane (`[fabric]`): hub count, inter-hub link
+    /// rate, per-hop latency; `fabric.policies` mirrors `arb`
+    pub fabric: FabricConfig,
     pub artifacts_dir: PathBuf,
     pub results_dir: PathBuf,
 }
@@ -37,6 +41,7 @@ impl Default for PlatformConfig {
             fpga_board: FpgaBoard::AlveoU50,
             eth_gbps: constants::ETH_GBPS,
             arb: ResourcePolicies::default(),
+            fabric: FabricConfig { hubs: 8, ..Default::default() },
             artifacts_dir: PathBuf::from("artifacts"),
             results_dir: PathBuf::from("results"),
         }
@@ -63,6 +68,13 @@ impl PlatformConfig {
             links: policy_or(doc, "links", default_policy)?,
             pools: policy_or(doc, "pools", default_policy)?,
             nvme: policy_or(doc, "nvme", default_policy)?,
+            fabric: policy_or(doc, "fabric", default_policy)?,
+        };
+        let fabric = FabricConfig {
+            hubs: doc.i64_or("fabric", "hubs", d.fabric.hubs as i64).max(1) as usize,
+            gbps: doc.f64_or("fabric", "gbps", d.fabric.gbps),
+            hop_ns: doc.f64_or("fabric", "hop_ns", d.fabric.hop_ns),
+            policies: arb,
         };
         Ok(PlatformConfig {
             seed: doc.i64_or("", "seed", d.seed as i64) as u64,
@@ -72,6 +84,7 @@ impl PlatformConfig {
             fpga_board: board,
             eth_gbps: doc.f64_or("net", "gbps", d.eth_gbps),
             arb,
+            fabric,
             artifacts_dir: PathBuf::from(doc.str_or("", "artifacts_dir", "artifacts")),
             results_dir: PathBuf::from(doc.str_or("", "results_dir", "results")),
         })
@@ -172,6 +185,28 @@ mod tests {
         assert_eq!(p.arb.links, ArbPolicy::WeightedFair);
         assert_eq!(p.arb.pools, ArbPolicy::WeightedFair);
         assert_eq!(p.arb.nvme, ArbPolicy::StrictPriority);
+        assert_eq!(p.arb.fabric, ArbPolicy::WeightedFair, "policy sets fabric too");
+    }
+
+    #[test]
+    fn fabric_defaults_and_overrides() {
+        let p = PlatformConfig::default();
+        assert_eq!(p.fabric.hubs, 8);
+        assert_eq!(p.fabric.gbps, constants::FABRIC_GBPS);
+        assert_eq!(p.fabric.hop_ns, constants::FABRIC_HOP_NS);
+        assert_eq!(p.fabric.policies, p.arb);
+
+        let doc = TomlDoc::parse(
+            "[fabric]\nhubs = 4\ngbps = 200.0\nhop_ns = 300.0\n[arbitration]\nfabric = \"wfq\"\n",
+        )
+        .unwrap();
+        let p = PlatformConfig::from_doc(&doc).unwrap();
+        assert_eq!(p.fabric.hubs, 4);
+        assert_eq!(p.fabric.gbps, 200.0);
+        assert_eq!(p.fabric.hop_ns, 300.0);
+        assert_eq!(p.arb.fabric, ArbPolicy::WeightedFair);
+        assert_eq!(p.arb.links, ArbPolicy::Fcfs, "per-kind override only");
+        assert_eq!(p.fabric.policies, p.arb, "fabric carries the arb policies");
     }
 
     #[test]

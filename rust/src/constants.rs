@@ -119,6 +119,15 @@ pub const VPK180_URAM: u64 = 1_925;
 /// easy to achieve high throughput in FPGAs") — one engine at port rate.
 pub const FPGA_COMPRESS_GBPS: f64 = 100.0;
 
+// -------------------------------------------------------------- Fabric ----
+
+/// Inter-hub link rate: each FpgaHub exposes one 100G port toward the rack
+/// fabric (§2.3 — the hubs' network ports are the scale-out plane).
+pub const FABRIC_GBPS: f64 = 100.0;
+/// Per-hop latency between two hubs (ToR switch traversal + two SerDes
+/// crossings + cabling — one rack-internal hop).
+pub const FABRIC_HOP_NS: f64 = 500.0;
+
 #[cfg(test)]
 mod tests {
     use super::*;

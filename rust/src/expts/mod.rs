@@ -8,6 +8,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod qos;
+pub mod scale;
 pub mod table1;
 
 use crate::anyhow;
@@ -16,7 +17,7 @@ use crate::metrics::{write_csv, Table};
 
 /// All experiment names (CLI `fpgahub expt <name>`).
 pub const ALL: &[&str] =
-    &["fig2", "fig7a", "fig7b", "fig8", "fig9", "fig10a", "fig10b", "table1", "qos"];
+    &["fig2", "fig7a", "fig7b", "fig8", "fig9", "fig10a", "fig10b", "table1", "qos", "scale"];
 
 /// Dispatch by name.
 pub fn run(name: &str, cfg: &ExperimentConfig) -> anyhow::Result<Vec<Table>> {
@@ -30,9 +31,17 @@ pub fn run(name: &str, cfg: &ExperimentConfig) -> anyhow::Result<Vec<Table>> {
         "fig10a" | "fig10b" | "fig10" => fig10::run(cfg)?,
         "table1" => vec![table1::run(cfg)?],
         "qos" => vec![qos::run(cfg)],
+        "scale" => vec![scale::run(cfg)],
         other => anyhow::bail!("unknown experiment '{other}' (have {ALL:?})"),
     };
-    for t in &tables {
+    emit(&tables, cfg)?;
+    Ok(tables)
+}
+
+/// Render tables to stdout and, when configured, to `results/*.csv` (the
+/// common tail of every experiment run, also used by `fpgahub scale`).
+pub fn emit(tables: &[Table], cfg: &ExperimentConfig) -> anyhow::Result<()> {
+    for t in tables {
         println!("{}", t.render());
         if cfg.csv {
             let path = cfg
@@ -43,5 +52,5 @@ pub fn run(name: &str, cfg: &ExperimentConfig) -> anyhow::Result<Vec<Table>> {
             println!("wrote {}\n", path.display());
         }
     }
-    Ok(tables)
+    Ok(())
 }

@@ -1,0 +1,204 @@
+//! Scaling experiment (`fpgahub scale --hubs N`): the hierarchical
+//! allreduce on a fabric of 1/2/4/… hubs, one row per hub count —
+//! round time (mean + p99), a *flat* single-hub baseline at the same
+//! total worker count (all chunks through one port), interconnect
+//! traffic, and engine throughput (events/s of wallclock).
+//!
+//! The scaling story: per-hub ingress/egress serialization stays constant
+//! as hubs are added (weak scaling) while the ring grows by one leg per
+//! hub — so past a couple of hubs the fabric beats the flat hub whose
+//! single port must serialize every worker's chunk.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::apps::allreduce::{HierConfig, HierarchicalAllreduce};
+use crate::config::ExperimentConfig;
+use crate::metrics::{Hist, Table};
+use crate::runtime_hub::{Fabric, FabricConfig, QosSpec};
+use crate::sim::time::{to_us, US};
+
+/// Lanes per worker chunk (matches the fig8 workload).
+const LANES: usize = 512;
+
+/// Round count scales with the sample budget; `quick()` stays test-sized.
+fn rounds(cfg: &ExperimentConfig) -> u64 {
+    ((cfg.samples as u64) / 50).clamp(20, 100)
+}
+
+/// One hub-count's measurement.
+pub struct ScalePoint {
+    pub hubs: usize,
+    pub workers: usize,
+    pub round_mean_us: f64,
+    pub round_p99_us: f64,
+    /// same worker count, one flat hub (single shared port)
+    pub flat_mean_us: f64,
+    pub events: u64,
+    pub events_per_sec: f64,
+    pub fabric_mb: f64,
+}
+
+/// Run `n_rounds` hierarchical rounds at `hubs` × `workers_per_hub` and
+/// return (round histogram, events, wall seconds, interconnect bytes).
+fn run_rounds(
+    cfg: &ExperimentConfig,
+    hubs: usize,
+    workers_per_hub: u32,
+    n_rounds: u64,
+) -> (Hist, u64, f64, u64) {
+    let mut fab = Fabric::with_config(FabricConfig { hubs, ..cfg.platform.fabric });
+    let app = HierarchicalAllreduce::new(
+        &mut fab,
+        HierConfig {
+            hubs,
+            workers_per_hub,
+            chunk_lanes: LANES,
+            skew_us: 0.2,
+            seed: cfg.platform.seed,
+            qos: QosSpec::default(),
+        },
+    );
+    let total = app.total_workers();
+    let hist = Rc::new(RefCell::new(Hist::new()));
+    let mut handles = Vec::with_capacity(n_rounds as usize);
+    for r in 0..n_rounds {
+        let t0 = r * 50 * US;
+        let chunks: Vec<Vec<f32>> = vec![vec![1.0f32; LANES]; total];
+        let h = hist.clone();
+        handles.push(app.schedule_round(&mut fab, t0, &chunks, move |_, worst| {
+            h.borrow_mut().record(to_us(worst - t0));
+        }));
+    }
+    let wall = Instant::now();
+    let stats = fab.run();
+    let wall_s = wall.elapsed().as_secs_f64().max(1e-9);
+    // every round complete and numerically exact, at every scale
+    for (r, handle) in handles.iter().enumerate() {
+        let rs = handle.borrow();
+        assert_eq!(rs.completed as usize, total, "round {r} incomplete at {hubs} hubs");
+        for v in &rs.values {
+            assert!((v - total as f32).abs() < 1e-2, "bad sum at {hubs} hubs: {v}");
+        }
+    }
+    let fabric_bytes: u64 = fab.with_net(|st| st.links.iter().map(|l| l.bytes_moved).sum());
+    let hist = Rc::try_unwrap(hist).expect("engine drained").into_inner();
+    (hist, stats.events, wall_s, fabric_bytes)
+}
+
+/// Measure one hub count plus its flat single-hub baseline.
+pub fn measure(cfg: &ExperimentConfig, hubs: usize, n_rounds: u64) -> ScalePoint {
+    let per_hub = cfg.platform.workers;
+    let (mut hist, events, wall_s, fabric_bytes) = run_rounds(cfg, hubs, per_hub, n_rounds);
+    let total = hubs * per_hub as usize;
+    // at 1 hub the baseline IS the measurement — don't re-simulate it
+    let flat = if hubs == 1 {
+        hist.clone()
+    } else {
+        run_rounds(cfg, 1, total as u32, n_rounds).0
+    };
+    ScalePoint {
+        hubs,
+        workers: total,
+        round_mean_us: hist.mean(),
+        round_p99_us: hist.p99(),
+        flat_mean_us: flat.mean(),
+        events,
+        events_per_sec: events as f64 / wall_s,
+        fabric_mb: fabric_bytes as f64 / 1e6,
+    }
+}
+
+/// Hub counts to sweep: 1, 2, 4, … up to and including `max_hubs`.
+fn sweep(max_hubs: usize) -> Vec<usize> {
+    let max = max_hubs.max(1);
+    let mut counts = Vec::new();
+    let mut h = 1;
+    while h < max {
+        counts.push(h);
+        h *= 2;
+    }
+    counts.push(max);
+    counts
+}
+
+/// Sweep hub counts up to `max_hubs`, one table row each.
+pub fn run_with_hubs(cfg: &ExperimentConfig, max_hubs: usize) -> Table {
+    let n_rounds = rounds(cfg);
+    let mut t = Table::new(
+        "scale: hierarchical allreduce across the hub fabric",
+        &[
+            "hubs",
+            "workers",
+            "round_mean_us",
+            "round_p99_us",
+            "flat_mean_us",
+            "events",
+            "events_per_s",
+            "fabric_mb",
+        ],
+    );
+    for hubs in sweep(max_hubs) {
+        let p = measure(cfg, hubs, n_rounds);
+        t.row(&[
+            p.hubs.to_string(),
+            p.workers.to_string(),
+            format!("{:.2}", p.round_mean_us),
+            format!("{:.2}", p.round_p99_us),
+            format!("{:.2}", p.flat_mean_us),
+            p.events.to_string(),
+            format!("{:.0}", p.events_per_sec),
+            format!("{:.2}", p.fabric_mb),
+        ]);
+    }
+    t
+}
+
+/// Default sweep: up to the configured `[fabric] hubs` (8 by default).
+pub fn run(cfg: &ExperimentConfig) -> Table {
+    run_with_hubs(cfg, cfg.platform.fabric.hubs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_is_powers_of_two_up_to_max() {
+        assert_eq!(sweep(8), vec![1, 2, 4, 8]);
+        assert_eq!(sweep(4), vec![1, 2, 4]);
+        assert_eq!(sweep(6), vec![1, 2, 4, 6]);
+        assert_eq!(sweep(1), vec![1]);
+        assert_eq!(sweep(0), vec![1]);
+    }
+
+    #[test]
+    fn table_has_one_row_per_hub_count() {
+        let t = run_with_hubs(&ExperimentConfig::quick(), 4);
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.rows[0][0], "1");
+        assert_eq!(t.rows[2][0], "4");
+        // weak scaling: worker count grows with hubs
+        let w1: usize = t.rows[0][1].parse().unwrap();
+        let w4: usize = t.rows[2][1].parse().unwrap();
+        assert_eq!(w4, 4 * w1);
+    }
+
+    #[test]
+    fn multi_hub_rounds_cost_more_than_single_hub_but_beat_flat() {
+        let cfg = ExperimentConfig::quick();
+        let p1 = measure(&cfg, 1, 20);
+        let p4 = measure(&cfg, 4, 20);
+        // adding hubs adds ring legs
+        let (h1, h4) = (p1.round_mean_us, p4.round_mean_us);
+        assert!(h4 > h1, "{h4} vs {h1}");
+        // but beats the flat hub that serializes 4× the chunks on one port
+        assert!(h4 < p4.flat_mean_us, "{h4} vs flat {}", p4.flat_mean_us);
+        // a 1-hub fabric IS the flat hub
+        assert!((p1.round_mean_us - p1.flat_mean_us).abs() < 1e-9);
+        assert!(p4.fabric_mb > 0.0);
+        assert!(p1.fabric_mb == 0.0);
+        assert!(p4.events > p1.events);
+    }
+}

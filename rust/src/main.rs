@@ -12,6 +12,9 @@
 //!                                      fetch vs latency-sensitive
 //!                                      collective under every arbitration
 //!                                      policy, with per-tenant reports
+//!   fpgahub scale [--hubs N]           hierarchical allreduce across a
+//!                                      fabric of 1/2/4/…/N hubs: round
+//!                                      times, flat-hub baseline, events/s
 //!   fpgahub info                       platform + artifact status
 
 use fpgahub::anyhow;
@@ -24,9 +27,10 @@ use fpgahub::runtime_hub::ArbPolicy;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: fpgahub <list|expt NAME|all|train|fetch-demo|multi-tenant|qos|info> [options]\n\
+        "usage: fpgahub <list|expt NAME|all|train|fetch-demo|multi-tenant|qos|scale|info> \
+         [options]\n\
          options: --config FILE --samples N --steps N --workers N --requests N\n\
-         \x20        --arb fcfs|priority|wfq --no-csv"
+         \x20        --hubs N --arb fcfs|priority|wfq --no-csv"
     );
     std::process::exit(2);
 }
@@ -39,6 +43,7 @@ struct Args {
     steps: Option<usize>,
     workers: Option<usize>,
     requests: Option<u64>,
+    hubs: Option<usize>,
     arb: Option<ArbPolicy>,
     no_csv: bool,
 }
@@ -54,6 +59,7 @@ fn parse_args() -> Args {
         steps: None,
         workers: None,
         requests: None,
+        hubs: None,
         arb: None,
         no_csv: false,
     };
@@ -73,6 +79,7 @@ fn parse_args() -> Args {
             "--steps" => a.steps = need("--steps").parse().ok(),
             "--workers" => a.workers = need("--workers").parse().ok(),
             "--requests" => a.requests = need("--requests").parse().ok(),
+            "--hubs" => a.hubs = need("--hubs").parse().ok(),
             "--arb" => {
                 let s = need("--arb");
                 match ArbPolicy::parse(&s) {
@@ -108,6 +115,9 @@ fn load_cfg(a: &Args) -> anyhow::Result<ExperimentConfig> {
     }
     if let Some(w) = a.workers {
         cfg.platform.workers = w as u32;
+    }
+    if let Some(h) = a.hubs {
+        cfg.platform.fabric.hubs = h.max(1);
     }
     if a.no_csv {
         cfg.csv = false;
@@ -176,6 +186,10 @@ fn main() -> anyhow::Result<()> {
             println!("arbitration: {}", mt.policy.name());
             let report = fpgahub::apps::run_multi_tenant(&mt);
             println!("{}", report.render());
+        }
+        "scale" => {
+            // --hubs is folded into the platform config by load_cfg
+            expts::run("scale", &cfg)?;
         }
         "qos" => {
             let (t, outcomes) = expts::qos::run_with_outcomes(&cfg);

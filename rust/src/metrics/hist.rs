@@ -46,12 +46,29 @@ impl Hist {
         self.sum / self.samples.len() as f64
     }
 
+    /// Smallest sample; 0 on an empty histogram (never ±inf/NaN, so the
+    /// tenant reports and bench summaries stay finite — ISSUE 3).
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample; 0 on an empty histogram.
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Fold every sample of `other` into this histogram (the fabric merges
+    /// per-hub tenant accounts into one report this way).
+    pub fn merge(&mut self, other: &Hist) {
+        for &v in &other.samples {
+            self.record(v);
+        }
     }
 
     pub fn stddev(&self) -> f64 {
@@ -203,6 +220,33 @@ mod tests {
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.p50(), 0.0);
         assert!(h.is_empty());
+        // min/max/fluctuation/summary must be finite zeros, not ±inf/NaN
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.fluctuation(), 0.0);
+        let s = h.summary("µs");
+        assert!(!s.contains("inf") && !s.contains("NaN"), "{s}");
+    }
+
+    #[test]
+    fn single_sample_min_max_pin_to_the_sample() {
+        let h = filled(&[9.25]);
+        assert_eq!(h.min(), 9.25);
+        assert_eq!(h.max(), 9.25);
+    }
+
+    #[test]
+    fn merge_folds_all_samples() {
+        let mut a = filled(&[1.0, 3.0]);
+        let b = filled(&[2.0, 4.0]);
+        a.merge(&b);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.mean(), 2.5);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 4.0);
+        // merging an empty histogram is a no-op
+        a.merge(&Hist::new());
+        assert_eq!(a.len(), 4);
     }
 
     #[test]

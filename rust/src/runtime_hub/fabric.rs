@@ -1,0 +1,673 @@
+//! `Fabric` — the multi-hub scale-out plane (ISSUE 3).
+//!
+//! A [`Fabric`] owns N [`HubRuntime`](super::HubRuntime)-style shards — one
+//! [`HubState`] per hub, each with its own links, core pools, NVMe rings,
+//! arbiters, and tenant accounts — plus the *interconnect*: a full mesh of
+//! directed inter-hub [`FifoLink`](super::FifoLink)s (bandwidth and hop
+//! latency from `PlatformConfig [fabric]`) and the cross-hub barriers.
+//! Every shard shares **one** event clock ([`Sim`]), so cross-hub transfers
+//! and same-hub contention interleave on a single deterministic timeline.
+//!
+//! Cross-hub work is expressed as a [`RouteDesc`]: an ordered list of
+//! [`Hop`]s, each a plain [`TransferDesc`] executed on one [`Site`] (a hub,
+//! or [`Site::Net`] — the interconnect, which owns the hub-to-hub links and
+//! the fabric-wide barriers). The fabric chains the hops: hop *k+1* is
+//! submitted at the instant hop *k* completes, so a remote storage fetch is
+//! "command over the wire → NVMe + DMA on the owner hub → reply over the
+//! wire" with queueing at every stage.
+//!
+//! QoS/arbitration applies per hub *and* on the interconnect: each hub's
+//! resources take the fabric's [`ResourcePolicies`]; inter-hub links take
+//! `policies.fabric`.
+//!
+//! Determinism: the fabric is single-threaded on one seeded clock, so two
+//! identical schedules produce bit-identical completion logs on every
+//! site. [`Fabric::completion_trace`] exposes the fabric-wide log and
+//! [`Fabric::trace_hash`] folds it into one FNV-1a value — the golden
+//! number `tests/determinism.rs` pins. The hash covers the *canonical*
+//! trace (sorted by completion time, then site, then label), which depends
+//! only on integer picosecond arithmetic — stable across platforms as well
+//! as across runs.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::constants;
+use crate::nvme::ssd::SsdArray;
+use crate::sim::time::{ns_f, Ps};
+use crate::sim::Sim;
+
+use super::{
+    submit_on, ArrayId, BarrierId, DoneFn, HubState, LinkId, NvmeId, PoolId, QosSpec,
+    ResourcePolicies, RunStats, TenantAccount, TenantReport, TransferDesc,
+};
+
+/// Identity of one hub shard within a fabric.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct HubId(pub u32);
+
+impl HubId {
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Where a [`Hop`] executes: on one hub's resources, or on the
+/// interconnect (inter-hub links + cross-hub barriers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    Hub(HubId),
+    Net,
+}
+
+/// Interconnect shape: hub count, per-direction link rate, per-hop
+/// latency, and the arbitration policies (per-hub resources use
+/// `policies.{links,pools,nvme}`; inter-hub links use `policies.fabric`).
+#[derive(Clone, Copy, Debug)]
+pub struct FabricConfig {
+    pub hubs: usize,
+    /// inter-hub link rate, Gb/s per direction
+    pub gbps: f64,
+    /// fixed latency per inter-hub hop (switch traversal + SerDes)
+    pub hop_ns: f64,
+    pub policies: ResourcePolicies,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            hubs: 2,
+            gbps: constants::FABRIC_GBPS,
+            hop_ns: constants::FABRIC_HOP_NS,
+            policies: ResourcePolicies::default(),
+        }
+    }
+}
+
+impl FabricConfig {
+    pub fn new(hubs: usize) -> Self {
+        FabricConfig { hubs, ..Default::default() }
+    }
+}
+
+/// One leg of a cross-hub route: a descriptor bound to the site whose
+/// resource tables its stage indices refer to.
+pub struct Hop {
+    pub site: Site,
+    pub desc: TransferDesc,
+}
+
+/// An ordered chain of [`Hop`]s; hop *k+1* is submitted when hop *k*
+/// completes. Each hop is its own descriptor (own completion-log entry,
+/// own tenant accounting on its site).
+#[derive(Default)]
+pub struct RouteDesc {
+    hops: Vec<Hop>,
+}
+
+impl RouteDesc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a hop (builder style).
+    pub fn hop(mut self, site: Site, desc: TransferDesc) -> Self {
+        self.hops.push(Hop { site, desc });
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.hops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hops.is_empty()
+    }
+}
+
+/// One entry of the fabric-wide completion trace: which site logged it,
+/// plus the completion record itself.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEntry {
+    /// hub index, or `u32::MAX` for [`Site::Net`]
+    pub site: u32,
+    pub label: u64,
+    pub tenant: u32,
+    pub submitted_at: Ps,
+    pub done_at: Ps,
+}
+
+/// Site tag for [`Site::Net`] in a [`TraceEntry`].
+pub const TRACE_NET: u32 = u32::MAX;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv1a_u64(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// A fabric of FPGA hubs: N per-hub resource shards and the interconnect,
+/// all on one deterministic event clock.
+pub struct Fabric {
+    pub sim: Sim,
+    cfg: FabricConfig,
+    hubs: Vec<Rc<RefCell<HubState>>>,
+    net: Rc<RefCell<HubState>>,
+    /// `routes[src][dst]` = interconnect link id for the directed pair
+    /// (diagonal unused)
+    routes: Vec<Vec<usize>>,
+}
+
+impl Fabric {
+    /// A fabric of `hubs` shards with the default interconnect.
+    pub fn new(hubs: usize) -> Self {
+        Self::with_config(FabricConfig::new(hubs))
+    }
+
+    pub fn with_config(cfg: FabricConfig) -> Self {
+        assert!(cfg.hubs >= 1, "a fabric needs at least one hub");
+        let hubs: Vec<_> =
+            (0..cfg.hubs).map(|_| Rc::new(RefCell::new(HubState::new()))).collect();
+        let net = Rc::new(RefCell::new(HubState::new()));
+        let mut routes = vec![vec![usize::MAX; cfg.hubs]; cfg.hubs];
+        {
+            let mut n = net.borrow_mut();
+            for (s, row) in routes.iter_mut().enumerate() {
+                for (d, slot) in row.iter_mut().enumerate() {
+                    if s != d {
+                        *slot = n.register_link(
+                            "hub-link",
+                            cfg.gbps,
+                            ns_f(cfg.hop_ns),
+                            cfg.policies.fabric,
+                        );
+                    }
+                }
+            }
+        }
+        Fabric { sim: Sim::new(), cfg, hubs, net, routes }
+    }
+
+    pub fn config(&self) -> FabricConfig {
+        self.cfg
+    }
+
+    pub fn num_hubs(&self) -> usize {
+        self.hubs.len()
+    }
+
+    /// All hub ids, in id order.
+    pub fn hub_ids(&self) -> Vec<HubId> {
+        (0..self.hubs.len() as u32).map(HubId).collect()
+    }
+
+    /// Fixed latency of one inter-hub hop.
+    pub fn hop_latency(&self) -> Ps {
+        ns_f(self.cfg.hop_ns)
+    }
+
+    fn site_cell(&self, site: Site) -> &Rc<RefCell<HubState>> {
+        match site {
+            Site::Hub(h) => {
+                assert!(h.index() < self.hubs.len(), "unknown hub {h:?}");
+                &self.hubs[h.index()]
+            }
+            Site::Net => &self.net,
+        }
+    }
+
+    /// Clone of one hub's state cell (for closures that submit follow-ups).
+    pub fn state(&self, hub: HubId) -> Rc<RefCell<HubState>> {
+        self.site_cell(Site::Hub(hub)).clone()
+    }
+
+    /// Clone of the interconnect's state cell.
+    pub fn net_state(&self) -> Rc<RefCell<HubState>> {
+        self.net.clone()
+    }
+
+    // ------------------------------------------------- registration ----
+
+    /// Register a hub-local link (takes the fabric's per-hub link policy).
+    pub fn add_link(&mut self, hub: HubId, name: &'static str, gbps: f64, post_ps: Ps) -> LinkId {
+        let policy = self.cfg.policies.links;
+        self.state(hub).borrow_mut().register_link(name, gbps, post_ps, policy)
+    }
+
+    pub fn add_pool(&mut self, hub: HubId, cores: usize) -> PoolId {
+        let policy = self.cfg.policies.pools;
+        self.state(hub).borrow_mut().register_pool(cores, policy)
+    }
+
+    pub fn add_array(&mut self, hub: HubId, array: SsdArray) -> ArrayId {
+        self.state(hub).borrow_mut().register_array(array)
+    }
+
+    pub fn add_nvme_queue(
+        &mut self,
+        hub: HubId,
+        array: ArrayId,
+        ssd: usize,
+        depth: usize,
+        submit_ps: Ps,
+        complete_ps: Ps,
+    ) -> NvmeId {
+        let policy = self.cfg.policies.nvme;
+        self.state(hub)
+            .borrow_mut()
+            .register_nvme_queue(array, ssd, depth, submit_ps, complete_ps, policy)
+    }
+
+    /// Register a hub-local barrier (participants on that hub only).
+    pub fn add_barrier(&mut self, hub: HubId, need: usize) -> BarrierId {
+        self.state(hub).borrow_mut().register_barrier(need)
+    }
+
+    /// Register a cross-hub barrier on the interconnect: descriptors from
+    /// any hub rendezvous on it via a [`Site::Net`] hop.
+    pub fn add_fabric_barrier(&mut self, need: usize) -> BarrierId {
+        self.net.borrow_mut().register_barrier(need)
+    }
+
+    // ------------------------------------------------------- routing ----
+
+    /// The directed interconnect link `src → dst` (panics on `src == dst`).
+    pub fn hub_link(&self, src: HubId, dst: HubId) -> LinkId {
+        assert_ne!(src, dst, "no interconnect link from a hub to itself");
+        let id = self.routes[src.index()][dst.index()];
+        assert_ne!(id, usize::MAX, "unknown hub pair {src:?} -> {dst:?}");
+        id
+    }
+
+    /// A [`Site::Net`] descriptor moving `bytes` from `src` to `dst`.
+    pub fn hop_desc(
+        &self,
+        label: u64,
+        qos: QosSpec,
+        src: HubId,
+        dst: HubId,
+        bytes: u64,
+    ) -> TransferDesc {
+        TransferDesc::with_label(label).qos(qos).xfer(self.hub_link(src, dst), bytes)
+    }
+
+    /// Bytes moved so far on the directed link `src → dst`.
+    pub fn hub_link_bytes(&self, src: HubId, dst: HubId) -> u64 {
+        self.net.borrow().links[self.hub_link(src, dst)].bytes_moved
+    }
+
+    // ---------------------------------------------------- submission ----
+
+    /// Submit a descriptor on one hub at absolute time `at`.
+    pub fn submit(
+        &mut self,
+        hub: HubId,
+        at: Ps,
+        desc: TransferDesc,
+        done: impl FnOnce(&mut Sim, Ps) + 'static,
+    ) {
+        let cell = self.state(hub);
+        submit_on(&cell, &mut self.sim, at, desc, done);
+    }
+
+    /// Submit a descriptor on the interconnect (inter-hub links, cross-hub
+    /// barriers) at absolute time `at`.
+    pub fn submit_net(
+        &mut self,
+        at: Ps,
+        desc: TransferDesc,
+        done: impl FnOnce(&mut Sim, Ps) + 'static,
+    ) {
+        let cell = self.net.clone();
+        submit_on(&cell, &mut self.sim, at, desc, done);
+    }
+
+    /// Submit a multi-hop route: hop *k+1* starts when hop *k* completes;
+    /// `done` fires with the final hop's completion time (or at `at` for an
+    /// empty route).
+    pub fn submit_route(
+        &mut self,
+        at: Ps,
+        route: RouteDesc,
+        done: impl FnOnce(&mut Sim, Ps) + 'static,
+    ) {
+        let hops: Vec<(Rc<RefCell<HubState>>, TransferDesc)> = route
+            .hops
+            .into_iter()
+            .map(|h| (self.site_cell(h.site).clone(), h.desc))
+            .collect();
+        chain_hops(hops.into_iter(), &mut self.sim, at, Box::new(done));
+    }
+
+    // ------------------------------------------------------ draining ----
+
+    /// Drain the shared event queue; returns counters for this run.
+    pub fn run(&mut self) -> RunStats {
+        let events_before = self.sim.events_processed();
+        let now_before = self.sim.now();
+        self.sim.run();
+        RunStats {
+            events: self.sim.events_processed() - events_before,
+            sim_elapsed: self.sim.now() - now_before,
+            sim_now: self.sim.now(),
+        }
+    }
+
+    pub fn now(&self) -> Ps {
+        self.sim.now()
+    }
+
+    // ------------------------------------------------- observability ----
+
+    /// Read-only access to one hub's state.
+    pub fn with_hub<R>(&self, hub: HubId, f: impl FnOnce(&HubState) -> R) -> R {
+        f(&self.site_cell(Site::Hub(hub)).borrow())
+    }
+
+    /// Read-only access to the interconnect's state.
+    pub fn with_net<R>(&self, f: impl FnOnce(&HubState) -> R) -> R {
+        f(&self.net.borrow())
+    }
+
+    /// All sites in trace order: hubs by id, then the interconnect.
+    fn sites(&self) -> impl Iterator<Item = (u32, &Rc<RefCell<HubState>>)> + '_ {
+        self.hubs
+            .iter()
+            .enumerate()
+            .map(|(i, st)| (i as u32, st))
+            .chain(std::iter::once((TRACE_NET, &self.net)))
+    }
+
+    /// Descriptors submitted across every site (each route hop counts once
+    /// on its own site).
+    pub fn total_submitted(&self) -> u64 {
+        self.sites().map(|(_, st)| st.borrow().submitted).sum()
+    }
+
+    /// Descriptors completed across every site.
+    pub fn total_completed(&self) -> u64 {
+        self.sites().map(|(_, st)| st.borrow().completed).sum()
+    }
+
+    /// Descriptors still parked on an arbiter, across every site (0 after
+    /// a drained run unless something leaked).
+    pub fn parked_waiters(&self) -> usize {
+        self.sites().map(|(_, st)| st.borrow().parked_waiters()).sum()
+    }
+
+    /// Continuations still waiting on an unreleased barrier, across every
+    /// site — the cross-hub-deadlock detector the property tests assert on.
+    pub fn barrier_waiters(&self) -> usize {
+        self.sites()
+            .map(|(_, st)| st.borrow().barrier_waiters.iter().map(Vec::len).sum::<usize>())
+            .sum()
+    }
+
+    /// Per-tenant accounts merged across every site (sorted by tenant id).
+    pub fn tenant_reports(&self) -> Vec<TenantReport> {
+        let mut merged: Vec<TenantAccount> = Vec::new();
+        for (_, site) in self.sites() {
+            let st = site.borrow();
+            for a in &st.tenants {
+                let idx = match merged.iter().position(|m| m.tenant == a.tenant) {
+                    Some(i) => i,
+                    None => {
+                        merged.push(TenantAccount {
+                            tenant: a.tenant,
+                            submitted: 0,
+                            completed: 0,
+                            bytes_moved: 0,
+                            lat: crate::metrics::Hist::new(),
+                        });
+                        merged.len() - 1
+                    }
+                };
+                let acct = &mut merged[idx];
+                acct.submitted += a.submitted;
+                acct.completed += a.completed;
+                acct.bytes_moved += a.bytes_moved;
+                acct.lat.merge(&a.lat);
+            }
+        }
+        let mut out: Vec<TenantReport> = merged
+            .iter_mut()
+            .map(|a| TenantReport {
+                tenant: a.tenant,
+                submitted: a.submitted,
+                completed: a.completed,
+                bytes_moved: a.bytes_moved,
+                lat_us: a.lat.quantiles(),
+            })
+            .collect();
+        out.sort_by_key(|r| r.tenant);
+        out
+    }
+
+    // --------------------------------------------------- golden trace ----
+
+    /// The fabric-wide completion log: each site's completions in event
+    /// order, sites in id order (interconnect last).
+    pub fn completion_trace(&self) -> Vec<TraceEntry> {
+        let mut out = Vec::new();
+        for (site, st) in self.sites() {
+            for c in &st.borrow().completions {
+                out.push(TraceEntry {
+                    site,
+                    label: c.label,
+                    tenant: c.tenant.0,
+                    submitted_at: c.submitted_at,
+                    done_at: c.done_at,
+                });
+            }
+        }
+        out
+    }
+
+    /// FNV-1a hash of the canonical completion trace (sorted by
+    /// `(done_at, site, label, submitted_at)`), entry count folded in
+    /// first. Two runs of an identical schedule produce the same value;
+    /// the determinism tests pin it against committed golden numbers.
+    pub fn trace_hash(&self) -> u64 {
+        let mut trace = self.completion_trace();
+        trace.sort_by_key(|e| (e.done_at, e.site, e.label, e.submitted_at));
+        let mut h = fnv1a_u64(FNV_OFFSET, trace.len() as u64);
+        for e in &trace {
+            h = fnv1a_u64(h, e.site as u64);
+            h = fnv1a_u64(h, e.label);
+            h = fnv1a_u64(h, e.tenant as u64);
+            h = fnv1a_u64(h, e.submitted_at);
+            h = fnv1a_u64(h, e.done_at);
+        }
+        h
+    }
+}
+
+/// Execute a hop chain: submit the head on its site; its completion
+/// submits the tail. Boxed `done` keeps the recursion monomorphic.
+fn chain_hops(
+    mut hops: std::vec::IntoIter<(Rc<RefCell<HubState>>, TransferDesc)>,
+    sim: &mut Sim,
+    at: Ps,
+    done: DoneFn,
+) {
+    match hops.next() {
+        None => sim.at(at, move |s| {
+            let now = s.now();
+            done(s, now);
+        }),
+        Some((st, desc)) => {
+            submit_on(&st, sim, at, desc, move |s, t| chain_hops(hops, s, t, done));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime_hub::TenantId;
+    use crate::sim::time::US;
+    use std::cell::Cell;
+
+    /// 12.5 KB at 100 Gb/s = 1 µs on the wire; +500 ns hop.
+    const BYTES_1US: u64 = 12_500;
+
+    fn two_hub() -> Fabric {
+        Fabric::with_config(FabricConfig {
+            hubs: 2,
+            gbps: 100.0,
+            hop_ns: 500.0,
+            policies: ResourcePolicies::default(),
+        })
+    }
+
+    #[test]
+    fn interconnect_is_a_full_mesh_of_directed_links() {
+        let fab = Fabric::new(4);
+        let ids = fab.hub_ids();
+        assert_eq!(ids.len(), 4);
+        for &s in &ids {
+            for &d in &ids {
+                if s != d {
+                    let l = fab.hub_link(s, d);
+                    let back = fab.hub_link(d, s);
+                    assert_ne!(l, back, "directions must not share a wire");
+                }
+            }
+        }
+        fab.with_net(|st| assert_eq!(st.links.len(), 12));
+    }
+
+    #[test]
+    fn single_net_hop_pays_serialization_plus_hop() {
+        let mut fab = two_hub();
+        let (a, b) = (HubId(0), HubId(1));
+        let done = Rc::new(Cell::new(0u64));
+        let d = done.clone();
+        let desc = fab.hop_desc(1, QosSpec::default(), a, b, BYTES_1US);
+        fab.submit_net(0, desc, move |_, t| d.set(t));
+        fab.run();
+        assert_eq!(done.get(), US + 500_000, "1 µs wire + 500 ns hop");
+        assert_eq!(fab.hub_link_bytes(a, b), BYTES_1US);
+        assert_eq!(fab.hub_link_bytes(b, a), 0);
+    }
+
+    #[test]
+    fn route_chains_hops_across_sites() {
+        let mut fab = two_hub();
+        let (a, b) = (HubId(0), HubId(1));
+        let qos = QosSpec::default();
+        let done = Rc::new(Cell::new(0u64));
+        let d = done.clone();
+        let route = RouteDesc::new()
+            .hop(Site::Hub(a), TransferDesc::with_label(7).qos(qos).delay(US))
+            .hop(Site::Net, fab.hop_desc(7, qos, a, b, BYTES_1US))
+            .hop(Site::Hub(b), TransferDesc::with_label(7).qos(qos).delay(2 * US));
+        assert_eq!(route.len(), 3);
+        fab.submit_route(0, route, move |_, t| d.set(t));
+        fab.run();
+        // 1 µs on hub 0, 1.5 µs on the wire, 2 µs on hub 1
+        assert_eq!(done.get(), 4 * US + 500_000);
+        assert_eq!(fab.total_submitted(), 3);
+        assert_eq!(fab.total_completed(), 3);
+    }
+
+    #[test]
+    fn empty_route_completes_at_submission_time() {
+        let mut fab = two_hub();
+        let done = Rc::new(Cell::new(0u64));
+        let d = done.clone();
+        fab.submit_route(3 * US, RouteDesc::new(), move |_, t| d.set(t));
+        fab.run();
+        assert_eq!(done.get(), 3 * US);
+        assert_eq!(fab.total_submitted(), 0, "an empty route is no descriptor");
+    }
+
+    #[test]
+    fn fabric_barrier_rendezvous_across_hubs() {
+        let mut fab = two_hub();
+        let bar = fab.add_fabric_barrier(2);
+        let times: Rc<RefCell<Vec<Ps>>> = Rc::new(RefCell::new(Vec::new()));
+        for h in 0..2u32 {
+            let t = times.clone();
+            // hub h does (h+1) µs of local work, then enters the barrier
+            let route = RouteDesc::new()
+                .hop(
+                    Site::Hub(HubId(h)),
+                    TransferDesc::with_label(h as u64).delay((h as u64 + 1) * US),
+                )
+                .hop(Site::Net, TransferDesc::with_label(h as u64).barrier(bar));
+            fab.submit_route(0, route, move |_, at| t.borrow_mut().push(at));
+        }
+        fab.run();
+        let got = times.borrow().clone();
+        assert_eq!(got, vec![2 * US, 2 * US], "both released at the last arrival");
+        assert_eq!(fab.barrier_waiters(), 0);
+    }
+
+    #[test]
+    fn unreleased_barrier_is_detectable() {
+        let mut fab = two_hub();
+        let bar = fab.add_fabric_barrier(2); // only one participant will come
+        fab.submit_net(0, TransferDesc::with_label(1).barrier(bar), |_, _| {});
+        fab.run();
+        assert_eq!(fab.barrier_waiters(), 1, "the lone arrival stays parked");
+        assert_eq!(fab.total_completed(), 0);
+    }
+
+    #[test]
+    fn per_hub_resources_are_independent_shards() {
+        let mut fab = two_hub();
+        let l0 = fab.add_link(HubId(0), "port", 100.0, 0);
+        let l1 = fab.add_link(HubId(1), "port", 100.0, 0);
+        assert_eq!(l0, l1, "ids are hub-local");
+        fab.submit(HubId(0), 0, TransferDesc::new().xfer(l0, BYTES_1US), |_, _| {});
+        fab.run();
+        fab.with_hub(HubId(0), |st| assert_eq!(st.links[l0].bytes_moved, BYTES_1US));
+        fab.with_hub(HubId(1), |st| assert_eq!(st.links[l1].bytes_moved, 0));
+    }
+
+    #[test]
+    fn tenant_reports_merge_across_sites() {
+        let mut fab = two_hub();
+        let qos = QosSpec::bulk(TenantId(5));
+        let l0 = fab.add_link(HubId(0), "port", 100.0, 0);
+        fab.submit(HubId(0), 0, TransferDesc::with_label(1).qos(qos).xfer(l0, 1000), |_, _| {});
+        let hop = fab.hop_desc(2, qos, HubId(0), HubId(1), 2000);
+        fab.submit_net(0, hop, |_, _| {});
+        fab.run();
+        let reports = fab.tenant_reports();
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].tenant, TenantId(5));
+        assert_eq!(reports[0].submitted, 2);
+        assert_eq!(reports[0].completed, 2);
+        assert_eq!(reports[0].bytes_moved, 3000);
+        assert_eq!(reports[0].lat_us.n, 2);
+    }
+
+    #[test]
+    fn trace_hash_is_stable_and_sensitive() {
+        let run = |label: u64| {
+            let mut fab = two_hub();
+            let (a, b) = (HubId(0), HubId(1));
+            let desc = fab.hop_desc(label, QosSpec::default(), a, b, BYTES_1US);
+            fab.submit_net(0, desc, |_, _| {});
+            fab.run();
+            (fab.trace_hash(), fab.completion_trace())
+        };
+        let (h1, t1) = run(1);
+        let (h2, t2) = run(1);
+        assert_eq!(h1, h2, "identical schedules hash identically");
+        assert_eq!(t1, t2);
+        assert_eq!(t1.len(), 1);
+        assert_eq!(t1[0].site, TRACE_NET);
+        let (h3, _) = run(9);
+        assert_ne!(h1, h3, "a different label must change the hash");
+    }
+}

@@ -25,6 +25,7 @@
 //! carry a [`QosSpec`] (tenant, class, weight); the runtime keeps
 //! per-tenant accounts (grants, bytes, completion-latency quantiles).
 
+pub mod fabric;
 pub mod sched;
 
 use std::cell::{Cell, RefCell};
@@ -40,6 +41,7 @@ use crate::sim::time::{to_us, Ps};
 use crate::sim::Sim;
 use crate::util::Slab;
 
+pub use fabric::{Fabric, FabricConfig, Hop, HubId, RouteDesc, Site, TraceEntry};
 pub use sched::{
     dispatch_io, ArbPolicy, Arbiter, Barrier, FifoLink, GrantMeta, NvmeQueue, QosSpec,
     ResourcePolicies, TenantId, CLASS_BULK, CLASS_NORMAL, CLASS_REALTIME,
@@ -251,6 +253,55 @@ impl HubState {
     pub fn parked_waiters(&self) -> usize {
         self.parked.len()
     }
+
+    // Registration lives on the state itself so both [`HubRuntime`] (one
+    // shard) and [`fabric::Fabric`] (N shards + the interconnect) share one
+    // resource table implementation.
+
+    fn register_link(
+        &mut self,
+        name: &'static str,
+        gbps: f64,
+        post_ps: Ps,
+        policy: ArbPolicy,
+    ) -> LinkId {
+        self.links.push(FifoLink::new(name, gbps, post_ps));
+        self.link_arb.push(policy.build());
+        self.links.len() - 1
+    }
+
+    fn register_pool(&mut self, cores: usize, policy: ArbPolicy) -> PoolId {
+        self.pools.push(CorePool::new(cores));
+        self.pool_arb.push(policy.build());
+        self.pools.len() - 1
+    }
+
+    fn register_array(&mut self, array: SsdArray) -> ArrayId {
+        self.arrays.push(array);
+        self.arrays.len() - 1
+    }
+
+    fn register_nvme_queue(
+        &mut self,
+        array: ArrayId,
+        ssd: usize,
+        depth: usize,
+        submit_ps: Ps,
+        complete_ps: Ps,
+        policy: ArbPolicy,
+    ) -> NvmeId {
+        assert!(array < self.arrays.len(), "unknown array {array}");
+        assert!(ssd < self.arrays[array].len(), "array {array} has no SSD {ssd}");
+        self.nvme.push(NvmeQueue::new(array, ssd, depth, submit_ps, complete_ps));
+        self.nvme_arb.push(policy.build());
+        self.nvme.len() - 1
+    }
+
+    fn register_barrier(&mut self, need: usize) -> BarrierId {
+        self.barriers.push(Barrier::new(need));
+        self.barrier_waiters.push(Vec::new());
+        self.barriers.len() - 1
+    }
 }
 
 /// Counters from one `run()` (drain-the-queue) call.
@@ -312,10 +363,7 @@ impl HubRuntime {
         post_ps: Ps,
         policy: ArbPolicy,
     ) -> LinkId {
-        let mut st = self.state.borrow_mut();
-        st.links.push(FifoLink::new(name, gbps, post_ps));
-        st.link_arb.push(policy.build());
-        st.links.len() - 1
+        self.state.borrow_mut().register_link(name, gbps, post_ps, policy)
     }
 
     pub fn add_pool(&mut self, cores: usize) -> PoolId {
@@ -324,16 +372,11 @@ impl HubRuntime {
 
     /// Register a core pool with an explicit arbitration policy.
     pub fn add_pool_arb(&mut self, cores: usize, policy: ArbPolicy) -> PoolId {
-        let mut st = self.state.borrow_mut();
-        st.pools.push(CorePool::new(cores));
-        st.pool_arb.push(policy.build());
-        st.pools.len() - 1
+        self.state.borrow_mut().register_pool(cores, policy)
     }
 
     pub fn add_array(&mut self, array: SsdArray) -> ArrayId {
-        let mut st = self.state.borrow_mut();
-        st.arrays.push(array);
-        st.arrays.len() - 1
+        self.state.borrow_mut().register_array(array)
     }
 
     pub fn add_nvme_queue(
@@ -358,19 +401,13 @@ impl HubRuntime {
         complete_ps: Ps,
         policy: ArbPolicy,
     ) -> NvmeId {
-        let mut st = self.state.borrow_mut();
-        assert!(array < st.arrays.len(), "unknown array {array}");
-        assert!(ssd < st.arrays[array].len(), "array {array} has no SSD {ssd}");
-        st.nvme.push(NvmeQueue::new(array, ssd, depth, submit_ps, complete_ps));
-        st.nvme_arb.push(policy.build());
-        st.nvme.len() - 1
+        self.state
+            .borrow_mut()
+            .register_nvme_queue(array, ssd, depth, submit_ps, complete_ps, policy)
     }
 
     pub fn add_barrier(&mut self, need: usize) -> BarrierId {
-        let mut st = self.state.borrow_mut();
-        st.barriers.push(Barrier::new(need));
-        st.barrier_waiters.push(Vec::new());
-        st.barriers.len() - 1
+        self.state.borrow_mut().register_barrier(need)
     }
 
     /// Submit a descriptor at absolute time `at`; `done` fires when the
@@ -1203,6 +1240,36 @@ mod tests {
         let prio = run(ArbPolicy::StrictPriority);
         assert_eq!(prio[0], 0, "in-flight command cannot be preempted");
         assert_eq!(prio[1], 9, "urgent command dispatched at the first doorbell");
+    }
+
+    #[test]
+    fn tenant_report_without_completions_has_zero_quantiles() {
+        // a tenant that has submitted but completed nothing must report
+        // all-zero latency quantiles (not NaN, not a panic) — the empty
+        // histogram case of `Hist::quantiles`
+        let mut rt = HubRuntime::new();
+        let qos = QosSpec::bulk(TenantId(3));
+        rt.submit(10 * US, TransferDesc::new().qos(qos).delay(10 * US), |_, _| {});
+        rt.sim.run_until(US); // stop well before the descriptor starts
+        let reports = rt.tenant_reports();
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].submitted, 1);
+        assert_eq!(reports[0].completed, 0);
+        assert_eq!(reports[0].lat_us, Quantiles::default());
+        assert!(reports[0].lat_us.p99 == 0.0 && !reports[0].lat_us.mean.is_nan());
+    }
+
+    #[test]
+    fn tenant_report_single_sample_pins_quantiles() {
+        let mut rt = HubRuntime::new();
+        let qos = QosSpec::bulk(TenantId(4));
+        rt.submit(0, TransferDesc::new().qos(qos).delay(3 * US), |_, _| {});
+        rt.run();
+        let reports = rt.tenant_reports();
+        assert_eq!(reports[0].lat_us.n, 1);
+        assert_eq!(reports[0].lat_us.p50, 3.0);
+        assert_eq!(reports[0].lat_us.p99, 3.0);
+        assert_eq!(reports[0].lat_us.max, 3.0);
     }
 
     #[test]

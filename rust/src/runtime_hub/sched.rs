@@ -146,12 +146,14 @@ pub struct ResourcePolicies {
     pub links: ArbPolicy,
     pub pools: ArbPolicy,
     pub nvme: ArbPolicy,
+    /// inter-hub fabric links (the [`super::fabric::Fabric`] interconnect)
+    pub fabric: ArbPolicy,
 }
 
 impl ResourcePolicies {
     /// The same policy on every resource kind.
     pub fn uniform(policy: ArbPolicy) -> Self {
-        ResourcePolicies { links: policy, pools: policy, nvme: policy }
+        ResourcePolicies { links: policy, pools: policy, nvme: policy, fabric: policy }
     }
 }
 

@@ -340,6 +340,63 @@ fn regression_fig8_single_tenant_matches_closed_form() {
     }
 }
 
+/// Regression (ISSUE 3): a zero-skew 2-hub hierarchical allreduce round
+/// must land exactly where the closed-form sum of its phases puts it:
+///   t0 + tp + W·ser(chunk+hdr) + hop          (intra-hub reduce)
+///      + ser_fab(8·lanes+hdr) + fab_hop       (the single ring leg)
+///      + W·ser(chunk+hdr) + hop + tp          (broadcast fan-out)
+/// — same style as the fig8 pin above.
+#[test]
+fn regression_hier_allreduce_2hub_matches_closed_form() {
+    use fpgahub::apps::allreduce::{HierConfig, HierarchicalAllreduce};
+    use fpgahub::net::packet::HEADER_BYTES;
+    use fpgahub::runtime_hub::{Fabric, FabricConfig, QosSpec, ResourcePolicies};
+    use fpgahub::sim::time::{cycles, ns_f};
+
+    let (hubs, workers, lanes) = (2usize, 4u32, 512usize);
+    let mut fab = Fabric::with_config(FabricConfig {
+        hubs,
+        gbps: fpgahub::constants::FABRIC_GBPS,
+        hop_ns: fpgahub::constants::FABRIC_HOP_NS,
+        policies: ResourcePolicies::default(),
+    });
+    let app = HierarchicalAllreduce::new(
+        &mut fab,
+        HierConfig {
+            hubs,
+            workers_per_hub: workers,
+            chunk_lanes: lanes,
+            skew_us: 0.0,
+            seed: 1,
+            qos: QosSpec::default(),
+        },
+    );
+    let chunks = vec![vec![0.25f32; lanes]; app.total_workers()];
+    let out = app.round(&mut fab, 0, &chunks);
+    let worst = *out.done_at.iter().max().unwrap();
+
+    let tp = cycles(fpgahub::constants::FPGA_TRANSPORT_CYCLES, fpgahub::constants::FPGA_FREQ_MHZ);
+    let ser = |b: u64| ns_f(b as f64 * 8.0 / fpgahub::constants::ETH_GBPS);
+    let ser_fab = |b: u64| ns_f(b as f64 * 8.0 / fpgahub::constants::FABRIC_GBPS);
+    let hop = ns_f(fpgahub::constants::ETH_HOP_NS);
+    let fab_hop = ns_f(fpgahub::constants::FABRIC_HOP_NS);
+    let chunk = (lanes * 4) as u64 + HEADER_BYTES;
+    let ring = (lanes * 8) as u64 + HEADER_BYTES;
+    let w = workers as u64;
+    let closed_form =
+        tp + w * ser(chunk) + hop + ser_fab(ring) + fab_hop + w * ser(chunk) + hop + tp;
+    assert!(
+        (worst as i64 - closed_form as i64).abs() <= 1,
+        "event-driven {worst}ps vs closed-form {closed_form}ps"
+    );
+    // every worker releases at the same instant with zero skew
+    assert!(out.done_at.iter().all(|&t| t == worst));
+    // and the numerics hold: 8 workers × 0.25 per lane
+    for v in &out.values {
+        assert!((v - 2.0).abs() < 1e-3, "{v}");
+    }
+}
+
 #[test]
 fn prop_descriptor_table_update_semantics() {
     forall(
