@@ -1,0 +1,155 @@
+//! Event-core microbench (ISSUE 4): schedule/fire throughput of the
+//! typed-event path vs the boxed-closure escape hatch, same-time FIFO
+//! burst handling in the calendar queue, and deep continuation chains
+//! through the runtime's slab arena.
+//!
+//! The `engine/typed_relay` vs `engine/closure_relay` pair is the
+//! before/after of the zero-allocation rewrite: identical schedules (same
+//! event count, same timestamps), one dispatched as fixed-size
+//! `Event::Advance` payloads against a `World`, the other as fresh
+//! `Box<dyn FnOnce>` allocations per hop — exactly what every event cost
+//! before. The printed speedup line is the acceptance number for
+//! DESIGN.md §9; `-- --json BENCH_engine.json` persists everything.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use fpgahub::bench_harness::{banner, bench_sim, SimMetrics};
+use fpgahub::runtime_hub::{HubRuntime, TransferDesc};
+use fpgahub::sim::{Event, Ps, Sim, World, NS, US};
+
+/// Total events per relay iteration (shared by both engine paths).
+const RELAY_EVENTS: u64 = 200_000;
+/// Concurrent relay chains (queue depth during the run).
+const CHAINS: u64 = 64;
+/// Per-hop delay: keeps the whole run inside one wheel rotation.
+const HOP_PS: Ps = 2 * NS;
+
+/// Typed path: every hop is an `Event::Advance` re-armed by the world.
+struct Relay {
+    remaining: u64,
+}
+
+impl World for Relay {
+    fn dispatch(&mut self, sim: &mut Sim, ev: Event) {
+        if let Event::Advance { site, slot } = ev {
+            if self.remaining > 0 {
+                self.remaining -= 1;
+                sim.schedule(sim.now() + HOP_PS, Event::Advance { site, slot });
+            }
+        }
+    }
+}
+
+fn typed_relay() -> SimMetrics {
+    let mut sim = Sim::new();
+    for slot in 0..CHAINS as u32 {
+        sim.schedule(slot as Ps, Event::Advance { site: 0, slot });
+    }
+    let mut world = Relay { remaining: RELAY_EVENTS - CHAINS };
+    sim.run_world(&mut world);
+    assert_eq!(sim.events_processed(), RELAY_EVENTS);
+    assert_eq!(sim.pending(), 0);
+    SimMetrics { events: sim.events_processed(), sim_ps: sim.now() }
+}
+
+/// Boxed path: the identical schedule, each hop a fresh closure
+/// allocation — the pre-ISSUE-4 cost model of every runtime event.
+fn closure_hop(sim: &mut Sim, remaining: Rc<Cell<u64>>) {
+    if remaining.get() > 0 {
+        remaining.set(remaining.get() - 1);
+        sim.after(HOP_PS, move |s| closure_hop(s, remaining));
+    }
+}
+
+fn closure_relay() -> SimMetrics {
+    let mut sim = Sim::new();
+    let remaining = Rc::new(Cell::new(RELAY_EVENTS - CHAINS));
+    for slot in 0..CHAINS {
+        let r = remaining.clone();
+        sim.at(slot, move |s| closure_hop(s, r));
+    }
+    sim.run();
+    assert_eq!(sim.events_processed(), RELAY_EVENTS);
+    SimMetrics { events: sim.events_processed(), sim_ps: sim.now() }
+}
+
+/// Same-time burst stress: the FIFO tie path of the calendar queue
+/// (batch extraction of equal timestamps, no comparisons, no sequence
+/// numbers). World is a pure sink.
+struct Sink;
+
+impl World for Sink {
+    fn dispatch(&mut self, _sim: &mut Sim, _ev: Event) {}
+}
+
+fn same_time_bursts() -> SimMetrics {
+    let mut sim = Sim::new();
+    for burst in 0..500u64 {
+        for slot in 0..400u32 {
+            sim.schedule(burst * US, Event::Advance { site: 0, slot });
+        }
+    }
+    sim.run_world(&mut Sink);
+    assert_eq!(sim.events_processed(), 200_000);
+    SimMetrics { events: sim.events_processed(), sim_ps: sim.now() }
+}
+
+/// Deep continuation chains on the real runtime: descriptors advancing
+/// through many stages, each transition a typed event carrying a slot
+/// token into the continuation arena. Three identical waves on one
+/// runtime assert slab/queue reuse: the arena must not grow after warmup
+/// — the zero-allocation steady state.
+fn deep_chains() -> SimMetrics {
+    let mut rt = HubRuntime::new();
+    let mut events = 0u64;
+    let mut sim_ps = 0;
+    let mut arena_after_first_wave = 0usize;
+    for wave in 0..3u64 {
+        for i in 0..200u64 {
+            let mut desc = TransferDesc::with_label(i);
+            for _ in 0..128 {
+                desc = desc.delay(10 * NS);
+            }
+            rt.submit(wave * 10_000 * US + i * 50 * NS, desc, |_, _| {});
+        }
+        let stats = rt.run();
+        events += stats.events;
+        sim_ps += stats.sim_elapsed;
+        let cap = rt.with_state(|st| {
+            assert_eq!(st.in_flight(), 0, "continuation leaked");
+            st.cont_arena_capacity()
+        });
+        if wave == 0 {
+            arena_after_first_wave = cap;
+        } else {
+            assert_eq!(cap, arena_after_first_wave, "continuation arena grew after warmup");
+        }
+    }
+    assert_eq!(rt.sim.pending(), 0);
+    SimMetrics { events, sim_ps }
+}
+
+fn main() {
+    banner("event core: schedule/fire relay (64 chains, 200k events)");
+    let closure = bench_sim("engine/closure_relay", 2, 10, closure_relay);
+    let typed = bench_sim("engine/typed_relay", 2, 10, typed_relay);
+    let speedup = typed.events_per_sec / closure.events_per_sec.max(1.0);
+    println!(
+        "typed-event speedup vs boxed closures: {speedup:.2}x \
+         ({:.0} vs {:.0} events/s)",
+        typed.events_per_sec, closure.events_per_sec
+    );
+    // the ISSUE 4 acceptance bar, as a greppable verdict in the CI log
+    // (not a hard assert: shared CI runners are too noisy to gate on)
+    let verdict = if speedup >= 2.0 { "PASS" } else { "FAIL" };
+    println!("speedup-bar(>=2x): {verdict}");
+
+    banner("event core: same-time bursts (500 x 400 FIFO ties)");
+    bench_sim("engine/same_time_bursts", 2, 10, same_time_bursts);
+
+    banner("runtime: deep continuation chains (slab arena, 3 waves)");
+    bench_sim("runtime/deep_chains", 1, 10, deep_chains);
+
+    fpgahub::bench_harness::finish().expect("bench json");
+}

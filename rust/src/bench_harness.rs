@@ -10,7 +10,10 @@
 //! Every result is also collected in-process; a bench binary that ends
 //! with [`finish`] writes them as machine-readable JSON when invoked as
 //! `cargo bench --bench <name> -- --json BENCH_<name>.json`, so the perf
-//! trajectory (events/s, sim/wall ratio) is tracked across PRs.
+//! trajectory (events/s, sim/wall ratio) is tracked across PRs. The
+//! document carries a suite-level `summary` rollup (total events,
+//! aggregate events/s, suite sim/wall ratio) so two BENCH_*.json files
+//! compare at a glance; CI publishes them as workflow artifacts.
 
 use std::path::Path;
 use std::sync::Mutex;
@@ -22,6 +25,19 @@ use crate::sim::time::Ps;
 /// Results collected by [`bench`]/[`bench_sim`] in this process, as
 /// pre-rendered JSON objects.
 static JSON_RESULTS: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+/// Suite-level aggregates across every [`bench_sim`] case in this
+/// process, for the `summary` entry of the JSON document — one number per
+/// BENCH_*.json makes the perf trajectory comparable across PRs at a
+/// glance.
+#[derive(Clone, Copy)]
+struct SimTotals {
+    events: u64,
+    wall_s: f64,
+    sim_s: f64,
+}
+
+static SIM_TOTALS: Mutex<SimTotals> = Mutex::new(SimTotals { events: 0, wall_s: 0.0, sim_s: 0.0 });
 
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
@@ -177,6 +193,12 @@ pub fn bench_sim<F: FnMut() -> SimMetrics>(
         events_per_sec: if wall_total > 0.0 { events_total as f64 / wall_total } else { 0.0 },
         sim_wall_ratio: if wall_total > 0.0 { sim_total / wall_total } else { 0.0 },
     };
+    {
+        let mut totals = SIM_TOTALS.lock().unwrap_or_else(|e| e.into_inner());
+        totals.events += events_total;
+        totals.wall_s += wall_total;
+        totals.sim_s += sim_total;
+    }
     r.print();
     record_json(r.json());
     r
@@ -198,11 +220,23 @@ pub fn write_json(path: &Path) -> std::io::Result<()> {
     // cargo names bench binaries `<name>-<hash>`; strip the hash
     let suite = suite.split('-').next().unwrap_or(&suite).to_string();
     let entries = JSON_RESULTS.lock().unwrap_or_else(|e| e.into_inner());
-    let mut body = String::from("{\"schema\":1,\"suite\":\"");
+    let totals = *SIM_TOTALS.lock().unwrap_or_else(|e| e.into_inner());
+    let mut body = String::from("{\"schema\":2,\"suite\":\"");
     body.push_str(&json_escape(&suite));
     body.push_str("\",\"benches\":[");
     body.push_str(&entries.join(","));
-    body.push_str("]}\n");
+    // suite-level rollup of every bench_sim case: total engine events,
+    // aggregate events/s, and the suite-wide sim-time/wall-time ratio
+    let mut events_per_sec = 0.0;
+    let mut sim_wall = 0.0;
+    if totals.wall_s > 0.0 {
+        events_per_sec = totals.events as f64 / totals.wall_s;
+        sim_wall = totals.sim_s / totals.wall_s;
+    }
+    body.push_str(&format!(
+        "],\"summary\":{{\"total_events\":{},\"events_per_sec\":{:.1},\"sim_wall_ratio\":{:.3}}}}}\n",
+        totals.events, events_per_sec, sim_wall
+    ));
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;
@@ -279,10 +313,14 @@ mod tests {
         let path = dir.join("BENCH_test.json");
         write_json(&path).unwrap();
         let body = std::fs::read_to_string(&path).unwrap();
-        assert!(body.starts_with("{\"schema\":1,\"suite\":"));
+        assert!(body.starts_with("{\"schema\":2,\"suite\":"));
         assert!(body.contains("\"benches\":["));
         assert!(body.contains("json \\\"quoted"));
-        assert!(body.trim_end().ends_with("]}"));
+        // suite-level rollup entry (ISSUE 4): totals across bench_sim cases
+        assert!(body.contains("\"summary\":{\"total_events\":"), "{body}");
+        assert!(body.contains("\"events_per_sec\":"));
+        assert!(body.contains("\"sim_wall_ratio\":"));
+        assert!(body.trim_end().ends_with("}}"), "{body}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -36,10 +36,11 @@ use crate::constants;
 use crate::nvme::ssd::SsdArray;
 use crate::sim::time::{ns_f, Ps};
 use crate::sim::Sim;
+use crate::util::Slab;
 
 use super::{
-    submit_on, ArrayId, BarrierId, DoneFn, HubState, LinkId, NvmeId, PoolId, QosSpec,
-    ResourcePolicies, RunStats, TenantAccount, TenantReport, TransferDesc,
+    submit_cont, submit_on, ArrayId, BarrierId, DoneAction, DoneFn, HubState, HubWorld, LinkId,
+    NvmeId, PoolId, QosSpec, ResourcePolicies, RunStats, TenantAccount, TenantReport, TransferDesc,
 };
 
 /// Identity of one hub shard within a fabric.
@@ -153,9 +154,23 @@ fn fnv1a_u64(mut h: u64, v: u64) -> u64 {
     h
 }
 
+/// In-flight state of one multi-hop route: the remaining hops and the
+/// final completion callback. Parked in the fabric's route table once at
+/// `submit_route`; each hop's continuation carries the 4-byte table slot
+/// ([`DoneAction::FabricHop`]) instead of a freshly boxed closure per hop.
+pub(crate) struct RouteState {
+    hops: std::vec::IntoIter<(Rc<RefCell<HubState>>, TransferDesc)>,
+    done: DoneFn,
+}
+
+/// Shared handle to the route table (cloned into each hop's done action).
+pub(crate) type RouteTable = Rc<RefCell<Slab<RouteState>>>;
+
 /// A fabric of FPGA hubs: N per-hub resource shards and the interconnect,
 /// all on one deterministic event clock.
 pub struct Fabric {
+    /// The shared engine. Exposed for *scheduling*; drain through
+    /// [`Fabric::run`] (`sim.run()` alone cannot dispatch typed events).
     pub sim: Sim,
     cfg: FabricConfig,
     hubs: Vec<Rc<RefCell<HubState>>>,
@@ -163,6 +178,8 @@ pub struct Fabric {
     /// `routes[src][dst]` = interconnect link id for the directed pair
     /// (diagonal unused)
     routes: Vec<Vec<usize>>,
+    /// in-flight multi-hop routes (slot-addressed continuations)
+    route_conts: RouteTable,
 }
 
 impl Fabric {
@@ -173,9 +190,12 @@ impl Fabric {
 
     pub fn with_config(cfg: FabricConfig) -> Self {
         assert!(cfg.hubs >= 1, "a fabric needs at least one hub");
-        let hubs: Vec<_> =
-            (0..cfg.hubs).map(|_| Rc::new(RefCell::new(HubState::new()))).collect();
-        let net = Rc::new(RefCell::new(HubState::new()));
+        // typed events address sites by index: hubs 0..N, interconnect N
+        let mut hubs = Vec::with_capacity(cfg.hubs);
+        for i in 0..cfg.hubs {
+            hubs.push(Rc::new(RefCell::new(HubState::new(i as u32))));
+        }
+        let net = Rc::new(RefCell::new(HubState::new(cfg.hubs as u32)));
         let mut routes = vec![vec![usize::MAX; cfg.hubs]; cfg.hubs];
         {
             let mut n = net.borrow_mut();
@@ -192,7 +212,14 @@ impl Fabric {
                 }
             }
         }
-        Fabric { sim: Sim::new(), cfg, hubs, net, routes }
+        Fabric {
+            sim: Sim::new(),
+            cfg,
+            hubs,
+            net,
+            routes,
+            route_conts: Rc::new(RefCell::new(Slab::new())),
+        }
     }
 
     pub fn config(&self) -> FabricConfig {
@@ -331,7 +358,9 @@ impl Fabric {
 
     /// Submit a multi-hop route: hop *k+1* starts when hop *k* completes;
     /// `done` fires with the final hop's completion time (or at `at` for an
-    /// empty route).
+    /// empty route). The route is parked once in the route table; hop
+    /// chaining then rides the typed completion path with no per-hop
+    /// allocation.
     pub fn submit_route(
         &mut self,
         at: Ps,
@@ -343,7 +372,11 @@ impl Fabric {
             .into_iter()
             .map(|h| (self.site_cell(h.site).clone(), h.desc))
             .collect();
-        chain_hops(hops.into_iter(), &mut self.sim, at, Box::new(done));
+        // an empty route flows through the same path: next_hop's terminal
+        // branch vacates the slot and defers `done` one event at `at`
+        let route = RouteState { hops: hops.into_iter(), done: Box::new(done) };
+        let slot = self.route_conts.borrow_mut().insert(route);
+        next_hop(self.route_conts.clone(), &mut self.sim, at, slot);
     }
 
     // ------------------------------------------------------ draining ----
@@ -352,12 +385,24 @@ impl Fabric {
     pub fn run(&mut self) -> RunStats {
         let events_before = self.sim.events_processed();
         let now_before = self.sim.now();
-        self.sim.run();
+        let mut sites = self.hubs.clone();
+        sites.push(self.net.clone());
+        let mut world = HubWorld::new(sites);
+        self.sim.run_world(&mut world);
         RunStats {
             events: self.sim.events_processed() - events_before,
             sim_elapsed: self.sim.now() - now_before,
             sim_now: self.sim.now(),
         }
+    }
+
+    /// Run until the queue drains or `deadline` passes; returns true if
+    /// the queue drained.
+    pub fn run_until(&mut self, deadline: Ps) -> bool {
+        let mut sites = self.hubs.clone();
+        sites.push(self.net.clone());
+        let mut world = HubWorld::new(sites);
+        self.sim.run_until_world(deadline, &mut world)
     }
 
     pub fn now(&self) -> Ps {
@@ -400,6 +445,12 @@ impl Fabric {
     /// a drained run unless something leaked).
     pub fn parked_waiters(&self) -> usize {
         self.sites().map(|(_, st)| st.borrow().parked_waiters()).sum()
+    }
+
+    /// Multi-hop routes still in flight (0 after a drained run unless a
+    /// hop deadlocked on an unreleased barrier).
+    pub fn routes_in_flight(&self) -> usize {
+        self.route_conts.borrow().len()
     }
 
     /// Continuations still waiting on an unreleased barrier, across every
@@ -489,21 +540,30 @@ impl Fabric {
     }
 }
 
-/// Execute a hop chain: submit the head on its site; its completion
-/// submits the tail. Boxed `done` keeps the recursion monomorphic.
-fn chain_hops(
-    mut hops: std::vec::IntoIter<(Rc<RefCell<HubState>>, TransferDesc)>,
-    sim: &mut Sim,
-    at: Ps,
-    done: DoneFn,
-) {
-    match hops.next() {
-        None => sim.at(at, move |s| {
-            let now = s.now();
-            done(s, now);
-        }),
+/// Advance a parked route: submit the next hop on its site with the route
+/// slot as its completion action, or — hops exhausted — vacate the slot
+/// and run the final callback. Called inline from the completing hop's
+/// `advance`, so the next hop is submitted at the exact event-queue
+/// position the old boxed-closure chain used (golden traces unchanged).
+pub(crate) fn next_hop(routes: RouteTable, sim: &mut Sim, at: Ps, slot: u32) {
+    let mut table = routes.borrow_mut();
+    let hop = table.get_mut(slot).expect("route vacated early").hops.next();
+    drop(table);
+    match hop {
         Some((st, desc)) => {
-            submit_on(&st, sim, at, desc, move |s, t| chain_hops(hops, s, t, done));
+            let done = DoneAction::FabricHop { routes, slot };
+            submit_cont(&st, sim, at, desc, done);
+        }
+        None => {
+            // defer the final callback one event, exactly like the old
+            // closure chain (and the empty-route path above) did: it must
+            // not jump ahead of work already queued at this timestamp
+            let route = routes.borrow_mut().remove(slot);
+            let done = route.done;
+            sim.at(at, move |s| {
+                let now = s.now();
+                done(s, now);
+            });
         }
     }
 }
@@ -576,6 +636,28 @@ mod tests {
         assert_eq!(done.get(), 4 * US + 500_000);
         assert_eq!(fab.total_submitted(), 3);
         assert_eq!(fab.total_completed(), 3);
+        assert_eq!(fab.routes_in_flight(), 0, "route slot must be vacated");
+    }
+
+    #[test]
+    fn route_table_slots_are_recycled() {
+        // sequential waves of routes reuse the same table slots: the route
+        // arena's total capacity stays at the per-wave concurrency
+        let mut fab = two_hub();
+        let (a, b) = (HubId(0), HubId(1));
+        for wave in 0..5u64 {
+            for i in 0..4u64 {
+                let qos = QosSpec::default();
+                let route = RouteDesc::new()
+                    .hop(Site::Net, fab.hop_desc(i, qos, a, b, BYTES_1US))
+                    .hop(Site::Net, fab.hop_desc(i, qos, b, a, BYTES_1US));
+                fab.submit_route(wave * 100 * US, route, |_, _| {});
+            }
+            fab.run();
+            assert_eq!(fab.routes_in_flight(), 0);
+            assert!(fab.route_conts.borrow().capacity() <= 4, "route arena grew");
+        }
+        assert_eq!(fab.total_completed(), 5 * 4 * 2);
     }
 
     #[test]

@@ -24,6 +24,18 @@
 //! waiter arena and grant by policy when the resource frees. Descriptors
 //! carry a [`QosSpec`] (tenant, class, weight); the runtime keeps
 //! per-tenant accounts (grants, bytes, completion-latency quantiles).
+//!
+//! Event core (ISSUE 4): the data plane runs on *typed* engine events. At
+//! submit, a descriptor's [`Continuation`] is parked once in the
+//! [`HubState`] continuation arena (`util::Slab`); every subsequent stage
+//! transition is a fixed-size [`Event`] (`Advance`/`GrantNext`/
+//! `NvmeComplete`) carrying the 4-byte slot token, dispatched by the
+//! engine against [`HubWorld`] — zero heap allocations per event on the
+//! steady-state path (`tests/zero_alloc.rs`). The boxed-closure escape
+//! hatch ([`crate::sim::Sim::at`]) still drives app-level glue (arrival
+//! processes, completion callbacks), and the event *order* is identical to
+//! the pre-typed engine: the golden trace hashes in `tests/determinism.rs`
+//! are unchanged.
 
 pub mod fabric;
 pub mod sched;
@@ -38,7 +50,7 @@ use crate::metrics::{Hist, Quantiles};
 use crate::nvme::queue::NvmeOp;
 use crate::nvme::ssd::SsdArray;
 use crate::sim::time::{to_us, Ps};
-use crate::sim::Sim;
+use crate::sim::{ContSlot, Event, ResourceId, Sim, World};
 use crate::util::Slab;
 
 pub use fabric::{Fabric, FabricConfig, Hop, HubId, RouteDesc, Site, TraceEntry};
@@ -150,10 +162,22 @@ pub struct Completion {
 /// Boxed completion callback: what every descriptor runs when it finishes.
 pub type DoneFn = Box<dyn FnOnce(&mut Sim, Ps)>;
 
-/// A descriptor in flight: remaining stages + completion callback.
+/// What happens when a descriptor's last stage completes. Routes chain
+/// hops without boxing a fresh closure per hop: the route table slot is
+/// the whole continuation state.
+enum DoneAction {
+    /// run the app's completion callback
+    Call(DoneFn),
+    /// submit the next hop of a multi-hop fabric route (ISSUE 3/4)
+    FabricHop { routes: fabric::RouteTable, slot: u32 },
+}
+
+/// A descriptor in flight: remaining stages + completion action. Lives in
+/// the [`HubState::conts`] arena from submit to completion; engine events
+/// carry only its slot token.
 struct Continuation {
     stages: std::vec::IntoIter<Stage>,
-    done: DoneFn,
+    done: DoneAction,
     label: u64,
     qos: QosSpec,
     t0: Ps,
@@ -167,9 +191,9 @@ enum ParkedOp {
 }
 
 /// A parked descriptor in the waiter slab. Arbiter queues carry only the
-/// 4-byte slot token; the continuation itself sits here until granted.
+/// 4-byte waiter token; the continuation stays in the arena throughout.
 struct ParkedWaiter {
-    cont: Continuation,
+    cont: ContSlot,
     op: ParkedOp,
 }
 
@@ -196,6 +220,9 @@ pub struct TenantReport {
 /// All shared-resource state, behind one `Rc<RefCell<_>>` cell so event
 /// closures can reach it.
 pub struct HubState {
+    /// this state's index in the dispatching [`HubWorld`] — typed events
+    /// address their target site with it
+    site: u32,
     pub links: Vec<FifoLink>,
     pub pools: Vec<CorePool>,
     pub arrays: Vec<SsdArray>,
@@ -203,9 +230,11 @@ pub struct HubState {
     link_arb: Vec<Box<dyn Arbiter>>,
     pool_arb: Vec<Box<dyn Arbiter>>,
     nvme_arb: Vec<Box<dyn Arbiter>>,
+    /// every in-flight continuation, submit to completion (slot-addressed)
+    conts: Slab<Continuation>,
     parked: Slab<ParkedWaiter>,
     barriers: Vec<Barrier>,
-    barrier_waiters: Vec<Vec<Continuation>>,
+    barrier_waiters: Vec<Vec<ContSlot>>,
     pub completions: Vec<Completion>,
     pub tenants: Vec<TenantAccount>,
     pub submitted: u64,
@@ -213,8 +242,9 @@ pub struct HubState {
 }
 
 impl HubState {
-    fn new() -> Self {
+    fn new(site: u32) -> Self {
         HubState {
+            site,
             links: Vec::new(),
             pools: Vec::new(),
             arrays: Vec::new(),
@@ -222,6 +252,7 @@ impl HubState {
             link_arb: Vec::new(),
             pool_arb: Vec::new(),
             nvme_arb: Vec::new(),
+            conts: Slab::new(),
             parked: Slab::new(),
             barriers: Vec::new(),
             barrier_waiters: Vec::new(),
@@ -252,6 +283,18 @@ impl HubState {
     /// Descriptors currently parked awaiting an arbiter grant.
     pub fn parked_waiters(&self) -> usize {
         self.parked.len()
+    }
+
+    /// Continuations currently in flight (submitted, not yet completed).
+    pub fn in_flight(&self) -> usize {
+        self.conts.len()
+    }
+
+    /// Total continuation-arena slots ever allocated (occupied + free).
+    /// Stable across repeated identical workloads on one runtime — the
+    /// slab-reuse number `benches/bench_engine.rs` asserts on.
+    pub fn cont_arena_capacity(&self) -> usize {
+        self.conts.capacity()
     }
 
     // Registration lives on the state itself so both [`HubRuntime`] (one
@@ -318,6 +361,11 @@ pub struct RunStats {
 /// The event-driven hub: a [`Sim`] plus the shared-resource state and the
 /// arbitration policies newly registered resources pick up.
 pub struct HubRuntime {
+    /// The engine. Exposed for *scheduling* (closures, `submit_on` from
+    /// app glue); drain through [`HubRuntime::run`]/[`run_until`]
+    /// (`sim.run()` alone cannot dispatch the runtime's typed events).
+    ///
+    /// [`run_until`]: HubRuntime::run_until
     pub sim: Sim,
     pub policies: ResourcePolicies,
     state: Rc<RefCell<HubState>>,
@@ -342,7 +390,7 @@ impl HubRuntime {
     /// A runtime with per-resource-kind policies (what
     /// [`PlatformConfig`](crate::config::PlatformConfig) selects).
     pub fn with_policies(policies: ResourcePolicies) -> Self {
-        HubRuntime { sim: Sim::new(), policies, state: Rc::new(RefCell::new(HubState::new())) }
+        HubRuntime { sim: Sim::new(), policies, state: Rc::new(RefCell::new(HubState::new(0))) }
     }
 
     /// Clone of the shared state cell, for app closures that submit
@@ -437,12 +485,20 @@ impl HubRuntime {
     pub fn run(&mut self) -> RunStats {
         let events_before = self.sim.events_processed();
         let now_before = self.sim.now();
-        self.sim.run();
+        let mut world = HubWorld::single(self.state.clone());
+        self.sim.run_world(&mut world);
         RunStats {
             events: self.sim.events_processed() - events_before,
             sim_elapsed: self.sim.now() - now_before,
             sim_now: self.sim.now(),
         }
+    }
+
+    /// Run until the queue drains or `deadline` passes; returns true if
+    /// the queue drained.
+    pub fn run_until(&mut self, deadline: Ps) -> bool {
+        let mut world = HubWorld::single(self.state.clone());
+        self.sim.run_until_world(deadline, &mut world)
     }
 
     pub fn now(&self) -> Ps {
@@ -505,24 +561,69 @@ pub fn submit_on(
     desc: TransferDesc,
     done: impl FnOnce(&mut Sim, Ps) + 'static,
 ) {
-    {
+    submit_cont(state, sim, at, desc, DoneAction::Call(Box::new(done)));
+}
+
+/// Park the continuation in the arena and schedule its first typed event.
+/// The descriptor's only allocator touches happen here (the stage list it
+/// already owns, plus the `done` box for app callbacks); every later
+/// transition moves the 4-byte slot token through the engine.
+fn submit_cont(
+    state: &Rc<RefCell<HubState>>,
+    sim: &mut Sim,
+    at: Ps,
+    desc: TransferDesc,
+    done: DoneAction,
+) {
+    // the engine clamps to now, so the first Advance fires exactly at `at`
+    let at = at.max(sim.now());
+    let (site, slot) = {
         let mut st = state.borrow_mut();
         st.submitted += 1;
         st.tenant_mut(desc.qos.tenant).submitted += 1;
-    }
-    let label = desc.label;
-    let qos = desc.qos;
-    let st = state.clone();
-    sim.at(at, move |s| {
         let cont = Continuation {
             stages: desc.stages.into_iter(),
-            done: Box::new(done),
-            label,
-            qos,
-            t0: s.now(),
+            done,
+            label: desc.label,
+            qos: desc.qos,
+            t0: at,
         };
-        advance(st, s, cont);
-    });
+        (st.site, st.conts.insert(cont))
+    };
+    sim.schedule(at, Event::Advance { site, slot });
+}
+
+/// The dispatch context for typed engine events: site index → state cell.
+/// A [`HubRuntime`] is one site; a [`fabric::Fabric`] is N hubs plus the
+/// interconnect.
+pub(crate) struct HubWorld {
+    sites: Vec<Rc<RefCell<HubState>>>,
+}
+
+impl HubWorld {
+    pub(crate) fn new(sites: Vec<Rc<RefCell<HubState>>>) -> Self {
+        HubWorld { sites }
+    }
+
+    fn single(state: Rc<RefCell<HubState>>) -> Self {
+        debug_assert_eq!(state.borrow().site, 0);
+        HubWorld { sites: vec![state] }
+    }
+}
+
+impl World for HubWorld {
+    fn dispatch(&mut self, sim: &mut Sim, ev: Event) {
+        match ev {
+            Event::Advance { site, slot } => advance(&self.sites[site as usize], sim, slot),
+            Event::GrantNext { site, res } => grant_next(&self.sites[site as usize], sim, res),
+            Event::NvmeComplete { site, q, slot } => {
+                let st = &self.sites[site as usize];
+                on_nvme_complete(st, sim, q as usize);
+                advance(st, sim, slot);
+            }
+            Event::Closure(_) => unreachable!("the engine runs closures itself"),
+        }
+    }
 }
 
 /// [`HubRuntime::join2`], callable from event closures.
@@ -634,181 +735,202 @@ pub fn run_closed_loop(
     }
 }
 
-/// Execute the next stage of a descriptor; every transition is an event on
-/// the shared clock, so competing descriptors interleave in time order.
-fn advance(st: Rc<RefCell<HubState>>, sim: &mut Sim, mut c: Continuation) {
+/// Outcome of one borrowed `advance` step: what to schedule (or run) once
+/// the state borrow is released. Typed events are emitted *after* the
+/// borrow ends so completion callbacks can re-enter the state freely.
+enum After {
+    /// last stage done: run the completion action
+    Done(Continuation),
+    /// continue this continuation at an absolute time
+    At(Ps),
+    /// first parked waiter on a link/pool: arm the grant event
+    Grant(Ps, ResourceId),
+    /// NVMe command dispatched: completion visible at `.0` on ring `.1`
+    Nvme(Ps, u32),
+    /// barrier released: resume the parked slots, then this one
+    Released(Vec<ContSlot>),
+    /// parked on an arbiter or barrier: a later event resumes it
+    Parked,
+}
+
+/// Execute the next stage of the continuation at `slot`; every transition
+/// is a typed event on the shared clock, so competing descriptors
+/// interleave in time order — in exactly the insertion order the boxed
+/// closure engine produced (the golden traces pin this).
+fn advance(st: &Rc<RefCell<HubState>>, sim: &mut Sim, slot: ContSlot) {
     let now = sim.now();
-    match c.stages.next() {
-        None => {
-            {
-                let mut state = st.borrow_mut();
+    let (site, after) = {
+        let mut guard = st.borrow_mut();
+        let state = &mut *guard;
+        let (stage, qos) = {
+            let c = state.conts.get_mut(slot).expect("advance on a dead continuation");
+            (c.stages.next(), c.qos)
+        };
+        let after = match stage {
+            None => {
+                let c = state.conts.remove(slot);
                 state.completed += 1;
-                let entry = Completion {
+                state.completions.push(Completion {
                     label: c.label,
                     tenant: c.qos.tenant,
                     submitted_at: c.t0,
                     done_at: now,
-                };
-                state.completions.push(entry);
+                });
                 let acct = state.tenant_mut(c.qos.tenant);
                 acct.completed += 1;
                 acct.lat.record(to_us(now - c.t0));
+                After::Done(c)
             }
-            (c.done)(sim, now);
-        }
-        Some(Stage::Delay(d)) => {
-            sim.after(d, move |s| advance(st, s, c));
-        }
-        Some(Stage::Until(at)) => {
-            sim.at(at, move |s| advance(st, s, c));
-        }
-        Some(Stage::Xfer { link, bytes }) => {
-            // FCFS arbiters reserve eagerly at request time — the exact
-            // pre-arbitration busy_until chain, including event ordering.
-            // Other policies serve at once only when idle and uncontended;
-            // contended requests park and are granted by policy.
-            let eager = {
-                let state = st.borrow();
-                state.link_arb[link].eager()
-                    || (state.links[link].busy_until() <= now && state.link_arb[link].is_empty())
-            };
-            if eager {
-                let delivered = {
-                    let mut guard = st.borrow_mut();
-                    let state = &mut *guard;
+            Some(Stage::Delay(d)) => After::At(now.saturating_add(d)),
+            Some(Stage::Until(at)) => After::At(at),
+            Some(Stage::Xfer { link, bytes }) => {
+                // FCFS arbiters reserve eagerly at request time — the exact
+                // pre-arbitration busy_until chain, including event
+                // ordering. Other policies serve at once only when idle and
+                // uncontended; contended requests park and are granted by
+                // policy.
+                let idle = state.links[link].busy_until() <= now;
+                let eager = state.link_arb[link].eager()
+                    || (idle && state.link_arb[link].is_empty());
+                if eager {
                     let (_, delivered) = state.links[link].reserve(now, bytes);
-                    state.tenant_mut(c.qos.tenant).bytes_moved += bytes;
-                    delivered
-                };
-                sim.at(delivered, move |s| advance(st, s, c));
-            } else {
-                park(&st, sim, Resource::Link(link), ParkedOp::Link(bytes), bytes.max(1), c);
-            }
-        }
-        Some(Stage::Core { pool, work }) => {
-            let eager = {
-                let state = st.borrow();
-                state.pool_arb[pool].eager()
-                    || (state.pools[pool].earliest_free() <= now
-                        && state.pool_arb[pool].is_empty())
-            };
-            if eager {
-                let (_, _, end) = st.borrow_mut().pools[pool].run(now, work);
-                sim.at(end, move |s| advance(st, s, c));
-            } else {
-                park(&st, sim, Resource::Pool(pool), ParkedOp::Pool(work), work.max(1), c);
-            }
-        }
-        Some(Stage::Nvme { q, op }) => {
-            // a full ring parks under every policy; the arbiter decides
-            // which parked command the completion doorbell dispatches next
-            let dispatched = {
-                let mut guard = st.borrow_mut();
-                let state = &mut *guard;
-                if state.nvme[q].has_slot() && state.nvme_arb[q].is_empty() {
-                    Some(dispatch_io(&mut state.nvme[q], &mut state.arrays, now, op))
+                    state.tenant_mut(qos.tenant).bytes_moved += bytes;
+                    After::At(delivered)
                 } else {
-                    None
-                }
-            };
-            match dispatched {
-                Some(visible_at) => {
-                    let st2 = st.clone();
-                    sim.at(visible_at, move |s| {
-                        on_nvme_complete(&st2, s, q);
-                        advance(st2, s, c);
-                    });
-                }
-                None => {
-                    let mut state = st.borrow_mut();
-                    let meta = GrantMeta { qos: c.qos, cost: 1 };
-                    let waiter = ParkedWaiter { cont: c, op: ParkedOp::Nvme(op) };
-                    let slot = state.parked.insert(waiter);
-                    state.nvme_arb[q].push(meta, slot);
+                    park(
+                        state,
+                        slot,
+                        qos,
+                        ResourceId::Link(link as u32),
+                        ParkedOp::Link(bytes),
+                        bytes.max(1),
+                    )
                 }
             }
-        }
-        Some(Stage::Barrier(b)) => {
-            let release = st.borrow_mut().barriers[b].arrive();
-            if release {
-                let waiters = std::mem::take(&mut st.borrow_mut().barrier_waiters[b]);
-                for w in waiters {
-                    let st2 = st.clone();
-                    sim.at(now, move |s| advance(st2, s, w));
+            Some(Stage::Core { pool, work }) => {
+                let idle = state.pools[pool].earliest_free() <= now;
+                let eager = state.pool_arb[pool].eager()
+                    || (idle && state.pool_arb[pool].is_empty());
+                if eager {
+                    let (_, _, end) = state.pools[pool].run(now, work);
+                    After::At(end)
+                } else {
+                    park(
+                        state,
+                        slot,
+                        qos,
+                        ResourceId::Pool(pool as u32),
+                        ParkedOp::Pool(work),
+                        work.max(1),
+                    )
                 }
-                let st2 = st.clone();
-                sim.at(now, move |s| advance(st2, s, c));
-            } else {
-                st.borrow_mut().barrier_waiters[b].push(c);
             }
+            Some(Stage::Nvme { q, op }) => {
+                // a full ring parks under every policy; the arbiter decides
+                // which parked command the completion doorbell dispatches
+                // next
+                if state.nvme[q].has_slot() && state.nvme_arb[q].is_empty() {
+                    let visible_at = dispatch_io(&mut state.nvme[q], &mut state.arrays, now, op);
+                    After::Nvme(visible_at, q as u32)
+                } else {
+                    let meta = GrantMeta { qos, cost: 1 };
+                    let w = ParkedWaiter { cont: slot, op: ParkedOp::Nvme(op) };
+                    let waiter = state.parked.insert(w);
+                    state.nvme_arb[q].push(meta, waiter);
+                    After::Parked
+                }
+            }
+            Some(Stage::Barrier(b)) => {
+                if state.barriers[b].arrive() {
+                    After::Released(std::mem::take(&mut state.barrier_waiters[b]))
+                } else {
+                    state.barrier_waiters[b].push(slot);
+                    After::Parked
+                }
+            }
+        };
+        (state.site, after)
+    };
+    match after {
+        After::Done(c) => match c.done {
+            DoneAction::Call(f) => f(sim, now),
+            DoneAction::FabricHop { routes, slot: route } => {
+                fabric::next_hop(routes, sim, now, route)
+            }
+        },
+        After::At(at) => sim.schedule(at, Event::Advance { site, slot }),
+        After::Grant(at, res) => sim.schedule(at, Event::GrantNext { site, res }),
+        After::Nvme(at, q) => sim.schedule(at, Event::NvmeComplete { site, q, slot }),
+        After::Released(waiters) => {
+            // waiters resume in arrival order, then the releasing arrival —
+            // the exact event insertion order of the closure engine
+            for w in waiters {
+                sim.schedule(now, Event::Advance { site, slot: w });
+            }
+            sim.schedule(now, Event::Advance { site, slot });
         }
+        After::Parked => {}
     }
 }
 
-/// A resource a descriptor can park on (links and pools share the grant
-/// machinery; NVMe rings wake from the completion doorbell instead).
-#[derive(Clone, Copy)]
-enum Resource {
-    Link(LinkId),
-    Pool(PoolId),
-}
-
-/// Park `cont` on `res`. If it is the first waiter, schedule the grant
-/// event for the moment the resource frees; while waiters exist exactly
-/// one grant event is pending, and each grant re-arms the next.
+/// Park the continuation at `slot` on a link/pool arbiter. If it is the
+/// first waiter, the caller arms the grant event for the moment the
+/// resource frees; while waiters exist exactly one grant event is pending,
+/// and each grant re-arms the next.
 fn park(
-    st: &Rc<RefCell<HubState>>,
-    sim: &mut Sim,
-    res: Resource,
+    state: &mut HubState,
+    slot: ContSlot,
+    qos: QosSpec,
+    res: ResourceId,
     op: ParkedOp,
     cost: u64,
-    cont: Continuation,
-) {
-    let pop_at = {
-        let mut state = st.borrow_mut();
-        let meta = GrantMeta { qos: cont.qos, cost };
-        let slot = state.parked.insert(ParkedWaiter { cont, op });
-        match res {
-            Resource::Link(l) => {
-                let first = state.link_arb[l].is_empty();
-                state.link_arb[l].push(meta, slot);
-                first.then(|| state.links[l].busy_until())
-            }
-            Resource::Pool(p) => {
-                let first = state.pool_arb[p].is_empty();
-                state.pool_arb[p].push(meta, slot);
-                first.then(|| state.pools[p].earliest_free())
-            }
+) -> After {
+    let meta = GrantMeta { qos, cost };
+    let waiter = state.parked.insert(ParkedWaiter { cont: slot, op });
+    let pop_at = match res {
+        ResourceId::Link(l) => {
+            let l = l as usize;
+            let first = state.link_arb[l].is_empty();
+            state.link_arb[l].push(meta, waiter);
+            first.then(|| state.links[l].busy_until())
+        }
+        ResourceId::Pool(p) => {
+            let p = p as usize;
+            let first = state.pool_arb[p].is_empty();
+            state.pool_arb[p].push(meta, waiter);
+            first.then(|| state.pools[p].earliest_free())
         }
     };
-    if let Some(at) = pop_at {
-        let st2 = st.clone();
-        sim.at(at, move |s| grant_next(st2, s, res));
+    match pop_at {
+        Some(at) => After::Grant(at, res),
+        None => After::Parked,
     }
 }
 
 /// The resource frees: grant the arbiter's pick, start its service, and
 /// re-arm the next grant if anything is still parked.
-fn grant_next(st: Rc<RefCell<HubState>>, sim: &mut Sim, res: Resource) {
+fn grant_next(st: &Rc<RefCell<HubState>>, sim: &mut Sim, res: ResourceId) {
     let now = sim.now();
-    let granted = {
+    let (site, granted) = {
         let mut guard = st.borrow_mut();
         let state = &mut *guard;
         let popped = match res {
-            Resource::Link(l) => state.link_arb[l].pop(),
-            Resource::Pool(p) => state.pool_arb[p].pop(),
+            ResourceId::Link(l) => state.link_arb[l as usize].pop(),
+            ResourceId::Pool(p) => state.pool_arb[p as usize].pop(),
         };
-        popped.map(|(meta, slot)| {
-            let w = state.parked.remove(slot);
+        let granted = popped.map(|(meta, waiter)| {
+            let w = state.parked.remove(waiter);
             let (continue_at, next_pop) = match (res, w.op) {
-                (Resource::Link(l), ParkedOp::Link(bytes)) => {
+                (ResourceId::Link(l), ParkedOp::Link(bytes)) => {
+                    let l = l as usize;
                     let (_, delivered) = state.links[l].reserve(now, bytes);
                     state.tenant_mut(meta.qos.tenant).bytes_moved += bytes;
                     let next = (!state.link_arb[l].is_empty())
                         .then(|| state.links[l].busy_until());
                     (delivered, next)
                 }
-                (Resource::Pool(p), ParkedOp::Pool(work)) => {
+                (ResourceId::Pool(p), ParkedOp::Pool(work)) => {
+                    let p = p as usize;
                     let (_, _, end) = state.pools[p].run(now, work);
                     let next = (!state.pool_arb[p].is_empty())
                         .then(|| state.pools[p].earliest_free());
@@ -817,14 +939,14 @@ fn grant_next(st: Rc<RefCell<HubState>>, sim: &mut Sim, res: Resource) {
                 _ => unreachable!("waiter parked on the wrong resource kind"),
             };
             (continue_at, next_pop, w.cont)
-        })
+        });
+        (state.site, granted)
     };
-    if let Some((continue_at, next_pop, cont)) = granted {
+    if let Some((continue_at, next_pop, slot)) = granted {
         if let Some(at) = next_pop {
-            let st2 = st.clone();
-            sim.at(at, move |s| grant_next(st2, s, res));
+            sim.schedule(at, Event::GrantNext { site, res });
         }
-        sim.at(continue_at, move |s| advance(st, s, cont));
+        sim.schedule(continue_at, Event::Advance { site, slot });
     }
 }
 
@@ -832,13 +954,13 @@ fn grant_next(st: Rc<RefCell<HubState>>, sim: &mut Sim, res: Resource) {
 /// dispatch the arbiter's pick among the parked descriptors if any.
 fn on_nvme_complete(st: &Rc<RefCell<HubState>>, sim: &mut Sim, q: NvmeId) {
     let now = sim.now();
-    let next = {
+    let (site, next) = {
         let mut guard = st.borrow_mut();
         let state = &mut *guard;
         state.nvme[q].complete_one();
-        if state.nvme[q].has_slot() {
-            state.nvme_arb[q].pop().map(|(_meta, slot)| {
-                let w = state.parked.remove(slot);
+        let next = if state.nvme[q].has_slot() {
+            state.nvme_arb[q].pop().map(|(_meta, waiter)| {
+                let w = state.parked.remove(waiter);
                 let op = match w.op {
                     ParkedOp::Nvme(op) => op,
                     _ => unreachable!("waiter parked on the wrong resource kind"),
@@ -848,14 +970,11 @@ fn on_nvme_complete(st: &Rc<RefCell<HubState>>, sim: &mut Sim, q: NvmeId) {
             })
         } else {
             None
-        }
+        };
+        (state.site, next)
     };
-    if let Some((visible_at, cont)) = next {
-        let st2 = st.clone();
-        sim.at(visible_at, move |s| {
-            on_nvme_complete(&st2, s, q);
-            advance(st2, s, cont);
-        });
+    if let Some((visible_at, slot)) = next {
+        sim.schedule(visible_at, Event::NvmeComplete { site, q: q as u32, slot });
     }
 }
 
@@ -1209,6 +1328,37 @@ mod tests {
         rt.with_state(|st| {
             assert_eq!(st.completed, 50);
             assert_eq!(st.parked_waiters(), 0, "no waiter leaked");
+            assert_eq!(st.in_flight(), 0, "no continuation leaked");
+        });
+    }
+
+    #[test]
+    fn continuation_arena_is_reused_across_waves() {
+        // identical back-to-back waves on one runtime: the second wave must
+        // come entirely from the slab free list (zero arena growth) — the
+        // "touch the allocator once at submit" contract of ISSUE 4
+        let mut rt = HubRuntime::new();
+        let link = rt.add_link("eth", 100.0, 0);
+        let pool = rt.add_pool(2);
+        let wave = |rt: &mut HubRuntime, t0: Ps| {
+            for i in 0..32u64 {
+                rt.submit(
+                    t0 + i * 100 * NS,
+                    TransferDesc::with_label(i).delay(NS).xfer(link, 4096).on_core(pool, US),
+                    |_, _| {},
+                );
+            }
+            rt.run();
+        };
+        wave(&mut rt, 0);
+        let cap = rt.with_state(|st| st.cont_arena_capacity());
+        assert!(cap > 0 && cap <= 32);
+        wave(&mut rt, 10_000 * US);
+        wave(&mut rt, 20_000 * US);
+        rt.with_state(|st| {
+            assert_eq!(st.cont_arena_capacity(), cap, "arena grew across identical waves");
+            assert_eq!(st.completed, 96);
+            assert_eq!(st.in_flight(), 0);
         });
     }
 
@@ -1250,7 +1400,7 @@ mod tests {
         let mut rt = HubRuntime::new();
         let qos = QosSpec::bulk(TenantId(3));
         rt.submit(10 * US, TransferDesc::new().qos(qos).delay(10 * US), |_, _| {});
-        rt.sim.run_until(US); // stop well before the descriptor starts
+        rt.run_until(US); // stop well before the descriptor starts
         let reports = rt.tenant_reports();
         assert_eq!(reports.len(), 1);
         assert_eq!(reports[0].submitted, 1);

@@ -26,6 +26,13 @@
 //! deficit-round-robin [`ArbPolicy::WeightedFair`] turn contention from an
 //! observable into a controllable), and every descriptor carries a
 //! [`QosSpec`] (tenant, service class, weight) that the arbiter reads.
+//!
+//! Since ISSUE 4 a grant is allocation-free end to end: the continuation
+//! itself lives in the runtime's slab arena from submit to completion, the
+//! arbiter queues order `(meta, slot)` pairs, and the grant/doorbell wakeups
+//! are typed engine events (`sim::Event::GrantNext` / `NvmeComplete`)
+//! carrying those 4-byte tokens — no closure is ever boxed on the park/wake
+//! path.
 
 use std::collections::VecDeque;
 

@@ -1,0 +1,469 @@
+//! A calendar/ladder priority queue for the event engine.
+//!
+//! The engine's scheduling pattern is overwhelmingly near-future and
+//! monotone (events are inserted at or after the time of the last fired
+//! event), so a comparison-heavy binary heap pays for generality it never
+//! uses. This queue exploits the pattern with three levels:
+//!
+//! * **head** — a FIFO `VecDeque` holding exactly the events at the
+//!   timestamp currently being fired. Same-time inserts append here, so
+//!   tie-breaking by insertion order (the determinism contract of
+//!   [`super::Sim`]) costs nothing — there is no sequence counter at all.
+//! * **wheel** — `NUM_BUCKETS` buckets of width `2^shift` picoseconds
+//!   covering `[base, base + NUM_BUCKETS << shift)`. Buckets are plain
+//!   `Vec`s in insertion order; when the cursor reaches a bucket, the
+//!   minimum timestamp is extracted in one stable pass (preserving FIFO
+//!   among equal times, since equal times always share a bucket).
+//! * **far** — a sorted `BTreeMap<Ps, VecDeque<_>>` overflow for events
+//!   beyond the wheel horizon (Poisson tails, barriers, long timers).
+//!   When the wheel drains, [`CalendarQueue::rotate`] re-bases it on the
+//!   earliest far timestamp and adapts the bucket width to the observed
+//!   event spacing.
+//!
+//! Steady-state insert + pop touch only recycled `Vec`/`VecDeque` storage:
+//! zero heap allocations per event once capacities are warm (asserted by
+//! `tests/zero_alloc.rs` with a counting allocator).
+//!
+//! Correctness is pinned two ways: `tests` below cross-checks random
+//! schedules (heavy same-time collisions, past-clamped inserts, far-future
+//! outliers, interleaved pops) against a naive `BinaryHeap` reference
+//! model with explicit sequence numbers, and the committed golden trace
+//! hashes in `tests/determinism.rs` must not move.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::time::Ps;
+
+/// Number of wheel buckets (one rotation covers `NUM_BUCKETS << shift` ps).
+const NUM_BUCKETS: usize = 1024;
+/// log2 of [`NUM_BUCKETS`]; a respread widens one bucket across the wheel.
+const WHEEL_BITS: u32 = 10;
+/// Initial bucket width exponent: 2^16 ps ≈ 65 ns per bucket.
+const DEFAULT_SHIFT: u32 = 16;
+/// Bucket width cap: 2^44 ps per bucket (~4.8 hours per rotation).
+const MAX_SHIFT: u32 = 44;
+/// A bucket holding more than this many events at distinct timestamps is
+/// re-spread across the whole wheel before it is scanned.
+const SPREAD_LIMIT: usize = 256;
+
+/// Time-ordered queue with FIFO tie-breaking by insertion order.
+///
+/// Contract: `insert` times must be `>=` the time of the last event
+/// returned by `pop` (the engine clamps schedules to `now`, so this holds
+/// by construction).
+#[derive(Debug)]
+pub struct CalendarQueue<T> {
+    /// events at exactly `head_time`, in insertion order
+    head: VecDeque<T>,
+    /// timestamp of the events in `head` (meaningful while `head` is
+    /// non-empty; otherwise the time of the last fired event)
+    head_time: Ps,
+    /// near-future buckets; bucket `i` covers
+    /// `[base + (i << shift), base + ((i + 1) << shift))`
+    wheel: Vec<Vec<(Ps, T)>>,
+    /// start time of wheel bucket 0
+    base: Ps,
+    /// bucket width is `1 << shift` picoseconds
+    shift: u32,
+    /// first wheel bucket that may still hold events
+    cursor: usize,
+    /// sorted overflow for events at or beyond the wheel horizon
+    far: BTreeMap<Ps, VecDeque<T>>,
+    /// recycled scratch for the stable min-extraction pass
+    scratch: Vec<(Ps, T)>,
+    /// recycled scratch for re-basing the wheel
+    spill: Vec<(Ps, T)>,
+    len: usize,
+}
+
+impl<T> Default for CalendarQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> CalendarQueue<T> {
+    pub fn new() -> Self {
+        CalendarQueue {
+            head: VecDeque::new(),
+            head_time: 0,
+            wheel: (0..NUM_BUCKETS).map(|_| Vec::new()).collect(),
+            base: 0,
+            shift: DEFAULT_SHIFT,
+            cursor: 0,
+            far: BTreeMap::new(),
+            scratch: Vec::new(),
+            spill: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Pending events.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// First bucket past the wheel's coverage.
+    #[inline]
+    fn horizon(&self) -> Ps {
+        self.base.saturating_add((NUM_BUCKETS as Ps) << self.shift)
+    }
+
+    /// Schedule `ev` at time `t` (`t >=` the last popped time).
+    pub fn insert(&mut self, t: Ps, ev: T) {
+        self.len += 1;
+        if self.len == 1 {
+            // empty queue: re-anchor the wheel at the event
+            self.base = t;
+            self.cursor = 0;
+            self.head_time = t;
+            self.head.push_back(ev);
+            return;
+        }
+        if !self.head.is_empty() {
+            if t == self.head_time {
+                // same-time FIFO comes for free
+                self.head.push_back(ev);
+                return;
+            }
+            if t < self.head_time {
+                // only reachable when the head was pre-staged by
+                // `next_time` and the caller stopped early (run_until):
+                // push the staged events back and re-derive the order
+                self.spill_head();
+            }
+        }
+        self.place(t, ev);
+    }
+
+    /// Earliest pending timestamp (stages events internally; the order the
+    /// queue will pop is unaffected).
+    pub fn next_time(&mut self) -> Option<Ps> {
+        if self.fill_head() {
+            Some(self.head_time)
+        } else {
+            None
+        }
+    }
+
+    /// Remove and return the earliest event (FIFO among equal times).
+    pub fn pop(&mut self) -> Option<(Ps, T)> {
+        if !self.fill_head() {
+            return None;
+        }
+        self.len -= 1;
+        let ev = self.head.pop_front().expect("fill_head staged the head");
+        Some((self.head_time, ev))
+    }
+
+    /// Wheel/overflow placement for an event not joining the current head.
+    fn place(&mut self, t: Ps, ev: T) {
+        if t >= self.horizon() {
+            self.far.entry(t).or_default().push_back(ev);
+            return;
+        }
+        // Events at or before `base` (possible right after a re-base) and
+        // events mapping behind the cursor (their window was scanned while
+        // empty) go into the cursor bucket: it is scanned next, and the
+        // min-extraction pass orders by actual timestamp, so placement
+        // ahead of the window is safe.
+        let idx = if t <= self.base {
+            self.cursor
+        } else {
+            (((t - self.base) >> self.shift) as usize).clamp(self.cursor, NUM_BUCKETS - 1)
+        };
+        self.wheel[idx].push((t, ev));
+    }
+
+    /// Push pre-staged head events back into the wheel (insertion order —
+    /// they all share `head_time`, so FIFO among them is preserved).
+    fn spill_head(&mut self) {
+        while let Some(ev) = self.head.pop_front() {
+            let t = self.head_time;
+            self.place(t, ev);
+        }
+    }
+
+    /// Ensure `head` holds the earliest pending timestamp's events.
+    /// Returns false when the queue is empty.
+    fn fill_head(&mut self) -> bool {
+        if !self.head.is_empty() {
+            return true;
+        }
+        loop {
+            while self.cursor < NUM_BUCKETS {
+                if self.wheel[self.cursor].is_empty() {
+                    self.cursor += 1;
+                    continue;
+                }
+                let (mut tmin, mut tmax) = (Ps::MAX, Ps::MIN);
+                for &(t, _) in self.wheel[self.cursor].iter() {
+                    tmin = tmin.min(t);
+                    tmax = tmax.max(t);
+                }
+                let bucket_len = self.wheel[self.cursor].len();
+                if bucket_len > SPREAD_LIMIT && tmin != tmax && self.shift > 0 {
+                    // overloaded multi-timestamp bucket: spread it across
+                    // the whole wheel at a finer width and rescan
+                    self.respread();
+                    continue;
+                }
+                // stable single pass: equal-min events move to the head in
+                // insertion order, the rest stay in the bucket (in order)
+                let mut rest = std::mem::take(&mut self.scratch);
+                let bucket = &mut self.wheel[self.cursor];
+                for (t, ev) in bucket.drain(..) {
+                    if t == tmin {
+                        self.head.push_back(ev);
+                    } else {
+                        rest.push((t, ev));
+                    }
+                }
+                std::mem::swap(bucket, &mut rest);
+                self.scratch = rest;
+                self.head_time = tmin;
+                return true;
+            }
+            if self.far.is_empty() {
+                return false;
+            }
+            self.rotate();
+        }
+    }
+
+    /// The cursor bucket outgrew [`SPREAD_LIMIT`]: re-base the wheel at the
+    /// bucket's window start with buckets `2^WHEEL_BITS` times narrower.
+    fn respread(&mut self) {
+        let start = self.base + ((self.cursor as Ps) << self.shift);
+        let shift = self.shift.saturating_sub(WHEEL_BITS);
+        self.rebase(start, shift);
+    }
+
+    /// Wheel empty and overflow not: re-anchor at the earliest overflow
+    /// timestamp with a bucket width adapted to the observed spacing.
+    fn rotate(&mut self) {
+        let first = *self.far.keys().next().expect("rotate requires far events");
+        let take = self.far.len().min(NUM_BUCKETS);
+        let last = *self.far.keys().nth(take - 1).expect("take <= len");
+        let per = ((last - first) / take as Ps).max(1);
+        let shift = (Ps::BITS - per.leading_zeros()).min(MAX_SHIFT);
+        self.rebase(first, shift);
+    }
+
+    /// Re-anchor the wheel at `base` with bucket width `2^shift`, re-placing
+    /// every wheel event and migrating overflow events inside the new
+    /// horizon. Per-timestamp FIFO survives: equal times always travel
+    /// together, bucket by bucket and overflow queue by overflow queue.
+    fn rebase(&mut self, base: Ps, shift: u32) {
+        let mut moved = std::mem::take(&mut self.spill);
+        for i in self.cursor..NUM_BUCKETS {
+            moved.extend(self.wheel[i].drain(..));
+        }
+        self.base = base;
+        self.shift = shift;
+        self.cursor = 0;
+        for (t, ev) in moved.drain(..) {
+            self.place(t, ev);
+        }
+        self.spill = moved;
+        let horizon = self.horizon();
+        while let Some((&t, _)) = self.far.first_key_value() {
+            if t >= horizon {
+                break;
+            }
+            let (t, mut q) = self.far.pop_first().expect("checked non-empty");
+            for ev in q.drain(..) {
+                self.place(t, ev);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{forall, Gen};
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    /// Naive reference model: a binary heap ordered by (time, seq) — the
+    /// exact pre-calendar engine semantics.
+    #[derive(Default)]
+    struct RefQueue {
+        heap: BinaryHeap<Reverse<(Ps, u64, u32)>>,
+        seq: u64,
+    }
+
+    impl RefQueue {
+        fn insert(&mut self, t: Ps, id: u32) {
+            self.heap.push(Reverse((t, self.seq, id)));
+            self.seq += 1;
+        }
+        fn pop(&mut self) -> Option<(Ps, u32)> {
+            self.heap.pop().map(|Reverse((t, _, id))| (t, id))
+        }
+    }
+
+    #[test]
+    fn pops_in_time_order_fifo_on_ties() {
+        let mut q = CalendarQueue::new();
+        for (id, t) in [(0u32, 30), (1, 10), (2, 20), (3, 10), (4, 10)] {
+            q.insert(t, id);
+        }
+        let mut got = Vec::new();
+        while let Some((t, id)) = q.pop() {
+            got.push((t, id));
+        }
+        assert_eq!(got, vec![(10, 1), (10, 3), (10, 4), (20, 2), (30, 0)]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn same_time_inserts_during_drain_stay_fifo() {
+        let mut q = CalendarQueue::new();
+        q.insert(5, 0);
+        q.insert(5, 1);
+        assert_eq!(q.pop(), Some((5, 0)));
+        // now == 5: a new event at 5 must fire after 1 (insertion order)
+        q.insert(5, 2);
+        q.insert(7, 3);
+        assert_eq!(q.pop(), Some((5, 1)));
+        assert_eq!(q.pop(), Some((5, 2)));
+        assert_eq!(q.pop(), Some((7, 3)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn far_future_events_rotate_back_in() {
+        let mut q = CalendarQueue::new();
+        let horizon = (NUM_BUCKETS as Ps) << DEFAULT_SHIFT;
+        q.insert(1, 0);
+        q.insert(horizon * 3, 1); // deep overflow
+        q.insert(horizon * 3, 2); // FIFO tie in the overflow
+        q.insert(2, 3);
+        assert_eq!(q.pop(), Some((1, 0)));
+        assert_eq!(q.pop(), Some((2, 3)));
+        assert_eq!(q.pop(), Some((horizon * 3, 1)));
+        assert_eq!(q.pop(), Some((horizon * 3, 2)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn next_time_then_earlier_insert_reorders() {
+        // the run_until pattern: peeking stages the head, then an earlier
+        // event arrives before the staged time
+        let mut q = CalendarQueue::new();
+        q.insert(0, 9);
+        assert_eq!(q.pop(), Some((0, 9)));
+        q.insert(100, 0);
+        assert_eq!(q.next_time(), Some(100));
+        q.insert(40, 1); // between now (0) and the staged head (100)
+        q.insert(40, 2);
+        assert_eq!(q.pop(), Some((40, 1)));
+        assert_eq!(q.pop(), Some((40, 2)));
+        assert_eq!(q.pop(), Some((100, 0)));
+    }
+
+    #[test]
+    fn overloaded_bucket_respreads_and_stays_ordered() {
+        let mut q = CalendarQueue::new();
+        // thousands of distinct times inside one default bucket width
+        let n = 4 * SPREAD_LIMIT as u32;
+        for id in 0..n {
+            q.insert(((id % 97) * 13) as Ps, id);
+        }
+        let mut last = (0, Vec::<u32>::new());
+        let mut fired = 0;
+        while let Some((t, id)) = q.pop() {
+            assert!(t >= last.0, "time went backwards");
+            if t == last.0 {
+                if let Some(&prev) = last.1.last() {
+                    assert!(prev < id, "FIFO violated at t={t}: {prev} before {id}");
+                }
+            } else {
+                last = (t, Vec::new());
+            }
+            last.1.push(id);
+            fired += 1;
+        }
+        assert_eq!(fired, n);
+    }
+
+    /// The satellite property test: random schedules — heavy same-time
+    /// collisions, past-clamped inserts, far-future outliers, interleaved
+    /// pops and peeks — fire in exactly the reference heap's (time, seq)
+    /// order, FIFO ties included.
+    #[test]
+    fn matches_binary_heap_reference_on_random_schedules() {
+        forall(
+            "calendar queue == (time, seq) heap",
+            60,
+            |g: &mut Gen| {
+                // op stream: (action selector, raw time) pairs
+                let n = g.usize(1, 400);
+                (0..n)
+                    .map(|_| (g.u64(0, 100), g.u64(0, 4_000_000)))
+                    .collect::<Vec<(u64, u64)>>()
+            },
+            |ops| {
+                let mut cal = CalendarQueue::new();
+                let mut reference = RefQueue::default();
+                let mut now: Ps = 0;
+                let mut next_id = 0u32;
+                for &(action, raw) in ops {
+                    if action < 55 {
+                        // insert, clamped to now like the engine does; mix
+                        // of collisions (coarse), spread, and far outliers
+                        // heavy ties, "at now", near future, far outliers
+                        let t = match action % 4 {
+                            0 => now + (raw % 4) * 10,
+                            1 => now,
+                            2 => now + raw % 100_000,
+                            _ => now + raw * 4_096,
+                        };
+                        cal.insert(t, next_id);
+                        reference.insert(t, next_id);
+                        next_id += 1;
+                    } else if action < 90 {
+                        let got = cal.pop();
+                        let want = reference.pop();
+                        if got != want {
+                            return false;
+                        }
+                        if let Some((t, _)) = got {
+                            now = t;
+                        }
+                    } else {
+                        // peek must not perturb ordering
+                        let _ = cal.next_time();
+                    }
+                    if cal.len() != reference.heap.len() {
+                        return false;
+                    }
+                }
+                loop {
+                    let got = cal.pop();
+                    let want = reference.pop();
+                    if got != want {
+                        return false;
+                    }
+                    if got.is_none() {
+                        return cal.is_empty();
+                    }
+                }
+            },
+            |ops| {
+                let mut simpler = Vec::new();
+                if ops.len() > 1 {
+                    simpler.push(ops[..ops.len() / 2].to_vec());
+                    simpler.push(ops[1..].to_vec());
+                }
+                simpler
+            },
+        );
+    }
+}

@@ -1,43 +1,69 @@
-//! The event engine: a time-ordered queue of boxed actions.
+//! The event engine: a time-ordered queue of typed events.
 //!
-//! Ties are broken by insertion sequence (FIFO among same-time events), which
-//! keeps causally-ordered schedules deterministic.
+//! Ties are broken by insertion sequence (FIFO among same-time events),
+//! which keeps causally-ordered schedules deterministic. Since ISSUE 4 the
+//! queue is a calendar queue ([`super::calendar`]) and the hot events are
+//! *typed* ([`Event`]): fixed-size payloads the engine hands to a caller
+//! supplied [`World`] for dispatch, so the runtime's per-event cost is a
+//! bucket push/pop — no `Box`, no allocation. `Box<dyn FnOnce>` closures
+//! remain available as the [`Event::Closure`] escape hatch behind
+//! [`Sim::at`]/[`Sim::after`], which apps and tests use freely.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-
+use super::calendar::CalendarQueue;
 use super::time::Ps;
 
-type Action = Box<dyn FnOnce(&mut Sim)>;
+/// Boxed event action — the closure escape hatch.
+pub type Action = Box<dyn FnOnce(&mut Sim)>;
 
-struct Entry {
-    at: Ps,
-    seq: u64,
-    act: Action,
+/// A slot token into a continuation arena (`util::Slab`).
+pub type ContSlot = u32;
+
+/// A shared resource a grant event targets, as the engine addresses it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResourceId {
+    Link(u32),
+    Pool(u32),
 }
 
-impl PartialEq for Entry {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
+/// One scheduled event. The first three variants are engine-native: small
+/// `Copy` payloads the runtime's [`World`] interprets against its own
+/// state tables, so scheduling and firing them allocates nothing.
+pub enum Event {
+    /// Resume the continuation parked at `slot` in `site`'s arena.
+    Advance { site: u32, slot: ContSlot },
+    /// A shared resource freed: grant the arbiter's next pick on `site`.
+    GrantNext { site: u32, res: ResourceId },
+    /// An NVMe completion on ring `q` became visible: ring the doorbell,
+    /// then resume the continuation at `slot`.
+    NvmeComplete { site: u32, q: u32, slot: ContSlot },
+    /// Escape hatch: run an arbitrary boxed action.
+    Closure(Action),
 }
-impl Eq for Entry {}
-impl PartialOrd for Entry {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
+
+/// Dispatch context for engine-native events. The runtime implements this
+/// over its resource/continuation tables; schedules that only use the
+/// closure escape hatch can run without one ([`Sim::run`]).
+pub trait World {
+    /// Execute one engine-native event at the current simulated time.
+    /// Never called with [`Event::Closure`] — the engine runs those itself.
+    fn dispatch(&mut self, sim: &mut Sim, ev: Event);
 }
-impl Ord for Entry {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.at, self.seq).cmp(&(other.at, other.seq))
+
+/// [`World`] for closure-only schedules: an engine-native event firing
+/// here is a bug in the caller (it scheduled typed events but ran the
+/// queue without a dispatcher).
+struct ClosuresOnly;
+
+impl World for ClosuresOnly {
+    fn dispatch(&mut self, _sim: &mut Sim, _ev: Event) {
+        panic!("engine-native event fired without a World; use run_world()");
     }
 }
 
 /// Discrete-event simulator.
 pub struct Sim {
     now: Ps,
-    seq: u64,
-    queue: BinaryHeap<Reverse<Entry>>,
+    queue: CalendarQueue<Event>,
     processed: u64,
 }
 
@@ -49,7 +75,7 @@ impl Default for Sim {
 
 impl Sim {
     pub fn new() -> Self {
-        Sim { now: 0, seq: 0, queue: BinaryHeap::new(), processed: 0 }
+        Sim { now: 0, queue: CalendarQueue::new(), processed: 0 }
     }
 
     /// Current simulated time.
@@ -63,45 +89,68 @@ impl Sim {
         self.processed
     }
 
-    /// Schedule `act` at absolute time `at` (clamped to now — scheduling in
-    /// the past would break causality, so it fires "immediately").
-    pub fn at(&mut self, at: Ps, act: impl FnOnce(&mut Sim) + 'static) {
-        let at = at.max(self.now);
-        let seq = self.seq;
-        self.seq += 1;
-        self.queue.push(Reverse(Entry { at, seq, act: Box::new(act) }));
+    /// Schedule an event at absolute time `at` (clamped to now —
+    /// scheduling in the past would break causality, so it fires
+    /// "immediately"). Engine-native events allocate nothing here.
+    #[inline]
+    pub fn schedule(&mut self, at: Ps, ev: Event) {
+        self.queue.insert(at.max(self.now), ev);
     }
 
-    /// Schedule `act` after a delay.
+    /// Schedule a closure at absolute time `at` (clamped to now).
+    pub fn at(&mut self, at: Ps, act: impl FnOnce(&mut Sim) + 'static) {
+        self.schedule(at, Event::Closure(Box::new(act)));
+    }
+
+    /// Schedule a closure after a delay.
     pub fn after(&mut self, delay: Ps, act: impl FnOnce(&mut Sim) + 'static) {
         self.at(self.now.saturating_add(delay), act);
     }
 
-    /// Run until the queue drains.
-    pub fn run(&mut self) {
-        while let Some(Reverse(e)) = self.queue.pop() {
-            debug_assert!(e.at >= self.now, "time went backwards");
-            self.now = e.at;
-            self.processed += 1;
-            (e.act)(self);
+    #[inline]
+    fn fire(&mut self, at: Ps, ev: Event, world: &mut impl World) {
+        debug_assert!(at >= self.now, "time went backwards");
+        self.now = at;
+        self.processed += 1;
+        match ev {
+            Event::Closure(act) => act(self),
+            ev => world.dispatch(self, ev),
         }
     }
 
-    /// Run until the queue drains or `deadline` passes; returns true if the
-    /// queue drained.
-    pub fn run_until(&mut self, deadline: Ps) -> bool {
-        while let Some(Reverse(top)) = self.queue.peek() {
-            if top.at > deadline {
-                self.now = deadline;
+    /// Run until the queue drains, dispatching engine-native events
+    /// against `world`.
+    pub fn run_world(&mut self, world: &mut impl World) {
+        while let Some((at, ev)) = self.queue.pop() {
+            self.fire(at, ev, world);
+        }
+    }
+
+    /// Run a closure-only schedule until the queue drains.
+    pub fn run(&mut self) {
+        self.run_world(&mut ClosuresOnly);
+    }
+
+    /// Run until the queue drains or `deadline` passes; returns true if
+    /// the queue drained.
+    pub fn run_until_world(&mut self, deadline: Ps, world: &mut impl World) -> bool {
+        while let Some(at) = self.queue.next_time() {
+            if at > deadline {
+                // never rewind: a deadline already in the past leaves the
+                // clock where it is (the queue contract needs monotone now)
+                self.now = self.now.max(deadline);
                 return false;
             }
-            let Reverse(e) = self.queue.pop().unwrap();
-            self.now = e.at;
-            self.processed += 1;
-            (e.act)(self);
+            let (at, ev) = self.queue.pop().expect("next_time implies a pending event");
+            self.fire(at, ev, world);
         }
         self.now = self.now.max(deadline);
         true
+    }
+
+    /// [`Sim::run_until_world`] for closure-only schedules.
+    pub fn run_until(&mut self, deadline: Ps) -> bool {
+        self.run_until_world(deadline, &mut ClosuresOnly)
     }
 
     /// Number of pending events.
@@ -189,6 +238,21 @@ mod tests {
     }
 
     #[test]
+    fn scheduling_after_an_early_stop_keeps_order() {
+        // run_until stages the next event internally; a later schedule
+        // that lands before it must still fire first
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let mut sim = Sim::new();
+        let o = order.clone();
+        sim.at(10 * US, move |_| o.borrow_mut().push(1u32));
+        assert!(!sim.run_until(2 * US));
+        let o = order.clone();
+        sim.at(5 * US, move |_| o.borrow_mut().push(0u32));
+        sim.run();
+        assert_eq!(*order.borrow(), vec![0, 1]);
+    }
+
+    #[test]
     fn heavy_load_is_stable() {
         // 100k events in random order still execute monotonically.
         let mut sim = Sim::new();
@@ -204,5 +268,73 @@ mod tests {
         }
         sim.run();
         assert_eq!(sim.events_processed(), 100_000);
+    }
+
+    /// Toy world: every Advance bumps a counter and reschedules itself
+    /// until its chain is used up.
+    struct Relay {
+        remaining: u64,
+        fired: Vec<(u64, u32)>,
+    }
+
+    impl World for Relay {
+        fn dispatch(&mut self, sim: &mut Sim, ev: Event) {
+            if let Event::Advance { site, slot } = ev {
+                self.fired.push((sim.now(), slot));
+                debug_assert_eq!(site, 0);
+                if self.remaining > 0 {
+                    self.remaining -= 1;
+                    sim.schedule(sim.now() + NS, Event::Advance { site, slot });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn typed_events_dispatch_against_a_world() {
+        let mut sim = Sim::new();
+        for slot in 0..4u32 {
+            sim.schedule(slot as u64, Event::Advance { site: 0, slot });
+        }
+        let mut world = Relay { remaining: 100, fired: Vec::new() };
+        sim.run_world(&mut world);
+        assert_eq!(world.fired.len(), 104);
+        assert_eq!(sim.events_processed(), 104);
+        assert!(world.fired.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn typed_and_closure_events_share_one_fifo_timeline() {
+        // same-time typed and boxed events must interleave in insertion
+        // order — the determinism contract is queue-wide, not per-kind
+        struct Log(Rc<RefCell<Vec<u32>>>);
+        impl World for Log {
+            fn dispatch(&mut self, _sim: &mut Sim, ev: Event) {
+                if let Event::Advance { slot, .. } = ev {
+                    self.0.borrow_mut().push(slot);
+                }
+            }
+        }
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let mut sim = Sim::new();
+        for i in 0..6u32 {
+            if i % 2 == 0 {
+                sim.schedule(5 * NS, Event::Advance { site: 0, slot: i });
+            } else {
+                let o = order.clone();
+                sim.at(5 * NS, move |_| o.borrow_mut().push(i));
+            }
+        }
+        let mut world = Log(order.clone());
+        sim.run_world(&mut world);
+        assert_eq!(*order.borrow(), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "without a World")]
+    fn typed_event_without_world_panics() {
+        let mut sim = Sim::new();
+        sim.schedule(NS, Event::Advance { site: 0, slot: 0 });
+        sim.run();
     }
 }

@@ -2,12 +2,17 @@
 //!
 //! Everything in the platform (PCIe transactions, packets, NVMe commands,
 //! CPU core occupancy) advances on a single logical clock with picosecond
-//! resolution. Events are closures over the engine; components live in
-//! `Rc<RefCell<_>>` cells captured by those closures. Single-threaded by
-//! design: determinism is a deliverable (reproducible figures).
+//! resolution. Hot runtime events are *typed* ([`Event`]) and dispatched
+//! against a caller-supplied [`World`] with zero per-event allocation;
+//! boxed closures remain as the escape hatch for apps and tests. The queue
+//! itself is a calendar queue ([`calendar`]) whose same-time buckets are
+//! FIFO, so tie-breaking by insertion order — the determinism contract —
+//! is structural. Single-threaded by design: determinism is a deliverable
+//! (reproducible figures, golden trace hashes).
 
+pub mod calendar;
 pub mod engine;
 pub mod time;
 
-pub use engine::Sim;
+pub use engine::{Action, ContSlot, Event, ResourceId, Sim, World};
 pub use time::{Ps, GHZ_1, MS, NS, S, US};

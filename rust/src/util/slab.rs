@@ -1,10 +1,11 @@
 //! A minimal slab allocator: stable `u32` keys into a reusable arena.
 //!
-//! The runtime parks in-flight descriptors here while they wait for an
-//! arbiter grant (`runtime_hub::sched`): arbiter queues then carry a 4-byte
-//! slot token instead of moving the whole continuation through a fresh
-//! heap allocation on every park/wake, and freed slots are recycled so a
-//! long run's waiter churn settles into a fixed arena.
+//! The runtime parks *every* in-flight continuation here (ISSUE 4): a
+//! descriptor's whole journey through the hub is a 4-byte slot token
+//! carried by typed engine events (`sim::Event::Advance`), so the
+//! allocator is touched exactly once at submit. Arbiter wait queues
+//! (`runtime_hub::sched`) carry slot tokens the same way, and freed slots
+//! are recycled so a long run's churn settles into a fixed arena.
 
 /// A vec-backed slab with a free list. Keys are stable until `remove`.
 #[derive(Debug)]
@@ -55,6 +56,10 @@ impl<T> Slab<T> {
 
     pub fn get(&self, key: u32) -> Option<&T> {
         self.entries.get(key as usize).and_then(|e| e.as_ref())
+    }
+
+    pub fn get_mut(&mut self, key: u32) -> Option<&mut T> {
+        self.entries.get_mut(key as usize).and_then(|e| e.as_mut())
     }
 
     /// Occupied slots.
@@ -115,6 +120,82 @@ mod tests {
         let a = s.insert(1u8);
         s.remove(a);
         s.remove(a);
+    }
+
+    /// Satellite property test (ISSUE 4): under random interleaved
+    /// alloc/free, live tokens never alias, removes return exactly the
+    /// value inserted under that token, and a full drain/refill cycle
+    /// reuses the free list without growing the arena.
+    #[test]
+    fn interleaved_alloc_free_reuses_without_aliasing() {
+        use crate::util::quickcheck::forall;
+        forall(
+            "slab interleaved alloc/free",
+            200,
+            |g| g.vec_u64(1, 150, 0, 1_000),
+            |ops| {
+                let mut s = Slab::new();
+                let mut live: Vec<(u32, u64)> = Vec::new();
+                let mut next_val = 0u64;
+                let mut peak = 0usize;
+                for &op in ops {
+                    if op % 3 != 0 || live.is_empty() {
+                        let key = s.insert(next_val);
+                        if live.iter().any(|&(k, _)| k == key) {
+                            return false; // token aliasing against a live slot
+                        }
+                        live.push((key, next_val));
+                        next_val += 1;
+                    } else {
+                        let idx = (op as usize / 3) % live.len();
+                        let (key, val) = live.swap_remove(idx);
+                        if s.remove(key) != val {
+                            return false; // token returned someone else's value
+                        }
+                    }
+                    if s.len() != live.len() {
+                        return false;
+                    }
+                    peak = peak.max(s.len());
+                }
+                for (key, val) in live.drain(..) {
+                    if s.remove(key) != val {
+                        return false;
+                    }
+                }
+                if !s.is_empty() {
+                    return false;
+                }
+                // drained: a refill up to the high-water mark must come
+                // entirely from the free list — no arena growth
+                let cap = s.capacity();
+                let keys: Vec<u32> = (0..peak as u64).map(|v| s.insert(v)).collect();
+                if s.capacity() != cap {
+                    return false;
+                }
+                for key in keys {
+                    s.remove(key);
+                }
+                s.is_empty() && s.capacity() == cap
+            },
+            |ops| {
+                let mut simpler = Vec::new();
+                if ops.len() > 1 {
+                    simpler.push(ops[..ops.len() / 2].to_vec());
+                    simpler.push(ops[1..].to_vec());
+                }
+                simpler
+            },
+        );
+    }
+
+    #[test]
+    fn get_mut_edits_in_place() {
+        let mut s = Slab::new();
+        let a = s.insert(5u64);
+        *s.get_mut(a).unwrap() += 2;
+        assert_eq!(s.remove(a), 7);
+        assert!(s.get_mut(a).is_none());
     }
 
     #[test]
