@@ -1,0 +1,55 @@
+//! Reconfigurable operator plane bench (ISSUE 5): the typed region event
+//! path under a pure hit storm, the preprocess thrash scenario per
+//! placement policy, and the fabric pushdown run — wall-clock plus engine
+//! throughput. `-- --json BENCH_reconfig.json` persists the numbers for
+//! the cross-PR perf trajectory.
+
+use fpgahub::apps::preprocess::{run_preprocess, run_pushdown, PreprocessConfig, PushdownConfig};
+use fpgahub::bench_harness::{banner, bench_sim, finish, SimMetrics};
+use fpgahub::runtime_hub::{
+    HubRuntime, OperatorKind, ReconfigConfig, ReconfigPolicy, TransferDesc,
+};
+use fpgahub::sim::US;
+
+/// Pure region streaming: one operator resident, a long queue of hits —
+/// the steady-state `Advance` → `RegionDone` hot path with zero swaps
+/// after the cold load.
+fn hit_storm(descriptors: u64) -> SimMetrics {
+    let mut rt = HubRuntime::new();
+    rt.add_regions(&ReconfigConfig { regions: 2, swap_us: 100.0, ..Default::default() });
+    for i in 0..descriptors {
+        let desc = TransferDesc::with_label(i).preproc(OperatorKind::Filter, 4096);
+        rt.submit(i * US / 4, desc, |_, _| {});
+    }
+    rt.run().into()
+}
+
+fn thrash(policy: ReconfigPolicy) -> SimMetrics {
+    let r = run_preprocess(&PreprocessConfig {
+        jobs: 40,
+        aggr_jobs: 80,
+        policy,
+        ..Default::default()
+    });
+    r.shared_run.into()
+}
+
+fn main() {
+    banner("operator plane: resident hit storm (typed region events)");
+    bench_sim("reconfig/hit_storm_20k", 2, 10, || hit_storm(20_000));
+
+    banner("operator plane: preprocess thrash per placement policy");
+    for policy in ReconfigPolicy::ALL {
+        bench_sim(&format!("reconfig/thrash_{}", policy.name()), 1, 5, || thrash(policy));
+    }
+
+    banner("operator plane: fabric pushdown vs ship-all");
+    bench_sim("reconfig/pushdown_4hubs", 1, 5, || {
+        run_pushdown(&PushdownConfig { requests: 80, ..Default::default() })
+            .pushdown
+            .run
+            .into()
+    });
+
+    finish().expect("bench json");
+}

@@ -6,6 +6,7 @@ pub mod allreduce;
 pub mod block_storage;
 pub mod llm_step;
 pub mod multi_tenant;
+pub mod preprocess;
 pub mod storage_fetch;
 
 pub use allreduce::{FpgaSwitchAllreduce, HierConfig, HierarchicalAllreduce};
@@ -14,5 +15,9 @@ pub use llm_step::{LlmStepConfig, LlmStepReport};
 pub use multi_tenant::{
     run_fabric_tenants, run_multi_tenant, run_qos, FabricTenantsConfig, FabricTenantsReport,
     MultiTenantConfig, MultiTenantReport, QosConfig, QosOutcome, TENANT_COLLECTIVE, TENANT_FETCH,
+};
+pub use preprocess::{
+    run_preprocess, run_pushdown, PlaneStats, PreprocessConfig, PreprocessReport, PushdownConfig,
+    PushdownReport, TENANT_PIPELINE, TENANT_THRASH,
 };
 pub use storage_fetch::{run_fetch_demo, run_sharded_fetch, ShardedFetchConfig, ShardedFetchReport};

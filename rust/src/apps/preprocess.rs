@@ -1,0 +1,510 @@
+//! `apps::preprocess` — the reconfigurable operator plane at work
+//! (ISSUE 5): a latency-sensitive scan→filter→partition ETL pipeline
+//! whose descriptors route *through* partial-reconfiguration regions
+//! between their NVMe and egress stages, sharing the plane with an
+//! aggressor tenant that thrashes region residency by cycling through
+//! operators the pipeline never uses.
+//!
+//! The contention mechanism is new: the tenants do not share a wire or a
+//! ring here — they share *bitstream residency*. Every time the aggressor
+//! evicts the pipeline's filter or partition operator, the next pipeline
+//! job pays the full bitstream-load latency (hundreds of µs against a
+//! ~100 µs media fetch), so the pipeline's p99 absorbs the swap storm
+//! under swap-on-miss placement while the QoS-aware policy confines the
+//! aggressor to its own residency (cf. arXiv:1712.04771's
+//! reconfiguration-latency vs. miss-penalty trade-off).
+//!
+//! [`run_pushdown`] runs the fabric variant: sharded remote fetches
+//! either *push the filter down* to a region on the hub that owns the
+//! data (reply ships the filtered quarter) or ship the whole block and
+//! filter at the origin hub — the operator plane turning interconnect
+//! bytes into on-hub streaming.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::apps::storage_fetch::{
+    register_nic_fetch_path, register_nic_fetch_path_fabric, FETCH_CMD_BYTES,
+};
+use crate::constants;
+use crate::metrics::{Hist, Quantiles};
+use crate::net::packet::HEADER_BYTES;
+use crate::nvme::ssd::SsdArray;
+use crate::runtime_hub::{
+    Fabric, FabricConfig, HubId, HubRuntime, OperatorKind, OperatorRates, QosSpec,
+    ReconfigConfig, ReconfigPolicy, ResourcePolicies, RouteDesc, RunStats, Site, TenantId,
+    TransferDesc,
+};
+use crate::sim::time::{to_us, Ps, US};
+use crate::util::Rng;
+
+/// The latency-sensitive ETL pipeline tenant.
+pub const TENANT_PIPELINE: TenantId = TenantId(1);
+/// The region-thrashing aggressor tenant.
+pub const TENANT_THRASH: TenantId = TenantId(2);
+
+/// Workload mix for the operator-plane scenario.
+#[derive(Clone, Copy, Debug)]
+pub struct PreprocessConfig {
+    /// pipeline jobs (scan → filter → partition → egress)
+    pub jobs: u64,
+    pub job_gap: Ps,
+    /// 4 KB blocks scanned per pipeline job
+    pub blocks_4k: u32,
+    /// aggressor jobs cycling through foreign operators
+    pub aggr_jobs: u64,
+    pub aggr_gap: Ps,
+    /// bytes the aggressor streams per job
+    pub aggr_bytes: u64,
+    pub num_ssds: usize,
+    /// partial-reconfiguration regions on the hub
+    pub regions: usize,
+    /// bitstream-load latency per swap, µs
+    pub swap_us: f64,
+    /// operator streaming rates (`PlatformConfig [reconfig]`)
+    pub rates: OperatorRates,
+    pub seed: u64,
+    /// operator-placement policy under test
+    pub policy: ReconfigPolicy,
+}
+
+impl Default for PreprocessConfig {
+    fn default() -> Self {
+        PreprocessConfig {
+            jobs: 60,
+            job_gap: 40 * US,
+            blocks_4k: 16,
+            aggr_jobs: 150,
+            aggr_gap: 15 * US,
+            aggr_bytes: 65_536,
+            num_ssds: 4,
+            regions: 3,
+            swap_us: 150.0,
+            rates: OperatorRates::default(),
+            seed: 0xF26A,
+            policy: ReconfigPolicy::Fcfs,
+        }
+    }
+}
+
+/// Operator-plane counters of one run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlaneStats {
+    pub swaps: u64,
+    pub hits: u64,
+    pub misses: u64,
+    /// swaps charged to the pipeline tenant
+    pub pipeline_swaps: u64,
+    /// swaps charged to the aggressor tenant
+    pub aggressor_swaps: u64,
+}
+
+impl PlaneStats {
+    /// Fraction of grants that found their operator resident.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+/// Shared-vs-isolated picture of the operator-plane scenario.
+#[derive(Clone, Copy, Debug)]
+pub struct PreprocessReport {
+    pub policy: ReconfigPolicy,
+    /// pipeline job latency sharing the plane with the aggressor
+    pub pipeline_shared: Quantiles,
+    /// pipeline job latency with the plane to itself
+    pub pipeline_isolated: Quantiles,
+    /// the aggressor's own service picture (it must not starve either)
+    pub aggressor: Quantiles,
+    pub plane: PlaneStats,
+    pub shared_run: RunStats,
+}
+
+impl PreprocessReport {
+    /// The residency-isolation gap: how much the pipeline's p99 degrades
+    /// when the aggressor thrashes the plane.
+    pub fn p99_degradation_us(&self) -> f64 {
+        self.pipeline_shared.p99 - self.pipeline_isolated.p99
+    }
+
+    /// Mean residency-isolation gap (averages out the one-time cold-start
+    /// backlog, so it is the stabler cross-policy comparison).
+    pub fn mean_degradation_us(&self) -> f64 {
+        self.pipeline_shared.mean - self.pipeline_isolated.mean
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "preprocess plane ({}): pipeline p99 isolated {:.2}µs -> shared {:.2}µs \
+             (+{:.2}µs), aggressor p99 {:.2}µs, swaps {} (pipeline {}, aggressor {}), \
+             hit rate {:.2}",
+            self.policy.name(),
+            self.pipeline_isolated.p99,
+            self.pipeline_shared.p99,
+            self.p99_degradation_us(),
+            self.aggressor.p99,
+            self.plane.swaps,
+            self.plane.pipeline_swaps,
+            self.plane.aggressor_swaps,
+            self.plane.hit_rate(),
+        )
+    }
+}
+
+fn build_runtime(cfg: &PreprocessConfig) -> HubRuntime {
+    let mut rt = HubRuntime::with_policies(ResourcePolicies {
+        regions: cfg.policy,
+        ..Default::default()
+    });
+    rt.add_regions(&ReconfigConfig {
+        regions: cfg.regions,
+        swap_us: cfg.swap_us,
+        rates: cfg.rates,
+    });
+    rt
+}
+
+/// Schedule the ETL pipeline: job `i` scans `blocks_4k` blocks over the
+/// NIC-initiated fetch path, filters them (dropping half), hash-partitions
+/// the survivors, and ships the selected quarter out the egress port.
+fn schedule_pipeline(rt: &mut HubRuntime, cfg: &PreprocessConfig) -> Rc<RefCell<Hist>> {
+    let mut rng = Rng::new(cfg.seed ^ 0x9E7);
+    let arr = rt.add_array(SsdArray::new(cfg.num_ssds, &mut rng));
+    let mut path = register_nic_fetch_path(rt, arr, cfg.num_ssds);
+    path.qos = QosSpec::latency_sensitive(TENANT_PIPELINE);
+    let egress = rt.add_link("etl-egress", constants::ETH_GBPS, 0);
+    let bytes = cfg.blocks_4k as u64 * 4096;
+
+    let hist = Rc::new(RefCell::new(Hist::new()));
+    for i in 0..cfg.jobs {
+        let t0 = i * cfg.job_gap;
+        let ssd = (i as usize) % cfg.num_ssds;
+        let desc = path
+            .fetch_desc(i, ssd, cfg.blocks_4k)
+            .preproc(OperatorKind::Filter, bytes)
+            .preproc(OperatorKind::HashPartition, bytes / 2)
+            .xfer(egress, bytes / 4 + HEADER_BYTES);
+        let h = hist.clone();
+        rt.submit(t0, desc, move |_, done| h.borrow_mut().record(to_us(done - t0)));
+    }
+    hist
+}
+
+/// Schedule the aggressor: pure region pressure — each job streams through
+/// one of two operators the pipeline never uses, so every resident
+/// pipeline bitstream it evicts is a future pipeline miss.
+fn schedule_thrasher(rt: &mut HubRuntime, cfg: &PreprocessConfig) -> Rc<RefCell<Hist>> {
+    const THRASH_OPS: [OperatorKind; 2] = [OperatorKind::Compress, OperatorKind::Project];
+    let qos = QosSpec::bulk(TENANT_THRASH);
+    let hist = Rc::new(RefCell::new(Hist::new()));
+    for i in 0..cfg.aggr_jobs {
+        // offset so the cold-start swaps interleave deterministically with
+        // the pipeline rather than tying at t = 0
+        let t0 = 5 * US + i * cfg.aggr_gap;
+        let desc = TransferDesc::with_label(1_000_000 + i)
+            .qos(qos)
+            .preproc(THRASH_OPS[(i % 2) as usize], cfg.aggr_bytes);
+        let h = hist.clone();
+        rt.submit(t0, desc, move |_, done| h.borrow_mut().record(to_us(done - t0)));
+    }
+    hist
+}
+
+fn tenant_swaps(rt: &HubRuntime, tenant: TenantId) -> u64 {
+    rt.tenant_reports()
+        .iter()
+        .find(|r| r.tenant == tenant)
+        .map(|r| r.swaps)
+        .unwrap_or(0)
+}
+
+/// Run the scenario twice — pipeline + aggressor sharing one operator
+/// plane, then the pipeline alone — and report the residency-isolation
+/// picture under `cfg.policy`.
+pub fn run_preprocess(cfg: &PreprocessConfig) -> PreprocessReport {
+    let mut rt = build_runtime(cfg);
+    let pipe_hist = schedule_pipeline(&mut rt, cfg);
+    let aggr_hist = schedule_thrasher(&mut rt, cfg);
+    let shared_run = rt.run();
+    let (pipeline_swaps, aggressor_swaps) =
+        (tenant_swaps(&rt, TENANT_PIPELINE), tenant_swaps(&rt, TENANT_THRASH));
+    let plane = rt.with_state(|st| PlaneStats {
+        swaps: st.regions.total_swaps(),
+        hits: st.regions.total_hits(),
+        misses: st.regions.total_misses(),
+        pipeline_swaps,
+        aggressor_swaps,
+    });
+
+    let mut rt_iso = build_runtime(cfg);
+    let pipe_iso = schedule_pipeline(&mut rt_iso, cfg);
+    rt_iso.run();
+
+    PreprocessReport {
+        policy: cfg.policy,
+        pipeline_shared: pipe_hist.borrow_mut().quantiles(),
+        pipeline_isolated: pipe_iso.borrow_mut().quantiles(),
+        aggressor: aggr_hist.borrow_mut().quantiles(),
+        plane,
+        shared_run,
+    }
+}
+
+// ------------------------------------------------- fabric pushdown ----
+
+/// Sharded-fetch workload with an operator choice per remote request:
+/// filter *at the owner hub* (pushdown — the reply ships the selected
+/// quarter) or ship the whole block and filter at the origin.
+#[derive(Clone, Copy, Debug)]
+pub struct PushdownConfig {
+    pub hubs: usize,
+    pub ssds_per_hub: usize,
+    pub requests: u64,
+    pub gap: Ps,
+    pub blocks_4k: u32,
+    pub regions: usize,
+    pub swap_us: f64,
+    pub seed: u64,
+}
+
+impl Default for PushdownConfig {
+    fn default() -> Self {
+        PushdownConfig {
+            hubs: 4,
+            ssds_per_hub: 2,
+            requests: 120,
+            gap: 20 * US,
+            blocks_4k: 16,
+            regions: 2,
+            swap_us: 150.0,
+            seed: 0xF26A,
+        }
+    }
+}
+
+/// One placement mode's measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct PushdownMode {
+    pub lat_us: Quantiles,
+    /// bytes both directions over the interconnect
+    pub fabric_mb: f64,
+    /// swaps across every hub's plane
+    pub swaps: u64,
+    pub run: RunStats,
+}
+
+/// Pushdown-vs-ship-all comparison.
+#[derive(Clone, Copy, Debug)]
+pub struct PushdownReport {
+    pub hubs: usize,
+    pub pushdown: PushdownMode,
+    pub ship_all: PushdownMode,
+}
+
+impl PushdownReport {
+    /// Interconnect traffic the pushdown saves, in MB.
+    pub fn fabric_mb_saved(&self) -> f64 {
+        self.ship_all.fabric_mb - self.pushdown.fabric_mb
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "operator pushdown ({} hubs): mean {:.2}µs / {:.2} MB fabric (pushdown) vs \
+             {:.2}µs / {:.2} MB (ship-all) — {:.2} MB saved, swaps {} vs {}",
+            self.hubs,
+            self.pushdown.lat_us.mean,
+            self.pushdown.fabric_mb,
+            self.ship_all.lat_us.mean,
+            self.ship_all.fabric_mb,
+            self.fabric_mb_saved(),
+            self.pushdown.swaps,
+            self.ship_all.swaps,
+        )
+    }
+}
+
+fn run_pushdown_mode(cfg: &PushdownConfig, pushdown: bool) -> PushdownMode {
+    let mut rng = Rng::new(cfg.seed);
+    let mut fab = Fabric::with_config(FabricConfig {
+        hubs: cfg.hubs,
+        ..Default::default()
+    });
+    let rc = ReconfigConfig {
+        regions: cfg.regions,
+        swap_us: cfg.swap_us,
+        ..Default::default()
+    };
+    let all_ssds: Vec<usize> = (0..cfg.ssds_per_hub).collect();
+    let paths: Vec<_> = (0..cfg.hubs)
+        .map(|h| {
+            let hub = HubId(h as u32);
+            fab.add_regions(hub, &rc);
+            let arr = fab.add_array(hub, SsdArray::new(cfg.ssds_per_hub, &mut rng));
+            let mut p = register_nic_fetch_path_fabric(&mut fab, hub, arr, &all_ssds);
+            p.qos = QosSpec::latency_sensitive(TENANT_PIPELINE);
+            p
+        })
+        .collect();
+
+    let bytes = cfg.blocks_4k as u64 * 4096;
+    let full_reply = bytes + HEADER_BYTES;
+    let filtered_reply = bytes / 4 + HEADER_BYTES;
+    let total_shards = (cfg.hubs * cfg.ssds_per_hub) as u64;
+    let hist = Rc::new(RefCell::new(Hist::new()));
+    for i in 0..cfg.requests {
+        let t0 = i * cfg.gap;
+        let origin = HubId((i % cfg.hubs as u64) as u32);
+        let shard = i % total_shards;
+        let owner = HubId((shard / cfg.ssds_per_hub as u64) as u32);
+        let ssd = (shard % cfg.ssds_per_hub as u64) as usize;
+        let qos = paths[owner.index()].qos;
+        let fetch = paths[owner.index()].fetch_desc(i, ssd, cfg.blocks_4k);
+        let route = if origin == owner {
+            // local shard: scan + filter on the one hub, both modes alike
+            RouteDesc::new().hop(Site::Hub(owner), fetch.preproc(OperatorKind::Filter, bytes))
+        } else if pushdown {
+            // filter where the data lives; the wire carries the quarter
+            RouteDesc::new()
+                .hop(Site::Net, fab.hop_desc(i, qos, origin, owner, FETCH_CMD_BYTES))
+                .hop(Site::Hub(owner), fetch.preproc(OperatorKind::Filter, bytes))
+                .hop(Site::Net, fab.hop_desc(i, qos, owner, origin, filtered_reply))
+        } else {
+            // ship the whole block, filter at the origin hub
+            RouteDesc::new()
+                .hop(Site::Net, fab.hop_desc(i, qos, origin, owner, FETCH_CMD_BYTES))
+                .hop(Site::Hub(owner), fetch)
+                .hop(Site::Net, fab.hop_desc(i, qos, owner, origin, full_reply))
+                .hop(
+                    Site::Hub(origin),
+                    TransferDesc::with_label(i).qos(qos).preproc(OperatorKind::Filter, bytes),
+                )
+        };
+        let h = hist.clone();
+        fab.submit_route(t0, route, move |_, done| h.borrow_mut().record(to_us(done - t0)));
+    }
+    let run = fab.run();
+    let fabric_bytes: u64 = fab.with_net(|st| st.links.iter().map(|l| l.bytes_moved).sum());
+    PushdownMode {
+        lat_us: hist.borrow_mut().quantiles(),
+        fabric_mb: fabric_bytes as f64 / 1e6,
+        swaps: fab.total_region_swaps(),
+        run,
+    }
+}
+
+/// Run the sharded workload in both placements and report the comparison.
+pub fn run_pushdown(cfg: &PushdownConfig) -> PushdownReport {
+    PushdownReport {
+        hubs: cfg.hubs,
+        pushdown: run_pushdown_mode(cfg, true),
+        ship_all: run_pushdown_mode(cfg, false),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_jobs_complete_in_both_modes() {
+        let cfg = PreprocessConfig::default();
+        let r = run_preprocess(&cfg);
+        assert_eq!(r.pipeline_shared.n, cfg.jobs);
+        assert_eq!(r.pipeline_isolated.n, cfg.jobs);
+        assert_eq!(r.aggressor.n, cfg.aggr_jobs);
+        assert!(r.shared_run.events > 0);
+        // every preproc grant is a hit or a miss, and every miss is a swap
+        assert_eq!(r.plane.misses, r.plane.swaps);
+        assert_eq!(r.plane.pipeline_swaps + r.plane.aggressor_swaps, r.plane.swaps);
+    }
+
+    #[test]
+    fn thrashing_inflates_the_pipeline_tail_under_fcfs() {
+        let r = run_preprocess(&PreprocessConfig::default());
+        // the aggressor's evictions must show up as bitstream reloads in
+        // the pipeline's tail: one swap is 150 µs against a ~110 µs job
+        assert!(
+            r.p99_degradation_us() > 50.0,
+            "fcfs p99 degradation {:.2}µs",
+            r.p99_degradation_us()
+        );
+        assert!(r.plane.pipeline_swaps > 2, "pipeline must be forced to reload");
+    }
+
+    #[test]
+    fn qos_aware_placement_shrinks_the_gap() {
+        let base = PreprocessConfig::default();
+        let fcfs = run_preprocess(&base);
+        let lru = run_preprocess(&PreprocessConfig { policy: ReconfigPolicy::Lru, ..base });
+        let qos = run_preprocess(&PreprocessConfig { policy: ReconfigPolicy::QosAware, ..base });
+        // the mean gap averages out the one-time cold-start backlog, so it
+        // is the stable cross-policy comparison (sustained thrash under
+        // FCFS/LRU vs a bounded steal under QoS-aware)
+        assert!(
+            qos.mean_degradation_us() < fcfs.mean_degradation_us(),
+            "qos {:.2}µs vs fcfs {:.2}µs",
+            qos.mean_degradation_us(),
+            fcfs.mean_degradation_us()
+        );
+        assert!(
+            qos.mean_degradation_us() < lru.mean_degradation_us(),
+            "qos {:.2}µs vs lru {:.2}µs",
+            qos.mean_degradation_us(),
+            lru.mean_degradation_us()
+        );
+        // QoS-aware confines the churn to the aggressor's own account:
+        // after the cold loads (and one bounded steal), the pipeline's
+        // residency is protected, so its swap bill stays flat
+        assert!(qos.plane.pipeline_swaps < fcfs.plane.pipeline_swaps);
+        assert!(qos.plane.pipeline_swaps <= 3, "{}", qos.plane.pipeline_swaps);
+        // work conservation: the aggressor is served under every policy
+        assert_eq!(fcfs.aggressor.n, qos.aggressor.n);
+        assert_eq!(fcfs.aggressor.n, lru.aggressor.n);
+    }
+
+    #[test]
+    fn enough_regions_end_the_thrash() {
+        // four regions, four operators: after the cold loads nobody misses
+        let cfg = PreprocessConfig { regions: 4, ..Default::default() };
+        let r = run_preprocess(&cfg);
+        assert_eq!(r.plane.swaps, 4, "one cold load per operator");
+        assert!(r.p99_degradation_us() < 1.0, "gap {:.2}µs", r.p99_degradation_us());
+    }
+
+    #[test]
+    fn report_renders() {
+        let cfg = PreprocessConfig { jobs: 8, aggr_jobs: 10, ..Default::default() };
+        let s = run_preprocess(&cfg).render();
+        assert!(s.contains("preprocess plane"));
+        assert!(s.contains("swaps"));
+    }
+
+    #[test]
+    fn pushdown_saves_interconnect_bytes() {
+        let cfg = PushdownConfig::default();
+        let r = run_pushdown(&cfg);
+        assert_eq!(r.pushdown.lat_us.n, cfg.requests);
+        assert_eq!(r.ship_all.lat_us.n, cfg.requests);
+        assert!(
+            r.fabric_mb_saved() > 0.5,
+            "pushdown must shrink the wire: {:.2} vs {:.2} MB",
+            r.pushdown.fabric_mb,
+            r.ship_all.fabric_mb
+        );
+        // the reply legs shrink 4×; command legs and local traffic equal
+        assert!(r.pushdown.fabric_mb < r.ship_all.fabric_mb);
+        // and the wire saving shows up end to end
+        assert!(
+            r.pushdown.lat_us.mean < r.ship_all.lat_us.mean,
+            "pushdown {:.2}µs vs ship-all {:.2}µs",
+            r.pushdown.lat_us.mean,
+            r.ship_all.lat_us.mean
+        );
+        let s = r.render();
+        assert!(s.contains("pushdown"));
+    }
+}

@@ -328,4 +328,25 @@ mod tests {
     fn finish_without_json_flag_is_a_noop() {
         finish().unwrap();
     }
+
+    #[test]
+    fn nan_poisoned_hist_still_yields_a_finite_json_line() {
+        // regression (ISSUE 5): a NaN recorded into the timing histogram
+        // must neither panic the percentile query nor leak a bare `NaN`
+        // token (invalid JSON) into the bench document
+        let mut h = Hist::new();
+        h.record(f64::NAN);
+        h.record(1.25);
+        h.record(0.75);
+        let r = BenchResult {
+            name: "nan-regression".to_string(),
+            iters: 3,
+            mean_ms: h.mean(),
+            p50_ms: h.p50(),
+            p99_ms: h.p99(),
+        };
+        let j = r.json();
+        assert!(!j.contains("NaN") && !j.contains("inf"), "{j}");
+        assert!(j.contains("\"mean_ms\":1.0"), "{j}");
+    }
 }

@@ -150,6 +150,13 @@ fn parse_value(s: &str) -> Result<TomlValue, String> {
     }
     if let Some(rest) = s.strip_prefix('"') {
         let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        // the subset has no escape sequences, so an interior quote means
+        // the value is not one string — `"a" "b"` and `"a"b"` used to
+        // parse as strings with embedded quotes ("fail loudly, never
+        // guess" says they must not)
+        if inner.contains('"') {
+            return Err(format!("unescaped quote inside string '{s}'"));
+        }
         return Ok(TomlValue::Str(inner.to_string()));
     }
     match s {
@@ -157,13 +164,40 @@ fn parse_value(s: &str) -> Result<TomlValue, String> {
         "false" => return Ok(TomlValue::Bool(false)),
         _ => {}
     }
-    if let Ok(i) = s.replace('_', "").parse::<i64>() {
-        return Ok(TomlValue::Int(i));
+    if looks_like_int(s) {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
     }
     if let Ok(f) = s.parse::<f64>() {
         return Ok(TomlValue::Float(f));
     }
     Err(format!("cannot parse value '{s}'"))
+}
+
+/// TOML integer shape: optional sign, then digits with `_` allowed only
+/// *between* two digits. Blindly stripping underscores used to accept
+/// `_`, `5_`, and `_5` as integers.
+fn looks_like_int(s: &str) -> bool {
+    let body = s.strip_prefix(['+', '-']).unwrap_or(s);
+    if body.is_empty() {
+        return false;
+    }
+    let bytes = body.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'0'..=b'9' => {}
+            b'_' => {
+                let digit_before = i > 0 && bytes[i - 1].is_ascii_digit();
+                let digit_after = i + 1 < bytes.len() && bytes[i + 1].is_ascii_digit();
+                if !digit_before || !digit_after {
+                    return false;
+                }
+            }
+            _ => return false,
+        }
+    }
+    true
 }
 
 #[cfg(test)]
@@ -234,5 +268,31 @@ freq_mhz = 200
     #[test]
     fn unterminated_string_rejected() {
         assert!(TomlDoc::parse("s = \"abc\n").is_err());
+    }
+
+    #[test]
+    fn interior_quotes_rejected_not_guessed() {
+        // regression (ISSUE 5): these used to parse as strings with
+        // embedded quotes instead of failing loudly
+        let err = TomlDoc::parse("s = \"a\" \"b\"\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        assert!(err.msg.contains("quote"), "{}", err.msg);
+        assert!(TomlDoc::parse("s = \"a\"b\"\n").is_err());
+        // a legitimate string still parses
+        let d = TomlDoc::parse("s = \"ab\"\n").unwrap();
+        assert_eq!(d.str_or("", "s", ""), "ab");
+    }
+
+    #[test]
+    fn malformed_underscore_integers_rejected() {
+        // regression (ISSUE 5): `replace('_', "")` accepted all of these
+        for bad in ["x = _", "x = 5_", "x = _5", "x = 1__0", "x = -_5", "x = 5_-"] {
+            assert!(TomlDoc::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+        // well-formed separators still work, signs included
+        let d = TomlDoc::parse("a = 1_000\nb = -2_500\nc = +3_0\n").unwrap();
+        assert_eq!(d.i64_or("", "a", 0), 1_000);
+        assert_eq!(d.i64_or("", "b", 0), -2_500);
+        assert_eq!(d.i64_or("", "c", 0), 30);
     }
 }

@@ -9,7 +9,9 @@ use crate::anyhow;
 use crate::config::parse::TomlDoc;
 use crate::constants;
 use crate::devices::fpga::FpgaBoard;
-use crate::runtime_hub::{ArbPolicy, FabricConfig, ResourcePolicies};
+use crate::runtime_hub::{
+    ArbPolicy, FabricConfig, OperatorRates, ReconfigConfig, ReconfigPolicy, ResourcePolicies,
+};
 
 /// The simulated platform (one §4.1 server/cluster).
 #[derive(Clone, Debug)]
@@ -27,6 +29,10 @@ pub struct PlatformConfig {
     /// multi-hub scale-out plane (`[fabric]`): hub count, inter-hub link
     /// rate, per-hop latency; `fabric.policies` mirrors `arb`
     pub fabric: FabricConfig,
+    /// reconfigurable operator plane (`[reconfig]`): region count, swap
+    /// (bitstream-load) latency, operator streaming rates; `policy`
+    /// selects the placement scheduler (`arb.regions`)
+    pub reconfig: ReconfigConfig,
     pub artifacts_dir: PathBuf,
     pub results_dir: PathBuf,
 }
@@ -42,6 +48,7 @@ impl Default for PlatformConfig {
             eth_gbps: constants::ETH_GBPS,
             arb: ResourcePolicies::default(),
             fabric: FabricConfig { hubs: 8, ..Default::default() },
+            reconfig: ReconfigConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             results_dir: PathBuf::from("results"),
         }
@@ -64,17 +71,36 @@ impl PlatformConfig {
             other => anyhow::bail!("unknown fpga board '{other}' (u50|u280|vpk180)"),
         };
         let default_policy = policy_or(doc, "policy", ArbPolicy::Fcfs)?;
+        let placement = {
+            let s = doc.str_or("reconfig", "policy", ReconfigPolicy::default().name());
+            ReconfigPolicy::parse(&s).ok_or_else(|| {
+                anyhow::anyhow!("unknown reconfig placement policy '{s}' (fcfs|lru|qos)")
+            })?
+        };
         let arb = ResourcePolicies {
             links: policy_or(doc, "links", default_policy)?,
             pools: policy_or(doc, "pools", default_policy)?,
             nvme: policy_or(doc, "nvme", default_policy)?,
             fabric: policy_or(doc, "fabric", default_policy)?,
+            regions: placement,
         };
         let fabric = FabricConfig {
             hubs: doc.i64_or("fabric", "hubs", d.fabric.hubs as i64).max(1) as usize,
             gbps: doc.f64_or("fabric", "gbps", d.fabric.gbps),
             hop_ns: doc.f64_or("fabric", "hop_ns", d.fabric.hop_ns),
             policies: arb,
+        };
+        let dr = d.reconfig;
+        let reconfig = ReconfigConfig {
+            regions: doc.i64_or("reconfig", "regions", dr.regions as i64).max(1) as usize,
+            swap_us: doc.f64_or("reconfig", "swap_us", dr.swap_us),
+            rates: OperatorRates {
+                filter_gbps: doc.f64_or("reconfig", "filter_gbps", dr.rates.filter_gbps),
+                project_gbps: doc.f64_or("reconfig", "project_gbps", dr.rates.project_gbps),
+                partition_gbps: doc.f64_or("reconfig", "partition_gbps", dr.rates.partition_gbps),
+                compress_gbps: doc.f64_or("reconfig", "compress_gbps", dr.rates.compress_gbps),
+                setup_ns: doc.f64_or("reconfig", "setup_ns", dr.rates.setup_ns),
+            },
         };
         Ok(PlatformConfig {
             seed: doc.i64_or("", "seed", d.seed as i64) as u64,
@@ -85,6 +111,7 @@ impl PlatformConfig {
             eth_gbps: doc.f64_or("net", "gbps", d.eth_gbps),
             arb,
             fabric,
+            reconfig,
             artifacts_dir: PathBuf::from(doc.str_or("", "artifacts_dir", "artifacts")),
             results_dir: PathBuf::from(doc.str_or("", "results_dir", "results")),
         })
@@ -213,6 +240,40 @@ mod tests {
     fn bad_arbitration_policy_rejected() {
         let doc = TomlDoc::parse("[arbitration]\npolicy = \"lifo\"\n").unwrap();
         assert!(PlatformConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn reconfig_defaults_and_overrides() {
+        let p = PlatformConfig::default();
+        assert_eq!(p.reconfig, ReconfigConfig::default());
+        assert_eq!(p.arb.regions, ReconfigPolicy::Fcfs);
+
+        let doc = TomlDoc::parse(
+            "[reconfig]\nregions = 4\nswap_us = 250.0\npolicy = \"qos\"\n\
+             compress_gbps = 30.0\nsetup_ns = 100.0\n",
+        )
+        .unwrap();
+        let p = PlatformConfig::from_doc(&doc).unwrap();
+        assert_eq!(p.reconfig.regions, 4);
+        assert_eq!(p.reconfig.swap_us, 250.0);
+        assert_eq!(p.reconfig.rates.compress_gbps, 30.0);
+        assert_eq!(p.reconfig.rates.setup_ns, 100.0);
+        assert_eq!(p.reconfig.rates.filter_gbps, OperatorRates::default().filter_gbps);
+        assert_eq!(p.arb.regions, ReconfigPolicy::QosAware);
+        assert_eq!(p.fabric.policies.regions, ReconfigPolicy::QosAware, "fabric carries it");
+    }
+
+    #[test]
+    fn bad_reconfig_policy_rejected() {
+        let doc = TomlDoc::parse("[reconfig]\npolicy = \"mru\"\n").unwrap();
+        assert!(PlatformConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn reconfig_region_count_clamped_to_one() {
+        let doc = TomlDoc::parse("[reconfig]\nregions = 0\n").unwrap();
+        let p = PlatformConfig::from_doc(&doc).unwrap();
+        assert_eq!(p.reconfig.regions, 1);
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod qos;
+pub mod reconfig;
 pub mod scale;
 pub mod table1;
 
@@ -16,8 +17,10 @@ use crate::config::ExperimentConfig;
 use crate::metrics::{write_csv, Table};
 
 /// All experiment names (CLI `fpgahub expt <name>`).
-pub const ALL: &[&str] =
-    &["fig2", "fig7a", "fig7b", "fig8", "fig9", "fig10a", "fig10b", "table1", "qos", "scale"];
+pub const ALL: &[&str] = &[
+    "fig2", "fig7a", "fig7b", "fig8", "fig9", "fig10a", "fig10b", "table1", "qos", "scale",
+    "reconfig",
+];
 
 /// Dispatch by name.
 pub fn run(name: &str, cfg: &ExperimentConfig) -> anyhow::Result<Vec<Table>> {
@@ -32,6 +35,7 @@ pub fn run(name: &str, cfg: &ExperimentConfig) -> anyhow::Result<Vec<Table>> {
         "table1" => vec![table1::run(cfg)?],
         "qos" => vec![qos::run(cfg)],
         "scale" => vec![scale::run(cfg)],
+        "reconfig" => reconfig::run(cfg),
         other => anyhow::bail!("unknown experiment '{other}' (have {ALL:?})"),
     };
     emit(&tables, cfg)?;

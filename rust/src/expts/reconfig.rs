@@ -1,0 +1,169 @@
+//! Reconfiguration experiment (`fpgahub reconfig`): the operator plane's
+//! central trade-off — bitstream-load (swap) latency × region count vs.
+//! operator-miss penalty — measured on the `apps::preprocess` scenario
+//! (latency-sensitive scan→filter→partition pipeline vs. a
+//! region-thrashing aggressor), one row per (placement policy, region
+//! count, swap latency) point with per-tenant p99s and swap accounting.
+//!
+//! A second table runs the fabric pushdown comparison: filtering at the
+//! hub that owns the data vs. shipping whole blocks over the
+//! interconnect.
+
+use crate::apps::preprocess::{
+    run_preprocess, run_pushdown, PreprocessConfig, PreprocessReport, PushdownConfig,
+};
+use crate::config::ExperimentConfig;
+use crate::metrics::Table;
+use crate::runtime_hub::ReconfigPolicy;
+
+/// Pipeline jobs per point, scaled to the sample budget (`quick()` stays
+/// test-sized; the default budget sweeps ~80 jobs per point).
+fn jobs(cfg: &ExperimentConfig) -> u64 {
+    ((cfg.samples as u64) / 60).clamp(30, 80)
+}
+
+/// Swap latencies to sweep, µs: optimistic shell vs. pessimistic full
+/// region reload.
+const SWAP_US: [f64; 2] = [50.0, 400.0];
+/// Region counts to sweep: scarce, the default, and enough-for-everyone.
+const REGIONS: [usize; 3] = [1, 2, 4];
+
+/// One point of the sweep.
+pub fn run_point(
+    cfg: &ExperimentConfig,
+    policy: ReconfigPolicy,
+    regions: usize,
+    swap_us: f64,
+) -> PreprocessReport {
+    let n = jobs(cfg);
+    run_preprocess(&PreprocessConfig {
+        jobs: n,
+        aggr_jobs: n * 2,
+        num_ssds: cfg.platform.num_ssds.min(4),
+        regions,
+        swap_us,
+        rates: cfg.platform.reconfig.rates,
+        seed: cfg.platform.seed,
+        policy,
+        ..Default::default()
+    })
+}
+
+/// The swap-latency × region-count sweep, one row per point.
+pub fn run_sweep(cfg: &ExperimentConfig) -> Table {
+    let mut t = Table::new(
+        "reconfig: swap latency x regions vs operator-miss penalty",
+        &[
+            "policy",
+            "regions",
+            "swap_us",
+            "pipe_p99_iso_us",
+            "pipe_p99_shared_us",
+            "p99_gap_us",
+            "aggr_p99_us",
+            "swaps",
+            "pipe_swaps",
+            "hit_rate",
+        ],
+    );
+    for policy in ReconfigPolicy::ALL {
+        for &regions in &REGIONS {
+            for &swap_us in &SWAP_US {
+                let r = run_point(cfg, policy, regions, swap_us);
+                t.row(&[
+                    policy.name().into(),
+                    regions.to_string(),
+                    format!("{swap_us:.0}"),
+                    format!("{:.2}", r.pipeline_isolated.p99),
+                    format!("{:.2}", r.pipeline_shared.p99),
+                    format!("{:.2}", r.p99_degradation_us()),
+                    format!("{:.2}", r.aggressor.p99),
+                    r.plane.swaps.to_string(),
+                    r.plane.pipeline_swaps.to_string(),
+                    format!("{:.2}", r.plane.hit_rate()),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// The fabric pushdown comparison, one row per mode.
+pub fn run_pushdown_table(cfg: &ExperimentConfig) -> Table {
+    let mut t = Table::new(
+        "reconfig: operator pushdown vs ship-all on the fabric",
+        &["mode", "mean_us", "p99_us", "fabric_mb", "swaps", "events"],
+    );
+    let r = run_pushdown(&PushdownConfig {
+        hubs: cfg.platform.fabric.hubs.clamp(2, 4),
+        requests: jobs(cfg) * 2,
+        seed: cfg.platform.seed,
+        ..Default::default()
+    });
+    for (mode, m) in [("pushdown", r.pushdown), ("ship-all", r.ship_all)] {
+        t.row(&[
+            mode.into(),
+            format!("{:.2}", m.lat_us.mean),
+            format!("{:.2}", m.lat_us.p99),
+            format!("{:.2}", m.fabric_mb),
+            m.swaps.to_string(),
+            m.run.events.to_string(),
+        ]);
+    }
+    t
+}
+
+pub fn run(cfg: &ExperimentConfig) -> Vec<Table> {
+    vec![run_sweep(cfg), run_pushdown_table(cfg)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_has_one_row_per_point() {
+        let t = run_sweep(&ExperimentConfig::quick());
+        assert_eq!(t.rows.len(), ReconfigPolicy::ALL.len() * REGIONS.len() * SWAP_US.len());
+        assert_eq!(t.rows[0][0], "fcfs");
+    }
+
+    #[test]
+    fn more_regions_raise_the_hit_rate() {
+        let cfg = ExperimentConfig::quick();
+        let scarce = run_point(&cfg, ReconfigPolicy::Fcfs, 1, 400.0);
+        let plenty = run_point(&cfg, ReconfigPolicy::Fcfs, 4, 400.0);
+        assert!(
+            plenty.plane.hit_rate() > scarce.plane.hit_rate(),
+            "4 regions {:.2} vs 1 region {:.2}",
+            plenty.plane.hit_rate(),
+            scarce.plane.hit_rate()
+        );
+        // with a region per operator the plane stops missing entirely
+        assert_eq!(plenty.plane.swaps, 4);
+    }
+
+    #[test]
+    fn cheaper_swaps_shrink_the_miss_penalty() {
+        let cfg = ExperimentConfig::quick();
+        let fast = run_point(&cfg, ReconfigPolicy::Fcfs, 2, 50.0);
+        let slow = run_point(&cfg, ReconfigPolicy::Fcfs, 2, 400.0);
+        assert!(
+            fast.pipeline_shared.p99 < slow.pipeline_shared.p99,
+            "50µs swaps p99 {:.2} vs 400µs swaps p99 {:.2}",
+            fast.pipeline_shared.p99,
+            slow.pipeline_shared.p99
+        );
+    }
+
+    #[test]
+    fn pushdown_table_has_both_modes() {
+        let t = run_pushdown_table(&ExperimentConfig::quick());
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "pushdown");
+        assert_eq!(t.rows[1][0], "ship-all");
+        let push_mb: f64 = t.rows[0][3].parse().unwrap();
+        let ship_mb: f64 = t.rows[1][3].parse().unwrap();
+        assert!(push_mb < ship_mb, "pushdown {push_mb} MB vs ship-all {ship_mb} MB");
+    }
+}

@@ -15,6 +15,10 @@
 //!   fpgahub scale [--hubs N]           hierarchical allreduce across a
 //!                                      fabric of 1/2/4/…/N hubs: round
 //!                                      times, flat-hub baseline, events/s
+//!   fpgahub reconfig                   reconfigurable operator plane:
+//!                                      swap latency × region count vs
+//!                                      miss penalty, plus the fabric
+//!                                      operator-pushdown comparison
 //!   fpgahub info                       platform + artifact status
 
 use fpgahub::anyhow;
@@ -27,8 +31,8 @@ use fpgahub::runtime_hub::ArbPolicy;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: fpgahub <list|expt NAME|all|train|fetch-demo|multi-tenant|qos|scale|info> \
-         [options]\n\
+        "usage: fpgahub <list|expt NAME|all|train|fetch-demo|multi-tenant|qos|scale|reconfig|\
+         info> [options]\n\
          options: --config FILE --samples N --steps N --workers N --requests N\n\
          \x20        --hubs N --arb fcfs|priority|wfq --no-csv"
     );
@@ -190,6 +194,9 @@ fn main() -> anyhow::Result<()> {
         "scale" => {
             // --hubs is folded into the platform config by load_cfg
             expts::run("scale", &cfg)?;
+        }
+        "reconfig" => {
+            expts::run("reconfig", &cfg)?;
         }
         "qos" => {
             let (t, outcomes) = expts::qos::run_with_outcomes(&cfg);

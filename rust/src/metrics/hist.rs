@@ -26,6 +26,14 @@ impl Hist {
     }
 
     pub fn record(&mut self, v: f64) {
+        // Non-finite samples are dropped, not stored: one NaN would poison
+        // the running sum and (before the `total_cmp` fix) panic every
+        // later percentile query, long after the buggy producer is gone.
+        // Dropping keeps every downstream quantile/summary/bench-JSON
+        // value finite (ISSUE 5).
+        if !v.is_finite() {
+            return;
+        }
         self.samples.push(v);
         self.sorted = false;
         self.sum += v;
@@ -87,8 +95,11 @@ impl Hist {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.samples
-                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            // total_cmp is a total order: even if a non-finite sample ever
+            // slipped in, a *query* must never panic (ISSUE 5 — the old
+            // `partial_cmp(..).expect("NaN sample")` blew up at percentile
+            // time, far from the offending record call)
+            self.samples.sort_by(f64::total_cmp);
             self.sorted = true;
         }
     }
@@ -226,6 +237,39 @@ mod tests {
         assert_eq!(h.fluctuation(), 0.0);
         let s = h.summary("µs");
         assert!(!s.contains("inf") && !s.contains("NaN"), "{s}");
+    }
+
+    #[test]
+    fn nan_samples_are_dropped_and_quantiles_stay_finite() {
+        // regression (ISSUE 5): recording NaN used to poison the sum and
+        // panic the next percentile query at sort time
+        let mut h = Hist::new();
+        h.record(1.0);
+        h.record(f64::NAN);
+        h.record(3.0);
+        h.record(f64::INFINITY);
+        h.record(f64::NEG_INFINITY);
+        h.record(2.0);
+        assert_eq!(h.len(), 3, "non-finite samples must not be stored");
+        let q = h.quantiles();
+        assert_eq!(q.n, 3);
+        assert_eq!(q.p50, 2.0);
+        assert!(q.mean.is_finite() && q.p99.is_finite() && q.max.is_finite());
+        assert_eq!(h.mean(), 2.0);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 3.0);
+        let s = h.summary("µs");
+        assert!(!s.contains("NaN") && !s.contains("inf"), "{s}");
+    }
+
+    #[test]
+    fn all_nan_histogram_behaves_like_empty() {
+        let mut h = Hist::new();
+        h.record(f64::NAN);
+        h.record(f64::NAN);
+        assert!(h.is_empty());
+        assert_eq!(h.quantiles(), Quantiles::default());
+        assert_eq!(h.p99(), 0.0);
     }
 
     #[test]

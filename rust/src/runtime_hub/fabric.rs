@@ -297,6 +297,16 @@ impl Fabric {
         self.state(hub).borrow_mut().register_barrier(need)
     }
 
+    /// Register `hub`'s partial-reconfiguration operator plane (ISSUE 5);
+    /// placement follows `policies.regions`. Remote hops can then request
+    /// an operator on the destination hub via a
+    /// [`TransferDesc::preproc`](super::TransferDesc::preproc) stage in a
+    /// [`Site::Hub`] hop — operator pushdown to where the data lives.
+    pub fn add_regions(&mut self, hub: HubId, cfg: &super::ReconfigConfig) -> usize {
+        let policy = self.cfg.policies.regions;
+        self.state(hub).borrow_mut().register_regions(cfg, policy)
+    }
+
     /// Register a cross-hub barrier on the interconnect: descriptors from
     /// any hub rendezvous on it via a [`Site::Net`] hop.
     pub fn add_fabric_barrier(&mut self, need: usize) -> BarrierId {
@@ -453,6 +463,12 @@ impl Fabric {
         self.route_conts.borrow().len()
     }
 
+    /// Partial-reconfiguration swaps reserved across every hub's operator
+    /// plane (ISSUE 5).
+    pub fn total_region_swaps(&self) -> u64 {
+        self.sites().map(|(_, st)| st.borrow().regions.total_swaps()).sum()
+    }
+
     /// Continuations still waiting on an unreleased barrier, across every
     /// site — the cross-hub-deadlock detector the property tests assert on.
     pub fn barrier_waiters(&self) -> usize {
@@ -475,6 +491,7 @@ impl Fabric {
                             submitted: 0,
                             completed: 0,
                             bytes_moved: 0,
+                            swaps: 0,
                             lat: crate::metrics::Hist::new(),
                         });
                         merged.len() - 1
@@ -484,6 +501,7 @@ impl Fabric {
                 acct.submitted += a.submitted;
                 acct.completed += a.completed;
                 acct.bytes_moved += a.bytes_moved;
+                acct.swaps += a.swaps;
                 acct.lat.merge(&a.lat);
             }
         }
@@ -494,6 +512,7 @@ impl Fabric {
                 submitted: a.submitted,
                 completed: a.completed,
                 bytes_moved: a.bytes_moved,
+                swaps: a.swaps,
                 lat_us: a.lat.quantiles(),
             })
             .collect();

@@ -38,6 +38,7 @@
 //! are unchanged.
 
 pub mod fabric;
+pub mod reconfig;
 pub mod sched;
 
 use std::cell::{Cell, RefCell};
@@ -54,6 +55,9 @@ use crate::sim::{ContSlot, Event, ResourceId, Sim, World};
 use crate::util::Slab;
 
 pub use fabric::{Fabric, FabricConfig, Hop, HubId, RouteDesc, Site, TraceEntry};
+pub use reconfig::{
+    OperatorKind, OperatorRates, Placement, ReconfigConfig, ReconfigPolicy, Region, RegionPlane,
+};
 pub use sched::{
     dispatch_io, ArbPolicy, Arbiter, Barrier, FifoLink, GrantMeta, NvmeQueue, QosSpec,
     ResourcePolicies, TenantId, CLASS_BULK, CLASS_NORMAL, CLASS_REALTIME,
@@ -85,6 +89,10 @@ pub enum Stage {
     Nvme { q: NvmeId, op: NvmeOp },
     /// rendezvous with the other participants of a barrier
     Barrier(BarrierId),
+    /// stream `bytes` through a partial-reconfiguration region hosting
+    /// `op`, paying the bitstream-load latency first when no region has
+    /// the operator resident (ISSUE 5)
+    Preproc { op: OperatorKind, bytes: u64 },
 }
 
 /// A descriptor: an ordered stage list plus an app-defined label and the
@@ -138,6 +146,13 @@ impl TransferDesc {
 
     pub fn barrier(mut self, b: BarrierId) -> Self {
         self.stages.push(Stage::Barrier(b));
+        self
+    }
+
+    /// Route through the hub's operator plane: stream `bytes` through a
+    /// region hosting `op` (a swap is charged first on an operator miss).
+    pub fn preproc(mut self, op: OperatorKind, bytes: u64) -> Self {
+        self.stages.push(Stage::Preproc { op, bytes });
         self
     }
 
@@ -197,13 +212,16 @@ struct ParkedWaiter {
     op: ParkedOp,
 }
 
-/// Per-tenant running account: descriptor counts, link bytes, and the
-/// completion-latency histogram behind the p50/p95/p99 tenant reports.
+/// Per-tenant running account: descriptor counts, link bytes, region
+/// swaps charged, and the completion-latency histogram behind the
+/// p50/p95/p99 tenant reports.
 pub struct TenantAccount {
     pub tenant: TenantId,
     pub submitted: u64,
     pub completed: u64,
     pub bytes_moved: u64,
+    /// partial-reconfiguration swaps this tenant's descriptors caused
+    pub swaps: u64,
     pub lat: Hist,
 }
 
@@ -214,6 +232,8 @@ pub struct TenantReport {
     pub submitted: u64,
     pub completed: u64,
     pub bytes_moved: u64,
+    /// region swaps charged to this tenant (ISSUE 5)
+    pub swaps: u64,
     pub lat_us: Quantiles,
 }
 
@@ -230,6 +250,9 @@ pub struct HubState {
     link_arb: Vec<Box<dyn Arbiter>>,
     pool_arb: Vec<Box<dyn Arbiter>>,
     nvme_arb: Vec<Box<dyn Arbiter>>,
+    /// the partial-reconfiguration operator plane (empty until
+    /// `add_regions`; ISSUE 5)
+    pub regions: RegionPlane,
     /// every in-flight continuation, submit to completion (slot-addressed)
     conts: Slab<Continuation>,
     parked: Slab<ParkedWaiter>,
@@ -252,6 +275,7 @@ impl HubState {
             link_arb: Vec::new(),
             pool_arb: Vec::new(),
             nvme_arb: Vec::new(),
+            regions: RegionPlane::empty(),
             conts: Slab::new(),
             parked: Slab::new(),
             barriers: Vec::new(),
@@ -273,6 +297,7 @@ impl HubState {
                     submitted: 0,
                     completed: 0,
                     bytes_moved: 0,
+                    swaps: 0,
                     lat: Hist::new(),
                 });
                 self.tenants.last_mut().expect("just pushed")
@@ -344,6 +369,11 @@ impl HubState {
         self.barriers.push(Barrier::new(need));
         self.barrier_waiters.push(Vec::new());
         self.barriers.len() - 1
+    }
+
+    fn register_regions(&mut self, cfg: &ReconfigConfig, policy: ReconfigPolicy) -> usize {
+        self.regions.configure(cfg, policy);
+        self.regions.num_regions()
     }
 }
 
@@ -458,6 +488,16 @@ impl HubRuntime {
         self.state.borrow_mut().register_barrier(need)
     }
 
+    /// Register the hub's partial-reconfiguration operator plane
+    /// (ISSUE 5): `cfg.regions` regions, each hosting one streaming
+    /// operator at a time, swapped with `cfg.swap_us` of bitstream-load
+    /// latency. Placement follows `self.policies.regions`. Returns the
+    /// region count.
+    pub fn add_regions(&mut self, cfg: &ReconfigConfig) -> usize {
+        let policy = self.policies.regions;
+        self.state.borrow_mut().register_regions(cfg, policy)
+    }
+
     /// Submit a descriptor at absolute time `at`; `done` fires when the
     /// last stage completes.
     pub fn submit(
@@ -527,6 +567,7 @@ impl HubRuntime {
                 submitted: a.submitted,
                 completed: a.completed,
                 bytes_moved: a.bytes_moved,
+                swaps: a.swaps,
                 lat_us: a.lat.quantiles(),
             })
             .collect();
@@ -619,6 +660,14 @@ impl World for HubWorld {
             Event::NvmeComplete { site, q, slot } => {
                 let st = &self.sites[site as usize];
                 on_nvme_complete(st, sim, q as usize);
+                advance(st, sim, slot);
+            }
+            Event::RegionSwapDone { site, region } => {
+                self.sites[site as usize].borrow_mut().regions.commit_swap(region as usize);
+            }
+            Event::RegionDone { site, region, slot } => {
+                let st = &self.sites[site as usize];
+                st.borrow_mut().regions.release(region as usize);
                 advance(st, sim, slot);
             }
             Event::Closure(_) => unreachable!("the engine runs closures itself"),
@@ -747,6 +796,9 @@ enum After {
     Grant(Ps, ResourceId),
     /// NVMe command dispatched: completion visible at `.0` on ring `.1`
     Nvme(Ps, u32),
+    /// operator-plane region reserved: optional swap-commit instant, then
+    /// the streaming completion on `region`
+    Region { swap_done: Option<Ps>, done: Ps, region: u32 },
     /// barrier released: resume the parked slots, then this one
     Released(Vec<ContSlot>),
     /// parked on an arbiter or barrier: a later event resumes it
@@ -848,6 +900,25 @@ fn advance(st: &Rc<RefCell<HubState>>, sim: &mut Sim, slot: ContSlot) {
                     After::Parked
                 }
             }
+            Some(Stage::Preproc { op, bytes }) => {
+                // regions reserve eagerly (the FCFS busy_until chain); the
+                // *placement* — which region, which residency to evict —
+                // is the plane's pluggable policy. A miss charges the
+                // bitstream-load latency, and the swap is billed to the
+                // requesting tenant's account. Streamed bytes land in the
+                // plane's per-region counters, NOT in `bytes_moved` —
+                // that field stays link bytes, comparable to link-side
+                // counters as in the PR 2/3 reports.
+                let p = state.regions.reserve(now, op, qos, bytes);
+                if p.swapped {
+                    state.tenant_mut(qos.tenant).swaps += 1;
+                }
+                After::Region {
+                    swap_done: if p.swapped { Some(p.swap_end) } else { None },
+                    done: p.done,
+                    region: p.region as u32,
+                }
+            }
         };
         (state.site, after)
     };
@@ -861,6 +932,12 @@ fn advance(st: &Rc<RefCell<HubState>>, sim: &mut Sim, slot: ContSlot) {
         After::At(at) => sim.schedule(at, Event::Advance { site, slot }),
         After::Grant(at, res) => sim.schedule(at, Event::GrantNext { site, res }),
         After::Nvme(at, q) => sim.schedule(at, Event::NvmeComplete { site, q, slot }),
+        After::Region { swap_done, done, region } => {
+            if let Some(at) = swap_done {
+                sim.schedule(at, Event::RegionSwapDone { site, region });
+            }
+            sim.schedule(done, Event::RegionDone { site, region, slot });
+        }
         After::Released(waiters) => {
             // waiters resume in arrival order, then the releasing arrival —
             // the exact event insertion order of the closure engine
@@ -1420,6 +1497,110 @@ mod tests {
         assert_eq!(reports[0].lat_us.p50, 3.0);
         assert_eq!(reports[0].lat_us.p99, 3.0);
         assert_eq!(reports[0].lat_us.max, 3.0);
+    }
+
+    fn nice_reconfig() -> ReconfigConfig {
+        // rates chosen so every serialization time is a whole picosecond
+        ReconfigConfig {
+            regions: 2,
+            swap_us: 100.0,
+            rates: OperatorRates {
+                filter_gbps: 100.0,
+                project_gbps: 100.0,
+                partition_gbps: 50.0,
+                compress_gbps: 25.0,
+                setup_ns: 200.0,
+            },
+        }
+    }
+
+    #[test]
+    fn preproc_miss_pays_the_swap_then_hits_stream() {
+        let mut rt = HubRuntime::new();
+        rt.add_regions(&nice_reconfig());
+        let (order, make) = collect_order();
+        for i in 0..2u64 {
+            let done = make(i);
+            let desc = TransferDesc::with_label(i).preproc(OperatorKind::Filter, 12_500);
+            rt.submit(0, desc, move |s, t| done(s, t));
+        }
+        rt.run();
+        let got = order.borrow().clone();
+        // first grant: 100 µs bitstream load + 0.2 µs setup + 1 µs stream
+        assert_eq!(got[0], (0, 101_200 * NS));
+        // second grant: resident hit queued behind the first
+        assert_eq!(got[1], (1, 102_400 * NS));
+        rt.with_state(|st| {
+            assert_eq!(st.regions.total_swaps(), 1);
+            assert_eq!(st.regions.total_hits(), 1);
+            assert_eq!(st.regions.total_swaps_done(), 1);
+            assert_eq!(st.regions.grants_in_flight(), 0);
+            assert_eq!(st.regions.loads_in_flight(), 0);
+            assert_eq!(st.regions.total_bytes(), 25_000);
+        });
+    }
+
+    #[test]
+    fn preproc_distinct_operators_use_distinct_regions() {
+        let mut rt = HubRuntime::new();
+        rt.add_regions(&nice_reconfig());
+        let (order, make) = collect_order();
+        let a = make(0);
+        let b = make(1);
+        rt.submit(
+            0,
+            TransferDesc::with_label(0).preproc(OperatorKind::Filter, 12_500),
+            move |s, t| a(s, t),
+        );
+        rt.submit(
+            0,
+            TransferDesc::with_label(1).preproc(OperatorKind::Compress, 12_500),
+            move |s, t| b(s, t),
+        );
+        rt.run();
+        let got = order.borrow().clone();
+        // both swap cold regions in parallel; compress streams at 25 Gb/s
+        assert_eq!(got[0], (0, 101_200 * NS));
+        assert!(got.contains(&(1, 104_200 * NS)), "{got:?}");
+        rt.with_state(|st| {
+            assert_eq!(st.regions.total_swaps(), 2);
+            assert_eq!(st.regions.regions()[0].hosted, Some(OperatorKind::Filter));
+            assert_eq!(st.regions.regions()[1].hosted, Some(OperatorKind::Compress));
+        });
+    }
+
+    #[test]
+    fn preproc_swaps_are_charged_to_the_requesting_tenant() {
+        let mut rt = HubRuntime::new();
+        rt.add_regions(&nice_reconfig());
+        let urgent = QosSpec::latency_sensitive(TenantId(1));
+        let bulk = QosSpec::bulk(TenantId(2));
+        let filter = TransferDesc::with_label(0).qos(urgent).preproc(OperatorKind::Filter, 1_000);
+        rt.submit(0, filter, |_, _| {});
+        // the thrasher forces two swaps (its own two operators)
+        let squeeze = TransferDesc::with_label(1).qos(bulk).preproc(OperatorKind::Compress, 1_000);
+        rt.submit(0, squeeze, |_, _| {});
+        let project = TransferDesc::with_label(2).qos(bulk).preproc(OperatorKind::Project, 1_000);
+        rt.submit(0, project, |_, _| {});
+        rt.run();
+        let reports = rt.tenant_reports();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].tenant, TenantId(1));
+        assert_eq!(reports[0].swaps, 1);
+        assert_eq!(reports[1].tenant, TenantId(2));
+        assert_eq!(reports[1].swaps, 2);
+        // streamed bytes are plane-side counters; `bytes_moved` stays
+        // link bytes (these descriptors never touch a link)
+        assert_eq!(reports[0].bytes_moved + reports[1].bytes_moved, 0);
+        rt.with_state(|st| assert_eq!(st.regions.total_bytes(), 3_000));
+    }
+
+    #[test]
+    #[should_panic(expected = "no partial-reconfiguration regions")]
+    fn preproc_without_regions_panics() {
+        let mut rt = HubRuntime::new();
+        rt.submit(0, TransferDesc::new().preproc(OperatorKind::Filter, 1_000), |_, _| {});
+        rt.run();
     }
 
     #[test]

@@ -155,12 +155,23 @@ pub struct ResourcePolicies {
     pub nvme: ArbPolicy,
     /// inter-hub fabric links (the [`super::fabric::Fabric`] interconnect)
     pub fabric: ArbPolicy,
+    /// operator-placement policy of the partial-reconfiguration plane
+    /// (`[reconfig] policy` — ISSUE 5; not an [`ArbPolicy`]: regions grant
+    /// FIFO, what is pluggable is *placement*)
+    pub regions: super::reconfig::ReconfigPolicy,
 }
 
 impl ResourcePolicies {
-    /// The same policy on every resource kind.
+    /// The same arbitration policy on every resource kind (placement
+    /// keeps its default: regions are not arbitrated, they are placed).
     pub fn uniform(policy: ArbPolicy) -> Self {
-        ResourcePolicies { links: policy, pools: policy, nvme: policy, fabric: policy }
+        ResourcePolicies {
+            links: policy,
+            pools: policy,
+            nvme: policy,
+            fabric: policy,
+            regions: Default::default(),
+        }
     }
 }
 

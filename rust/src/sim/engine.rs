@@ -36,6 +36,12 @@ pub enum Event {
     /// An NVMe completion on ring `q` became visible: ring the doorbell,
     /// then resume the continuation at `slot`.
     NvmeComplete { site: u32, q: u32, slot: ContSlot },
+    /// A partial-reconfiguration bitstream load on `region` finished: the
+    /// operator plane commits the swap (ISSUE 5).
+    RegionSwapDone { site: u32, region: u32 },
+    /// `region` finished streaming the pre-processing bytes of the
+    /// continuation at `slot`: release the region, then resume it.
+    RegionDone { site: u32, region: u32, slot: ContSlot },
     /// Escape hatch: run an arbitrary boxed action.
     Closure(Action),
 }

@@ -20,7 +20,8 @@ use fpgahub::apps::storage_fetch::{register_nic_fetch_path_fabric, FETCH_CMD_BYT
 use fpgahub::net::packet::HEADER_BYTES;
 use fpgahub::nvme::ssd::SsdArray;
 use fpgahub::runtime_hub::{
-    Fabric, FabricConfig, HubId, QosSpec, ResourcePolicies, RouteDesc, Site, TenantId, TraceEntry,
+    Fabric, FabricConfig, HubId, OperatorKind, OperatorRates, QosSpec, ReconfigConfig,
+    ResourcePolicies, RouteDesc, Site, TenantId, TraceEntry, TransferDesc,
 };
 use fpgahub::sim::time::US;
 use fpgahub::util::Rng;
@@ -90,6 +91,146 @@ fn golden_trace_4hub_pinned_and_repeatable() {
 #[test]
 fn topology_is_part_of_the_trace() {
     assert_ne!(run_pinned(1).0, run_pinned(4).0);
+}
+
+// ---------------------------------------------- operator plane (ISSUE 5) ----
+
+/// Committed golden `trace_hash()` of [`reconfig_fabric`] at 1 hub.
+const GOLDEN_RECONFIG_1HUB: u64 = 0xa4b0_e70c_6af2_d76b;
+/// Committed golden `trace_hash()` of [`reconfig_fabric`] at 4 hubs.
+const GOLDEN_RECONFIG_4HUB: u64 = 0x1b5c_31a7_20f8_5d46;
+
+/// The pinned operator-plane scenario: per hub, six local jobs
+/// (delay → region → egress) cycling through operators on a 2-region
+/// plane (forced swaps), plus — beyond one hub — three remote routes per
+/// hub that request an operator on the *destination* hub (cmd hop →
+/// remote preproc → reply hop). Rates are chosen so every serialization
+/// time is a whole picosecond: the canonical trace is pure integer
+/// arithmetic, stable across platforms as well as runs.
+fn reconfig_fabric(hubs: usize) -> Fabric {
+    let mut fab = Fabric::with_config(FabricConfig {
+        hubs,
+        gbps: 100.0,
+        hop_ns: 500.0,
+        policies: ResourcePolicies::default(),
+    });
+    let rc = ReconfigConfig {
+        regions: 2,
+        swap_us: 100.0,
+        rates: OperatorRates {
+            filter_gbps: 100.0,
+            project_gbps: 100.0,
+            partition_gbps: 50.0,
+            compress_gbps: 25.0,
+            setup_ns: 200.0,
+        },
+    };
+    let ops = [
+        OperatorKind::Filter,
+        OperatorKind::Compress,
+        OperatorKind::Filter,
+        OperatorKind::HashPartition,
+        OperatorKind::Project,
+        OperatorKind::Compress,
+    ];
+    let mut egress = Vec::with_capacity(hubs);
+    for h in 0..hubs {
+        let hub = HubId(h as u32);
+        fab.add_regions(hub, &rc);
+        egress.push(fab.add_link(hub, "egress", 100.0, 0));
+    }
+    let qos1 = QosSpec::latency_sensitive(TenantId(1));
+    for h in 0..hubs {
+        for (j, &op) in ops.iter().enumerate() {
+            let label = h as u64 * 16 + j as u64;
+            let t0 = (j as u64 * 40 + h as u64 * 7) * US;
+            let desc = TransferDesc::with_label(label)
+                .qos(qos1)
+                .delay(US)
+                .preproc(op, 12_500)
+                .xfer(egress[h], 12_500);
+            fab.submit(HubId(h as u32), t0, desc, |_, _| {});
+        }
+    }
+    if hubs > 1 {
+        let qos2 = QosSpec::bulk(TenantId(2));
+        for h in 0..hubs {
+            for k in 0..3u64 {
+                let src = HubId(h as u32);
+                let dst = HubId(((h + 1) % hubs) as u32);
+                let label = 128 + h as u64 * 8 + k;
+                let t0 = (13 + h as u64 * 11 + k * 90) * US;
+                let op = ops[(h + k as usize) % ops.len()];
+                let remote = TransferDesc::with_label(label).qos(qos2).preproc(op, 25_000);
+                let route = RouteDesc::new()
+                    .hop(Site::Net, fab.hop_desc(label, qos2, src, dst, 2_500))
+                    .hop(Site::Hub(dst), remote)
+                    .hop(Site::Net, fab.hop_desc(label, qos2, dst, src, 12_500));
+                fab.submit_route(t0, route, |_, _| {});
+            }
+        }
+    }
+    fab.run();
+    fab
+}
+
+fn run_reconfig_pinned(hubs: usize) -> (u64, Vec<TraceEntry>) {
+    let fab = reconfig_fabric(hubs);
+    (fab.trace_hash(), fab.completion_trace())
+}
+
+#[test]
+fn golden_reconfig_trace_1hub_pinned_and_repeatable() {
+    let (h1, t1) = run_reconfig_pinned(1);
+    let (h2, t2) = run_reconfig_pinned(1);
+    assert_eq!(t1, t2, "back-to-back runs must produce identical traces");
+    assert_eq!(h1, h2);
+    // 6 local jobs, no interconnect traffic at 1 hub
+    assert_eq!(t1.len(), 6);
+    // the closed-form swap-on-miss chain, spelled out (all times µs):
+    //   j0 F  miss r0: 1+100+0.2+1   =102.2, +1 egress        -> 103.2
+    //   j1 C  miss r1: 41+100+0.2+4  =145.2, +1               -> 146.2
+    //   j2 F  hit  r0: 102.2+0.2+1   =103.4, egress busy 103.2 -> 104.4
+    //   j3 HP miss r0 (frees first): 121+100+0.2+2            -> 224.2
+    //   j4 P  miss r1: 161+100+0.2+1                          -> 263.2
+    //   j5 C  miss r0: 223.2+100+0.2+4                        -> 328.4
+    let done: Vec<(u64, u64)> = t1.iter().map(|e| (e.label, e.done_at)).collect();
+    assert_eq!(
+        done,
+        vec![
+            (0, 103_200_000),
+            (2, 104_400_000),
+            (1, 146_200_000),
+            (3, 224_200_000),
+            (4, 263_200_000),
+            (5, 328_400_000),
+        ],
+        "1-hub reconfig completion chain drifted"
+    );
+    assert_eq!(
+        h1, GOLDEN_RECONFIG_1HUB,
+        "1-hub reconfig golden trace drifted: got {h1:#018x}"
+    );
+}
+
+#[test]
+fn golden_reconfig_trace_4hub_pinned_and_repeatable() {
+    let (h1, t1) = run_reconfig_pinned(4);
+    let (h2, t2) = run_reconfig_pinned(4);
+    assert_eq!(t1, t2, "back-to-back runs must produce identical traces");
+    assert_eq!(h1, h2);
+    // 4 × 6 local jobs + 4 × 3 routes × 3 hops
+    assert_eq!(t1.len(), 60);
+    assert_eq!(
+        h1, GOLDEN_RECONFIG_4HUB,
+        "4-hub reconfig golden trace drifted: got {h1:#018x}"
+    );
+}
+
+#[test]
+fn reconfig_topology_is_part_of_the_trace() {
+    assert_ne!(run_reconfig_pinned(1).0, run_reconfig_pinned(4).0);
+    assert_ne!(GOLDEN_RECONFIG_1HUB, GOLDEN_RECONFIG_4HUB);
 }
 
 /// RNG-heavy mixed workload: hierarchical rounds with skew plus remote

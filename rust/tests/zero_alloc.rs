@@ -2,7 +2,9 @@
 //!
 //! A counting global allocator wraps `System`; after a warmup phase that
 //! grows the calendar queue's bucket capacities, a sustained run of
-//! engine-native events (schedule + fire, typed `Event::Advance` relays)
+//! engine-native events (schedule + fire, typed relays rotating through
+//! `Event::Advance` / `RegionDone` / `RegionSwapDone` — the ISSUE 5
+//! region-swap events included)
 //! must perform **zero** heap allocations — the payloads are fixed-size,
 //! the wheel buckets and the FIFO head recycle their storage, and there is
 //! no boxing anywhere on the path.
@@ -38,20 +40,27 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
-/// Every `Advance` re-arms itself a short hop ahead until the budget is
+/// Every event re-arms its chain a short hop ahead until the budget is
 /// spent — the engine-native steady state: constant queue depth, constant
-/// timestamp spread, all inside one wheel rotation.
+/// timestamp spread, all inside one wheel rotation. The chain rotates
+/// through every fixed-size runtime variant (`Advance` → `RegionDone` →
+/// `RegionSwapDone` → …), so the ISSUE 5 region-swap events are pinned to
+/// the same zero-allocation path as the rest of the typed core.
 struct Relay {
     remaining: u64,
 }
 
 impl World for Relay {
     fn dispatch(&mut self, sim: &mut Sim, ev: Event) {
-        if let Event::Advance { site, slot } = ev {
-            if self.remaining > 0 {
-                self.remaining -= 1;
-                sim.schedule(sim.now() + NS, Event::Advance { site, slot });
-            }
+        let next = match ev {
+            Event::Advance { site, slot } => Event::RegionDone { site, region: slot, slot },
+            Event::RegionDone { site, slot, .. } => Event::RegionSwapDone { site, region: slot },
+            Event::RegionSwapDone { site, region } => Event::Advance { site, slot: region },
+            _ => return,
+        };
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            sim.schedule(sim.now() + NS, next);
         }
     }
 }
