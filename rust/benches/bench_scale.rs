@@ -2,20 +2,31 @@
 //! sharded cross-hub fetch, reported with wall-clock *and* engine
 //! throughput (events/s, sim-time/wall-time). `-- --json BENCH_scale.json`
 //! persists the numbers for the cross-PR perf trajectory.
+//!
+//! ISSUE 6 additions: every hub count also runs on the conservative
+//! parallel engine (`Fabric::run_parallel`) with the worker count from
+//! `-- --threads N` (default: all cores). The parallel runs execute the
+//! *same* schedule and must reproduce the *same* `trace_hash()` and event
+//! count as the sequential reference — asserted before anything is
+//! reported, so a determinism break fails the bench run outright. The
+//! speedup section prints sequential-vs-parallel wall time per hub count;
+//! see `benches/README.md` for the measurement methodology.
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::time::Instant;
 
 use fpgahub::apps::allreduce::{HierConfig, HierarchicalAllreduce};
 use fpgahub::apps::{run_sharded_fetch, ShardedFetchConfig};
-use fpgahub::bench_harness::{banner, bench_sim, SimMetrics};
+use fpgahub::bench_harness::{banner, bench_sim, bench_sim_t, SimMetrics};
 use fpgahub::metrics::Hist;
-use fpgahub::runtime_hub::{Fabric, QosSpec};
+use fpgahub::runtime_hub::{Fabric, HubId, QosSpec, RunStats, TransferDesc};
 use fpgahub::sim::time::to_us;
 use fpgahub::sim::US;
 
-/// One measured fabric run: R hierarchical rounds at the given scale.
-fn allreduce_rounds(hubs: usize, rounds: u64) -> (SimMetrics, f64) {
+/// One measured fabric run: R hierarchical rounds at the given scale,
+/// drained sequentially (`threads: None`) or on the parallel engine.
+fn allreduce_rounds(hubs: usize, rounds: u64, threads: Option<usize>) -> (Fabric, RunStats, f64) {
     let mut fab = Fabric::new(hubs);
     let app = HierarchicalAllreduce::new(
         &mut fab,
@@ -38,24 +49,105 @@ fn allreduce_rounds(hubs: usize, rounds: u64) -> (SimMetrics, f64) {
             h.borrow_mut().record(to_us(worst - t0));
         });
     }
-    let stats = fab.run();
+    let stats = match threads {
+        None => fab.run(),
+        Some(t) => fab.run_parallel(t),
+    };
     let mean = hist.borrow_mut().mean();
-    (SimMetrics { events: stats.events, sim_ps: stats.sim_elapsed }, mean)
+    (fab, stats, mean)
+}
+
+/// Worker threads for the parallel cases: `-- --threads N`, defaulting to
+/// the machine's available parallelism.
+fn cli_threads() -> usize {
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == "--threads" {
+            if let Some(n) = args.next().and_then(|v| v.parse::<usize>().ok()) {
+                return n.max(1);
+            }
+        }
+    }
+    std::thread::available_parallelism().map_or(1, |n| n.get())
 }
 
 fn main() {
+    let threads = cli_threads();
+
     banner("fabric scale-out: hierarchical allreduce round times");
     for hubs in [1usize, 2, 4, 8] {
-        let (_, mean) = allreduce_rounds(hubs, 40);
+        let (_, _, mean) = allreduce_rounds(hubs, 40, None);
         println!("{hubs:>2} hubs ({:>3} workers): {mean:.2}µs/round", hubs * 8);
     }
 
-    banner("fabric scale-out: engine throughput per hub count");
+    // Correctness gate + speedup report: the parallel engine must produce a
+    // bit-identical canonical trace before any number is published.
+    banner(&format!("sequential vs parallel ({threads} threads): same schedule, same trace"));
+    let mut seq_hashes = Vec::new();
+    for hubs in [1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        let (seq_fab, seq_stats, _) = allreduce_rounds(hubs, 40, None);
+        let seq_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = Instant::now();
+        let (par_fab, par_stats, _) = allreduce_rounds(hubs, 40, Some(threads));
+        let par_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let (sh, ph) = (seq_fab.trace_hash(), par_fab.trace_hash());
+        assert_eq!(
+            ph, sh,
+            "{hubs} hubs: parallel trace hash {ph:#018x} diverged from sequential {sh:#018x}"
+        );
+        assert_eq!(
+            par_stats.events, seq_stats.events,
+            "{hubs} hubs: parallel event count diverged from sequential"
+        );
+        let speedup = if par_ms > 0.0 { seq_ms / par_ms } else { 0.0 };
+        println!(
+            "{hubs:>2} hubs: seq {seq_ms:>8.2}ms  par {par_ms:>8.2}ms  \
+             speedup {speedup:>5.2}x  hash {sh:#018x}"
+        );
+        seq_hashes.push((hubs, sh));
+    }
+
+    banner("fabric scale-out: engine throughput per hub count (sequential)");
     for hubs in [1usize, 2, 4, 8] {
         bench_sim(&format!("scale/allreduce_{hubs}hubs"), 2, 10, || {
-            allreduce_rounds(hubs, 40).0
+            allreduce_rounds(hubs, 40, None).1.into()
         });
     }
+
+    banner(&format!("fabric scale-out: engine throughput per hub count ({threads} threads)"));
+    for &(hubs, seq_hash) in &seq_hashes {
+        bench_sim_t(&format!("scale/allreduce_{hubs}hubs_par"), threads, 2, 10, move || {
+            let (fab, stats, _) = allreduce_rounds(hubs, 40, Some(threads));
+            assert_eq!(fab.trace_hash(), seq_hash, "{hubs} hubs: parallel trace diverged mid-bench");
+            stats.into()
+        });
+    }
+
+    banner("parallel engine overheads: empty fabric and single-hub solo path");
+    // Empty-window fast path: draining an empty fabric must not rendezvous
+    // at all — this measures pure engine setup/teardown.
+    bench_sim_t("scale/parallel_empty_fabric", threads, 2, 10, move || {
+        let mut fab = Fabric::new(4);
+        let stats = fab.run_parallel(threads);
+        assert_eq!(stats.events, 0, "an empty fabric executed events");
+        SimMetrics { events: 0, sim_ps: 0 }
+    });
+    // Single-hub, zero cross-hub traffic: the solo fast path runs the whole
+    // schedule inline on the coordinator. Compare against the sequential
+    // twin recorded just above it to see the residual overhead.
+    bench_sim("scale/single_hub_local", 2, 10, || {
+        let (mut fab, subs) = single_hub_chains();
+        let stats = fab.run();
+        assert_eq!(stats.events as usize % subs, 0);
+        stats.into()
+    });
+    bench_sim_t("scale/single_hub_local_par", threads, 2, 10, move || {
+        let (mut fab, subs) = single_hub_chains();
+        let stats = fab.run_parallel(threads);
+        assert_eq!(stats.events as usize % subs, 0);
+        stats.into()
+    });
 
     banner("sharded fetch: 4 hubs, partitioned SSD arrays");
     bench_sim("scale/sharded_fetch_4hubs", 2, 10, || {
@@ -70,4 +162,20 @@ fn main() {
     });
 
     fpgahub::bench_harness::finish().expect("bench json");
+}
+
+/// 64 local delay chains on a lone hub — every event is site-local, so the
+/// parallel engine's solo fast path covers the entire run.
+fn single_hub_chains() -> (Fabric, usize) {
+    const CHAINS: u64 = 64;
+    const STAGES: usize = 100;
+    let mut fab = Fabric::new(1);
+    for c in 0..CHAINS {
+        let mut desc = TransferDesc::with_label(c);
+        for _ in 0..STAGES {
+            desc = desc.delay(US);
+        }
+        fab.submit(HubId(0), c * US, desc, |_, _| {});
+    }
+    (fab, CHAINS as usize)
 }

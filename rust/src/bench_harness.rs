@@ -162,6 +162,29 @@ pub fn bench_sim<F: FnMut() -> SimMetrics>(
     name: &str,
     warmup: usize,
     iters: usize,
+    f: F,
+) -> SimBenchResult {
+    bench_sim_inner(name, None, warmup, iters, f)
+}
+
+/// Like [`bench_sim`], tagging the JSON entry with the worker-thread count
+/// the case ran at (`"threads":N`), so parallel-engine sweeps stay
+/// machine-comparable across `--threads` invocations (ISSUE 6).
+pub fn bench_sim_t<F: FnMut() -> SimMetrics>(
+    name: &str,
+    threads: usize,
+    warmup: usize,
+    iters: usize,
+    f: F,
+) -> SimBenchResult {
+    bench_sim_inner(name, Some(threads), warmup, iters, f)
+}
+
+fn bench_sim_inner<F: FnMut() -> SimMetrics>(
+    name: &str,
+    threads: Option<usize>,
+    warmup: usize,
+    iters: usize,
     mut f: F,
 ) -> SimBenchResult {
     for _ in 0..warmup {
@@ -200,7 +223,14 @@ pub fn bench_sim<F: FnMut() -> SimMetrics>(
         totals.sim_s += sim_total;
     }
     r.print();
-    record_json(r.json());
+    let entry = match threads {
+        Some(t) => {
+            let j = r.json();
+            format!("{},\"threads\":{t}}}", &j[..j.len() - 1])
+        }
+        None => r.json(),
+    };
+    record_json(entry);
     r
 }
 
@@ -327,6 +357,18 @@ mod tests {
     #[test]
     fn finish_without_json_flag_is_a_noop() {
         finish().unwrap();
+    }
+
+    #[test]
+    fn bench_sim_t_tags_the_recorded_entry_with_threads() {
+        bench_sim_t("sim-threads-tag", 3, 0, 2, || SimMetrics { events: 5, sim_ps: US });
+        let entries = JSON_RESULTS.lock().unwrap_or_else(|e| e.into_inner());
+        let tagged = entries
+            .iter()
+            .find(|e| e.contains("\"name\":\"sim-threads-tag\""))
+            .expect("bench_sim_t recorded an entry");
+        assert!(tagged.contains("\"threads\":3"), "{tagged}");
+        assert!(tagged.starts_with('{') && tagged.ends_with('}'), "{tagged}");
     }
 
     #[test]

@@ -29,6 +29,12 @@ pub struct PlatformConfig {
     /// multi-hub scale-out plane (`[fabric]`): hub count, inter-hub link
     /// rate, per-hop latency; `fabric.policies` mirrors `arb`
     pub fabric: FabricConfig,
+    /// drain fabric runs on the conservative parallel engine
+    /// (`[fabric] parallel`, ISSUE 6); bit-identical to sequential
+    pub fabric_parallel: bool,
+    /// worker threads for the parallel engine (`[fabric] threads`);
+    /// 0 = all available cores
+    pub fabric_threads: usize,
     /// reconfigurable operator plane (`[reconfig]`): region count, swap
     /// (bitstream-load) latency, operator streaming rates; `policy`
     /// selects the placement scheduler (`arb.regions`)
@@ -48,6 +54,8 @@ impl Default for PlatformConfig {
             eth_gbps: constants::ETH_GBPS,
             arb: ResourcePolicies::default(),
             fabric: FabricConfig { hubs: 8, ..Default::default() },
+            fabric_parallel: false,
+            fabric_threads: 0,
             reconfig: ReconfigConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             results_dir: PathBuf::from("results"),
@@ -111,6 +119,9 @@ impl PlatformConfig {
             eth_gbps: doc.f64_or("net", "gbps", d.eth_gbps),
             arb,
             fabric,
+            fabric_parallel: doc.bool_or("fabric", "parallel", d.fabric_parallel),
+            fabric_threads: doc.i64_or("fabric", "threads", d.fabric_threads as i64).max(0)
+                as usize,
             reconfig,
             artifacts_dir: PathBuf::from(doc.str_or("", "artifacts_dir", "artifacts")),
             results_dir: PathBuf::from(doc.str_or("", "results_dir", "results")),
@@ -234,6 +245,18 @@ mod tests {
         assert_eq!(p.arb.fabric, ArbPolicy::WeightedFair);
         assert_eq!(p.arb.links, ArbPolicy::Fcfs, "per-kind override only");
         assert_eq!(p.fabric.policies, p.arb, "fabric carries the arb policies");
+    }
+
+    #[test]
+    fn parallel_engine_knobs() {
+        let p = PlatformConfig::default();
+        assert!(!p.fabric_parallel, "sequential engine is the default");
+        assert_eq!(p.fabric_threads, 0, "0 = all cores");
+
+        let doc = TomlDoc::parse("[fabric]\nparallel = true\nthreads = 4\n").unwrap();
+        let p = PlatformConfig::from_doc(&doc).unwrap();
+        assert!(p.fabric_parallel);
+        assert_eq!(p.fabric_threads, 4);
     }
 
     #[test]

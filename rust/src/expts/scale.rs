@@ -72,7 +72,11 @@ fn run_rounds(
         }));
     }
     let wall = Instant::now();
-    let stats = fab.run();
+    let stats = if cfg.platform.fabric_parallel {
+        fab.run_parallel(cfg.platform.fabric_threads)
+    } else {
+        fab.run()
+    };
     let wall_s = wall.elapsed().as_secs_f64().max(1e-9);
     // every round complete and numerically exact, at every scale
     for (r, handle) in handles.iter().enumerate() {
@@ -183,6 +187,24 @@ mod tests {
         let w1: usize = t.rows[0][1].parse().unwrap();
         let w4: usize = t.rows[2][1].parse().unwrap();
         assert_eq!(w4, 4 * w1);
+    }
+
+    #[test]
+    fn parallel_engine_reproduces_the_sequential_table() {
+        let cfg = ExperimentConfig::quick();
+        let mut pcfg = cfg.clone();
+        pcfg.platform.fabric_parallel = true;
+        pcfg.platform.fabric_threads = 2;
+        let seq = measure(&cfg, 2, 10);
+        let par = measure(&pcfg, 2, 10);
+        assert_eq!(seq.events, par.events, "engines executed different event counts");
+        assert!(
+            (seq.round_mean_us - par.round_mean_us).abs() < 1e-6,
+            "round times diverged: seq {} vs par {}",
+            seq.round_mean_us,
+            par.round_mean_us
+        );
+        assert!((seq.fabric_mb - par.fabric_mb).abs() < 1e-9, "interconnect traffic diverged");
     }
 
     #[test]

@@ -12,9 +12,13 @@
 //!                                      fetch vs latency-sensitive
 //!                                      collective under every arbitration
 //!                                      policy, with per-tenant reports
-//!   fpgahub scale [--hubs N]           hierarchical allreduce across a
+//!   fpgahub scale [--hubs N] [--threads T]
+//!                                      hierarchical allreduce across a
 //!                                      fabric of 1/2/4/…/N hubs: round
-//!                                      times, flat-hub baseline, events/s
+//!                                      times, flat-hub baseline, events/s;
+//!                                      --threads drains on the conservative
+//!                                      parallel engine (bit-identical
+//!                                      trace; 0 = all cores)
 //!   fpgahub reconfig                   reconfigurable operator plane:
 //!                                      swap latency × region count vs
 //!                                      miss penalty, plus the fabric
@@ -34,7 +38,7 @@ fn usage() -> ! {
         "usage: fpgahub <list|expt NAME|all|train|fetch-demo|multi-tenant|qos|scale|reconfig|\
          info> [options]\n\
          options: --config FILE --samples N --steps N --workers N --requests N\n\
-         \x20        --hubs N --arb fcfs|priority|wfq --no-csv"
+         \x20        --hubs N --threads N --arb fcfs|priority|wfq --no-csv"
     );
     std::process::exit(2);
 }
@@ -48,6 +52,7 @@ struct Args {
     workers: Option<usize>,
     requests: Option<u64>,
     hubs: Option<usize>,
+    threads: Option<usize>,
     arb: Option<ArbPolicy>,
     no_csv: bool,
 }
@@ -64,6 +69,7 @@ fn parse_args() -> Args {
         workers: None,
         requests: None,
         hubs: None,
+        threads: None,
         arb: None,
         no_csv: false,
     };
@@ -84,6 +90,7 @@ fn parse_args() -> Args {
             "--workers" => a.workers = need("--workers").parse().ok(),
             "--requests" => a.requests = need("--requests").parse().ok(),
             "--hubs" => a.hubs = need("--hubs").parse().ok(),
+            "--threads" => a.threads = need("--threads").parse().ok(),
             "--arb" => {
                 let s = need("--arb");
                 match ArbPolicy::parse(&s) {
@@ -122,6 +129,11 @@ fn load_cfg(a: &Args) -> anyhow::Result<ExperimentConfig> {
     }
     if let Some(h) = a.hubs {
         cfg.platform.fabric.hubs = h.max(1);
+    }
+    if let Some(t) = a.threads {
+        // --threads opts into the parallel engine; 0 = all cores
+        cfg.platform.fabric_parallel = true;
+        cfg.platform.fabric_threads = t;
     }
     if a.no_csv {
         cfg.csv = false;

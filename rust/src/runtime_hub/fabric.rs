@@ -415,6 +415,26 @@ impl Fabric {
         self.sim.run_until_world(deadline, &mut world)
     }
 
+    /// Drain the event queue on the conservative parallel engine
+    /// (ISSUE 6): one shard per site — the hubs plus the interconnect —
+    /// each with its own event loop on a worker thread, synchronized at
+    /// lookahead windows derived from the sites' event frontiers. Cross-
+    /// shard completions merge in canonical order, so the result —
+    /// completion traces, trace hash, tenant reports, event count — is
+    /// bit-identical to [`Fabric::run`] at every thread count
+    /// (`tests/determinism.rs` pins this against the golden hashes).
+    /// `threads == 0` uses the machine's available parallelism.
+    pub fn run_parallel(&mut self, threads: usize) -> RunStats {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        } else {
+            threads
+        };
+        let mut sites = self.hubs.clone();
+        sites.push(self.net.clone());
+        super::parallel::run_sites_parallel(&mut self.sim, &sites, threads)
+    }
+
     pub fn now(&self) -> Ps {
         self.sim.now()
     }

@@ -38,6 +38,7 @@
 //! are unchanged.
 
 pub mod fabric;
+mod parallel;
 pub mod reconfig;
 pub mod sched;
 

@@ -1,0 +1,519 @@
+//! Conservative parallel execution of a multi-site fabric (ISSUE 6).
+//!
+//! Each site of a [`Fabric`](super::Fabric) — the N hubs plus the
+//! interconnect (shard index N) — becomes a *shard*: its own
+//! [`CalendarQueue`](crate::sim::calendar::CalendarQueue) and clock inside
+//! a private [`Sim`], driven by a worker on an OS thread. The scheme is
+//! conservative (no rollback), so it must only run an event when no other
+//! shard can still inject an earlier one. The key structural facts that
+//! make that bound cheap:
+//!
+//! * **Shard-local events are closed.** Every engine-native event that is
+//!   *not* the final stage transition of a descriptor (`Advance` with
+//!   stages left, `GrantNext`, NVMe doorbells, region swap/release,
+//!   barrier arrivals) touches only its own site's resource tables and
+//!   schedules follow-ups only on its own site. Workers execute these
+//!   freely inside their window.
+//! * **Cross-shard effects happen only at completions.** The only code
+//!   that can put an event on *another* shard is a descriptor's
+//!   completion action — an app callback or a route's next hop — and the
+//!   closure escape hatch. These *boundary* events are recognizable
+//!   before execution (the continuation's stage iterator is empty), so a
+//!   worker stashes one and pauses instead of running it.
+//! * **Injections flow hub ↔ interconnect.** A hub completion submits the
+//!   next leg on the interconnect (or locally); an interconnect completion
+//!   submits on a hub. The earliest *future* injection into a hub is
+//!   therefore bounded below by the interconnect's next-event time, and
+//!   vice versa — a bipartite lookahead bound that needs no per-link
+//!   channel bookkeeping. (An interconnect→hub leg additionally pays the
+//!   wire + `hop_ns`, which is where the classic lookahead window lives;
+//!   the bound here is tighter because it reads the actual frontier.)
+//!
+//! A coordinator (the calling thread) alternates two phases. In a *window*
+//! it publishes per-shard inclusive bounds — `min(control head, opposite
+//! side's frontier)` — and the workers drain their queues up to the bound,
+//! pausing at boundary events. At a *boundary batch* (no shard can move)
+//! it executes everything at the globally minimal timestamp in canonical
+//! order — sites swept in index order, each drained FIFO, boxed closures
+//! last in schedule order — against a staging `Sim`, then routes the
+//! events that execution produced to their target shards. Per-shard FIFO
+//! order is exactly the sequential order, injections land behind existing
+//! same-time events exactly as a shared queue would place them, and every
+//! routed event is checked against the target shard's clock — a schedule
+//! that injects into a shard's past (zero-lookahead hub→hub traffic) is a
+//! hard error, not a silent reorder. `tests/determinism.rs` pins the
+//! result: the committed golden trace hashes must be bit-identical to the
+//! sequential engine at every thread count.
+//!
+//! When only one shard has pending work and the control lane is empty —
+//! a single-hub fabric, or the serial head/tail of a multi-hub run — the
+//! coordinator runs that shard inline with no worker handoffs at all
+//! (the empty-window fast path: no cross-hub traffic, no rendezvous).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::thread;
+
+use crate::sim::time::Ps;
+use crate::sim::{Action, Event, Sim};
+
+use super::{advance, grant_next, on_nvme_complete, HubState, RunStats};
+
+const UNBOUNDED: Ps = Ps::MAX;
+
+/// One site's share of the split event queue: its state cell, a private
+/// engine holding its pending events and clock, and the boundary event its
+/// worker paused on (at most one).
+struct Shard {
+    cell: Rc<RefCell<HubState>>,
+    sim: Sim,
+    stash: Option<(Ps, Event)>,
+}
+
+impl Shard {
+    /// Earliest time this shard could next execute — or inject, since
+    /// injections come only from boundary events, which pause the shard.
+    fn frontier(&mut self) -> Ps {
+        match &self.stash {
+            Some((t, _)) => *t,
+            None => self.sim.peek_pending_time().unwrap_or(UNBOUNDED),
+        }
+    }
+}
+
+/// Would executing `ev` run a completion action (or a boxed closure) —
+/// i.e. possibly touch another shard? Decidable before execution: the
+/// continuation's stage iterator is empty exactly when the next `advance`
+/// runs its `DoneAction`.
+fn is_boundary(st: &HubState, ev: &Event) -> bool {
+    let completes = |slot: u32| match st.conts.get(slot) {
+        Some(c) => c.stages.as_slice().is_empty(),
+        None => true,
+    };
+    match *ev {
+        Event::Advance { slot, .. } => completes(slot),
+        Event::NvmeComplete { slot, .. } => completes(slot),
+        Event::RegionDone { slot, .. } => completes(slot),
+        Event::GrantNext { .. } | Event::RegionSwapDone { .. } => false,
+        // closures never reach shard queues (routing sends them to the
+        // control lane), but classify defensively
+        Event::Closure(_) => true,
+    }
+}
+
+/// Execute one event against `cell` — the per-shard mirror of
+/// `HubWorld::dispatch`, minus the site lookup.
+fn dispatch_on(cell: &Rc<RefCell<HubState>>, sim: &mut Sim, ev: Event) {
+    debug_assert!(
+        ev.site().map(|s| s == cell.borrow().site).unwrap_or(true),
+        "event routed to wrong shard"
+    );
+    match ev {
+        Event::Advance { slot, .. } => advance(cell, sim, slot),
+        Event::GrantNext { res, .. } => grant_next(cell, sim, res),
+        Event::NvmeComplete { q, slot, .. } => {
+            on_nvme_complete(cell, sim, q as usize);
+            advance(cell, sim, slot);
+        }
+        Event::RegionSwapDone { region, .. } => {
+            cell.borrow_mut().regions.commit_swap(region as usize);
+        }
+        Event::RegionDone { region, slot, .. } => {
+            cell.borrow_mut().regions.release(region as usize);
+            advance(cell, sim, slot);
+        }
+        Event::Closure(act) => act(sim),
+    }
+}
+
+/// Drain one shard inside its window: execute local events with times
+/// `<= bound`, pausing on the first boundary event. Runs on workers —
+/// the local paths never clone or drop an `Rc` and never call app code,
+/// so no shared refcount is touched off the coordinator thread.
+fn run_shard(shard: &mut Shard, bound: Ps) {
+    if shard.stash.is_some() {
+        return;
+    }
+    while let Some((t, ev)) = shard.sim.pop_pending_up_to(bound) {
+        if is_boundary(&shard.cell.borrow(), &ev) {
+            shard.stash = Some((t, ev));
+            return;
+        }
+        shard.sim.note_fired(t);
+        let Shard { cell, sim, .. } = shard;
+        dispatch_on(cell, sim, ev);
+    }
+}
+
+/// The boxed-closure lane: `Sim::at` events keyed by (time, schedule
+/// sequence) so they fire in exact schedule order, after same-time typed
+/// work — matching a shared queue, where a callback's closure is always
+/// inserted behind the typed events already pending at that time.
+type ControlLane = BTreeMap<(Ps, u64), Action>;
+
+/// Hand a freshly produced event to its owner: typed events to their
+/// site's shard (behind anything already queued there at the same time —
+/// the shared-queue FIFO position), closures to the control lane.
+fn route_event(t: Ps, ev: Event, shards: &mut [Shard], control: &mut ControlLane, seq: &mut u64) {
+    match ev {
+        Event::Closure(act) => {
+            control.insert((t, *seq), act);
+            *seq += 1;
+        }
+        ev => {
+            let site = ev.site().expect("typed events carry a site") as usize;
+            let shard = &mut shards[site];
+            assert!(
+                t >= shard.sim.now(),
+                "parallel engine: cross-shard event for site {site} at {t} ps is behind that \
+                 shard's clock ({} ps) — the schedule has zero-lookahead cross-hub injection \
+                 the conservative engine cannot order; run this workload sequentially",
+                shard.sim.now()
+            );
+            shard.sim.schedule(t, ev);
+        }
+    }
+}
+
+/// Execute one boundary event at `t` on the coordinator: dispatch against
+/// the staging engine (so completion actions schedule into it), then route
+/// everything that execution produced. Only the coordinator runs this —
+/// workers are parked, so app callbacks may clone/drop `Rc` handles and
+/// borrow any site's cell freely.
+fn exec_boundary(
+    staging: &mut Sim,
+    shards: &mut [Shard],
+    site: usize,
+    t: Ps,
+    ev: Event,
+    control: &mut ControlLane,
+    seq: &mut u64,
+) {
+    staging.note_fired(t);
+    shards[site].sim.force_now(t);
+    dispatch_on(&shards[site].cell, staging, ev);
+    while let Some((t2, ev2)) = staging.pop_pending_up_to(UNBOUNDED) {
+        route_event(t2, ev2, shards, control, seq);
+    }
+}
+
+/// Execute everything stamped exactly `t_min`, in canonical merge order:
+/// sweep sites in index order draining each site's stash/queue FIFO (local
+/// events run locally, boundary events through the staging engine), then
+/// the control lane in schedule order; repeat until the timestamp is dry
+/// (boundary work can inject more same-time work).
+fn run_batch(
+    staging: &mut Sim,
+    shards: &mut [Shard],
+    control: &mut ControlLane,
+    seq: &mut u64,
+    t_min: Ps,
+) {
+    loop {
+        let mut progressed = false;
+        for site in 0..shards.len() {
+            loop {
+                let stashed = matches!(&shards[site].stash, Some((t, _)) if *t <= t_min);
+                let (t, ev) = if stashed {
+                    shards[site].stash.take().expect("matched above")
+                } else {
+                    match shards[site].sim.pop_pending_up_to(t_min) {
+                        Some(item) => item,
+                        None => break,
+                    }
+                };
+                progressed = true;
+                if is_boundary(&shards[site].cell.borrow(), &ev) {
+                    exec_boundary(staging, shards, site, t, ev, control, seq);
+                } else {
+                    let Shard { cell, sim, .. } = &mut shards[site];
+                    sim.note_fired(t);
+                    dispatch_on(cell, sim, ev);
+                }
+            }
+        }
+        loop {
+            let head = match control.first_key_value() {
+                Some((&(t, s), _)) if t <= t_min => (t, s),
+                _ => break,
+            };
+            let act = control.remove(&head).expect("first key exists");
+            staging.note_fired(head.0);
+            act(staging);
+            while let Some((t2, ev2)) = staging.pop_pending_up_to(UNBOUNDED) {
+                route_event(t2, ev2, shards, control, seq);
+            }
+            progressed = true;
+        }
+        if !progressed {
+            return;
+        }
+    }
+}
+
+/// Empty-window fast path: exactly one shard holds events and the control
+/// lane is idle — no cross-hub traffic is possible, so skip the worker
+/// rendezvous entirely and run that shard inline (full sequential
+/// semantics, boundary events included). Returns when the run is done or
+/// another lane wakes up (an injection left the shard).
+fn run_solo(
+    staging: &mut Sim,
+    shards: &mut [Shard],
+    site: usize,
+    control: &mut ControlLane,
+    seq: &mut u64,
+) {
+    loop {
+        let (t, ev) = match shards[site].stash.take() {
+            Some(item) => item,
+            None => match shards[site].sim.pop_pending_up_to(UNBOUNDED) {
+                Some(item) => item,
+                None => return,
+            },
+        };
+        if is_boundary(&shards[site].cell.borrow(), &ev) {
+            exec_boundary(staging, shards, site, t, ev, control, seq);
+            let spilled = !control.is_empty()
+                || shards
+                    .iter_mut()
+                    .enumerate()
+                    .any(|(i, s)| i != site && s.sim.peek_pending_time().is_some());
+            if spilled {
+                return;
+            }
+        } else {
+            let Shard { cell, sim, .. } = &mut shards[site];
+            sim.note_fired(t);
+            dispatch_on(cell, sim, ev);
+        }
+    }
+}
+
+/// Coordinator↔worker handshake: the coordinator publishes per-shard
+/// bounds and bumps `round`; workers drain their shards and ack. All
+/// shard access is exchanged through the round/ack pair (release on
+/// publish, acquire on observe), so the raw shard pointer below is data-
+/// race-free even though `Shard` is full of `!Send` types.
+struct SyncState {
+    round: AtomicU64,
+    done: AtomicBool,
+    panicked: AtomicBool,
+    bounds: Vec<AtomicU64>,
+    acks: Vec<AtomicU64>,
+}
+
+impl SyncState {
+    fn new(n_workers: usize, n_sites: usize) -> Self {
+        SyncState {
+            round: AtomicU64::new(0),
+            done: AtomicBool::new(false),
+            panicked: AtomicBool::new(false),
+            bounds: (0..n_sites).map(|_| AtomicU64::new(0)).collect(),
+            acks: (0..n_workers).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+/// Shard array shared with workers. Safety: workers touch only shard
+/// indices congruent to their id, and only between observing a round
+/// publish and storing their ack; the coordinator touches shards only
+/// while every ack matches the current round. The `Rc`s inside are never
+/// cloned or dropped on a worker (`run_shard`'s local paths don't, and
+/// completion actions run only on the coordinator).
+struct ShardsPtr(*mut Shard);
+unsafe impl Send for ShardsPtr {}
+unsafe impl Sync for ShardsPtr {}
+
+fn worker_loop(shards: &ShardsPtr, sync: &SyncState, w: usize, n_workers: usize, n_sites: usize) {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let mut seen = 0u64;
+        loop {
+            let mut spins = 0u32;
+            let round = loop {
+                let r = sync.round.load(Ordering::Acquire);
+                if r != seen {
+                    break r;
+                }
+                spins += 1;
+                if spins < 64 {
+                    std::hint::spin_loop();
+                } else if spins < 4096 {
+                    thread::yield_now();
+                } else {
+                    thread::park();
+                }
+            };
+            seen = round;
+            if sync.done.load(Ordering::Acquire) {
+                return;
+            }
+            let mut site = w;
+            while site < n_sites {
+                let bound = sync.bounds[site].load(Ordering::Relaxed);
+                run_shard(unsafe { &mut *shards.0.add(site) }, bound);
+                site += n_workers;
+            }
+            sync.acks[w].store(round, Ordering::Release);
+        }
+    }));
+    if result.is_err() {
+        sync.panicked.store(true, Ordering::Release);
+        // ack whatever round is current so the coordinator's wait ends
+        sync.acks[w].store(sync.round.load(Ordering::Relaxed), Ordering::Release);
+    }
+}
+
+fn wait_acks(sync: &SyncState, round: u64) {
+    for ack in &sync.acks {
+        let mut spins = 0u32;
+        while ack.load(Ordering::Acquire) != round {
+            assert!(!sync.panicked.load(Ordering::Acquire), "parallel shard worker panicked");
+            spins += 1;
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                thread::yield_now();
+            }
+        }
+    }
+}
+
+/// The coordinator: alternate windows (workers drain under bounds) and
+/// boundary batches (canonical cross-shard merge) until every lane is dry.
+fn coordinate(
+    staging: &mut Sim,
+    shards: &mut [Shard],
+    control: &mut ControlLane,
+    seq: &mut u64,
+    sync: &SyncState,
+    workers: &[thread::Thread],
+) {
+    let n_sites = shards.len();
+    let net = n_sites - 1;
+    let mut round = 0u64;
+    loop {
+        // exclusive phase: all acks observed, shards are ours
+        let frontiers: Vec<Ps> = shards.iter_mut().map(Shard::frontier).collect();
+        let c_head = control.keys().next().map_or(UNBOUNDED, |&(t, _)| t);
+
+        let mut active = (0..n_sites).filter(|&i| frontiers[i] != UNBOUNDED);
+        if let (Some(site), None, UNBOUNDED) = (active.next(), active.next(), c_head) {
+            run_solo(staging, shards, site, control, seq);
+            continue;
+        }
+
+        // bipartite inclusive bounds: a hub is safe through the
+        // interconnect's frontier, the interconnect through the hubs'
+        // minimum — injections originate only from the opposite side's
+        // boundary events (>= its frontier) or the control lane
+        let hub_min = frontiers[..net].iter().copied().min().unwrap_or(UNBOUNDED);
+        let mut any_runnable = false;
+        for site in 0..n_sites {
+            let opposite = if site == net { hub_min } else { frontiers[net] };
+            let bound = c_head.min(opposite);
+            sync.bounds[site].store(bound, Ordering::Relaxed);
+            let f = frontiers[site];
+            if shards[site].stash.is_none() && f != UNBOUNDED && f <= bound {
+                any_runnable = true;
+            }
+        }
+
+        if any_runnable {
+            round += 1;
+            sync.round.store(round, Ordering::Release);
+            for w in workers {
+                w.unpark();
+            }
+            wait_acks(sync, round);
+            continue;
+        }
+
+        // no window can open: the global minimum is boundary work
+        let t_min = shards
+            .iter()
+            .filter_map(|s| s.stash.as_ref().map(|&(t, _)| t))
+            .fold(c_head, Ps::min);
+        if t_min == UNBOUNDED {
+            debug_assert!(shards.iter_mut().all(|s| s.frontier() == UNBOUNDED));
+            return;
+        }
+        run_batch(staging, shards, control, seq, t_min);
+    }
+}
+
+/// Run the shared queue to exhaustion on the conservative parallel engine:
+/// split it into per-site shards plus the control lane, drive the shards
+/// from `threads` workers, and merge clocks/counters back into `sim`.
+/// Bit-identical to draining `sim` against a `HubWorld` over `cells`.
+pub(crate) fn run_sites_parallel(
+    sim: &mut Sim,
+    cells: &[Rc<RefCell<HubState>>],
+    threads: usize,
+) -> RunStats {
+    let n_sites = cells.len();
+    let n_workers = threads.clamp(1, n_sites);
+    let now0 = sim.now();
+    let events0 = sim.events_processed();
+
+    let mut shards: Vec<Shard> = cells
+        .iter()
+        .map(|cell| {
+            let mut shard_sim = Sim::new();
+            shard_sim.force_now(now0);
+            Shard { cell: cell.clone(), sim: shard_sim, stash: None }
+        })
+        .collect();
+    let mut control: ControlLane = BTreeMap::new();
+    let mut seq = 0u64;
+    while let Some((t, ev)) = sim.pop_pending_up_to(UNBOUNDED) {
+        route_event(t, ev, &mut shards, &mut control, &mut seq);
+    }
+
+    let sync = SyncState::new(n_workers, n_sites);
+    let shards_ptr = ShardsPtr(shards.as_mut_ptr());
+    {
+        // reborrow through the raw pointer inside the scope so coordinator
+        // and workers hold the same provenance, handed off by the handshake
+        let shards = unsafe { std::slice::from_raw_parts_mut(shards_ptr.0, n_sites) };
+        thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_workers)
+                .map(|w| {
+                    let (ptr, sync) = (&shards_ptr, &sync);
+                    scope.spawn(move || worker_loop(ptr, sync, w, n_workers, n_sites))
+                })
+                .collect();
+            let workers: Vec<thread::Thread> =
+                handles.iter().map(|h| h.thread().clone()).collect();
+
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                coordinate(sim, shards, &mut control, &mut seq, &sync, &workers);
+            }));
+
+            // shut the workers down whether the run finished or died —
+            // a hanging scope join would mask the real panic
+            sync.done.store(true, Ordering::Release);
+            sync.round.fetch_add(1, Ordering::Release);
+            for w in &workers {
+                w.unpark();
+            }
+            if let Err(payload) = outcome {
+                resume_unwind(payload);
+            }
+        });
+    }
+
+    // merge the split engines back into the shared clock; boundary and
+    // closure events were already counted on `sim` (the staging engine)
+    let shard_events: u64 = shards.iter().map(|s| s.sim.events_processed()).sum();
+    let end = shards.iter().fold(sim.now(), |acc, s| acc.max(s.sim.now()));
+    sim.force_now(end);
+    sim.add_processed(shard_events);
+    RunStats {
+        events: sim.events_processed() - events0,
+        sim_elapsed: end - now0,
+        sim_now: end,
+    }
+}

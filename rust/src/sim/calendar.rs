@@ -160,6 +160,29 @@ impl<T> CalendarQueue<T> {
         Some((self.head_time, ev))
     }
 
+    /// Drain-up-to-horizon: pop the earliest event only if its timestamp is
+    /// `<= bound` (inclusive). The parallel engine's shard workers drain
+    /// their window with this — events beyond the horizon stay staged and
+    /// keep their FIFO position.
+    pub fn pop_up_to(&mut self, bound: Ps) -> Option<(Ps, T)> {
+        if !self.fill_head() || self.head_time > bound {
+            return None;
+        }
+        self.len -= 1;
+        let ev = self.head.pop_front().expect("fill_head staged the head");
+        Some((self.head_time, ev))
+    }
+
+    /// Borrow the earliest event without removing it (stages it internally,
+    /// like [`CalendarQueue::next_time`]; pop order is unaffected).
+    pub fn peek(&mut self) -> Option<(Ps, &T)> {
+        if self.fill_head() {
+            Some((self.head_time, self.head.front().expect("fill_head staged the head")))
+        } else {
+            None
+        }
+    }
+
     /// Wheel/overflow placement for an event not joining the current head.
     fn place(&mut self, t: Ps, ev: T) {
         if t >= self.horizon() {

@@ -163,6 +163,61 @@ impl Sim {
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
+
+    // ------------------------------------------- parallel-engine hooks ----
+    // The conservative parallel engine (`runtime_hub::parallel`, ISSUE 6)
+    // drives one `Sim` per shard plus a staging `Sim` on the coordinator.
+    // It needs raw queue access (pop without firing — classification and
+    // routing happen outside) and explicit clock/counter control. These
+    // stay crate-private: the public contract is still "events fire".
+
+    /// Pop the earliest pending event if its timestamp is `<= bound`,
+    /// *without* advancing the clock or counting it as fired.
+    #[inline]
+    pub(crate) fn pop_pending_up_to(&mut self, bound: Ps) -> Option<(Ps, Event)> {
+        self.queue.pop_up_to(bound)
+    }
+
+    /// Timestamp of the earliest pending event.
+    pub(crate) fn peek_pending_time(&mut self) -> Option<Ps> {
+        self.queue.next_time()
+    }
+
+    /// Mark one event as fired at `at`: advance the clock and count it.
+    /// Pairs with [`Sim::pop_pending_up_to`] on the shard-local fast path.
+    #[inline]
+    pub(crate) fn note_fired(&mut self, at: Ps) {
+        debug_assert!(at >= self.now, "time went backwards");
+        self.now = at;
+        self.processed += 1;
+    }
+
+    /// Advance the clock without firing anything (monotone only).
+    pub(crate) fn force_now(&mut self, at: Ps) {
+        debug_assert!(at >= self.now, "time went backwards");
+        self.now = at;
+    }
+
+    /// Fold another engine's event count into this one (end-of-run
+    /// accounting when shard queues merge back into the fabric clock).
+    pub(crate) fn add_processed(&mut self, n: u64) {
+        self.processed += n;
+    }
+}
+
+impl Event {
+    /// The site a typed event targets (`None` for the closure escape
+    /// hatch, which carries no address).
+    pub(crate) fn site(&self) -> Option<u32> {
+        match *self {
+            Event::Advance { site, .. }
+            | Event::GrantNext { site, .. }
+            | Event::NvmeComplete { site, .. }
+            | Event::RegionSwapDone { site, .. }
+            | Event::RegionDone { site, .. } => Some(site),
+            Event::Closure(_) => None,
+        }
+    }
 }
 
 #[cfg(test)]

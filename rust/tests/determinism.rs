@@ -1,7 +1,7 @@
-//! Golden-trace determinism tests (ISSUE 3).
+//! Golden-trace determinism tests (ISSUE 3, extended by ISSUE 6).
 //!
 //! The fabric is single-threaded on one seeded clock, so an identical
-//! schedule must produce a bit-identical completion trace. Two layers of
+//! schedule must produce a bit-identical completion trace. Three layers of
 //! pinning:
 //!
 //! * **Run-to-run**: two back-to-back runs of the same scenario produce
@@ -14,6 +14,12 @@
 //!   timing, label assignment, or the hash itself fails these tests —
 //!   deliberately: recompute and re-commit the golden value only for an
 //!   *intentional* timing-model change.
+//! * **Engine equivalence** (ISSUE 6): every pinned scenario also runs on
+//!   the conservative parallel engine (`Fabric::run_parallel`) at 1, 2,
+//!   and all-cores worker threads, and must reproduce the *same* golden
+//!   hash, the same canonical trace, the same tenant reports, and the
+//!   same executed-event count as the sequential engine. These tests are
+//!   the parallel engine's correctness oracle.
 
 use fpgahub::apps::allreduce::{HierConfig, HierarchicalAllreduce};
 use fpgahub::apps::storage_fetch::{register_nic_fetch_path_fabric, FETCH_CMD_BYTES};
@@ -21,10 +27,36 @@ use fpgahub::net::packet::HEADER_BYTES;
 use fpgahub::nvme::ssd::SsdArray;
 use fpgahub::runtime_hub::{
     Fabric, FabricConfig, HubId, OperatorKind, OperatorRates, QosSpec, ReconfigConfig,
-    ResourcePolicies, RouteDesc, Site, TenantId, TraceEntry, TransferDesc,
+    ResourcePolicies, RouteDesc, RunStats, Site, TenantId, TraceEntry, TransferDesc,
 };
 use fpgahub::sim::time::US;
 use fpgahub::util::Rng;
+
+/// Which engine drains the event queue.
+#[derive(Clone, Copy, Debug)]
+enum Mode {
+    /// `Fabric::run()` — the single-threaded reference engine.
+    Seq,
+    /// `Fabric::run_parallel(n)` — conservative sharded engine, `n` workers.
+    Par(usize),
+}
+
+fn drain(fab: &mut Fabric, mode: Mode) -> RunStats {
+    match mode {
+        Mode::Seq => fab.run(),
+        Mode::Par(threads) => fab.run_parallel(threads),
+    }
+}
+
+/// Worker-thread counts every parallel check runs at: 1, 2, and all cores
+/// (deduplicated — on a 1-core box this is `[1, 2]`).
+fn thread_counts() -> Vec<usize> {
+    let all = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let mut counts = vec![1, 2, all];
+    counts.sort_unstable();
+    counts.dedup();
+    counts
+}
 
 /// Committed golden `trace_hash()` of [`allreduce_fabric`] at 1 hub.
 const GOLDEN_1HUB: u64 = 0x98a3_7a90_d39f_187d;
@@ -34,7 +66,7 @@ const GOLDEN_4HUB: u64 = 0xd666_b4f0_13c3_d1bd;
 /// The pinned scenario: 2 zero-skew hierarchical rounds (2 workers/hub,
 /// 64 lanes) on a default-policy fabric at 100 Gb/s / 500 ns hops. No
 /// RNG-dependent timing anywhere — the trace is pure integer arithmetic.
-fn allreduce_fabric(hubs: usize) -> Fabric {
+fn allreduce_fabric(hubs: usize, mode: Mode) -> (Fabric, RunStats) {
     let mut fab = Fabric::with_config(FabricConfig {
         hubs,
         gbps: 100.0,
@@ -57,19 +89,19 @@ fn allreduce_fabric(hubs: usize) -> Fabric {
         let chunks = vec![vec![1.0f32; 64]; total];
         let _ = app.schedule_round(&mut fab, r * 500 * US, &chunks, |_, _| {});
     }
-    fab.run();
-    fab
+    let stats = drain(&mut fab, mode);
+    (fab, stats)
 }
 
-fn run_pinned(hubs: usize) -> (u64, Vec<TraceEntry>) {
-    let fab = allreduce_fabric(hubs);
+fn run_pinned(hubs: usize, mode: Mode) -> (u64, Vec<TraceEntry>) {
+    let (fab, _) = allreduce_fabric(hubs, mode);
     (fab.trace_hash(), fab.completion_trace())
 }
 
 #[test]
 fn golden_trace_1hub_pinned_and_repeatable() {
-    let (h1, t1) = run_pinned(1);
-    let (h2, t2) = run_pinned(1);
+    let (h1, t1) = run_pinned(1, Mode::Seq);
+    let (h2, t2) = run_pinned(1, Mode::Seq);
     assert_eq!(t1, t2, "back-to-back runs must produce identical traces");
     assert_eq!(h1, h2);
     // 2 rounds × (2 uplinks + 0 ring + 2 broadcasts)
@@ -79,8 +111,8 @@ fn golden_trace_1hub_pinned_and_repeatable() {
 
 #[test]
 fn golden_trace_4hub_pinned_and_repeatable() {
-    let (h1, t1) = run_pinned(4);
-    let (h2, t2) = run_pinned(4);
+    let (h1, t1) = run_pinned(4, Mode::Seq);
+    let (h2, t2) = run_pinned(4, Mode::Seq);
     assert_eq!(t1, t2, "back-to-back runs must produce identical traces");
     assert_eq!(h1, h2);
     // 2 rounds × (8 uplinks + 4·3 ring messages + 8 broadcasts)
@@ -90,7 +122,69 @@ fn golden_trace_4hub_pinned_and_repeatable() {
 
 #[test]
 fn topology_is_part_of_the_trace() {
-    assert_ne!(run_pinned(1).0, run_pinned(4).0);
+    assert_ne!(run_pinned(1, Mode::Seq).0, run_pinned(4, Mode::Seq).0);
+}
+
+// ------------------------------------- parallel engine oracle (ISSUE 6) ----
+
+/// Run `build` sequentially once, then on the parallel engine at every
+/// thread count; assert the hash, the raw trace, the tenant reports, and
+/// the executed-event count all match the sequential reference (and the
+/// pinned golden hash, when one exists for the scenario).
+fn assert_engine_equivalence(
+    name: &str,
+    golden: Option<u64>,
+    build: impl Fn(Mode) -> (Fabric, RunStats),
+) {
+    let (seq_fab, seq_stats) = build(Mode::Seq);
+    let seq_hash = seq_fab.trace_hash();
+    let seq_trace = seq_fab.completion_trace();
+    let seq_reports = format!("{:?}", seq_fab.tenant_reports());
+    if let Some(g) = golden {
+        assert_eq!(seq_hash, g, "{name}: sequential hash drifted: got {seq_hash:#018x}");
+    }
+    for threads in thread_counts() {
+        let (par_fab, par_stats) = build(Mode::Par(threads));
+        let par_hash = par_fab.trace_hash();
+        assert_eq!(
+            par_hash, seq_hash,
+            "{name}: parallel ({threads} threads) hash {par_hash:#018x} \
+             diverged from sequential {seq_hash:#018x}"
+        );
+        assert_eq!(
+            par_fab.completion_trace(),
+            seq_trace,
+            "{name}: parallel ({threads} threads) trace diverged"
+        );
+        assert_eq!(
+            format!("{:?}", par_fab.tenant_reports()),
+            seq_reports,
+            "{name}: parallel ({threads} threads) tenant reports diverged"
+        );
+        assert_eq!(
+            par_stats.events, seq_stats.events,
+            "{name}: parallel ({threads} threads) executed a different event count"
+        );
+        assert_eq!(
+            par_stats.sim_now, seq_stats.sim_now,
+            "{name}: parallel ({threads} threads) ended at a different sim time"
+        );
+    }
+}
+
+#[test]
+fn parallel_allreduce_matches_golden_1hub() {
+    assert_engine_equivalence("allreduce/1hub", Some(GOLDEN_1HUB), |m| allreduce_fabric(1, m));
+}
+
+#[test]
+fn parallel_allreduce_matches_golden_4hub() {
+    assert_engine_equivalence("allreduce/4hub", Some(GOLDEN_4HUB), |m| allreduce_fabric(4, m));
+}
+
+#[test]
+fn parallel_allreduce_matches_sequential_2hub() {
+    assert_engine_equivalence("allreduce/2hub", None, |m| allreduce_fabric(2, m));
 }
 
 // ---------------------------------------------- operator plane (ISSUE 5) ----
@@ -107,7 +201,7 @@ const GOLDEN_RECONFIG_4HUB: u64 = 0x1b5c_31a7_20f8_5d46;
 /// remote preproc → reply hop). Rates are chosen so every serialization
 /// time is a whole picosecond: the canonical trace is pure integer
 /// arithmetic, stable across platforms as well as runs.
-fn reconfig_fabric(hubs: usize) -> Fabric {
+fn reconfig_fabric(hubs: usize, mode: Mode) -> (Fabric, RunStats) {
     let mut fab = Fabric::with_config(FabricConfig {
         hubs,
         gbps: 100.0,
@@ -170,19 +264,19 @@ fn reconfig_fabric(hubs: usize) -> Fabric {
             }
         }
     }
-    fab.run();
-    fab
+    let stats = drain(&mut fab, mode);
+    (fab, stats)
 }
 
-fn run_reconfig_pinned(hubs: usize) -> (u64, Vec<TraceEntry>) {
-    let fab = reconfig_fabric(hubs);
+fn run_reconfig_pinned(hubs: usize, mode: Mode) -> (u64, Vec<TraceEntry>) {
+    let (fab, _) = reconfig_fabric(hubs, mode);
     (fab.trace_hash(), fab.completion_trace())
 }
 
 #[test]
 fn golden_reconfig_trace_1hub_pinned_and_repeatable() {
-    let (h1, t1) = run_reconfig_pinned(1);
-    let (h2, t2) = run_reconfig_pinned(1);
+    let (h1, t1) = run_reconfig_pinned(1, Mode::Seq);
+    let (h2, t2) = run_reconfig_pinned(1, Mode::Seq);
     assert_eq!(t1, t2, "back-to-back runs must produce identical traces");
     assert_eq!(h1, h2);
     // 6 local jobs, no interconnect traffic at 1 hub
@@ -215,8 +309,8 @@ fn golden_reconfig_trace_1hub_pinned_and_repeatable() {
 
 #[test]
 fn golden_reconfig_trace_4hub_pinned_and_repeatable() {
-    let (h1, t1) = run_reconfig_pinned(4);
-    let (h2, t2) = run_reconfig_pinned(4);
+    let (h1, t1) = run_reconfig_pinned(4, Mode::Seq);
+    let (h2, t2) = run_reconfig_pinned(4, Mode::Seq);
     assert_eq!(t1, t2, "back-to-back runs must produce identical traces");
     assert_eq!(h1, h2);
     // 4 × 6 local jobs + 4 × 3 routes × 3 hops
@@ -229,15 +323,32 @@ fn golden_reconfig_trace_4hub_pinned_and_repeatable() {
 
 #[test]
 fn reconfig_topology_is_part_of_the_trace() {
-    assert_ne!(run_reconfig_pinned(1).0, run_reconfig_pinned(4).0);
+    assert_ne!(
+        run_reconfig_pinned(1, Mode::Seq).0,
+        run_reconfig_pinned(4, Mode::Seq).0
+    );
     assert_ne!(GOLDEN_RECONFIG_1HUB, GOLDEN_RECONFIG_4HUB);
+}
+
+#[test]
+fn parallel_reconfig_matches_golden_1hub() {
+    assert_engine_equivalence("reconfig/1hub", Some(GOLDEN_RECONFIG_1HUB), |m| {
+        reconfig_fabric(1, m)
+    });
+}
+
+#[test]
+fn parallel_reconfig_matches_golden_4hub() {
+    assert_engine_equivalence("reconfig/4hub", Some(GOLDEN_RECONFIG_4HUB), |m| {
+        reconfig_fabric(4, m)
+    });
 }
 
 /// RNG-heavy mixed workload: hierarchical rounds with skew plus remote
 /// fetches through sampled SSD media. Not pinned to a constant (media
 /// sampling goes through transcendental math), but two runs must still be
-/// bit-identical.
-fn mixed_workload() -> (u64, Vec<TraceEntry>) {
+/// bit-identical — on either engine.
+fn mixed_workload(mode: Mode) -> (Fabric, RunStats) {
     let mut fab = Fabric::with_config(FabricConfig {
         hubs: 2,
         ..Default::default()
@@ -280,15 +391,21 @@ fn mixed_workload() -> (u64, Vec<TraceEntry>) {
             .hop(Site::Net, fab.hop_desc(i, qos, owner, origin, reply));
         fab.submit_route(i * 40 * US, route, |_, _| {});
     }
-    fab.run();
-    (fab.trace_hash(), fab.completion_trace())
+    let stats = drain(&mut fab, mode);
+    (fab, stats)
 }
 
 #[test]
 fn mixed_workload_trace_identical_across_runs() {
-    let (h1, t1) = mixed_workload();
-    let (h2, t2) = mixed_workload();
+    let (f1, _) = mixed_workload(Mode::Seq);
+    let (f2, _) = mixed_workload(Mode::Seq);
+    let (t1, t2) = (f1.completion_trace(), f2.completion_trace());
     assert!(!t1.is_empty());
     assert_eq!(t1, t2, "RNG-heavy schedule must still be deterministic");
-    assert_eq!(h1, h2);
+    assert_eq!(f1.trace_hash(), f2.trace_hash());
+}
+
+#[test]
+fn parallel_mixed_workload_matches_sequential() {
+    assert_engine_equivalence("mixed", None, mixed_workload);
 }

@@ -11,6 +11,11 @@
 //!
 //! Exactly one `#[test]` lives in this binary: the counter is process
 //! global, so a sibling test running on another thread would pollute it.
+//!
+//! The conservative parallel engine's counterpart lives in
+//! `zero_alloc_parallel.rs`: shard workers inherit this alloc-free
+//! dispatch path, and the window machinery around it is pinned to
+//! capacity-growth-only allocation there.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
