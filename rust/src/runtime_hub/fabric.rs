@@ -421,9 +421,11 @@ impl Fabric {
     /// lookahead windows derived from the sites' event frontiers. Cross-
     /// shard completions merge in canonical order, so the result —
     /// completion traces, trace hash, tenant reports, event count — is
-    /// bit-identical to [`Fabric::run`] at every thread count
-    /// (`tests/determinism.rs` pins this against the golden hashes).
-    /// `threads == 0` uses the machine's available parallelism.
+    /// bit-identical to [`Fabric::run`] at every thread count —
+    /// `tests/determinism.rs` asserts this against the golden hashes for
+    /// every committed scenario (see DESIGN.md §11 for the one same-time
+    /// merge ambiguity that suite guards). `threads == 0` uses the
+    /// machine's available parallelism.
     pub fn run_parallel(&mut self, threads: usize) -> RunStats {
         let threads = if threads == 0 {
             std::thread::available_parallelism().map_or(1, |n| n.get())

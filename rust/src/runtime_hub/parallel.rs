@@ -20,41 +20,65 @@
 //!   closure escape hatch. These *boundary* events are recognizable
 //!   before execution (the continuation's stage iterator is empty), so a
 //!   worker stashes one and pauses instead of running it.
-//! * **Injections flow hub ↔ interconnect.** A hub completion submits the
-//!   next leg on the interconnect (or locally); an interconnect completion
-//!   submits on a hub. The earliest *future* injection into a hub is
-//!   therefore bounded below by the interconnect's next-event time, and
-//!   vice versa — a bipartite lookahead bound that needs no per-link
-//!   channel bookkeeping. (An interconnect→hub leg additionally pays the
-//!   wire + `hop_ns`, which is where the classic lookahead window lives;
-//!   the bound here is tighter because it reads the actual frontier.)
+//! * **Injections originate at frontiers and never move backwards.** A
+//!   completion submits the next leg at exactly its own timestamp (the
+//!   wire + `hop_ns` cost of a leg is paid *inside* that leg's
+//!   descriptor), and a chain of completions — hub → interconnect → hub —
+//!   adds no minimum latency (a barrier-only interconnect leg completes
+//!   at its arrival instant). So the earliest *future* injection into a
+//!   shard is bounded below by the minimum frontier of all *other*
+//!   shards: every cascade starts at some shard's boundary event, at or
+//!   after that shard's frontier, and only gains time from there. A
+//!   shard's own cascades are excluded from its bound — it never executes
+//!   past its own stash, so a chain it originates lands at or after its
+//!   own clock.
 //!
 //! A coordinator (the calling thread) alternates two phases. In a *window*
-//! it publishes per-shard inclusive bounds — `min(control head, opposite
-//! side's frontier)` — and the workers drain their queues up to the bound,
-//! pausing at boundary events. At a *boundary batch* (no shard can move)
-//! it executes everything at the globally minimal timestamp in canonical
-//! order — sites swept in index order, each drained FIFO, boxed closures
-//! last in schedule order — against a staging `Sim`, then routes the
-//! events that execution produced to their target shards. Per-shard FIFO
-//! order is exactly the sequential order, injections land behind existing
-//! same-time events exactly as a shared queue would place them, and every
-//! routed event is checked against the target shard's clock — a schedule
-//! that injects into a shard's past (zero-lookahead hub→hub traffic) is a
-//! hard error, not a silent reorder. `tests/determinism.rs` pins the
-//! result: the committed golden trace hashes must be bit-identical to the
-//! sequential engine at every thread count.
+//! it publishes per-shard inclusive bounds — `min(control head, minimum
+//! frontier among the other shards)`, where a shard's *frontier* is the
+//! earlier of its stash and its queue head — and the workers drain their
+//! queues up to the bound, pausing at boundary events. At a *boundary batch* (no shard can
+//! move) it executes everything at the globally minimal timestamp in
+//! canonical order — sites swept in index order, each popping the earlier
+//! of its stash and its queue head (stash wins ties: it was the FIFO head
+//! at that timestamp), boxed closures last in schedule order — against a
+//! staging `Sim`, then routes the events that execution produced to their
+//! target shards. Every routed event is checked against the target
+//! shard's clock — a schedule that injects into a shard's past
+//! (zero-lookahead hub→hub traffic) is a hard error, not a silent
+//! reorder.
+//!
+//! **Ordering argument and its limit.** Per-shard FIFO order is preserved
+//! unconditionally, and because the clock only moves forward, two events
+//! on one shard *created at different timestamps* keep the shared queue's
+//! exact relative order (creation order == insertion order). The one
+//! interleaving the split cannot reconstruct is between two same-time
+//! events on one shard that were *created at that same timestamp by
+//! different sites* — e.g. a cross-site injection at `t` racing a local
+//! follow-up also scheduled at `t` (a barrier release, a same-instant
+//! grant chain). The batch resolves such ties in the canonical order
+//! above: deterministic at every thread count, but not guaranteed to be
+//! the sequential insertion order, so if the two events contend for the
+//! same arbiter the service order — and downstream `done_at` stamps — can
+//! differ from `Fabric::run` while all timestamps stay equal.
+//! `tests/determinism.rs` re-runs every committed golden scenario on this
+//! engine at several thread counts and asserts hash identity with the
+//! sequential run — that suite is the oracle that the committed workload
+//! grammar does not hit the ambiguous case; a workload that does should
+//! run sequentially.
 //!
 //! When only one shard has pending work and the control lane is empty —
 //! a single-hub fabric, or the serial head/tail of a multi-hub run — the
 //! coordinator runs that shard inline with no worker handoffs at all
 //! (the empty-window fast path: no cross-hub traffic, no rendezvous).
 
+use std::any::Any;
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::thread;
 
 use crate::sim::time::Ps;
@@ -76,10 +100,39 @@ struct Shard {
 impl Shard {
     /// Earliest time this shard could next execute — or inject, since
     /// injections come only from boundary events, which pause the shard.
+    /// A boundary batch can route an event *behind* an existing stash
+    /// (anywhere at or after the shard's clock), so the frontier is the
+    /// earlier of the stash and the queue head, not just the stash.
     fn frontier(&mut self) -> Ps {
+        let head = self.sim.peek_pending_time().unwrap_or(UNBOUNDED);
         match &self.stash {
-            Some((t, _)) => *t,
-            None => self.sim.peek_pending_time().unwrap_or(UNBOUNDED),
+            Some((t, _)) => (*t).min(head),
+            None => head,
+        }
+    }
+
+    /// Pop this shard's earliest ready item — the earlier of the stash
+    /// and the queue head, the stash winning ties (it was the FIFO head
+    /// at its timestamp when it was set aside, so same-time queue events
+    /// sit behind it). Returns `None` when nothing is at or below
+    /// `bound`. Never executing the stash ahead of an earlier injected
+    /// event is what keeps the shard clock monotone in batches.
+    fn pop_ready(&mut self, bound: Ps) -> Option<(Ps, Event)> {
+        let head = self.sim.peek_pending_time();
+        let from_stash = match (&self.stash, head) {
+            (Some((ts, _)), Some(tq)) => *ts <= tq,
+            (Some(_), None) => true,
+            (None, _) => false,
+        };
+        if from_stash {
+            let (t, ev) = self.stash.take().expect("matched above");
+            if t > bound {
+                self.stash = Some((t, ev));
+                return None;
+            }
+            Some((t, ev))
+        } else {
+            self.sim.pop_pending_up_to(bound)
         }
     }
 }
@@ -216,14 +269,9 @@ fn run_batch(
         let mut progressed = false;
         for site in 0..shards.len() {
             loop {
-                let stashed = matches!(&shards[site].stash, Some((t, _)) if *t <= t_min);
-                let (t, ev) = if stashed {
-                    shards[site].stash.take().expect("matched above")
-                } else {
-                    match shards[site].sim.pop_pending_up_to(t_min) {
-                        Some(item) => item,
-                        None => break,
-                    }
+                let (t, ev) = match shards[site].pop_ready(t_min) {
+                    Some(item) => item,
+                    None => break,
                 };
                 progressed = true;
                 if is_boundary(&shards[site].cell.borrow(), &ev) {
@@ -267,12 +315,9 @@ fn run_solo(
     seq: &mut u64,
 ) {
     loop {
-        let (t, ev) = match shards[site].stash.take() {
+        let (t, ev) = match shards[site].pop_ready(UNBOUNDED) {
             Some(item) => item,
-            None => match shards[site].sim.pop_pending_up_to(UNBOUNDED) {
-                Some(item) => item,
-                None => return,
-            },
+            None => return,
         };
         if is_boundary(&shards[site].cell.borrow(), &ev) {
             exec_boundary(staging, shards, site, t, ev, control, seq);
@@ -301,6 +346,11 @@ struct SyncState {
     round: AtomicU64,
     done: AtomicBool,
     panicked: AtomicBool,
+    /// the payload of the first worker panic, rethrown on the coordinator
+    panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
+    /// the coordinating thread — workers unpark it after every ack store,
+    /// so the coordinator can park instead of burning a core spinning
+    coordinator: thread::Thread,
     bounds: Vec<AtomicU64>,
     acks: Vec<AtomicU64>,
 }
@@ -311,6 +361,8 @@ impl SyncState {
             round: AtomicU64::new(0),
             done: AtomicBool::new(false),
             panicked: AtomicBool::new(false),
+            panic_payload: Mutex::new(None),
+            coordinator: thread::current(),
             bounds: (0..n_sites).map(|_| AtomicU64::new(0)).collect(),
             acks: (0..n_workers).map(|_| AtomicU64::new(0)).collect(),
         }
@@ -340,7 +392,7 @@ fn worker_loop(shards: &ShardsPtr, sync: &SyncState, w: usize, n_workers: usize,
                 spins += 1;
                 if spins < 64 {
                     std::hint::spin_loop();
-                } else if spins < 4096 {
+                } else if spins < 512 {
                     thread::yield_now();
                 } else {
                     thread::park();
@@ -357,12 +409,30 @@ fn worker_loop(shards: &ShardsPtr, sync: &SyncState, w: usize, n_workers: usize,
                 site += n_workers;
             }
             sync.acks[w].store(round, Ordering::Release);
+            sync.coordinator.unpark();
         }
     }));
-    if result.is_err() {
+    if let Err(payload) = result {
+        *sync.panic_payload.lock().unwrap_or_else(|e| e.into_inner()) = Some(payload);
         sync.panicked.store(true, Ordering::Release);
-        // ack whatever round is current so the coordinator's wait ends
+        // ack whatever round is current so the coordinator's wait ends;
+        // wait_acks re-checks the flag after the acks match, so this ack
+        // cannot make the panic pass unnoticed
         sync.acks[w].store(sync.round.load(Ordering::Relaxed), Ordering::Release);
+        sync.coordinator.unpark();
+    }
+}
+
+/// Rethrow a worker's panic on the coordinator — the stored payload if it
+/// survived, a fresh panic otherwise. The engine's contract is a hard
+/// panic, never a normal return with half-drained shards.
+fn check_worker_panic(sync: &SyncState) {
+    if sync.panicked.load(Ordering::Acquire) {
+        let payload = sync.panic_payload.lock().unwrap_or_else(|e| e.into_inner()).take();
+        match payload {
+            Some(p) => resume_unwind(p),
+            None => panic!("parallel shard worker panicked"),
+        }
     }
 }
 
@@ -370,15 +440,24 @@ fn wait_acks(sync: &SyncState, round: u64) {
     for ack in &sync.acks {
         let mut spins = 0u32;
         while ack.load(Ordering::Acquire) != round {
-            assert!(!sync.panicked.load(Ordering::Acquire), "parallel shard worker panicked");
             spins += 1;
             if spins < 64 {
                 std::hint::spin_loop();
-            } else {
+            } else if spins < 1024 {
                 thread::yield_now();
+            } else {
+                // workers unpark the coordinator after every ack store, so
+                // parking here cannot lose a wakeup (a racing unpark makes
+                // the next park return immediately); on oversubscribed
+                // machines this keeps the rendezvous off the run queue
+                thread::park();
             }
         }
     }
+    // a panicked worker acks the current round before dying, so the loop
+    // above can exit without ever sampling the flag mid-spin — check it
+    // once per round, after every ack (including the final round)
+    check_worker_panic(sync);
 }
 
 /// The coordinator: alternate windows (workers drain under bounds) and
@@ -392,7 +471,6 @@ fn coordinate(
     workers: &[thread::Thread],
 ) {
     let n_sites = shards.len();
-    let net = n_sites - 1;
     let mut round = 0u64;
     loop {
         // exclusive phase: all acks observed, shards are ours
@@ -405,15 +483,26 @@ fn coordinate(
             continue;
         }
 
-        // bipartite inclusive bounds: a hub is safe through the
-        // interconnect's frontier, the interconnect through the hubs'
-        // minimum — injections originate only from the opposite side's
-        // boundary events (>= its frontier) or the control lane
-        let hub_min = frontiers[..net].iter().copied().min().unwrap_or(UNBOUNDED);
+        // inclusive bounds: a future injection into shard `i` originates
+        // from some shard's boundary event (at >= that shard's frontier)
+        // or a control closure (at >= c_head), and a cascade — hub → net
+        // → hub — adds no minimum latency (a barrier-only net leg
+        // completes at its arrival instant), so the safe bound for `i` is
+        // the minimum frontier among the *other* shards. `i`'s own
+        // cascades are excluded: it never executes past its own stash, so
+        // a chain it originates lands at or after its own clock.
+        let (mut min1, mut min1_at, mut min2) = (UNBOUNDED, usize::MAX, UNBOUNDED);
+        for (i, &f) in frontiers.iter().enumerate() {
+            if f < min1 {
+                (min2, min1, min1_at) = (min1, f, i);
+            } else if f < min2 {
+                min2 = f;
+            }
+        }
         let mut any_runnable = false;
         for site in 0..n_sites {
-            let opposite = if site == net { hub_min } else { frontiers[net] };
-            let bound = c_head.min(opposite);
+            let others = if site == min1_at { min2 } else { min1 };
+            let bound = c_head.min(others);
             sync.bounds[site].store(bound, Ordering::Relaxed);
             let f = frontiers[site];
             if shards[site].stash.is_none() && f != UNBOUNDED && f <= bound {
@@ -431,13 +520,12 @@ fn coordinate(
             continue;
         }
 
-        // no window can open: the global minimum is boundary work
-        let t_min = shards
-            .iter()
-            .filter_map(|s| s.stash.as_ref().map(|&(t, _)| t))
-            .fold(c_head, Ps::min);
+        // no window can open: the global minimum is boundary work, or a
+        // pending event a batch injected behind a stash (the frontiers
+        // already take the min of both, so fold over them — folding over
+        // stashes alone would overshoot past such an injection)
+        let t_min = frontiers.iter().copied().fold(c_head, Ps::min);
         if t_min == UNBOUNDED {
-            debug_assert!(shards.iter_mut().all(|s| s.frontier() == UNBOUNDED));
             return;
         }
         run_batch(staging, shards, control, seq, t_min);
@@ -502,6 +590,9 @@ pub(crate) fn run_sites_parallel(
             if let Err(payload) = outcome {
                 resume_unwind(payload);
             }
+            // belt and braces: a worker panic whose ack raced the final
+            // wait must still surface before stats are merged
+            check_worker_panic(&sync);
         });
     }
 
