@@ -18,9 +18,11 @@ use std::time::Instant;
 
 use fpgahub::apps::allreduce::{HierConfig, HierarchicalAllreduce};
 use fpgahub::apps::{run_sharded_fetch, ShardedFetchConfig};
-use fpgahub::bench_harness::{banner, bench_sim, bench_sim_t, SimMetrics};
+use fpgahub::bench_harness::{banner, bench_sim, bench_sim_engine, bench_sim_t, SimMetrics};
 use fpgahub::metrics::Hist;
-use fpgahub::runtime_hub::{Fabric, HubId, QosSpec, RunStats, TransferDesc};
+use fpgahub::runtime_hub::{
+    EngineMode, Fabric, HubId, QosSpec, RouteDesc, RunStats, Site, TransferDesc,
+};
 use fpgahub::sim::time::to_us;
 use fpgahub::sim::US;
 
@@ -149,6 +151,52 @@ fn main() {
         stats.into()
     });
 
+    // ISSUE 7: all-to-all shuffle, the mailbox engine's showcase. Every
+    // chain is a detached multi-hop route with no app callbacks, so the
+    // lookahead engine runs it hazard-free — workers chain cross-shard legs
+    // through the per-edge mailboxes and the coordinator only republishes
+    // window bounds — while the rendezvous baseline stashes every leg
+    // completion and pays a global handshake for each. Both engines are
+    // hash-gated against the sequential reference before any number is
+    // recorded; the per-hub-count speedup of lookahead over rendezvous at
+    // the same thread count is the headline ISSUE 7 figure.
+    banner(&format!("all-to-all shuffle: lookahead vs rendezvous engines ({threads} threads)"));
+    for hubs in [2usize, 4, 8] {
+        let (seq_fab, seq_stats) = shuffle_all_to_all(hubs, 30, None);
+        let seq_hash = seq_fab.trace_hash();
+        let modes = [(EngineMode::Rendezvous, "rendezvous"), (EngineMode::Lookahead, "lookahead")];
+        let mut mode_ms = [0.0f64; 2];
+        for (i, (mode, tag)) in modes.into_iter().enumerate() {
+            let r = bench_sim_engine(
+                &format!("scale/shuffle_{hubs}hubs_{tag}"),
+                threads,
+                tag,
+                2,
+                10,
+                move || {
+                    let (fab, stats) = shuffle_all_to_all(hubs, 30, Some((threads, mode)));
+                    assert_eq!(
+                        fab.trace_hash(),
+                        seq_hash,
+                        "{hubs} hubs ({tag}): shuffle trace diverged from sequential"
+                    );
+                    assert_eq!(
+                        stats.events, seq_stats.events,
+                        "{hubs} hubs ({tag}): shuffle event count diverged from sequential"
+                    );
+                    stats.into()
+                },
+            );
+            mode_ms[i] = r.wall.mean_ms;
+        }
+        let speedup = if mode_ms[1] > 0.0 { mode_ms[0] / mode_ms[1] } else { 0.0 };
+        println!(
+            "{hubs:>2} hubs: rendezvous {:>8.2}ms  lookahead {:>8.2}ms  \
+             lookahead speedup {speedup:>5.2}x  hash {seq_hash:#018x}",
+            mode_ms[0], mode_ms[1]
+        );
+    }
+
     banner("sharded fetch: 4 hubs, partitioned SSD arrays");
     bench_sim("scale/sharded_fetch_4hubs", 2, 10, || {
         let r = run_sharded_fetch(&ShardedFetchConfig {
@@ -162,6 +210,48 @@ fn main() {
     });
 
     fpgahub::bench_harness::finish().expect("bench json");
+}
+
+/// All-to-all shuffle: `waves` waves in which every ordered hub pair
+/// carries one detached 4-leg route — mesh transfer to the peer, local
+/// repartition delay there, a smaller mesh reply, and a local merge delay
+/// back home. No app callbacks anywhere, so under [`EngineMode::Lookahead`]
+/// the whole run is hazard-free: every cross-shard leg rides a mailbox.
+/// Waves are spaced so one wave's chains drain before the next, keeping
+/// each directed mesh link contention-free (the seq-vs-par hash gate then
+/// pins exact equality rather than leaning on tie-order luck).
+fn shuffle_all_to_all(
+    hubs: usize,
+    waves: u64,
+    par: Option<(usize, EngineMode)>,
+) -> (Fabric, RunStats) {
+    const BYTES: u64 = 64 * 1024;
+    let mut fab = Fabric::new(hubs);
+    let qos = QosSpec::default();
+    let mut label = 0u64;
+    for w in 0..waves {
+        let t0 = w * 20 * US;
+        for s in 0..hubs as u32 {
+            for d in 0..hubs as u32 {
+                if s == d {
+                    continue;
+                }
+                let (src, dst) = (HubId(s), HubId(d));
+                label += 1;
+                let route = RouteDesc::new()
+                    .hop(Site::Net, fab.hop_desc(label, qos, src, dst, BYTES))
+                    .hop(Site::Hub(dst), TransferDesc::with_label(label).qos(qos).delay(US))
+                    .hop(Site::Net, fab.hop_desc(label, qos, dst, src, BYTES / 4))
+                    .hop(Site::Hub(src), TransferDesc::with_label(label).qos(qos).delay(US / 2));
+                fab.submit_route_detached(t0, route);
+            }
+        }
+    }
+    let stats = match par {
+        None => fab.run(),
+        Some((t, m)) => fab.run_parallel_mode(t, m),
+    };
+    (fab, stats)
 }
 
 /// 64 local delay chains on a lone hub — every event is site-local, so the

@@ -164,7 +164,7 @@ pub fn bench_sim<F: FnMut() -> SimMetrics>(
     iters: usize,
     f: F,
 ) -> SimBenchResult {
-    bench_sim_inner(name, None, warmup, iters, f)
+    bench_sim_inner(name, None, None, warmup, iters, f)
 }
 
 /// Like [`bench_sim`], tagging the JSON entry with the worker-thread count
@@ -177,12 +177,28 @@ pub fn bench_sim_t<F: FnMut() -> SimMetrics>(
     iters: usize,
     f: F,
 ) -> SimBenchResult {
-    bench_sim_inner(name, Some(threads), warmup, iters, f)
+    bench_sim_inner(name, Some(threads), None, warmup, iters, f)
+}
+
+/// Like [`bench_sim_t`], additionally tagging the entry with the parallel
+/// engine variant it ran (`"engine":"lookahead"` / `"engine":"rendezvous"`,
+/// [`crate::runtime_hub::EngineMode`]), so engine-vs-engine sweeps at equal
+/// thread counts stay machine-comparable in one document (ISSUE 7).
+pub fn bench_sim_engine<F: FnMut() -> SimMetrics>(
+    name: &str,
+    threads: usize,
+    engine: &str,
+    warmup: usize,
+    iters: usize,
+    f: F,
+) -> SimBenchResult {
+    bench_sim_inner(name, Some(threads), Some(engine), warmup, iters, f)
 }
 
 fn bench_sim_inner<F: FnMut() -> SimMetrics>(
     name: &str,
     threads: Option<usize>,
+    engine: Option<&str>,
     warmup: usize,
     iters: usize,
     mut f: F,
@@ -223,13 +239,13 @@ fn bench_sim_inner<F: FnMut() -> SimMetrics>(
         totals.sim_s += sim_total;
     }
     r.print();
-    let entry = match threads {
-        Some(t) => {
-            let j = r.json();
-            format!("{},\"threads\":{t}}}", &j[..j.len() - 1])
-        }
-        None => r.json(),
-    };
+    let mut entry = r.json();
+    if let Some(t) = threads {
+        entry = format!("{},\"threads\":{t}}}", &entry[..entry.len() - 1]);
+    }
+    if let Some(e) = engine {
+        entry = format!("{},\"engine\":\"{}\"}}", &entry[..entry.len() - 1], json_escape(e));
+    }
     record_json(entry);
     r
 }
@@ -368,6 +384,22 @@ mod tests {
             .find(|e| e.contains("\"name\":\"sim-threads-tag\""))
             .expect("bench_sim_t recorded an entry");
         assert!(tagged.contains("\"threads\":3"), "{tagged}");
+        assert!(tagged.starts_with('{') && tagged.ends_with('}'), "{tagged}");
+    }
+
+    #[test]
+    fn bench_sim_engine_tags_threads_and_engine() {
+        bench_sim_engine("sim-engine-tag", 4, "lookahead", 0, 2, || SimMetrics {
+            events: 5,
+            sim_ps: US,
+        });
+        let entries = JSON_RESULTS.lock().unwrap_or_else(|e| e.into_inner());
+        let tagged = entries
+            .iter()
+            .find(|e| e.contains("\"name\":\"sim-engine-tag\""))
+            .expect("bench_sim_engine recorded an entry");
+        assert!(tagged.contains("\"threads\":4"), "{tagged}");
+        assert!(tagged.contains("\"engine\":\"lookahead\""), "{tagged}");
         assert!(tagged.starts_with('{') && tagged.ends_with('}'), "{tagged}");
     }
 

@@ -14,7 +14,12 @@
 //! the fabric-wide barriers). The fabric chains the hops: hop *k+1* is
 //! submitted at the instant hop *k* completes, so a remote storage fetch is
 //! "command over the wire → NVMe + DMA on the owner hub → reply over the
-//! wire" with queueing at every stage.
+//! wire" with queueing at every stage. Under the default
+//! [`HopBilling::Injection`] mode a mesh leg's fixed `hop_ns` is charged at
+//! injection (the leg's first event fires `hop_ns` late, its wire billing
+//! back-dated by the same amount) — timestamps are unchanged, but every
+//! hub → interconnect handoff is provably `hop_ns` in the target's future,
+//! which is the lookahead the parallel engine's window bound feeds on.
 //!
 //! QoS/arbitration applies per hub *and* on the interconnect: each hub's
 //! resources take the fabric's [`ResourcePolicies`]; inter-hub links take
@@ -36,11 +41,12 @@ use crate::constants;
 use crate::nvme::ssd::SsdArray;
 use crate::sim::time::{ns_f, Ps};
 use crate::sim::Sim;
-use crate::util::Slab;
 
+use super::parallel::EngineMode;
 use super::{
-    submit_cont, submit_on, ArrayId, BarrierId, DoneAction, DoneFn, HubState, HubWorld, LinkId,
-    NvmeId, PoolId, QosSpec, ResourcePolicies, RunStats, TenantAccount, TenantReport, TransferDesc,
+    submit_cont_at, submit_on, ArrayId, BarrierId, DoneAction, DoneFn, HubState, HubWorld, LinkId,
+    NvmeId, PoolId, QosSpec, ResourcePolicies, RunStats, Stage, TenantAccount, TenantReport,
+    TransferDesc,
 };
 
 /// Identity of one hub shard within a fabric.
@@ -154,17 +160,79 @@ fn fnv1a_u64(mut h: u64, v: u64) -> u64 {
     h
 }
 
-/// In-flight state of one multi-hop route: the remaining hops and the
-/// final completion callback. Parked in the fabric's route table once at
-/// `submit_route`; each hop's continuation carries the 4-byte table slot
-/// ([`DoneAction::FabricHop`]) instead of a freshly boxed closure per hop.
-pub(crate) struct RouteState {
-    hops: std::vec::IntoIter<(Rc<RefCell<HubState>>, TransferDesc)>,
-    done: DoneFn,
+/// How the fixed per-hop latency of the interconnect mesh is charged.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum HopBilling {
+    /// Charge `hop_ns` when a mesh leg is *injected*: the leg's first
+    /// event fires `hop_ns` after submission and its wire billing is
+    /// back-dated by the same amount, so completion timestamps — and the
+    /// committed golden trace hashes — are bit-identical to
+    /// [`HopBilling::InsideLeg`], while every hub → interconnect handoff
+    /// lands provably ≥ `hop_ns` in the target's future: the lookahead
+    /// the parallel engine's window bound feeds on (DESIGN.md §11).
+    #[default]
+    Injection,
+    /// The PR 6 reference: `hop_ns` rides entirely inside the receiving
+    /// leg as link `post_ps`. Zero lookahead; kept for the billing
+    /// equivalence property test (`tests/hop_billing.rs`) and as the
+    /// rendezvous-engine bench baseline.
+    InsideLeg,
 }
 
-/// Shared handle to the route table (cloned into each hop's done action).
-pub(crate) type RouteTable = Rc<RefCell<Slab<RouteState>>>;
+/// One resolved leg of an in-flight route: the target site (by shard
+/// index — hubs `0..N`, interconnect `N`), the injection lookahead its
+/// leading stage carries, and the descriptor to run there.
+pub(crate) struct RouteHop {
+    pub(crate) site: u32,
+    /// `inject_ps` of the leg's leading Xfer link (0 when the leg does not
+    /// open with a mesh transfer). Compared against the source shard's
+    /// lookahead row to decide whether a parallel worker may chain this
+    /// hop inside its window or must surface the completion as a boundary.
+    pub(crate) inject: Ps,
+    pub(crate) desc: TransferDesc,
+}
+
+/// An in-flight route: the remaining hops plus the terminal callback
+/// (`None` for detached routes). Owned by the live leg's continuation
+/// ([`DoneAction::Route`]) and handed back to [`route_step`] at each leg
+/// completion — no shared route table, so a parallel worker can chain
+/// hops without touching fabric-global state.
+pub(crate) struct RouteCont {
+    pub(crate) hops: std::vec::IntoIter<RouteHop>,
+    pub(crate) done: Option<DoneFn>,
+}
+
+/// A completed leg: the completion time and the surviving route, as
+/// returned by `advance` to whichever dispatcher popped the event.
+pub(crate) struct RouteDone {
+    pub(crate) at: Ps,
+    pub(crate) cont: RouteCont,
+}
+
+/// Advance a route one leg: submit the next hop on its site, stamped at
+/// the completing leg's time `at` — *unclamped*, because under lookahead
+/// the submitting shard's clock may already have run past `at`; the hop's
+/// first event still lands in its target's future by the window-bound
+/// argument (DESIGN.md §11). Hops exhausted: defer the terminal callback
+/// one event at `at`, exactly like the old boxed-closure chain did (it
+/// must not jump ahead of work already queued at that timestamp).
+pub(crate) fn route_step(cells: &[Rc<RefCell<HubState>>], sim: &mut Sim, rd: RouteDone) {
+    let RouteDone { at, mut cont } = rd;
+    match cont.hops.next() {
+        Some(hop) => {
+            let cell = &cells[hop.site as usize];
+            submit_cont_at(cell, sim, at, hop.desc, DoneAction::Route(cont));
+        }
+        None => {
+            if let Some(done) = cont.done.take() {
+                sim.at(at, move |s| {
+                    let now = s.now();
+                    done(s, now);
+                });
+            }
+        }
+    }
+}
 
 /// A fabric of FPGA hubs: N per-hub resource shards and the interconnect,
 /// all on one deterministic event clock.
@@ -173,13 +241,12 @@ pub struct Fabric {
     /// [`Fabric::run`] (`sim.run()` alone cannot dispatch typed events).
     pub sim: Sim,
     cfg: FabricConfig,
+    billing: HopBilling,
     hubs: Vec<Rc<RefCell<HubState>>>,
     net: Rc<RefCell<HubState>>,
     /// `routes[src][dst]` = interconnect link id for the directed pair
     /// (diagonal unused)
     routes: Vec<Vec<usize>>,
-    /// in-flight multi-hop routes (slot-addressed continuations)
-    route_conts: RouteTable,
 }
 
 impl Fabric {
@@ -189,6 +256,13 @@ impl Fabric {
     }
 
     pub fn with_config(cfg: FabricConfig) -> Self {
+        Self::with_hop_billing(cfg, HopBilling::Injection)
+    }
+
+    /// A fabric with an explicit hop-billing mode; see [`HopBilling`].
+    /// Both modes produce bit-identical completion traces —
+    /// `tests/hop_billing.rs` pins the equivalence over randomized routes.
+    pub fn with_hop_billing(cfg: FabricConfig, billing: HopBilling) -> Self {
         assert!(cfg.hubs >= 1, "a fabric needs at least one hub");
         // typed events address sites by index: hubs 0..N, interconnect N
         let mut hubs = Vec::with_capacity(cfg.hubs);
@@ -196,34 +270,57 @@ impl Fabric {
             hubs.push(Rc::new(RefCell::new(HubState::new(i as u32))));
         }
         let net = Rc::new(RefCell::new(HubState::new(cfg.hubs as u32)));
+        // Injection billing is only sound on an *eager* arbiter (FCFS
+        // grants at arrival and never parks, so a mesh transfer's billing
+        // inputs are fixed before its delayed arming event fires). Other
+        // fabric policies fall back to inside-the-leg billing: identical
+        // timing, zero lookahead.
+        let inject = if billing == HopBilling::Injection && cfg.policies.fabric.build().eager() {
+            ns_f(cfg.hop_ns)
+        } else {
+            0
+        };
         let mut routes = vec![vec![usize::MAX; cfg.hubs]; cfg.hubs];
         {
             let mut n = net.borrow_mut();
             for (s, row) in routes.iter_mut().enumerate() {
                 for (d, slot) in row.iter_mut().enumerate() {
                     if s != d {
-                        *slot = n.register_link(
+                        *slot = n.register_link_inject(
                             "hub-link",
                             cfg.gbps,
                             ns_f(cfg.hop_ns),
+                            inject,
                             cfg.policies.fabric,
                         );
                     }
                 }
             }
         }
-        Fabric {
-            sim: Sim::new(),
-            cfg,
-            hubs,
-            net,
-            routes,
-            route_conts: Rc::new(RefCell::new(Slab::new())),
+        // Static per-edge lookahead rows: anything a hub hands the
+        // interconnect mid-window starts with a mesh Xfer whose hop charge
+        // was paid at injection, so it lands ≥ `inject` in the net shard's
+        // future. Every other directed edge promises nothing. Legs that
+        // break the promise (e.g. barrier-only net legs) are counted as
+        // hazards per shard, which zeroes that shard's row until they
+        // drain — see `HubState::done_is_hazard` and DESIGN.md §11.
+        let net_idx = cfg.hubs;
+        for h in &hubs {
+            let mut st = h.borrow_mut();
+            st.la_to = vec![0; cfg.hubs + 1];
+            st.la_to[net_idx] = inject;
         }
+        net.borrow_mut().la_to = vec![0; cfg.hubs + 1];
+        Fabric { sim: Sim::new(), cfg, billing, hubs, net, routes }
     }
 
     pub fn config(&self) -> FabricConfig {
         self.cfg
+    }
+
+    /// The hop-billing mode this fabric was built with.
+    pub fn hop_billing(&self) -> HopBilling {
+        self.billing
     }
 
     pub fn num_hubs(&self) -> usize {
@@ -248,6 +345,21 @@ impl Fabric {
             }
             Site::Net => &self.net,
         }
+    }
+
+    /// Shard index of a site: hubs `0..N`, interconnect `N`.
+    fn site_index(&self, site: Site) -> u32 {
+        match site {
+            Site::Hub(h) => h.0,
+            Site::Net => self.hubs.len() as u32,
+        }
+    }
+
+    /// Every site cell in shard-index order (hubs, then the interconnect).
+    fn all_cells(&self) -> Vec<Rc<RefCell<HubState>>> {
+        let mut v = self.hubs.clone();
+        v.push(self.net.clone());
+        v
     }
 
     /// Clone of one hub's state cell (for closures that submit follow-ups).
@@ -368,25 +480,56 @@ impl Fabric {
 
     /// Submit a multi-hop route: hop *k+1* starts when hop *k* completes;
     /// `done` fires with the final hop's completion time (or at `at` for an
-    /// empty route). The route is parked once in the route table; hop
-    /// chaining then rides the typed completion path with no per-hop
-    /// allocation.
+    /// empty route). The route's remaining hops travel *inside* the live
+    /// leg's continuation ([`DoneAction::Route`]) — hop chaining rides the
+    /// typed completion path with no per-hop allocation and no shared
+    /// route table.
     pub fn submit_route(
         &mut self,
         at: Ps,
         route: RouteDesc,
         done: impl FnOnce(&mut Sim, Ps) + 'static,
     ) {
-        let hops: Vec<(Rc<RefCell<HubState>>, TransferDesc)> = route
+        self.submit_route_cont(at, route, Some(Box::new(done)));
+    }
+
+    /// [`Fabric::submit_route`] without a completion callback: the route
+    /// just runs its legs. Detached routes are the fabric's zero-hazard
+    /// traffic — with no terminal closure to order against the global
+    /// timeline, every leg (and the final drop) is executable by a
+    /// parallel worker inside its own window.
+    pub fn submit_route_detached(&mut self, at: Ps, route: RouteDesc) {
+        self.submit_route_cont(at, route, None);
+    }
+
+    fn submit_route_cont(&mut self, at: Ps, route: RouteDesc, done: Option<DoneFn>) {
+        // public-API clamp, like `submit`: a route submitted in the past
+        // starts now (internal hop chaining is exempt — it stamps the
+        // completing leg's exact time)
+        let at = at.max(self.sim.now());
+        let hops: Vec<RouteHop> = route
             .hops
             .into_iter()
-            .map(|h| (self.site_cell(h.site).clone(), h.desc))
+            .map(|h| {
+                let inject = self.hop_inject(h.site, &h.desc);
+                RouteHop { site: self.site_index(h.site), inject, desc: h.desc }
+            })
             .collect();
-        // an empty route flows through the same path: next_hop's terminal
-        // branch vacates the slot and defers `done` one event at `at`
-        let route = RouteState { hops: hops.into_iter(), done: Box::new(done) };
-        let slot = self.route_conts.borrow_mut().insert(route);
-        next_hop(self.route_conts.clone(), &mut self.sim, at, slot);
+        // an empty route flows through the same path: route_step's
+        // terminal branch defers `done` one event at `at`
+        let cont = RouteCont { hops: hops.into_iter(), done };
+        let cells = self.all_cells();
+        route_step(&cells, &mut self.sim, RouteDone { at, cont });
+    }
+
+    /// Injection-billed share of a leg's leading stage on `site`: the
+    /// `inject_ps` of its leading Xfer's link, else 0. Resolved once at
+    /// submit so route chaining never consults the link tables again.
+    fn hop_inject(&self, site: Site, desc: &TransferDesc) -> Ps {
+        match desc.stages.first() {
+            Some(&Stage::Xfer { link, .. }) => self.site_cell(site).borrow().links[link].inject_ps,
+            _ => 0,
+        }
     }
 
     // ------------------------------------------------------ draining ----
@@ -395,9 +538,7 @@ impl Fabric {
     pub fn run(&mut self) -> RunStats {
         let events_before = self.sim.events_processed();
         let now_before = self.sim.now();
-        let mut sites = self.hubs.clone();
-        sites.push(self.net.clone());
-        let mut world = HubWorld::new(sites);
+        let mut world = HubWorld::new(self.all_cells());
         self.sim.run_world(&mut world);
         RunStats {
             events: self.sim.events_processed() - events_before,
@@ -409,9 +550,7 @@ impl Fabric {
     /// Run until the queue drains or `deadline` passes; returns true if
     /// the queue drained.
     pub fn run_until(&mut self, deadline: Ps) -> bool {
-        let mut sites = self.hubs.clone();
-        sites.push(self.net.clone());
-        let mut world = HubWorld::new(sites);
+        let mut world = HubWorld::new(self.all_cells());
         self.sim.run_until_world(deadline, &mut world)
     }
 
@@ -427,14 +566,24 @@ impl Fabric {
     /// merge ambiguity that suite guards). `threads == 0` uses the
     /// machine's available parallelism.
     pub fn run_parallel(&mut self, threads: usize) -> RunStats {
+        self.run_parallel_mode(threads, EngineMode::Lookahead)
+    }
+
+    /// [`Fabric::run_parallel`] with an explicit engine mode.
+    /// [`EngineMode::Lookahead`] (the [`Fabric::run_parallel`] default) is
+    /// the windowed engine: per-edge lookahead bounds plus worker-side
+    /// mailboxes for cross-shard route chaining.
+    /// [`EngineMode::Rendezvous`] is the PR 6 reference coordinator —
+    /// zero lookahead, every cross-shard completion rendezvouses — kept
+    /// as the bench baseline. Both are bit-identical to [`Fabric::run`].
+    pub fn run_parallel_mode(&mut self, threads: usize, mode: EngineMode) -> RunStats {
         let threads = if threads == 0 {
             std::thread::available_parallelism().map_or(1, |n| n.get())
         } else {
             threads
         };
-        let mut sites = self.hubs.clone();
-        sites.push(self.net.clone());
-        super::parallel::run_sites_parallel(&mut self.sim, &sites, threads)
+        let sites = self.all_cells();
+        super::parallel::run_sites_parallel(&mut self.sim, &sites, threads, mode)
     }
 
     pub fn now(&self) -> Ps {
@@ -480,9 +629,11 @@ impl Fabric {
     }
 
     /// Multi-hop routes still in flight (0 after a drained run unless a
-    /// hop deadlocked on an unreleased barrier).
+    /// hop deadlocked on an unreleased barrier). Each live route has
+    /// exactly one leg in some site's continuation arena, so this is the
+    /// sum of the per-site live route-leg counters.
     pub fn routes_in_flight(&self) -> usize {
-        self.route_conts.borrow().len()
+        self.sites().map(|(_, st)| st.borrow().route_live).sum::<u64>() as usize
     }
 
     /// Partial-reconfiguration swaps reserved across every hub's operator
@@ -581,34 +732,6 @@ impl Fabric {
     }
 }
 
-/// Advance a parked route: submit the next hop on its site with the route
-/// slot as its completion action, or — hops exhausted — vacate the slot
-/// and run the final callback. Called inline from the completing hop's
-/// `advance`, so the next hop is submitted at the exact event-queue
-/// position the old boxed-closure chain used (golden traces unchanged).
-pub(crate) fn next_hop(routes: RouteTable, sim: &mut Sim, at: Ps, slot: u32) {
-    let mut table = routes.borrow_mut();
-    let hop = table.get_mut(slot).expect("route vacated early").hops.next();
-    drop(table);
-    match hop {
-        Some((st, desc)) => {
-            let done = DoneAction::FabricHop { routes, slot };
-            submit_cont(&st, sim, at, desc, done);
-        }
-        None => {
-            // defer the final callback one event, exactly like the old
-            // closure chain (and the empty-route path above) did: it must
-            // not jump ahead of work already queued at this timestamp
-            let route = routes.borrow_mut().remove(slot);
-            let done = route.done;
-            sim.at(at, move |s| {
-                let now = s.now();
-                done(s, now);
-            });
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -681,11 +804,13 @@ mod tests {
     }
 
     #[test]
-    fn route_table_slots_are_recycled() {
-        // sequential waves of routes reuse the same table slots: the route
-        // arena's total capacity stays at the per-wave concurrency
+    fn route_conts_are_recycled_across_waves() {
+        // sequential waves of routes reuse the same continuation slots:
+        // each route has exactly one live leg at a time, the legs ride the
+        // net's slab, and identical waves must not grow its capacity
         let mut fab = two_hub();
         let (a, b) = (HubId(0), HubId(1));
+        let mut cap = 0usize;
         for wave in 0..5u64 {
             for i in 0..4u64 {
                 let qos = QosSpec::default();
@@ -696,7 +821,13 @@ mod tests {
             }
             fab.run();
             assert_eq!(fab.routes_in_flight(), 0);
-            assert!(fab.route_conts.borrow().capacity() <= 4, "route arena grew");
+            let c = fab.with_net(|st| st.cont_arena_capacity());
+            if wave == 0 {
+                cap = c;
+                assert!(cap <= 8, "first wave needs at most its own legs");
+            } else {
+                assert_eq!(c, cap, "net continuation arena grew across identical waves");
+            }
         }
         assert_eq!(fab.total_completed(), 5 * 4 * 2);
     }

@@ -55,7 +55,8 @@ use crate::sim::time::{to_us, Ps};
 use crate::sim::{ContSlot, Event, ResourceId, Sim, World};
 use crate::util::Slab;
 
-pub use fabric::{Fabric, FabricConfig, Hop, HubId, RouteDesc, Site, TraceEntry};
+pub use fabric::{Fabric, FabricConfig, Hop, HopBilling, HubId, RouteDesc, Site, TraceEntry};
+pub use parallel::EngineMode;
 pub use reconfig::{
     OperatorKind, OperatorRates, Placement, ReconfigConfig, ReconfigPolicy, Region, RegionPlane,
 };
@@ -178,14 +179,15 @@ pub struct Completion {
 /// Boxed completion callback: what every descriptor runs when it finishes.
 pub type DoneFn = Box<dyn FnOnce(&mut Sim, Ps)>;
 
-/// What happens when a descriptor's last stage completes. Routes chain
-/// hops without boxing a fresh closure per hop: the route table slot is
-/// the whole continuation state.
+/// What happens when a descriptor's last stage completes. Routes carry
+/// their remaining hops *in* the continuation (no shared table, no boxed
+/// closure per hop), so the parallel engine can classify a completion's
+/// cross-shard reach before executing it (DESIGN.md §11).
 enum DoneAction {
     /// run the app's completion callback
     Call(DoneFn),
-    /// submit the next hop of a multi-hop fabric route (ISSUE 3/4)
-    FabricHop { routes: fabric::RouteTable, slot: u32 },
+    /// chain to the next hop of a multi-hop fabric route (ISSUE 3/7)
+    Route(fabric::RouteCont),
 }
 
 /// A descriptor in flight: remaining stages + completion action. Lives in
@@ -197,6 +199,11 @@ struct Continuation {
     label: u64,
     qos: QosSpec,
     t0: Ps,
+    /// injection-time hop billing (DESIGN.md §11): true when the pending
+    /// head `Xfer` stage's fixed hop latency has already been charged —
+    /// the next `Advance` fires `inject_ps` after the transfer reached
+    /// the link and must back-date its reservation to the arrival.
+    hop_charged: bool,
 }
 
 /// What a parked continuation was waiting to do when its grant arrives.
@@ -263,6 +270,20 @@ pub struct HubState {
     pub tenants: Vec<TenantAccount>,
     pub submitted: u64,
     pub completed: u64,
+    /// static per-edge lookahead this site promises the parallel engine
+    /// (DESIGN.md §11), indexed by target site: every route continuation
+    /// a shard worker executes injects into site `i` no earlier than
+    /// `inject >= la_to[i]` past its own clock. Empty (all zeros) outside
+    /// a fabric.
+    la_to: Vec<Ps>,
+    /// live continuations whose completion could inject into another site
+    /// with less than the promised lookahead — an app callback, or a
+    /// route whose chain re-emerges cross-site under `la_to` (DESIGN.md
+    /// §11). While this is non-zero the parallel engine drops this
+    /// shard's lookahead to zero in every other shard's window bound.
+    hazards: u64,
+    /// live route legs on this site (each in-flight route has exactly one)
+    route_live: u64,
 }
 
 impl HubState {
@@ -285,6 +306,39 @@ impl HubState {
             tenants: Vec::new(),
             submitted: 0,
             completed: 0,
+            la_to: Vec::new(),
+            hazards: 0,
+            route_live: 0,
+        }
+    }
+
+    /// Lookahead this site promises for injections into `site` (0 outside
+    /// a fabric or for unknown targets).
+    #[inline]
+    fn lookahead_to(&self, site: u32) -> Ps {
+        self.la_to.get(site as usize).copied().unwrap_or(0)
+    }
+
+    /// Would a live continuation with this completion action defeat the
+    /// promised lookahead? App callbacks can submit anywhere at their
+    /// completion instant; a route is safe only if its chain first leaves
+    /// this site through a hop whose injection charge covers the promise
+    /// (local hops chain at zero delay, so they are scanned through), and
+    /// a chain that *ends* here with a callback is a hazard for the same
+    /// reason. Depends only on the immutable done action and the static
+    /// lookahead row, so the submit-time increment and the completion-
+    /// time decrement always agree.
+    fn done_is_hazard(&self, done: &DoneAction) -> bool {
+        match done {
+            DoneAction::Call(_) => true,
+            DoneAction::Route(rc) => {
+                for hop in rc.hops.as_slice() {
+                    if hop.site != self.site {
+                        return hop.inject < self.lookahead_to(hop.site);
+                    }
+                }
+                rc.done.is_some()
+            }
         }
     }
 
@@ -334,7 +388,26 @@ impl HubState {
         post_ps: Ps,
         policy: ArbPolicy,
     ) -> LinkId {
-        self.links.push(FifoLink::new(name, gbps, post_ps));
+        self.register_link_inject(name, gbps, post_ps, 0, policy)
+    }
+
+    /// Register a link whose fixed latency is charged at injection time
+    /// (the fabric mesh under [`fabric::HopBilling::Injection`]). Only
+    /// eager policies may carry an injection charge — the park/grant path
+    /// would observe the shifted event clock instead of the arrival.
+    fn register_link_inject(
+        &mut self,
+        name: &'static str,
+        gbps: f64,
+        post_ps: Ps,
+        inject_ps: Ps,
+        policy: ArbPolicy,
+    ) -> LinkId {
+        assert!(
+            inject_ps == 0 || policy.build().eager(),
+            "injection-time hop billing requires an eager (FCFS) link policy"
+        );
+        self.links.push(FifoLink::with_inject(name, gbps, post_ps, inject_ps));
         self.link_arb.push(policy.build());
         self.links.len() - 1
     }
@@ -619,20 +692,56 @@ fn submit_cont(
 ) {
     // the engine clamps to now, so the first Advance fires exactly at `at`
     let at = at.max(sim.now());
-    let (site, slot) = {
+    submit_cont_at(state, sim, at, desc, done);
+}
+
+/// [`submit_cont`] with `at` taken verbatim as the submission instant —
+/// the route-chaining path, where `at` is the previous leg's completion
+/// time and must stamp `t0` even when the engine doing the submitting
+/// (a parallel shard whose clock ran ahead under lookahead) is already
+/// past it. The first *event* still lands at `at + inject` — at or ahead
+/// of every caller's clock.
+fn submit_cont_at(
+    state: &Rc<RefCell<HubState>>,
+    sim: &mut Sim,
+    at: Ps,
+    desc: TransferDesc,
+    done: DoneAction,
+) {
+    let (site, slot, first_at) = {
         let mut st = state.borrow_mut();
         st.submitted += 1;
         st.tenant_mut(desc.qos.tenant).submitted += 1;
+        if st.done_is_hazard(&done) {
+            st.hazards += 1;
+        }
+        if matches!(done, DoneAction::Route(_)) {
+            st.route_live += 1;
+        }
+        // injection-time hop billing (DESIGN.md §11): a leg that opens
+        // with an Xfer on an inject-charged link fires its first event
+        // `inject_ps` late, pre-marked charged; the consume path in
+        // `advance` back-dates the reservation to `at`, so billing — and
+        // `t0` — are exactly the submission-instant values
+        let inj = match desc.stages.first() {
+            Some(&Stage::Xfer { link, .. }) => st.links[link].inject_ps,
+            _ => 0,
+        };
         let cont = Continuation {
             stages: desc.stages.into_iter(),
             done,
             label: desc.label,
             qos: desc.qos,
             t0: at,
+            hop_charged: inj > 0,
         };
-        (st.site, st.conts.insert(cont))
+        (st.site, st.conts.insert(cont), at + inj)
     };
-    sim.schedule(at, Event::Advance { site, slot });
+    // `inject` rather than `schedule`: first_at must be at or ahead of the
+    // receiving engine's clock in every context (sequential submission,
+    // worker-local chaining, coordinator mailbox delivery) — assert it
+    // instead of letting the clamp silently rewrite a broken lookahead
+    sim.inject(first_at, Event::Advance { site, slot });
 }
 
 /// The dispatch context for typed engine events: site index → state cell.
@@ -655,23 +764,30 @@ impl HubWorld {
 
 impl World for HubWorld {
     fn dispatch(&mut self, sim: &mut Sim, ev: Event) {
-        match ev {
+        let routed = match ev {
             Event::Advance { site, slot } => advance(&self.sites[site as usize], sim, slot),
-            Event::GrantNext { site, res } => grant_next(&self.sites[site as usize], sim, res),
+            Event::GrantNext { site, res } => {
+                grant_next(&self.sites[site as usize], sim, res);
+                None
+            }
             Event::NvmeComplete { site, q, slot } => {
                 let st = &self.sites[site as usize];
                 on_nvme_complete(st, sim, q as usize);
-                advance(st, sim, slot);
+                advance(st, sim, slot)
             }
             Event::RegionSwapDone { site, region } => {
                 self.sites[site as usize].borrow_mut().regions.commit_swap(region as usize);
+                None
             }
             Event::RegionDone { site, region, slot } => {
                 let st = &self.sites[site as usize];
                 st.borrow_mut().regions.release(region as usize);
-                advance(st, sim, slot);
+                advance(st, sim, slot)
             }
             Event::Closure(_) => unreachable!("the engine runs closures itself"),
+        };
+        if let Some(rd) = routed {
+            fabric::route_step(&self.sites, sim, rd);
         }
     }
 }
@@ -810,14 +926,50 @@ enum After {
 /// is a typed event on the shared clock, so competing descriptors
 /// interleave in time order — in exactly the insertion order the boxed
 /// closure engine produced (the golden traces pin this).
-fn advance(st: &Rc<RefCell<HubState>>, sim: &mut Sim, slot: ContSlot) {
+///
+/// A completed fabric route leg is returned to the caller instead of
+/// being chained inline: the dispatch context (sequential world, or the
+/// parallel engine's worker/batch paths) owns the site table and decides
+/// where — and through which lane — the next hop is submitted.
+fn advance(st: &Rc<RefCell<HubState>>, sim: &mut Sim, slot: ContSlot) -> Option<fabric::RouteDone> {
     let now = sim.now();
     let (site, after) = {
         let mut guard = st.borrow_mut();
         let state = &mut *guard;
-        let (stage, qos) = {
+        // injection-time hop billing (DESIGN.md §11): an Xfer on an
+        // inject-charged link executes in two phases. *Arm*: the Advance
+        // that would pop it instead marks the hop charged and refires
+        // `inject_ps` later, leaving the stage in place. *Consume*: the
+        // delayed Advance pops it and bills as of the arrival instant
+        // `now - inject_ps` — `reserve` takes `max(arrival, busy_until)`,
+        // so start/busy-chain/delivered are bit-identical to charging
+        // inside the leg, while the event itself landed `inject_ps` into
+        // this shard's future (the lookahead the parallel engine uses).
+        let (stage, qos, arrival) = {
             let c = state.conts.get_mut(slot).expect("advance on a dead continuation");
-            (c.stages.next(), c.qos)
+            let mut arrival = now;
+            let mut arm = None;
+            if let Some(&Stage::Xfer { link, .. }) = c.stages.as_slice().first() {
+                let inj = state.links[link].inject_ps;
+                if inj > 0 {
+                    if c.hop_charged {
+                        c.hop_charged = false;
+                        arrival = now - inj;
+                    } else {
+                        c.hop_charged = true;
+                        arm = Some(now + inj);
+                    }
+                }
+            }
+            match arm {
+                Some(at) => {
+                    let site = state.site;
+                    drop(guard);
+                    sim.schedule(at, Event::Advance { site, slot });
+                    return None;
+                }
+                None => (c.stages.next(), c.qos, arrival),
+            }
         };
         let after = match stage {
             None => {
@@ -832,6 +984,12 @@ fn advance(st: &Rc<RefCell<HubState>>, sim: &mut Sim, slot: ContSlot) {
                 let acct = state.tenant_mut(c.qos.tenant);
                 acct.completed += 1;
                 acct.lat.record(to_us(now - c.t0));
+                if state.done_is_hazard(&c.done) {
+                    state.hazards -= 1;
+                }
+                if matches!(c.done, DoneAction::Route(_)) {
+                    state.route_live -= 1;
+                }
                 After::Done(c)
             }
             Some(Stage::Delay(d)) => After::At(now.saturating_add(d)),
@@ -841,12 +999,14 @@ fn advance(st: &Rc<RefCell<HubState>>, sim: &mut Sim, slot: ContSlot) {
                 // pre-arbitration busy_until chain, including event
                 // ordering. Other policies serve at once only when idle and
                 // uncontended; contended requests park and are granted by
-                // policy.
-                let idle = state.links[link].busy_until() <= now;
+                // policy. (`arrival == now` except on inject-charged links,
+                // which are FCFS by construction — the park path below
+                // never observes a back-dated arrival.)
+                let idle = state.links[link].busy_until() <= arrival;
                 let eager = state.link_arb[link].eager()
                     || (idle && state.link_arb[link].is_empty());
                 if eager {
-                    let (_, delivered) = state.links[link].reserve(now, bytes);
+                    let (_, delivered) = state.links[link].reserve(arrival, bytes);
                     state.tenant_mut(qos.tenant).bytes_moved += bytes;
                     After::At(delivered)
                 } else {
@@ -926,9 +1086,7 @@ fn advance(st: &Rc<RefCell<HubState>>, sim: &mut Sim, slot: ContSlot) {
     match after {
         After::Done(c) => match c.done {
             DoneAction::Call(f) => f(sim, now),
-            DoneAction::FabricHop { routes, slot: route } => {
-                fabric::next_hop(routes, sim, now, route)
-            }
+            DoneAction::Route(rc) => return Some(fabric::RouteDone { at: now, cont: rc }),
         },
         After::At(at) => sim.schedule(at, Event::Advance { site, slot }),
         After::Grant(at, res) => sim.schedule(at, Event::GrantNext { site, res }),
@@ -949,6 +1107,7 @@ fn advance(st: &Rc<RefCell<HubState>>, sim: &mut Sim, slot: ContSlot) {
         }
         After::Parked => {}
     }
+    None
 }
 
 /// Park the continuation at `slot` on a link/pool arbiter. If it is the

@@ -1,4 +1,5 @@
-//! Conservative parallel execution of a multi-site fabric (ISSUE 6).
+//! Conservative parallel execution of a multi-site fabric (ISSUE 6,
+//! lookahead + mailboxes in ISSUE 7).
 //!
 //! Each site of a [`Fabric`](super::Fabric) — the N hubs plus the
 //! interconnect (shard index N) — becomes a *shard*: its own
@@ -17,36 +18,60 @@
 //! * **Cross-shard effects happen only at completions.** The only code
 //!   that can put an event on *another* shard is a descriptor's
 //!   completion action — an app callback or a route's next hop — and the
-//!   closure escape hatch. These *boundary* events are recognizable
-//!   before execution (the continuation's stage iterator is empty), so a
-//!   worker stashes one and pauses instead of running it.
-//! * **Injections originate at frontiers and never move backwards.** A
-//!   completion submits the next leg at exactly its own timestamp (the
-//!   wire + `hop_ns` cost of a leg is paid *inside* that leg's
-//!   descriptor), and a chain of completions — hub → interconnect → hub —
-//!   adds no minimum latency (a barrier-only interconnect leg completes
-//!   at its arrival instant). So the earliest *future* injection into a
-//!   shard is bounded below by the minimum frontier of all *other*
-//!   shards: every cascade starts at some shard's boundary event, at or
-//!   after that shard's frontier, and only gains time from there. A
-//!   shard's own cascades are excluded from its bound — it never executes
-//!   past its own stash, so a chain it originates lands at or after its
-//!   own clock.
+//!   closure escape hatch. Completions are recognizable before execution
+//!   (the continuation's stage iterator is empty), so the classifier can
+//!   split them: app callbacks and lookahead-breaking route legs are
+//!   *boundary* events (stash and pause), while route legs that carry
+//!   their edge's full lookahead are worker-executable.
+//! * **Injection billing buys per-edge lookahead.** Under the fabric's
+//!   default [`HopBilling::Injection`](super::HopBilling) a mesh leg's
+//!   fixed `hop_ns` is charged at injection: a route leg handed from a
+//!   hub to the interconnect has its first event `hop_ns` past the
+//!   completion that produced it. That is a *static, per-edge* promise —
+//!   the lookahead matrix `la[src][dst]` (hub→net rows carry `hop_ns`,
+//!   everything else 0) — so shard `i`'s window bound becomes
+//!   `min over other shards s of (frontier(s) + la_eff[s][i])` instead of
+//!   the raw minimum frontier.
+//! * **Hazards zero a row, not the engine.** The promise only covers
+//!   continuations whose completion action stays inside it: a detached
+//!   route leg, or a chain whose first cross-site hop opens with a mesh
+//!   transfer carrying at least the edge's lookahead. Anything else — an
+//!   app callback, a barrier-only interconnect leg, a terminal route
+//!   callback — is counted per shard at submit time
+//!   (`HubState::hazards`); while a shard holds any, its lookahead row is
+//!   treated as zero. Workers cannot create a hazard mid-window: a
+//!   worker only chains *local* hops, which the hazard walk skips, so a
+//!   chained child has exactly its parent's classification; cross-shard
+//!   legs are submitted only by the coordinator between windows, before
+//!   bounds are recomputed.
 //!
-//! A coordinator (the calling thread) alternates two phases. In a *window*
-//! it publishes per-shard inclusive bounds — `min(control head, minimum
-//! frontier among the other shards)`, where a shard's *frontier* is the
-//! earlier of its stash and its queue head — and the workers drain their
-//! queues up to the bound, pausing at boundary events. At a *boundary batch* (no shard can
-//! move) it executes everything at the globally minimal timestamp in
-//! canonical order — sites swept in index order, each popping the earlier
-//! of its stash and its queue head (stash wins ties: it was the FIFO head
-//! at that timestamp), boxed closures last in schedule order — against a
-//! staging `Sim`, then routes the events that execution produced to their
-//! target shards. Every routed event is checked against the target
-//! shard's clock — a schedule that injects into a shard's past
-//! (zero-lookahead hub→hub traffic) is a hard error, not a silent
-//! reorder.
+//! A coordinator (the calling thread) alternates phases. In a *window* it
+//! publishes the per-shard bounds above and the workers drain their
+//! queues, pausing at boundary events; a worker that executes a
+//! lookahead-carrying completion chains a local next hop immediately and
+//! drops a cross-shard one into a per-edge *mailbox* (its first event
+//! lies at least the edge's lookahead past the target's bound, so
+//! delivering it mid-window could never unblock the target — no
+//! rendezvous needed). Between windows the coordinator delivers every
+//! mailbox in canonical order — sorted by (completion time, source site,
+//! destination, push index), the same source-index sweep the batch path
+//! uses — and recomputes frontiers and bounds; if the delivered events
+//! leave slack under the new bounds the next window opens immediately
+//! (window extension), with no boundary batch in between. Only when no
+//! window can open does it run a *boundary batch*: everything at the
+//! globally minimal timestamp in canonical order — sites swept in index
+//! order, each popping the earlier of its stash and its queue head
+//! (stash wins ties: it was the FIFO head at that timestamp), boxed
+//! closures last in schedule order — against a staging `Sim`, then routes
+//! the events that execution produced to their target shards. Every
+//! cross-shard event is checked against the target shard's clock
+//! ([`Sim::inject`]) — a schedule that injects into a shard's past is a
+//! hard error, not a silent reorder.
+//!
+//! [`EngineMode::Rendezvous`] switches the classifier back to "every
+//! completion is a boundary" with an all-zero lookahead matrix — the
+//! ISSUE 6 coordinator, kept as the bench baseline. Both modes are
+//! bit-identical to the sequential engine on the committed scenarios.
 //!
 //! **Ordering argument and its limit.** Per-shard FIFO order is preserved
 //! unconditionally, and because the clock only moves forward, two events
@@ -55,14 +80,14 @@
 //! interleaving the split cannot reconstruct is between two same-time
 //! events on one shard that were *created at that same timestamp by
 //! different sites* — e.g. a cross-site injection at `t` racing a local
-//! follow-up also scheduled at `t` (a barrier release, a same-instant
-//! grant chain). The batch resolves such ties in the canonical order
-//! above: deterministic at every thread count, but not guaranteed to be
-//! the sequential insertion order, so if the two events contend for the
-//! same arbiter the service order — and downstream `done_at` stamps — can
-//! differ from `Fabric::run` while all timestamps stay equal.
-//! `tests/determinism.rs` re-runs every committed golden scenario on this
-//! engine at several thread counts and asserts hash identity with the
+//! follow-up also scheduled at `t`. Windows, mailboxes and batches all
+//! resolve such ties in the canonical order above: deterministic at every
+//! thread count, but not guaranteed to be the sequential insertion order,
+//! so if the two events contend for the same arbiter the service order —
+//! and downstream `done_at` stamps — can differ from `Fabric::run` while
+//! all timestamps stay equal. `tests/determinism.rs` re-runs every
+//! committed golden scenario on this engine at several thread counts
+//! (including oversubscribed ones) and asserts hash identity with the
 //! sequential run — that suite is the oracle that the committed workload
 //! grammar does not hit the ambiguous case; a workload that does should
 //! run sequentially.
@@ -78,37 +103,111 @@ use std::collections::BTreeMap;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 use std::thread;
 
 use crate::sim::time::Ps;
 use crate::sim::{Action, Event, Sim};
 
-use super::{advance, grant_next, on_nvme_complete, HubState, RunStats};
+use super::fabric::{route_step, RouteCont, RouteDone};
+use super::{
+    advance, grant_next, on_nvme_complete, submit_cont_at, DoneAction, HubState, RunStats,
+};
 
 const UNBOUNDED: Ps = Ps::MAX;
 
+/// Which conservative engine drives the shards; see the module docs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Per-edge lookahead bounds plus worker-side mailboxes for
+    /// cross-shard route chaining (ISSUE 7). The default.
+    #[default]
+    Lookahead,
+    /// The ISSUE 6 reference: zero lookahead, every completion is a
+    /// boundary event and rendezvouses through the coordinator. Kept as
+    /// the bench baseline (`benches/bench_scale.rs` reports the speedup
+    /// of `Lookahead` over this at equal thread counts).
+    Rendezvous,
+}
+
+// ---------------------------------------------------- spin thresholds ----
+
+/// Spins in a busy wait before the first `yield_now` (both workers waiting
+/// for a round publish and the coordinator waiting for acks): long enough
+/// to catch a back-to-back handoff without leaving the core.
+pub const SPIN_FAST: u32 = 64;
+/// Worker spins (busy + yielding) before parking between rounds.
+pub const WORKER_SPIN_YIELD: u32 = 512;
+/// Coordinator spins (busy + yielding) before parking in the ack wait —
+/// longer than the workers' threshold because the coordinator's wake is
+/// the rendezvous critical path.
+pub const COORD_SPIN_YIELD: u32 = 1024;
+
+/// Resolved spin thresholds; overridable for oversubscribed runners via
+/// `FPGAHUB_SPIN_FAST`, `FPGAHUB_SPIN_YIELD` and `FPGAHUB_COORD_SPIN_YIELD`
+/// (set all three to 0 to park immediately and never burn a core).
+#[derive(Clone, Copy)]
+struct SpinConfig {
+    fast: u32,
+    worker_yield: u32,
+    coord_yield: u32,
+}
+
+static SPIN: OnceLock<SpinConfig> = OnceLock::new();
+
+fn spin_config() -> SpinConfig {
+    *SPIN.get_or_init(|| {
+        let get = |name: &str, default: u32| {
+            std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+        };
+        SpinConfig {
+            fast: get("FPGAHUB_SPIN_FAST", SPIN_FAST),
+            worker_yield: get("FPGAHUB_SPIN_YIELD", WORKER_SPIN_YIELD),
+            coord_yield: get("FPGAHUB_COORD_SPIN_YIELD", COORD_SPIN_YIELD),
+        }
+    })
+}
+
+// --------------------------------------------------------------- shards ----
+
 /// One site's share of the split event queue: its state cell, a private
-/// engine holding its pending events and clock, and the boundary event its
-/// worker paused on (at most one).
+/// engine holding its pending events and clock, the boundary event its
+/// worker paused on (at most one), and the per-destination mailboxes its
+/// worker fills inside a window.
 struct Shard {
+    /// this shard's site index (== position in the shard array)
+    site: usize,
     cell: Rc<RefCell<HubState>>,
     sim: Sim,
     stash: Option<(Ps, Event)>,
+    /// per-edge SPSC mailboxes, indexed by destination shard: completed
+    /// route legs whose next hop is cross-shard, pushed by this shard's
+    /// worker during a window, drained by the coordinator between windows
+    outbox: Vec<Vec<(Ps, RouteCont)>>,
+    /// cached [`Shard::frontier`]; recomputed only when `dirty`
+    front: Ps,
+    /// set by every queue/stash mutation (pops, stashes, injections), so
+    /// the coordinator's per-round frontier fold stops re-peeking idle
+    /// shards' calendar queues
+    dirty: bool,
 }
 
 impl Shard {
-    /// Earliest time this shard could next execute — or inject, since
-    /// injections come only from boundary events, which pause the shard.
+    /// Earliest time this shard could next execute — or originate an
+    /// injection, since those come only from events at or after this.
     /// A boundary batch can route an event *behind* an existing stash
     /// (anywhere at or after the shard's clock), so the frontier is the
     /// earlier of the stash and the queue head, not just the stash.
     fn frontier(&mut self) -> Ps {
-        let head = self.sim.peek_pending_time().unwrap_or(UNBOUNDED);
-        match &self.stash {
-            Some((t, _)) => (*t).min(head),
-            None => head,
+        if self.dirty {
+            let head = self.sim.peek_pending_time().unwrap_or(UNBOUNDED);
+            self.front = match &self.stash {
+                Some((t, _)) => (*t).min(head),
+                None => head,
+            };
+            self.dirty = false;
         }
+        self.front
     }
 
     /// Pop this shard's earliest ready item — the earlier of the stash
@@ -130,26 +229,38 @@ impl Shard {
                 self.stash = Some((t, ev));
                 return None;
             }
+            self.dirty = true;
             Some((t, ev))
         } else {
-            self.sim.pop_pending_up_to(bound)
+            let popped = self.sim.pop_pending_up_to(bound);
+            if popped.is_some() {
+                self.dirty = true;
+            }
+            popped
         }
     }
 }
 
-/// Would executing `ev` run a completion action (or a boxed closure) —
-/// i.e. possibly touch another shard? Decidable before execution: the
-/// continuation's stage iterator is empty exactly when the next `advance`
-/// runs its `DoneAction`.
-fn is_boundary(st: &HubState, ev: &Event) -> bool {
-    let completes = |slot: u32| match st.conts.get(slot) {
-        Some(c) => c.stages.as_slice().is_empty(),
+/// Would executing `ev` rendezvous through the coordinator? Decidable
+/// before execution: the continuation's stage iterator is empty exactly
+/// when the next `advance` runs its `DoneAction`. Under
+/// [`EngineMode::Rendezvous`] every completion is a boundary; under
+/// [`EngineMode::Lookahead`] only hazard completions are — an app
+/// callback, a terminal route callback, or a chain whose first cross-site
+/// hop does not carry that edge's full lookahead
+/// (`HubState::done_is_hazard`).
+fn is_boundary(st: &HubState, ev: &Event, mode: EngineMode) -> bool {
+    let completes_as_boundary = |slot: u32| match st.conts.get(slot) {
+        Some(c) => {
+            c.stages.as_slice().is_empty()
+                && (mode == EngineMode::Rendezvous || st.done_is_hazard(&c.done))
+        }
         None => true,
     };
     match *ev {
-        Event::Advance { slot, .. } => completes(slot),
-        Event::NvmeComplete { slot, .. } => completes(slot),
-        Event::RegionDone { slot, .. } => completes(slot),
+        Event::Advance { slot, .. } => completes_as_boundary(slot),
+        Event::NvmeComplete { slot, .. } => completes_as_boundary(slot),
+        Event::RegionDone { slot, .. } => completes_as_boundary(slot),
         Event::GrantNext { .. } | Event::RegionSwapDone { .. } => false,
         // closures never reach shard queues (routing sends them to the
         // control lane), but classify defensively
@@ -158,48 +269,91 @@ fn is_boundary(st: &HubState, ev: &Event) -> bool {
 }
 
 /// Execute one event against `cell` — the per-shard mirror of
-/// `HubWorld::dispatch`, minus the site lookup.
-fn dispatch_on(cell: &Rc<RefCell<HubState>>, sim: &mut Sim, ev: Event) {
+/// `HubWorld::dispatch`, minus the site lookup. A completed route leg
+/// comes back as [`RouteDone`] for the caller to chain in its own
+/// context (worker mailboxes, or the coordinator's staging engine).
+fn dispatch_on(cell: &Rc<RefCell<HubState>>, sim: &mut Sim, ev: Event) -> Option<RouteDone> {
     debug_assert!(
         ev.site().map(|s| s == cell.borrow().site).unwrap_or(true),
         "event routed to wrong shard"
     );
     match ev {
         Event::Advance { slot, .. } => advance(cell, sim, slot),
-        Event::GrantNext { res, .. } => grant_next(cell, sim, res),
+        Event::GrantNext { res, .. } => {
+            grant_next(cell, sim, res);
+            None
+        }
         Event::NvmeComplete { q, slot, .. } => {
             on_nvme_complete(cell, sim, q as usize);
-            advance(cell, sim, slot);
+            advance(cell, sim, slot)
         }
         Event::RegionSwapDone { region, .. } => {
             cell.borrow_mut().regions.commit_swap(region as usize);
+            None
         }
         Event::RegionDone { region, slot, .. } => {
             cell.borrow_mut().regions.release(region as usize);
-            advance(cell, sim, slot);
+            advance(cell, sim, slot)
         }
-        Event::Closure(act) => act(sim),
+        Event::Closure(act) => {
+            act(sim);
+            None
+        }
+    }
+}
+
+/// Chain a route leg a *worker* completed inside its window: a local next
+/// hop is submitted straight into the shard (same instant and billing as
+/// the sequential engine); a cross-shard hop goes into the per-edge
+/// mailbox for the coordinator to deliver between windows — its first
+/// event lies at least the edge's lookahead past the target's bound, so
+/// mid-window delivery could never unblock the target anyway; a detached
+/// terminal is dropped. Classification guarantees a terminal *callback*
+/// never reaches a worker (hazard → boundary), so no app code — and no
+/// `Rc` clone or drop — ever runs here.
+fn worker_route(shard: &mut Shard, rd: RouteDone) {
+    let RouteDone { at, mut cont } = rd;
+    let next_site = cont.hops.as_slice().first().map(|h| h.site as usize);
+    match next_site {
+        None => {
+            assert!(cont.done.is_none(), "terminal callback escaped boundary classification");
+        }
+        Some(s) if s == shard.site => {
+            let hop = cont.hops.next().expect("peeked above");
+            submit_cont_at(&shard.cell, &mut shard.sim, at, hop.desc, DoneAction::Route(cont));
+        }
+        Some(s) => shard.outbox[s].push((at, cont)),
     }
 }
 
 /// Drain one shard inside its window: execute local events with times
 /// `<= bound`, pausing on the first boundary event. Runs on workers —
-/// the local paths never clone or drop an `Rc` and never call app code,
-/// so no shared refcount is touched off the coordinator thread.
-fn run_shard(shard: &mut Shard, bound: Ps) {
+/// the local paths never clone or drop an `Rc` and never call app code
+/// (boxed route callbacks are only ever *moved*, through the mailbox,
+/// back to the coordinator), so no shared refcount is touched off the
+/// coordinator thread.
+fn run_shard(shard: &mut Shard, bound: Ps, mode: EngineMode) {
     if shard.stash.is_some() {
         return;
     }
     while let Some((t, ev)) = shard.sim.pop_pending_up_to(bound) {
-        if is_boundary(&shard.cell.borrow(), &ev) {
+        shard.dirty = true;
+        if is_boundary(&shard.cell.borrow(), &ev, mode) {
             shard.stash = Some((t, ev));
             return;
         }
         shard.sim.note_fired(t);
-        let Shard { cell, sim, .. } = shard;
-        dispatch_on(cell, sim, ev);
+        let routed = {
+            let Shard { cell, sim, .. } = &mut *shard;
+            dispatch_on(cell, sim, ev)
+        };
+        if let Some(rd) = routed {
+            worker_route(shard, rd);
+        }
     }
 }
+
+// ------------------------------------------------- coordinator plumbing ----
 
 /// The boxed-closure lane: `Sim::at` events keyed by (time, schedule
 /// sequence) so they fire in exact schedule order, after same-time typed
@@ -207,49 +361,95 @@ fn run_shard(shard: &mut Shard, bound: Ps) {
 /// inserted behind the typed events already pending at that time.
 type ControlLane = BTreeMap<(Ps, u64), Action>;
 
+/// The closure lane plus its schedule-sequence counter.
+struct Control {
+    lane: ControlLane,
+    seq: u64,
+}
+
 /// Hand a freshly produced event to its owner: typed events to their
 /// site's shard (behind anything already queued there at the same time —
-/// the shared-queue FIFO position), closures to the control lane.
-fn route_event(t: Ps, ev: Event, shards: &mut [Shard], control: &mut ControlLane, seq: &mut u64) {
+/// the shared-queue FIFO position; [`Sim::inject`] hard-checks the
+/// target's clock), closures to the control lane.
+fn route_event(t: Ps, ev: Event, shards: &mut [Shard], ctl: &mut Control) {
     match ev {
         Event::Closure(act) => {
-            control.insert((t, *seq), act);
-            *seq += 1;
+            ctl.lane.insert((t, ctl.seq), act);
+            ctl.seq += 1;
         }
         ev => {
             let site = ev.site().expect("typed events carry a site") as usize;
             let shard = &mut shards[site];
-            assert!(
-                t >= shard.sim.now(),
-                "parallel engine: cross-shard event for site {site} at {t} ps is behind that \
-                 shard's clock ({} ps) — the schedule has zero-lookahead cross-hub injection \
-                 the conservative engine cannot order; run this workload sequentially",
-                shard.sim.now()
-            );
-            shard.sim.schedule(t, ev);
+            shard.dirty = true;
+            shard.sim.inject(t, ev);
         }
     }
 }
 
+/// One mailbox message in the coordinator's delivery scratch: a completed
+/// leg plus its canonical ordering key — (completion time, source site,
+/// destination, push index), mirroring the batch path's source-index
+/// sweep so mailbox delivery and rendezvous produce the same merge order.
+struct Msg {
+    at: Ps,
+    src: u32,
+    dest: u32,
+    idx: u32,
+    cont: RouteCont,
+}
+
+/// Deliver everything the workers mailboxed during the last window, in
+/// canonical order, directly into the target shards (counters and `t0`
+/// stamping identical to the sequential chain — `submit_cont_at` inside
+/// [`route_step`]). Runs between windows, before bounds are recomputed,
+/// so delivered hazards tighten the very next bound publication.
+fn drain_outboxes(shards: &mut [Shard], cells: &[Rc<RefCell<HubState>>], scratch: &mut Vec<Msg>) {
+    debug_assert!(scratch.is_empty());
+    for (src, shard) in shards.iter_mut().enumerate() {
+        for (dest, mailbox) in shard.outbox.iter_mut().enumerate() {
+            for (idx, (at, cont)) in mailbox.drain(..).enumerate() {
+                scratch.push(Msg { at, src: src as u32, dest: dest as u32, idx: idx as u32, cont });
+            }
+        }
+    }
+    if scratch.is_empty() {
+        return;
+    }
+    scratch.sort_unstable_by_key(|m| (m.at, m.src, m.dest, m.idx));
+    for m in scratch.drain(..) {
+        let dest = m.dest as usize;
+        debug_assert_eq!(
+            m.cont.hops.as_slice().first().map(|h| h.site),
+            Some(m.dest),
+            "mailbox message filed under the wrong edge"
+        );
+        shards[dest].dirty = true;
+        route_step(cells, &mut shards[dest].sim, RouteDone { at: m.at, cont: m.cont });
+    }
+}
+
 /// Execute one boundary event at `t` on the coordinator: dispatch against
-/// the staging engine (so completion actions schedule into it), then route
-/// everything that execution produced. Only the coordinator runs this —
-/// workers are parked, so app callbacks may clone/drop `Rc` handles and
-/// borrow any site's cell freely.
+/// the staging engine (so completion actions schedule into it), chain any
+/// completed route leg through it, then route everything that execution
+/// produced. Only the coordinator runs this — workers are parked, so app
+/// callbacks may clone/drop `Rc` handles and borrow any site's cell
+/// freely.
 fn exec_boundary(
     staging: &mut Sim,
     shards: &mut [Shard],
+    cells: &[Rc<RefCell<HubState>>],
     site: usize,
     t: Ps,
     ev: Event,
-    control: &mut ControlLane,
-    seq: &mut u64,
+    ctl: &mut Control,
 ) {
     staging.note_fired(t);
     shards[site].sim.force_now(t);
-    dispatch_on(&shards[site].cell, staging, ev);
+    if let Some(rd) = dispatch_on(&shards[site].cell, staging, ev) {
+        route_step(cells, staging, rd);
+    }
     while let Some((t2, ev2)) = staging.pop_pending_up_to(UNBOUNDED) {
-        route_event(t2, ev2, shards, control, seq);
+        route_event(t2, ev2, shards, ctl);
     }
 }
 
@@ -261,9 +461,10 @@ fn exec_boundary(
 fn run_batch(
     staging: &mut Sim,
     shards: &mut [Shard],
-    control: &mut ControlLane,
-    seq: &mut u64,
+    cells: &[Rc<RefCell<HubState>>],
+    ctl: &mut Control,
     t_min: Ps,
+    mode: EngineMode,
 ) {
     loop {
         let mut progressed = false;
@@ -274,25 +475,33 @@ fn run_batch(
                     None => break,
                 };
                 progressed = true;
-                if is_boundary(&shards[site].cell.borrow(), &ev) {
-                    exec_boundary(staging, shards, site, t, ev, control, seq);
+                if is_boundary(&shards[site].cell.borrow(), &ev, mode) {
+                    exec_boundary(staging, shards, cells, site, t, ev, ctl);
                 } else {
-                    let Shard { cell, sim, .. } = &mut shards[site];
-                    sim.note_fired(t);
-                    dispatch_on(cell, sim, ev);
+                    let routed = {
+                        let Shard { cell, sim, .. } = &mut shards[site];
+                        sim.note_fired(t);
+                        dispatch_on(cell, sim, ev)
+                    };
+                    if let Some(rd) = routed {
+                        route_step(cells, staging, rd);
+                        while let Some((t2, ev2)) = staging.pop_pending_up_to(UNBOUNDED) {
+                            route_event(t2, ev2, shards, ctl);
+                        }
+                    }
                 }
             }
         }
         loop {
-            let head = match control.first_key_value() {
+            let head = match ctl.lane.first_key_value() {
                 Some((&(t, s), _)) if t <= t_min => (t, s),
                 _ => break,
             };
-            let act = control.remove(&head).expect("first key exists");
+            let act = ctl.lane.remove(&head).expect("first key exists");
             staging.note_fired(head.0);
             act(staging);
             while let Some((t2, ev2)) = staging.pop_pending_up_to(UNBOUNDED) {
-                route_event(t2, ev2, shards, control, seq);
+                route_event(t2, ev2, shards, ctl);
             }
             progressed = true;
         }
@@ -310,32 +519,52 @@ fn run_batch(
 fn run_solo(
     staging: &mut Sim,
     shards: &mut [Shard],
+    cells: &[Rc<RefCell<HubState>>],
     site: usize,
-    control: &mut ControlLane,
-    seq: &mut u64,
+    ctl: &mut Control,
+    mode: EngineMode,
 ) {
     loop {
         let (t, ev) = match shards[site].pop_ready(UNBOUNDED) {
             Some(item) => item,
             None => return,
         };
-        if is_boundary(&shards[site].cell.borrow(), &ev) {
-            exec_boundary(staging, shards, site, t, ev, control, seq);
-            let spilled = !control.is_empty()
+        // only completions can put work on another lane — pure local
+        // events skip the spill scan below
+        let may_spill = if is_boundary(&shards[site].cell.borrow(), &ev, mode) {
+            exec_boundary(staging, shards, cells, site, t, ev, ctl);
+            true
+        } else {
+            let routed = {
+                let Shard { cell, sim, .. } = &mut shards[site];
+                sim.note_fired(t);
+                dispatch_on(cell, sim, ev)
+            };
+            match routed {
+                Some(rd) => {
+                    route_step(cells, staging, rd);
+                    while let Some((t2, ev2)) = staging.pop_pending_up_to(UNBOUNDED) {
+                        route_event(t2, ev2, shards, ctl);
+                    }
+                    true
+                }
+                None => false,
+            }
+        };
+        if may_spill {
+            let spilled = !ctl.lane.is_empty()
                 || shards
                     .iter_mut()
                     .enumerate()
-                    .any(|(i, s)| i != site && s.sim.peek_pending_time().is_some());
+                    .any(|(i, s)| i != site && s.frontier() != UNBOUNDED);
             if spilled {
                 return;
             }
-        } else {
-            let Shard { cell, sim, .. } = &mut shards[site];
-            sim.note_fired(t);
-            dispatch_on(cell, sim, ev);
         }
     }
 }
+
+// ------------------------------------------------------------ handshake ----
 
 /// Coordinator↔worker handshake: the coordinator publishes per-shard
 /// bounds and bumps `round`; workers drain their shards and ack. All
@@ -374,12 +603,22 @@ impl SyncState {
 /// publish and storing their ack; the coordinator touches shards only
 /// while every ack matches the current round. The `Rc`s inside are never
 /// cloned or dropped on a worker (`run_shard`'s local paths don't, and
-/// completion actions run only on the coordinator).
+/// app callbacks run only on the coordinator — a mailboxed route carries
+/// its boxed terminal callback as a *moved* pointer, never invoked or
+/// dropped off the coordinator).
 struct ShardsPtr(*mut Shard);
 unsafe impl Send for ShardsPtr {}
 unsafe impl Sync for ShardsPtr {}
 
-fn worker_loop(shards: &ShardsPtr, sync: &SyncState, w: usize, n_workers: usize, n_sites: usize) {
+fn worker_loop(
+    shards: &ShardsPtr,
+    sync: &SyncState,
+    w: usize,
+    n_workers: usize,
+    n_sites: usize,
+    mode: EngineMode,
+) {
+    let spin = spin_config();
     let result = catch_unwind(AssertUnwindSafe(|| {
         let mut seen = 0u64;
         loop {
@@ -389,10 +628,10 @@ fn worker_loop(shards: &ShardsPtr, sync: &SyncState, w: usize, n_workers: usize,
                 if r != seen {
                     break r;
                 }
-                spins += 1;
-                if spins < 64 {
+                spins = spins.saturating_add(1);
+                if spins < spin.fast {
                     std::hint::spin_loop();
-                } else if spins < 512 {
+                } else if spins < spin.worker_yield {
                     thread::yield_now();
                 } else {
                     thread::park();
@@ -405,7 +644,7 @@ fn worker_loop(shards: &ShardsPtr, sync: &SyncState, w: usize, n_workers: usize,
             let mut site = w;
             while site < n_sites {
                 let bound = sync.bounds[site].load(Ordering::Relaxed);
-                run_shard(unsafe { &mut *shards.0.add(site) }, bound);
+                run_shard(unsafe { &mut *shards.0.add(site) }, bound, mode);
                 site += n_workers;
             }
             sync.acks[w].store(round, Ordering::Release);
@@ -437,13 +676,14 @@ fn check_worker_panic(sync: &SyncState) {
 }
 
 fn wait_acks(sync: &SyncState, round: u64) {
+    let spin = spin_config();
     for ack in &sync.acks {
         let mut spins = 0u32;
         while ack.load(Ordering::Acquire) != round {
-            spins += 1;
-            if spins < 64 {
+            spins = spins.saturating_add(1);
+            if spins < spin.fast {
                 std::hint::spin_loop();
-            } else if spins < 1024 {
+            } else if spins < spin.coord_yield {
                 thread::yield_now();
             } else {
                 // workers unpark the coordinator after every ack store, so
@@ -460,49 +700,80 @@ fn wait_acks(sync: &SyncState, round: u64) {
     check_worker_panic(sync);
 }
 
-/// The coordinator: alternate windows (workers drain under bounds) and
-/// boundary batches (canonical cross-shard merge) until every lane is dry.
+/// The coordinator: alternate windows (workers drain under lookahead
+/// bounds, mailboxing cross-shard chains), mailbox deliveries (which can
+/// extend straight into the next window), and boundary batches (canonical
+/// cross-shard merge) until every lane is dry.
 fn coordinate(
     staging: &mut Sim,
     shards: &mut [Shard],
-    control: &mut ControlLane,
-    seq: &mut u64,
+    cells: &[Rc<RefCell<HubState>>],
+    ctl: &mut Control,
     sync: &SyncState,
     workers: &[thread::Thread],
+    mode: EngineMode,
 ) {
     let n_sites = shards.len();
+    // the static per-edge lookahead matrix, dense: la[src][dst]. Rows come
+    // from the fabric topology (`HubState::la_to`); Rendezvous mode — and
+    // any site that never filled a row — degrades to all-zero.
+    let la: Vec<Vec<Ps>> = match mode {
+        EngineMode::Rendezvous => vec![vec![0; n_sites]; n_sites],
+        EngineMode::Lookahead => cells
+            .iter()
+            .map(|c| {
+                let st = c.borrow();
+                (0..n_sites).map(|i| st.la_to.get(i).copied().unwrap_or(0)).collect()
+            })
+            .collect(),
+    };
+    let mut scratch: Vec<Msg> = Vec::new();
+    let mut hazard = vec![false; n_sites];
     let mut round = 0u64;
     loop {
-        // exclusive phase: all acks observed, shards are ours
+        // exclusive phase: all acks observed, shards are ours. Deliver the
+        // mailboxes the last window filled *first*, so the frontier and
+        // bound recompute below sees the injected events — when the new
+        // bounds still have slack this reopens a window immediately, with
+        // no boundary batch in between (window extension).
+        drain_outboxes(shards, cells, &mut scratch);
         let frontiers: Vec<Ps> = shards.iter_mut().map(Shard::frontier).collect();
-        let c_head = control.keys().next().map_or(UNBOUNDED, |&(t, _)| t);
+        let c_head = ctl.lane.keys().next().map_or(UNBOUNDED, |&(t, _)| t);
 
         let mut active = (0..n_sites).filter(|&i| frontiers[i] != UNBOUNDED);
         if let (Some(site), None, UNBOUNDED) = (active.next(), active.next(), c_head) {
-            run_solo(staging, shards, site, control, seq);
+            run_solo(staging, shards, cells, site, ctl, mode);
             continue;
         }
 
-        // inclusive bounds: a future injection into shard `i` originates
-        // from some shard's boundary event (at >= that shard's frontier)
-        // or a control closure (at >= c_head), and a cascade — hub → net
-        // → hub — adds no minimum latency (a barrier-only net leg
-        // completes at its arrival instant), so the safe bound for `i` is
-        // the minimum frontier among the *other* shards. `i`'s own
-        // cascades are excluded: it never executes past its own stash, so
-        // a chain it originates lands at or after its own clock.
-        let (mut min1, mut min1_at, mut min2) = (UNBOUNDED, usize::MAX, UNBOUNDED);
-        for (i, &f) in frontiers.iter().enumerate() {
-            if f < min1 {
-                (min2, min1, min1_at) = (min1, f, i);
-            } else if f < min2 {
-                min2 = f;
+        // a shard holding hazard continuations promises nothing this
+        // round: a hazard can complete at the shard's frontier and inject
+        // anywhere at or after it with zero slack. Hazard-free shards
+        // promise their static row, and stay hazard-free for the whole
+        // window (workers only chain local hops, which inherit the
+        // parent's classification).
+        if mode == EngineMode::Lookahead {
+            for (hz, shard) in hazard.iter_mut().zip(shards.iter()) {
+                *hz = shard.cell.borrow().hazards > 0;
             }
         }
+
+        // inclusive per-shard bounds: a future injection into shard `i`
+        // originates from some other shard's completion (at or after that
+        // shard's frontier, plus that edge's effective lookahead) or a
+        // control closure (at or after c_head). `i`'s own cascades are
+        // excluded: it never executes past its own stash, so a chain it
+        // originates lands at or after its own clock.
         let mut any_runnable = false;
         for site in 0..n_sites {
-            let others = if site == min1_at { min2 } else { min1 };
-            let bound = c_head.min(others);
+            let mut bound = c_head;
+            for (s, &f) in frontiers.iter().enumerate() {
+                if s == site {
+                    continue;
+                }
+                let l = if hazard[s] { 0 } else { la[s][site] };
+                bound = bound.min(f.saturating_add(l));
+            }
             sync.bounds[site].store(bound, Ordering::Relaxed);
             let f = frontiers[site];
             if shards[site].stash.is_none() && f != UNBOUNDED && f <= bound {
@@ -528,7 +799,7 @@ fn coordinate(
         if t_min == UNBOUNDED {
             return;
         }
-        run_batch(staging, shards, control, seq, t_min);
+        run_batch(staging, shards, cells, ctl, t_min, mode);
     }
 }
 
@@ -540,6 +811,7 @@ pub(crate) fn run_sites_parallel(
     sim: &mut Sim,
     cells: &[Rc<RefCell<HubState>>],
     threads: usize,
+    mode: EngineMode,
 ) -> RunStats {
     let n_sites = cells.len();
     let n_workers = threads.clamp(1, n_sites);
@@ -548,16 +820,24 @@ pub(crate) fn run_sites_parallel(
 
     let mut shards: Vec<Shard> = cells
         .iter()
-        .map(|cell| {
+        .enumerate()
+        .map(|(site, cell)| {
             let mut shard_sim = Sim::new();
             shard_sim.force_now(now0);
-            Shard { cell: cell.clone(), sim: shard_sim, stash: None }
+            Shard {
+                site,
+                cell: cell.clone(),
+                sim: shard_sim,
+                stash: None,
+                outbox: (0..n_sites).map(|_| Vec::new()).collect(),
+                front: UNBOUNDED,
+                dirty: true,
+            }
         })
         .collect();
-    let mut control: ControlLane = BTreeMap::new();
-    let mut seq = 0u64;
+    let mut ctl = Control { lane: BTreeMap::new(), seq: 0 };
     while let Some((t, ev)) = sim.pop_pending_up_to(UNBOUNDED) {
-        route_event(t, ev, &mut shards, &mut control, &mut seq);
+        route_event(t, ev, &mut shards, &mut ctl);
     }
 
     let sync = SyncState::new(n_workers, n_sites);
@@ -570,14 +850,14 @@ pub(crate) fn run_sites_parallel(
             let handles: Vec<_> = (0..n_workers)
                 .map(|w| {
                     let (ptr, sync) = (&shards_ptr, &sync);
-                    scope.spawn(move || worker_loop(ptr, sync, w, n_workers, n_sites))
+                    scope.spawn(move || worker_loop(ptr, sync, w, n_workers, n_sites, mode))
                 })
                 .collect();
             let workers: Vec<thread::Thread> =
                 handles.iter().map(|h| h.thread().clone()).collect();
 
             let outcome = catch_unwind(AssertUnwindSafe(|| {
-                coordinate(sim, shards, &mut control, &mut seq, &sync, &workers);
+                coordinate(sim, shards, cells, &mut ctl, &sync, &workers, mode);
             }));
 
             // shut the workers down whether the run finished or died —

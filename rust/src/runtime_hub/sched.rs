@@ -398,6 +398,20 @@ pub struct FifoLink {
     pub gbps: f64,
     /// fixed latency paid after serialization (propagation, pipeline flush)
     pub post_ps: Ps,
+    /// injection-time share of the fixed latency (DESIGN.md §11): an
+    /// `Xfer` stage on a link with `inject_ps > 0` fires its engine event
+    /// `inject_ps` *after* the transfer reached the link, and the billing
+    /// path back-dates the reservation to the arrival instant — every
+    /// timestamp (`start`, busy chain, delivered) is bit-identical to
+    /// `inject_ps == 0`, but the event lands that much later on the
+    /// target's clock. The fabric sets this to `hop_ns` on the inter-hub
+    /// mesh so cross-shard injections carry conservative lookahead. Only
+    /// sound on eager (FCFS) links: `reserve(now, ..)` takes
+    /// `max(now, busy_until)`, so a back-dated arrival reproduces the
+    /// exact FIFO chain, while park/grant paths would observe the shifted
+    /// clock. Must be `<= post_ps` so the delayed event never passes the
+    /// delivery it announces.
+    pub inject_ps: Ps,
     busy_until: Ps,
     pub bytes_moved: u64,
     pub grants: u64,
@@ -405,8 +419,15 @@ pub struct FifoLink {
 
 impl FifoLink {
     pub fn new(name: &'static str, gbps: f64, post_ps: Ps) -> Self {
+        Self::with_inject(name, gbps, post_ps, 0)
+    }
+
+    /// A link whose fixed latency is charged at injection time (see
+    /// [`FifoLink::inject_ps`]).
+    pub fn with_inject(name: &'static str, gbps: f64, post_ps: Ps, inject_ps: Ps) -> Self {
         assert!(gbps > 0.0, "link rate must be positive");
-        FifoLink { name, gbps, post_ps, busy_until: 0, bytes_moved: 0, grants: 0 }
+        assert!(inject_ps <= post_ps, "injection share exceeds the link's fixed latency");
+        FifoLink { name, gbps, post_ps, inject_ps, busy_until: 0, bytes_moved: 0, grants: 0 }
     }
 
     /// Pure serialization time of `bytes` at this link's rate.

@@ -203,6 +203,24 @@ impl Sim {
     pub(crate) fn add_processed(&mut self, n: u64) {
         self.processed += n;
     }
+
+    /// Cross-shard injection: schedule `at` with a *hard* monotonicity
+    /// check instead of [`Sim::schedule`]'s silent clamp. Route chaining
+    /// and mailbox delivery stamp events with the completing leg's time,
+    /// which under lookahead can trail the receiving shard's clock — the
+    /// window-bound argument (DESIGN.md §11) proves the event itself still
+    /// lands at or after it, and this assert is where that proof is
+    /// checked at runtime rather than papered over by the clamp.
+    #[inline]
+    pub(crate) fn inject(&mut self, at: Ps, ev: Event) {
+        assert!(
+            at >= self.now,
+            "cross-shard injection at {at} ps is behind this engine's clock ({} ps) — \
+             a lookahead promise was broken; run this workload sequentially",
+            self.now
+        );
+        self.queue.insert(at, ev);
+    }
 }
 
 impl Event {

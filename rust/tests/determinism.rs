@@ -14,12 +14,14 @@
 //!   timing, label assignment, or the hash itself fails these tests —
 //!   deliberately: recompute and re-commit the golden value only for an
 //!   *intentional* timing-model change.
-//! * **Engine equivalence** (ISSUE 6): every pinned scenario also runs on
-//!   the conservative parallel engine (`Fabric::run_parallel`) at 1, 2,
-//!   and all-cores worker threads, and must reproduce the *same* golden
-//!   hash, the same canonical trace, the same tenant reports, and the
-//!   same executed-event count as the sequential engine. These tests are
-//!   the parallel engine's correctness oracle.
+//! * **Engine equivalence** (ISSUE 6, widened by ISSUE 7): every pinned
+//!   scenario also runs on the conservative parallel engine
+//!   (`Fabric::run_parallel`) at 1, 2, 12 (oversubscribed: more workers
+//!   than shards and than most runners' cores), and all-cores worker
+//!   threads, and must reproduce the *same* golden hash, the same
+//!   canonical trace, the same tenant reports, and the same
+//!   executed-event count as the sequential engine. These tests are the
+//!   parallel engine's correctness oracle.
 
 use fpgahub::apps::allreduce::{HierConfig, HierarchicalAllreduce};
 use fpgahub::apps::storage_fetch::{register_nic_fetch_path_fabric, FETCH_CMD_BYTES};
@@ -52,7 +54,12 @@ fn drain(fab: &mut Fabric, mode: Mode) -> RunStats {
 /// (deduplicated — on a 1-core box this is `[1, 2]`).
 fn thread_counts() -> Vec<usize> {
     let all = std::thread::available_parallelism().map_or(1, |n| n.get());
-    let mut counts = vec![1, 2, all];
+    // 12 deliberately oversubscribes every committed scenario (the widest
+    // fabric is 8 hubs + net = 9 shards, and `run_sites_parallel` clamps
+    // workers to the shard count) and most CI runners' cores — the
+    // handshake and the spin/yield/park ladder must stay correct when
+    // workers outnumber both shards and hardware threads (ISSUE 7)
+    let mut counts = vec![1, 2, 12, all];
     counts.sort_unstable();
     counts.dedup();
     counts

@@ -1,0 +1,191 @@
+//! Hop-billing equivalence property test (ISSUE 7).
+//!
+//! The fabric charges a mesh leg's fixed `hop_ns` either *inside the leg*
+//! (the pre-ISSUE-7 model: the hop latency rides in the link's
+//! `post_ps`) or *at injection* (the default: the charge is taken before
+//! the leg's first engine event, which is what gives the parallel engine
+//! its per-edge lookahead). The two are bookkeeping placements of the
+//! same charge — every completion timestamp must be bit-identical.
+//!
+//! These tests generate seeded-random multi-hop route workloads — mixed
+//! interconnect transfer legs, hub-local delay and partial-reconfiguration
+//! preprocessing legs, random byte counts, link rates and hop latencies,
+//! detached chains and terminal callbacks — and assert:
+//!
+//! * `completion_trace()` under [`HopBilling::Injection`] is bit-identical
+//!   (same entries, same raw event order) to [`HopBilling::InsideLeg`],
+//!   and so are the trace hashes. Executed *event counts* legitimately
+//!   differ — injection billing arms each mesh transfer with one extra
+//!   delayed event — which is exactly why the assertion is on the trace,
+//!   not the counters.
+//! * The parallel engine reproduces the sequential trace hash for the
+//!   same random workloads under injection billing, at 2 and at all-core
+//!   worker threads (the committed golden scenarios already pin this for
+//!   curated workloads in `tests/determinism.rs`; this file pins it for
+//!   adversarially random route shapes).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use fpgahub::runtime_hub::{
+    Fabric, FabricConfig, HopBilling, HubId, OperatorKind, OperatorRates, QosSpec, ReconfigConfig,
+    RouteDesc, Site, TenantId, TransferDesc,
+};
+use fpgahub::sim::time::US;
+use fpgahub::util::Rng;
+
+const OPS: [OperatorKind; 4] = [
+    OperatorKind::Filter,
+    OperatorKind::Project,
+    OperatorKind::HashPartition,
+    OperatorKind::Compress,
+];
+
+/// Which engine drains the generated workload.
+#[derive(Clone, Copy)]
+enum Drain {
+    Seq,
+    Par(usize),
+}
+
+/// Build one seeded-random route workload on a fabric with the given
+/// billing mode and drive it to completion. Everything — topology, rates,
+/// route shapes, byte counts, submit times — derives from `seed` alone,
+/// so two calls with the same seed run the *same* schedule regardless of
+/// billing mode or engine. Returns the drained fabric and the number of
+/// terminal route callbacks that fired.
+fn random_route_workload(seed: u64, billing: HopBilling, drain: Drain) -> (Fabric, u64) {
+    let mut rng = Rng::new(seed);
+    let hubs = rng.range_u64(2, 5) as usize;
+    let gbps = [50.0, 100.0, 200.0][rng.range_u64(0, 3) as usize];
+    let hop_ns = [250.0, 500.0, 1000.0][rng.range_u64(0, 3) as usize];
+    let cfg = FabricConfig { hubs, gbps, hop_ns, ..Default::default() };
+    let mut fab = Fabric::with_hop_billing(cfg, billing);
+
+    let rc = ReconfigConfig {
+        regions: 2,
+        swap_us: 50.0,
+        rates: OperatorRates {
+            filter_gbps: 100.0,
+            project_gbps: 100.0,
+            partition_gbps: 50.0,
+            compress_gbps: 25.0,
+            setup_ns: 200.0,
+        },
+    };
+    for h in 0..hubs {
+        fab.add_regions(HubId(h as u32), &rc);
+    }
+
+    let qos = QosSpec::bulk(TenantId(1));
+    // hub leg: a plain delay or a preprocessing operator on the
+    // partial-reconfiguration plane, random sizes
+    let hub_leg = |rng: &mut Rng, label: u64| {
+        let d = TransferDesc::with_label(label).qos(qos);
+        if rng.range_u64(0, 2) == 0 {
+            d.delay(rng.range_u64(1, 4) * US)
+        } else {
+            d.preproc(OPS[rng.range_u64(0, 4) as usize], rng.range_u64(1_000, 32_000))
+        }
+    };
+
+    let fired = Rc::new(RefCell::new(0u64));
+    let routes = 24 + rng.range_u64(0, 16);
+    for label in 0..routes {
+        let src = HubId(rng.range_u64(0, hubs as u64) as u32);
+        let mut dst = HubId(rng.range_u64(0, hubs as u64) as u32);
+        if dst == src {
+            dst = HubId((dst.0 + 1) % hubs as u32);
+        }
+        let t0 = rng.range_u64(0, 200) * US;
+
+        let mut route = RouteDesc::new();
+        // sometimes open with a local leg on the source hub, so the hazard
+        // walk sees leading same-site hops before the first mesh leg
+        if rng.range_u64(0, 3) == 0 {
+            route = route.hop(Site::Hub(src), hub_leg(&mut rng, label));
+        }
+        route = route
+            .hop(Site::Net, fab.hop_desc(label, qos, src, dst, rng.range_u64(1_000, 64_000)))
+            .hop(Site::Hub(dst), hub_leg(&mut rng, label));
+        // sometimes chain a reply leg back across the mesh
+        if rng.range_u64(0, 2) == 0 {
+            route = route
+                .hop(Site::Net, fab.hop_desc(label, qos, dst, src, rng.range_u64(1_000, 16_000)))
+                .hop(Site::Hub(src), hub_leg(&mut rng, label));
+        }
+
+        if rng.range_u64(0, 2) == 0 {
+            fab.submit_route_detached(t0, route);
+        } else {
+            let f = fired.clone();
+            fab.submit_route(t0, route, move |_, _| {
+                *f.borrow_mut() += 1;
+            });
+        }
+    }
+
+    match drain {
+        Drain::Seq => fab.run(),
+        Drain::Par(threads) => fab.run_parallel(threads),
+    };
+    let n = *fired.borrow();
+    (fab, n)
+}
+
+#[test]
+fn injection_billing_trace_is_bit_identical_to_inside_leg() {
+    for seed in 0..12u64 {
+        let (inj, inj_fired) = random_route_workload(seed, HopBilling::Injection, Drain::Seq);
+        let (leg, leg_fired) = random_route_workload(seed, HopBilling::InsideLeg, Drain::Seq);
+        assert_eq!(
+            inj_fired, leg_fired,
+            "seed {seed}: billing modes completed different numbers of route callbacks"
+        );
+        assert_eq!(
+            inj.completion_trace(),
+            leg.completion_trace(),
+            "seed {seed}: injection billing changed the raw completion trace"
+        );
+        assert_eq!(
+            inj.trace_hash(),
+            leg.trace_hash(),
+            "seed {seed}: injection billing changed the canonical trace hash"
+        );
+    }
+}
+
+#[test]
+fn injection_billing_repeats_bit_identically() {
+    // the workload generator itself must be deterministic, or the
+    // cross-billing comparison above proves nothing
+    let (a, a_fired) = random_route_workload(7, HopBilling::Injection, Drain::Seq);
+    let (b, b_fired) = random_route_workload(7, HopBilling::Injection, Drain::Seq);
+    assert_eq!(a_fired, b_fired);
+    assert_eq!(a.completion_trace(), b.completion_trace());
+}
+
+#[test]
+fn parallel_engine_matches_sequential_on_random_routes() {
+    let all = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let mut threads = vec![2, all];
+    threads.sort_unstable();
+    threads.dedup();
+    for seed in 0..6u64 {
+        let (seq, seq_fired) = random_route_workload(seed, HopBilling::Injection, Drain::Seq);
+        let seq_hash = seq.trace_hash();
+        for &t in &threads {
+            let (fab, fired) =
+                random_route_workload(seed, HopBilling::Injection, Drain::Par(t));
+            assert_eq!(
+                fired, seq_fired,
+                "seed {seed}, {t} threads: parallel run completed a different callback count"
+            );
+            assert_eq!(
+                fab.trace_hash(),
+                seq_hash,
+                "seed {seed}, {t} threads: parallel trace hash diverged from sequential"
+            );
+        }
+    }
+}
