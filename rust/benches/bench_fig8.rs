@@ -45,8 +45,8 @@ fn main() {
                 .map(|_| (0..512).map(|_| rng.range_f64(-50.0, 50.0) as f32).collect())
                 .collect();
             let mut out = None;
-            for c in &chunks {
-                out = eng.contribute(c);
+            for (w, c) in chunks.iter().enumerate() {
+                out = eng.contribute(w as u32, c);
             }
             let out = out.unwrap();
             saturated |= out.saturated;

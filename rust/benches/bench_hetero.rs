@@ -1,0 +1,127 @@
+//! Heterogeneous peer-site bench (ISSUE 8): the blended GPU/CSD/switch
+//! mix from `apps::hetero` at 1/2/4 hubs, timed on the sequential engine
+//! and — with the worker count from `-- --threads N` — on the
+//! conservative parallel engine. Like `bench_scale`, every parallel run
+//! is hash-gated against the sequential reference before any number is
+//! reported, so a determinism break in the peer lookahead cells fails
+//! the bench run outright. `-- --json BENCH_hetero.json` persists the
+//! numbers for the cross-PR perf trajectory.
+
+use fpgahub::apps::hetero::{build_hetero_mix, HeteroMixConfig};
+use fpgahub::bench_harness::{banner, bench_sim, bench_sim_t};
+use fpgahub::runtime_hub::{Fabric, RunStats};
+use fpgahub::sim::time::to_us;
+use std::time::Instant;
+
+fn mix_cfg(hubs: usize) -> HeteroMixConfig {
+    HeteroMixConfig {
+        hubs,
+        filters: 48,
+        offloads: 16,
+        reduce_rounds: 8,
+        ..HeteroMixConfig::default()
+    }
+}
+
+/// One measured mix run, drained sequentially (`threads: None`) or on the
+/// parallel engine. Completion is asserted — a stuck route would otherwise
+/// read as a fast iteration.
+fn hetero_mix(hubs: usize, threads: Option<usize>) -> (Fabric, RunStats) {
+    let cfg = mix_cfg(hubs);
+    let (mut fab, out) = build_hetero_mix(&cfg);
+    let stats = match threads {
+        None => fab.run(),
+        Some(t) => fab.run_parallel(t),
+    };
+    let o = out.borrow();
+    assert_eq!(o.filters_done, cfg.filters as u64, "{hubs} hubs: filters incomplete");
+    assert_eq!(o.offloads_done, cfg.offloads as u64, "{hubs} hubs: offloads incomplete");
+    assert_eq!(o.reduce_results.len(), cfg.reduce_rounds, "{hubs} hubs: reduce incomplete");
+    drop(o);
+    (fab, stats)
+}
+
+/// Worker threads for the parallel cases: `-- --threads N`, defaulting to
+/// the machine's available parallelism.
+fn cli_threads() -> usize {
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == "--threads" {
+            if let Some(n) = args.next().and_then(|v| v.parse::<usize>().ok()) {
+                return n.max(1);
+            }
+        }
+    }
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
+
+fn main() {
+    let threads = cli_threads();
+
+    banner("hetero mix: simulated completion time per hub count");
+    for hubs in [1usize, 2, 4] {
+        let (fab, stats, out_last) = {
+            let cfg = mix_cfg(hubs);
+            let (mut fab, out) = build_hetero_mix(&cfg);
+            let stats = fab.run();
+            let last = out.borrow().last_done;
+            (fab, stats, last)
+        };
+        println!(
+            "{hubs:>2} hubs: last completion {:.1}µs, {} events, hash {:#018x}",
+            to_us(out_last),
+            stats.events,
+            fab.trace_hash()
+        );
+    }
+
+    // Correctness gate + speedup report: the parallel engine must reproduce
+    // the sequential trace of the peer-site mix bit for bit.
+    banner(&format!("sequential vs parallel ({threads} threads): same mix, same trace"));
+    let mut seq_hashes = Vec::new();
+    for hubs in [1usize, 2, 4] {
+        let t0 = Instant::now();
+        let (seq_fab, seq_stats) = hetero_mix(hubs, None);
+        let seq_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = Instant::now();
+        let (par_fab, par_stats) = hetero_mix(hubs, Some(threads));
+        let par_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let (sh, ph) = (seq_fab.trace_hash(), par_fab.trace_hash());
+        assert_eq!(
+            ph, sh,
+            "{hubs} hubs: parallel mix hash {ph:#018x} diverged from sequential {sh:#018x}"
+        );
+        assert_eq!(
+            par_stats.events, seq_stats.events,
+            "{hubs} hubs: parallel event count diverged from sequential"
+        );
+        let speedup = if par_ms > 0.0 { seq_ms / par_ms } else { 0.0 };
+        println!(
+            "{hubs:>2} hubs: seq {seq_ms:>8.2}ms  par {par_ms:>8.2}ms  \
+             speedup {speedup:>5.2}x  hash {sh:#018x}"
+        );
+        seq_hashes.push((hubs, sh));
+    }
+
+    banner("hetero mix: engine throughput per hub count (sequential)");
+    for hubs in [1usize, 2, 4] {
+        bench_sim(&format!("hetero/mix_{hubs}hubs"), 2, 10, || {
+            hetero_mix(hubs, None).1.into()
+        });
+    }
+
+    banner(&format!("hetero mix: engine throughput per hub count ({threads} threads)"));
+    for &(hubs, seq_hash) in &seq_hashes {
+        bench_sim_t(&format!("hetero/mix_{hubs}hubs_par"), threads, 2, 10, move || {
+            let (fab, stats) = hetero_mix(hubs, Some(threads));
+            assert_eq!(
+                fab.trace_hash(),
+                seq_hash,
+                "{hubs} hubs: parallel mix trace diverged mid-bench"
+            );
+            stats.into()
+        });
+    }
+
+    fpgahub::bench_harness::finish().expect("bench json");
+}

@@ -192,7 +192,7 @@ impl FpgaSwitchAllreduce {
                          is still open — rounds overlapped; increase the round gap",
                         ir.engine.rounds
                     );
-                    ir.engine.contribute(&chunk)
+                    ir.engine.contribute(w as u32, &chunk)
                 };
                 if let Some(res) = result {
                     {

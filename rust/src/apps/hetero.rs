@@ -1,0 +1,558 @@
+//! Heterogeneous peer-site workloads (ISSUE 8): the three route families
+//! the paper's hyper-heterogeneous platform exists to compare, built on
+//! [`Fabric`]'s typed peer sites.
+//!
+//! * **Scan-filter placement** ([`filter_route`]): the same query plan run
+//!   three ways — filter *on* the computational-storage drive (scan at
+//!   internal NAND bandwidth, ship only the selected bytes), filter at the
+//!   hub (ship everything over the narrow host link, filter there), or
+//!   ship-all. The CSD wins exactly when the drive's inside is faster
+//!   than its outside.
+//! * **GPU offload** ([`offload_route`]): PCIe ingest → roofline GEMM on
+//!   the device's single-stream kernel queue → PCIe reply. Small kernels
+//!   lose to the hub's own DSP array ([`hub_gemm_ps`]); the crossover is
+//!   the offload knee.
+//! * **Switch reduce** ([`SwitchReduce`]): per-hub contributions serialize
+//!   into the switch at line rate, rendezvous on an on-switch barrier
+//!   (release at the last arrival *is* the aggregation instant), and the
+//!   multicast copies serialize back out. Numeric aggregation rides the
+//!   SRAM-budgeted [`SwitchAggregator`], so duplicate-drop and saturation
+//!   semantics are the same machinery Fig 8 uses.
+//!
+//! [`build_hetero_mix`] schedules a deterministic blend of all three on
+//! one fabric — the scenario `tests/determinism.rs` pins sequential vs
+//! parallel and `benches/bench_hetero.rs` times.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::constants;
+use crate::net::p4::{P4Error, P4Switch, SwitchAggregator};
+use crate::nvme::queue::NvmeOp;
+use crate::runtime_hub::{
+    CsdSite, Fabric, FabricConfig, GpuSite, HubId, QosSpec, ResourcePolicies, RouteDesc, Site,
+    SitesConfig, SwitchSite, TenantId, TransferDesc,
+};
+use crate::sim::time::{ns_f, Ps, US};
+use crate::sim::Sim;
+
+/// Bytes of the filter-command capsule a hub sends a CSD.
+pub const FILTER_CMD_BYTES: u64 = 64;
+
+/// Fixed landing cost when a reply reaches its hub (DMA descriptor setup).
+fn landing_ps() -> Ps {
+    ns_f(constants::PCIE_DMA_SETUP_NS)
+}
+
+/// Where the filter of a scan-filter query runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FilterPlacement {
+    /// scan on-drive at NAND bandwidth, ship only the selected bytes
+    Csd,
+    /// ship the raw bytes over the CSD host link, filter at the hub
+    Hub,
+    /// ship the raw bytes, no filter anywhere (the bytes-moved baseline)
+    ShipAll,
+}
+
+impl FilterPlacement {
+    pub const ALL: [FilterPlacement; 3] =
+        [FilterPlacement::Csd, FilterPlacement::Hub, FilterPlacement::ShipAll];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FilterPlacement::Csd => "filter-at-csd",
+            FilterPlacement::Hub => "filter-at-hub",
+            FilterPlacement::ShipAll => "ship-all",
+        }
+    }
+}
+
+/// One scan-filter query as a three-hop route: command capsule on the hub,
+/// the drive leg (command in → NVMe read → optional on-drive scan →
+/// reply out), and the hub-side landing (plus the hub-side filter when
+/// the plan ships raw). `hub_filter_gbps` is the hub's streaming filter
+/// rate (operator-plane class).
+#[allow(clippy::too_many_arguments)]
+pub fn filter_route(
+    csd: &CsdSite,
+    hub: HubId,
+    placement: FilterPlacement,
+    label: u64,
+    qos: QosSpec,
+    bytes: u64,
+    selected_bytes: u64,
+    hub_filter_gbps: f64,
+) -> RouteDesc {
+    let cmd = TransferDesc::with_label(label).qos(qos).delay(landing_ps());
+    let drive = TransferDesc::with_label(label)
+        .qos(qos)
+        .xfer(csd.ingress, FILTER_CMD_BYTES)
+        .nvme(csd.queue, NvmeOp::Read);
+    let (drive, back) = match placement {
+        FilterPlacement::Csd => (
+            drive.delay(csd.scan_ps(bytes)).xfer(csd.egress, selected_bytes),
+            TransferDesc::with_label(label).qos(qos).delay(landing_ps()),
+        ),
+        FilterPlacement::Hub => (
+            drive.xfer(csd.egress, bytes),
+            TransferDesc::with_label(label)
+                .qos(qos)
+                .delay(ns_f(bytes as f64 * 8.0 / hub_filter_gbps))
+                .delay(landing_ps()),
+        ),
+        FilterPlacement::ShipAll => (
+            drive.xfer(csd.egress, bytes),
+            TransferDesc::with_label(label).qos(qos).delay(landing_ps()),
+        ),
+    };
+    RouteDesc::new().hop(Site::Hub(hub), cmd).hop(csd.site, drive).hop(Site::Hub(hub), back)
+}
+
+/// GEMM time on the hub's own DSP array: the stay-home arm of the knee.
+pub fn hub_gemm_ps(m: u64, n: u64, k: u64) -> Ps {
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    ns_f(flops / (constants::FPGA_GEMM_TFLOPS * 1e12) * 1e9)
+}
+
+/// One GPU offload as a three-hop route: command on the hub, the device
+/// leg (PCIe ingest → `kernel` on the single-stream queue → PCIe reply),
+/// and the hub landing. `kernel` comes from the site's [`Gpu`] roofline
+/// (`gpu.gpu.gemm_time(..)`) at route-construction time.
+///
+/// [`Gpu`]: crate::devices::gpu::Gpu
+pub fn offload_route(
+    gpu: &GpuSite,
+    hub: HubId,
+    label: u64,
+    qos: QosSpec,
+    in_bytes: u64,
+    out_bytes: u64,
+    kernel: Ps,
+) -> RouteDesc {
+    RouteDesc::new()
+        .hop(Site::Hub(hub), TransferDesc::with_label(label).qos(qos).delay(landing_ps()))
+        .hop(
+            gpu.site,
+            TransferDesc::with_label(label)
+                .qos(qos)
+                .xfer(gpu.ingress, in_bytes)
+                .on_core(gpu.kernel_queue, kernel)
+                .xfer(gpu.egress, out_bytes),
+        )
+        .hop(Site::Hub(hub), TransferDesc::with_label(label).qos(qos).delay(landing_ps()))
+}
+
+/// In-network allreduce on a switch peer site. Timing rides the fabric
+/// (shared ingress = line-rate serialization, on-switch barrier = the
+/// aggregation rendezvous, shared egress = multicast fan-out); numerics
+/// ride the [`SwitchAggregator`] installed on a [`P4Switch`], contributed
+/// at each worker's route completion.
+pub struct SwitchReduce {
+    site: SwitchSite,
+    agg: Rc<RefCell<SwitchAggregator>>,
+    pub workers: u32,
+    pub lanes: usize,
+    qos: QosSpec,
+}
+
+impl SwitchReduce {
+    /// Install the aggregation program (fails on the switch's SRAM/stage
+    /// budget — §2.3.1's limitation, now on the event engine's clock).
+    pub fn new(
+        switch: &mut P4Switch,
+        site: SwitchSite,
+        workers: u32,
+        lanes: usize,
+        qos: QosSpec,
+    ) -> Result<Self, P4Error> {
+        let agg = SwitchAggregator::install(switch, workers, lanes)?;
+        Ok(SwitchReduce { site, agg: Rc::new(RefCell::new(agg)), workers, lanes, qos })
+    }
+
+    /// Bytes one worker's chunk occupies on the switch port.
+    pub fn chunk_bytes(&self) -> u64 {
+        4 * self.lanes as u64
+    }
+
+    /// Schedule one round at `t0`: worker `w` (on hub `w % hubs`) delays
+    /// `skews[w]`, streams its chunk into the switch, rendezvouses on an
+    /// on-switch barrier, and carries one multicast copy back to its hub.
+    /// `done(t, sums)` fires at the *last* worker's landing — the round
+    /// latency — with the aggregated lanes.
+    pub fn schedule_round(
+        &self,
+        fab: &mut Fabric,
+        t0: Ps,
+        base_label: u64,
+        chunks: &[Vec<i32>],
+        skews: &[Ps],
+        done: impl FnOnce(Ps, Vec<i32>) + 'static,
+    ) {
+        assert_eq!(chunks.len(), self.workers as usize);
+        assert_eq!(skews.len(), self.workers as usize);
+        let hubs = fab.num_hubs();
+        let bar = fab.add_site_barrier(self.site.site, self.workers as usize);
+        let bytes = self.chunk_bytes();
+        let holder: Rc<RefCell<Option<Box<dyn FnOnce(Ps, Vec<i32>)>>>> =
+            Rc::new(RefCell::new(Some(Box::new(done))));
+        for (w, chunk) in chunks.iter().enumerate() {
+            let hub = HubId((w % hubs) as u32);
+            let label = base_label + w as u64;
+            let route = RouteDesc::new()
+                .hop(
+                    Site::Hub(hub),
+                    TransferDesc::with_label(label).qos(self.qos).delay(skews[w]),
+                )
+                .hop(
+                    self.site.site,
+                    TransferDesc::with_label(label)
+                        .qos(self.qos)
+                        .xfer(self.site.ingress, bytes)
+                        .delay(self.site.pipeline)
+                        .barrier(bar)
+                        .xfer(self.site.egress, bytes),
+                )
+                .hop(
+                    Site::Hub(hub),
+                    TransferDesc::with_label(label).qos(self.qos).delay(landing_ps()),
+                );
+            let (agg, hold, chunk) = (self.agg.clone(), holder.clone(), chunk.clone());
+            let w = w as u32;
+            fab.submit_route(t0, route, move |_s: &mut Sim, t: Ps| {
+                if let Some(sums) = agg.borrow_mut().contribute(w, &chunk) {
+                    if let Some(f) = hold.borrow_mut().take() {
+                        f(t, sums);
+                    }
+                }
+            });
+        }
+    }
+
+    /// Switch-side saturation events observed so far.
+    pub fn saturations(&self) -> u64 {
+        self.agg.borrow().saturations
+    }
+}
+
+/// The deterministic blended scenario: filters cycling all three
+/// placements, GPU offloads alternating clean/NCCL-interfered SM
+/// fractions, and switch-reduce rounds — all interleaved on one fabric.
+#[derive(Clone, Debug)]
+pub struct HeteroMixConfig {
+    pub hubs: usize,
+    pub sites: SitesConfig,
+    /// scan-filter queries (placement cycles Csd → Hub → ShipAll)
+    pub filters: usize,
+    pub filter_bytes: u64,
+    /// selected fraction of a filter's bytes, percent (integer-exact)
+    pub selectivity_pct: u64,
+    /// GPU offload jobs
+    pub offloads: usize,
+    pub gemm: (u64, u64, u64),
+    /// switch allreduce rounds
+    pub reduce_rounds: usize,
+    pub lanes: usize,
+    pub seed: u64,
+}
+
+impl Default for HeteroMixConfig {
+    fn default() -> Self {
+        HeteroMixConfig {
+            hubs: 2,
+            sites: SitesConfig { gpus: 1, csds: 1, switches: 1, ..SitesConfig::default() },
+            filters: 6,
+            filter_bytes: 1_000_000,
+            selectivity_pct: 10,
+            offloads: 4,
+            gemm: (1024, 1024, 1024),
+            reduce_rounds: 2,
+            lanes: 64,
+            seed: 7,
+        }
+    }
+}
+
+/// Counters and results the mix's completion callbacks accumulate.
+#[derive(Default)]
+pub struct HeteroMixOutcome {
+    pub filters_done: u64,
+    pub offloads_done: u64,
+    /// per round: (last landing time, aggregated lanes)
+    pub reduce_results: Vec<(Ps, Vec<i32>)>,
+    pub last_done: Ps,
+}
+
+/// The deterministic per-worker chunk of the mix's reduce rounds (pure
+/// integer arithmetic — the same on every platform).
+pub fn mix_chunk(round: usize, worker: usize, lanes: usize) -> Vec<i32> {
+    (0..lanes)
+        .map(|l| ((round * 31 + worker * lanes + l) % 17) as i32 - 8)
+        .collect()
+}
+
+/// Build the fabric, register the `[sites]` population, and schedule the
+/// whole mix. The caller drains (sequentially or on the parallel engine)
+/// and inspects the outcome cell afterwards — which is exactly what the
+/// determinism suite needs to compare engines.
+pub fn build_hetero_mix(cfg: &HeteroMixConfig) -> (Fabric, Rc<RefCell<HeteroMixOutcome>>) {
+    assert!(cfg.sites.csds > 0 && cfg.sites.gpus > 0 && cfg.sites.switches > 0);
+    let mut fab = Fabric::with_config(FabricConfig {
+        hubs: cfg.hubs,
+        gbps: 100.0,
+        hop_ns: 500.0,
+        policies: ResourcePolicies::default(),
+    });
+    let sites = fab.add_sites(&cfg.sites, cfg.seed);
+    let out = Rc::new(RefCell::new(HeteroMixOutcome::default()));
+
+    let qos_f = QosSpec::bulk(TenantId(1));
+    for i in 0..cfg.filters {
+        let csd = &sites.csds[i % sites.csds.len()];
+        let hub = HubId((i % cfg.hubs) as u32);
+        let placement = FilterPlacement::ALL[i % 3];
+        let selected = cfg.filter_bytes * cfg.selectivity_pct / 100;
+        let route = filter_route(
+            csd,
+            hub,
+            placement,
+            1000 + i as u64,
+            qos_f,
+            cfg.filter_bytes,
+            selected,
+            constants::FPGA_COMPRESS_GBPS,
+        );
+        let o = out.clone();
+        fab.submit_route(i as u64 * 30 * US, route, move |_, t| {
+            let mut o = o.borrow_mut();
+            o.filters_done += 1;
+            o.last_done = o.last_done.max(t);
+        });
+    }
+
+    let qos_g = QosSpec::latency_sensitive(TenantId(2));
+    let (m, n, k) = cfg.gemm;
+    let in_bytes = 4 * (m * k + k * n);
+    let out_bytes = 4 * m * n;
+    for i in 0..cfg.offloads {
+        let gpu = &sites.gpus[i % sites.gpus.len()];
+        let hub = HubId((i % cfg.hubs) as u32);
+        // even jobs see the whole device; odd jobs model an on-GPU
+        // collective stealing SMs and HBM (§2.2.2)
+        let kernel = if i % 2 == 0 {
+            gpu.gpu.gemm_time(m, n, k, 1.0, 1.0)
+        } else {
+            gpu.gpu.gemm_time(m, n, k, gpu.gpu.sm_frac_with_nccl(), gpu.gpu.bw_frac_with_nccl())
+        };
+        let route =
+            offload_route(gpu, hub, 2000 + i as u64, qos_g, in_bytes, out_bytes, kernel);
+        let o = out.clone();
+        fab.submit_route(10 * US + i as u64 * 40 * US, route, move |_, t| {
+            let mut o = o.borrow_mut();
+            o.offloads_done += 1;
+            o.last_done = o.last_done.max(t);
+        });
+    }
+
+    let qos_r = QosSpec::latency_sensitive(TenantId(3));
+    let mut switch = P4Switch::tofino();
+    let workers = cfg.hubs as u32 * 2;
+    let reduce = SwitchReduce::new(&mut switch, sites.switches[0], workers, cfg.lanes, qos_r)
+        .expect("mix aggregation program fits a Tofino");
+    for r in 0..cfg.reduce_rounds {
+        let chunks: Vec<Vec<i32>> =
+            (0..workers as usize).map(|w| mix_chunk(r, w, cfg.lanes)).collect();
+        let skews: Vec<Ps> = (0..workers as u64).map(|w| w * 3 * US).collect();
+        let o = out.clone();
+        reduce.schedule_round(
+            &mut fab,
+            r as u64 * 300 * US,
+            3000 + r as u64 * 64,
+            &chunks,
+            &skews,
+            move |t, sums| {
+                let mut o = o.borrow_mut();
+                o.reduce_results.push((t, sums));
+                o.last_done = o.last_done.max(t);
+            },
+        );
+    }
+
+    (fab, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::to_us;
+
+    fn one_hub_with(sc: SitesConfig) -> (Fabric, crate::runtime_hub::HeteroSites) {
+        let mut fab = Fabric::with_config(FabricConfig {
+            hubs: 1,
+            gbps: 100.0,
+            hop_ns: 500.0,
+            policies: ResourcePolicies::default(),
+        });
+        let sites = fab.add_sites(&sc, 7);
+        (fab, sites)
+    }
+
+    fn run_filter(placement: FilterPlacement) -> Ps {
+        let (mut fab, sites) =
+            one_hub_with(SitesConfig { csds: 1, ..SitesConfig::default() });
+        let t = Rc::new(std::cell::Cell::new(0u64));
+        let t2 = t.clone();
+        let route = filter_route(
+            &sites.csds[0],
+            HubId(0),
+            placement,
+            1,
+            QosSpec::default(),
+            1_000_000,
+            100_000,
+            constants::FPGA_COMPRESS_GBPS,
+        );
+        fab.submit_route(0, route, move |_, at| t2.set(at));
+        fab.run();
+        assert!(t.get() > 0, "{placement:?} route must complete");
+        t.get()
+    }
+
+    #[test]
+    fn filter_placement_ordering_matches_the_bandwidth_story() {
+        let csd = run_filter(FilterPlacement::Csd);
+        let ship = run_filter(FilterPlacement::ShipAll);
+        let hub = run_filter(FilterPlacement::Hub);
+        // 96 Gb/s inside the drive vs 32 Gb/s out of it: scanning on-drive
+        // and shipping 10% beats shipping raw, which beats shipping raw
+        // *and* filtering at the hub
+        assert!(csd < ship, "csd {}µs vs ship {}µs", to_us(csd), to_us(ship));
+        assert!(ship < hub, "ship {}µs vs hub {}µs", to_us(ship), to_us(hub));
+    }
+
+    #[test]
+    fn offload_knee_small_gemms_stay_home() {
+        let (mut fab, sites) =
+            one_hub_with(SitesConfig { gpus: 1, ..SitesConfig::default() });
+        let gpu = &sites.gpus[0];
+        let mut offload = |m: u64| {
+            let t = Rc::new(std::cell::Cell::new(0u64));
+            let t2 = t.clone();
+            let kernel = gpu.gpu.gemm_time(m, m, m, 1.0, 1.0);
+            let route = offload_route(
+                gpu,
+                HubId(0),
+                m,
+                QosSpec::default(),
+                4 * 2 * m * m,
+                4 * m * m,
+                kernel,
+            );
+            fab.submit_route(fab.now(), route, move |_, at| t2.set(at));
+            let before = fab.now();
+            fab.run();
+            t.get() - before
+        };
+        // 256³: launch + PCIe dwarf the kernel — the hub's DSP array wins
+        let small = offload(256);
+        assert!(small > hub_gemm_ps(256, 256, 256), "small GEMM must stay home");
+        // 4096³: 0.14 PFLOP — the GPU wins despite the round trip
+        let large = offload(4096);
+        assert!(large < hub_gemm_ps(4096, 4096, 4096), "large GEMM must offload");
+    }
+
+    #[test]
+    fn switch_reduce_sums_every_lane_once() {
+        let mut fab = Fabric::with_config(FabricConfig {
+            hubs: 2,
+            gbps: 100.0,
+            hop_ns: 500.0,
+            policies: ResourcePolicies::default(),
+        });
+        let sites = fab.add_sites(&SitesConfig { switches: 1, ..SitesConfig::default() }, 7);
+        let mut sw = P4Switch::tofino();
+        let reduce =
+            SwitchReduce::new(&mut sw, sites.switches[0], 4, 8, QosSpec::default()).unwrap();
+        let chunks: Vec<Vec<i32>> = (0..4).map(|w| vec![w as i32 + 1; 8]).collect();
+        let got: Rc<RefCell<Option<(Ps, Vec<i32>)>>> = Rc::new(RefCell::new(None));
+        let g = got.clone();
+        reduce.schedule_round(&mut fab, 0, 100, &chunks, &[0; 4], move |t, sums| {
+            *g.borrow_mut() = Some((t, sums));
+        });
+        fab.run();
+        let (t, sums) = got.borrow_mut().take().expect("round completes");
+        assert_eq!(sums, vec![1 + 2 + 3 + 4; 8]);
+        assert!(t > 0);
+        assert_eq!(fab.routes_in_flight(), 0);
+        assert_eq!(fab.barrier_waiters(), 0);
+        assert_eq!(reduce.saturations(), 0);
+    }
+
+    #[test]
+    fn skewed_reduce_round_is_gated_by_the_straggler() {
+        let build = |skew: Ps| {
+            let mut fab = Fabric::with_config(FabricConfig {
+                hubs: 2,
+                gbps: 100.0,
+                hop_ns: 500.0,
+                policies: ResourcePolicies::default(),
+            });
+            let sites =
+                fab.add_sites(&SitesConfig { switches: 1, ..SitesConfig::default() }, 7);
+            let mut sw = P4Switch::tofino();
+            let reduce =
+                SwitchReduce::new(&mut sw, sites.switches[0], 2, 8, QosSpec::default())
+                    .unwrap();
+            let chunks = vec![vec![1i32; 8]; 2];
+            let t = Rc::new(std::cell::Cell::new(0u64));
+            let t2 = t.clone();
+            reduce.schedule_round(&mut fab, 0, 100, &chunks, &[0, skew], move |at, _| {
+                t2.set(at)
+            });
+            fab.run();
+            t.get()
+        };
+        let fast = build(0);
+        let slow = build(50 * US);
+        // the zero-skew round's last worker pays ingress serialization the
+        // straggler skips, so the gap is the skew give-or-take that slack
+        assert!(slow >= fast + 49 * US, "fast {fast} slow {slow}");
+        assert!(slow < fast + 51 * US, "fast {fast} slow {slow}");
+    }
+
+    #[test]
+    fn mix_runs_to_completion_and_is_repeatable() {
+        let cfg = HeteroMixConfig::default();
+        let run = || {
+            let (mut fab, out) = build_hetero_mix(&cfg);
+            fab.run();
+            let hash = fab.trace_hash();
+            let o = out.borrow();
+            assert_eq!(o.filters_done, cfg.filters as u64);
+            assert_eq!(o.offloads_done, cfg.offloads as u64);
+            assert_eq!(o.reduce_results.len(), cfg.reduce_rounds);
+            assert_eq!(fab.routes_in_flight(), 0);
+            assert_eq!(fab.parked_waiters(), 0);
+            let sums: Vec<Vec<i32>> =
+                o.reduce_results.iter().map(|(_, s)| s.clone()).collect();
+            (hash, o.last_done, sums)
+        };
+        let (h1, d1, s1) = run();
+        let (h2, d2, s2) = run();
+        assert_eq!(h1, h2, "mix must be schedule-deterministic");
+        assert_eq!(d1, d2);
+        assert_eq!(s1, s2);
+        // and the reduce numerics are the closed-form lane sums
+        let workers = cfg.hubs * 2;
+        for (r, sums) in s1.iter().enumerate() {
+            let want: Vec<i32> = (0..cfg.lanes)
+                .map(|l| {
+                    (0..workers)
+                        .map(|w| ((r * 31 + w * cfg.lanes + l) % 17) as i32 - 8)
+                        .sum()
+                })
+                .collect();
+            assert_eq!(sums, &want, "round {r} lane sums");
+        }
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod allreduce;
 pub mod block_storage;
+pub mod hetero;
 pub mod llm_step;
 pub mod multi_tenant;
 pub mod preprocess;
@@ -11,6 +12,10 @@ pub mod storage_fetch;
 
 pub use allreduce::{FpgaSwitchAllreduce, HierConfig, HierarchicalAllreduce};
 pub use block_storage::HubMiddleTier;
+pub use hetero::{
+    build_hetero_mix, filter_route, hub_gemm_ps, mix_chunk, offload_route, FilterPlacement,
+    HeteroMixConfig, HeteroMixOutcome, SwitchReduce, FILTER_CMD_BYTES,
+};
 pub use llm_step::{LlmStepConfig, LlmStepReport};
 pub use multi_tenant::{
     run_fabric_tenants, run_multi_tenant, run_qos, FabricTenantsConfig, FabricTenantsReport,

@@ -11,6 +11,7 @@ use crate::constants;
 use crate::devices::fpga::FpgaBoard;
 use crate::runtime_hub::{
     ArbPolicy, FabricConfig, OperatorRates, ReconfigConfig, ReconfigPolicy, ResourcePolicies,
+    SitesConfig,
 };
 
 /// The simulated platform (one §4.1 server/cluster).
@@ -39,6 +40,9 @@ pub struct PlatformConfig {
     /// (bitstream-load) latency, operator streaming rates; `policy`
     /// selects the placement scheduler (`arb.regions`)
     pub reconfig: ReconfigConfig,
+    /// heterogeneous peer sites attached to the fabric (`[sites]`, ISSUE 8):
+    /// GPU / computational-storage / switch site counts and their link rates
+    pub sites: SitesConfig,
     pub artifacts_dir: PathBuf,
     pub results_dir: PathBuf,
 }
@@ -57,6 +61,7 @@ impl Default for PlatformConfig {
             fabric_parallel: false,
             fabric_threads: 0,
             reconfig: ReconfigConfig::default(),
+            sites: SitesConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             results_dir: PathBuf::from("results"),
         }
@@ -110,6 +115,17 @@ impl PlatformConfig {
                 setup_ns: doc.f64_or("reconfig", "setup_ns", dr.rates.setup_ns),
             },
         };
+        let ds = d.sites;
+        let sites = SitesConfig {
+            gpus: doc.i64_or("sites", "gpus", ds.gpus as i64).max(0) as usize,
+            gpu_pcie_gbps: doc.f64_or("sites", "gpu_pcie_gbps", ds.gpu_pcie_gbps),
+            csds: doc.i64_or("sites", "csds", ds.csds as i64).max(0) as usize,
+            csd_ssds: doc.i64_or("sites", "csd_ssds", ds.csd_ssds as i64).max(1) as usize,
+            csd_nand_gbps: doc.f64_or("sites", "csd_nand_gbps", ds.csd_nand_gbps),
+            csd_link_gbps: doc.f64_or("sites", "csd_link_gbps", ds.csd_link_gbps),
+            switches: doc.i64_or("sites", "switches", ds.switches as i64).max(0) as usize,
+            switch_port_gbps: doc.f64_or("sites", "switch_port_gbps", ds.switch_port_gbps),
+        };
         Ok(PlatformConfig {
             seed: doc.i64_or("", "seed", d.seed as i64) as u64,
             workers: doc.i64_or("cluster", "workers", d.workers as i64) as u32,
@@ -123,6 +139,7 @@ impl PlatformConfig {
             fabric_threads: doc.i64_or("fabric", "threads", d.fabric_threads as i64).max(0)
                 as usize,
             reconfig,
+            sites,
             artifacts_dir: PathBuf::from(doc.str_or("", "artifacts_dir", "artifacts")),
             results_dir: PathBuf::from(doc.str_or("", "results_dir", "results")),
         })
@@ -297,6 +314,42 @@ mod tests {
         let doc = TomlDoc::parse("[reconfig]\nregions = 0\n").unwrap();
         let p = PlatformConfig::from_doc(&doc).unwrap();
         assert_eq!(p.reconfig.regions, 1);
+    }
+
+    #[test]
+    fn sites_default_to_no_peers() {
+        let p = PlatformConfig::default();
+        assert_eq!(p.sites, SitesConfig::default());
+        assert_eq!(p.sites.gpus, 0, "peer sites are opt-in");
+        assert_eq!(p.sites.csds, 0);
+        assert_eq!(p.sites.switches, 0);
+    }
+
+    #[test]
+    fn sites_overrides_from_toml() {
+        let doc = TomlDoc::parse(
+            "[sites]\ngpus = 2\ngpu_pcie_gbps = 128.0\ncsds = 1\ncsd_ssds = 8\n\
+             csd_nand_gbps = 192.0\ncsd_link_gbps = 64.0\nswitches = 1\n\
+             switch_port_gbps = 400.0\n",
+        )
+        .unwrap();
+        let p = PlatformConfig::from_doc(&doc).unwrap();
+        assert_eq!(p.sites.gpus, 2);
+        assert_eq!(p.sites.gpu_pcie_gbps, 128.0);
+        assert_eq!(p.sites.csds, 1);
+        assert_eq!(p.sites.csd_ssds, 8);
+        assert_eq!(p.sites.csd_nand_gbps, 192.0);
+        assert_eq!(p.sites.csd_link_gbps, 64.0);
+        assert_eq!(p.sites.switches, 1);
+        assert_eq!(p.sites.switch_port_gbps, 400.0);
+    }
+
+    #[test]
+    fn sites_counts_clamped_nonnegative() {
+        let doc = TomlDoc::parse("[sites]\ngpus = -3\ncsd_ssds = 0\n").unwrap();
+        let p = PlatformConfig::from_doc(&doc).unwrap();
+        assert_eq!(p.sites.gpus, 0);
+        assert_eq!(p.sites.csd_ssds, 1, "a CSD site needs at least one drive");
     }
 
     #[test]

@@ -94,6 +94,10 @@ pub const GPU_HBM_TBPS: f64 = 3.35;
 /// Fraction of HBM bandwidth collectives consume while active (§2.2.2).
 pub const GPU_NCCL_HBM_SHARE: f64 = 0.28;
 pub const GPU_KERNEL_LAUNCH_US: f64 = 4.5;
+/// Floor SM fraction kept for compute when the collective's channel budget
+/// would otherwise claim every SM of a small GPU (the scheduler
+/// time-slices rather than starving compute entirely).
+pub const GPU_MIN_SM_FRAC: f64 = 0.02;
 
 // ---------------------------------------------------------------- FPGA ----
 
@@ -119,6 +123,12 @@ pub const VPK180_URAM: u64 = 1_925;
 /// easy to achieve high throughput in FPGAs") — one engine at port rate.
 pub const FPGA_COMPRESS_GBPS: f64 = 100.0;
 
+/// Dense-GEMM throughput of a hub-class FPGA (DSP systolic array,
+/// Alveo-class) — two orders of magnitude under an H100, which is the
+/// other arm of the GPU-offload knee: below it the PCIe round trip and
+/// kernel launch dominate and the hub should keep the work.
+pub const FPGA_GEMM_TFLOPS: f64 = 7.5;
+
 // -------------------------------------------------------------- Fabric ----
 
 /// Inter-hub link rate: each FpgaHub exposes one 100G port toward the rack
@@ -127,6 +137,19 @@ pub const FABRIC_GBPS: f64 = 100.0;
 /// Per-hop latency between two hubs (ToR switch traversal + two SerDes
 /// crossings + cabling — one rack-internal hop).
 pub const FABRIC_HOP_NS: f64 = 500.0;
+
+// ---------------------------------------------------- Peer sites (§2) ----
+
+/// Computational-storage drive: internal NAND-array scan bandwidth the
+/// on-drive filter engine sees, aggregated across the array
+/// (SmartSSD-class, ~3 GB/s per drive × [`CSD_SSDS`] drives — far above
+/// what the host link can ship raw).
+pub const CSD_NAND_GBPS: f64 = 96.0;
+/// CSD host link: PCIe Gen3 x4 effective (the "tiny reply" bottleneck
+/// when shipping raw instead of filtering on-drive).
+pub const CSD_LINK_GBPS: f64 = 32.0;
+/// Drives behind one CSD site's internal controller.
+pub const CSD_SSDS: usize = 4;
 
 #[cfg(test)]
 mod tests {

@@ -44,13 +44,20 @@ impl CorePool {
         *self.busy_until.iter().min().unwrap()
     }
 
-    /// Aggregate utilization over [0, horizon].
+    /// Aggregate utilization over [0, horizon], clamped to [0, 1].
+    ///
+    /// `busy_time` bills each job's full duration at placement, so work
+    /// still in flight past the horizon would otherwise report > 1.0
+    /// (e.g. a 2 ms job measured at a 1 ms horizon). A core can't be more
+    /// than fully busy: the intended semantics are "fraction of the
+    /// pool's capacity over [0, horizon] that was occupied", so the ratio
+    /// saturates at 1.0.
     pub fn utilization(&self, horizon: Ps) -> f64 {
         if horizon == 0 {
             return 0.0;
         }
         let busy: u128 = self.busy_time.iter().map(|&b| b as u128).sum();
-        busy as f64 / (horizon as f64 * self.cores() as f64)
+        (busy as f64 / (horizon as f64 * self.cores() as f64)).min(1.0)
     }
 }
 
@@ -121,6 +128,18 @@ mod tests {
         let mut p = CorePool::new(2);
         p.run(0, MS); // one core busy the whole horizon
         assert!((p.utilization(MS) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_saturates_when_work_overruns_horizon() {
+        // pinned semantics: in-flight work past the horizon can't push a
+        // pool beyond fully busy (this used to report 2.0)
+        let mut p = CorePool::new(1);
+        p.run(0, 2 * MS);
+        assert_eq!(p.utilization(MS), 1.0);
+        // and the whole-job horizon still reports exact occupancy
+        assert!((p.utilization(2 * MS) - 1.0).abs() < 1e-9);
+        assert!((p.utilization(4 * MS) - 0.5).abs() < 1e-9);
     }
 
     #[test]

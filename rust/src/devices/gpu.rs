@@ -54,8 +54,12 @@ impl Gpu {
     }
 
     /// SM fraction left for compute while on-GPU collectives run (§2.2.2).
+    /// The collective's SM reservation is capped at the machine: a GPU
+    /// smaller than the NCCL channel budget keeps a floor fraction for
+    /// compute (the scheduler time-slices) instead of underflowing.
     pub fn sm_frac_with_nccl(&self) -> f64 {
-        (self.sms - constants::GPU_NCCL_SMS) as f64 / self.sms as f64
+        let free = self.sms.saturating_sub(constants::GPU_NCCL_SMS);
+        (free as f64 / self.sms as f64).max(constants::GPU_MIN_SM_FRAC)
     }
 
     /// HBM fraction left for compute while on-GPU collectives run.
@@ -108,6 +112,22 @@ mod tests {
         // 2(W-1)/W: 1.0 for W=2, 1.75 for W=8
         let ratio = to_us(t8) / to_us(t2);
         assert!((ratio - 1.75).abs() < 0.01, "{ratio}");
+    }
+
+    #[test]
+    fn small_gpu_survives_nccl_reservation() {
+        // regression: sms < GPU_NCCL_SMS underflowed the u32 subtraction
+        // (debug panic / release wrap to a ~4e9 SM fraction)
+        let small = Gpu { sms: 8, ..Gpu::h100() };
+        let frac = small.sm_frac_with_nccl();
+        assert_eq!(frac, crate::constants::GPU_MIN_SM_FRAC);
+        // the floor keeps gemm_time's sm_frac domain assert satisfied
+        let t = small.gemm_time(1024, 1024, 1024, frac, small.bw_frac_with_nccl());
+        assert!(t > 0);
+        // a GPU just above the reservation still scales proportionally
+        let edge = Gpu { sms: constants::GPU_NCCL_SMS + 1, ..Gpu::h100() };
+        let want = 1.0 / (constants::GPU_NCCL_SMS + 1) as f64;
+        assert!((edge.sm_frac_with_nccl() - want).abs() < 1e-12);
     }
 
     #[test]

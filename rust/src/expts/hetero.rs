@@ -1,0 +1,268 @@
+//! Heterogeneous peer-site experiment (`fpgahub hetero`): three tables
+//! that only exist because the GPU/CSD/switch models now run *on* the
+//! event engine (ISSUE 8).
+//!
+//! 1. **Filter placement** — the same scan-filter query with the filter on
+//!    the computational-storage drive, at the hub, or nowhere: on-drive
+//!    wins exactly when the drive's internal NAND bandwidth beats its
+//!    host link.
+//! 2. **Reduce scheme** — one allreduce round through the P4 switch's
+//!    line-rate aggregation vs the hierarchical hub ring at the same
+//!    worker count.
+//! 3. **Offload knee** — GEMM latency offloaded over PCIe to the GPU vs
+//!    staying on the hub's DSP array, swept across problem sizes until
+//!    the curves cross.
+//!
+//! Like `scale`, the drain honors `[fabric] parallel`/`threads`, and the
+//! tables are bit-identical across engines (the determinism suite pins
+//! the underlying traces).
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+
+use crate::apps::allreduce::{HierConfig, HierarchicalAllreduce};
+use crate::apps::hetero::{filter_route, hub_gemm_ps, offload_route, FilterPlacement, SwitchReduce};
+use crate::config::ExperimentConfig;
+use crate::metrics::{Hist, Table};
+use crate::net::p4::P4Switch;
+use crate::runtime_hub::{Fabric, FabricConfig, HubId, QosSpec, RunStats, SitesConfig};
+use crate::sim::time::{to_us, Ps, US};
+
+/// Queries/rounds per series — scales with the sample budget.
+fn reps(cfg: &ExperimentConfig) -> usize {
+    (cfg.samples / 100).clamp(4, 20)
+}
+
+/// The experiment needs at least one of each peer class regardless of the
+/// `[sites]` population (which defaults to none).
+fn sites_for(cfg: &ExperimentConfig) -> SitesConfig {
+    let s = cfg.platform.sites.clone();
+    SitesConfig { gpus: s.gpus.max(1), csds: s.csds.max(1), switches: s.switches.max(1), ..s }
+}
+
+fn fabric(cfg: &ExperimentConfig, hubs: usize) -> Fabric {
+    Fabric::with_config(FabricConfig { hubs, ..cfg.platform.fabric })
+}
+
+fn drain(fab: &mut Fabric, cfg: &ExperimentConfig) -> RunStats {
+    if cfg.platform.fabric_parallel {
+        fab.run_parallel(cfg.platform.fabric_threads)
+    } else {
+        fab.run()
+    }
+}
+
+/// Table 1: filter placement. Each placement runs `reps` back-to-back
+/// 1 MB queries at 10% selectivity on a fresh single-hub fabric.
+pub fn run_filter(cfg: &ExperimentConfig) -> Table {
+    const BYTES: u64 = 1_000_000;
+    const SELECTED: u64 = BYTES / 10;
+    let n = reps(cfg);
+    let mut t = Table::new(
+        "hetero: scan-filter placement (1 MB queries, 10% selectivity)",
+        &["placement", "queries", "mean_us", "p99_us"],
+    );
+    for placement in FilterPlacement::ALL {
+        let mut fab = fabric(cfg, 1);
+        let sites = fab.add_sites(&sites_for(cfg), cfg.platform.seed);
+        let hist = Rc::new(RefCell::new(Hist::new()));
+        for i in 0..n {
+            let t0 = i as u64 * 400 * US;
+            let route = filter_route(
+                &sites.csds[0],
+                HubId(0),
+                placement,
+                i as u64,
+                QosSpec::default(),
+                BYTES,
+                SELECTED,
+                crate::constants::FPGA_COMPRESS_GBPS,
+            );
+            let h = hist.clone();
+            fab.submit_route(t0, route, move |_, at| h.borrow_mut().record(to_us(at - t0)));
+        }
+        drain(&mut fab, cfg);
+        let mut hist = hist.borrow_mut();
+        assert_eq!(hist.len(), n, "{} queries incomplete", placement.name());
+        let (mean, p99) = (hist.mean(), hist.p99());
+        t.row(&[
+            placement.name().to_string(),
+            n.to_string(),
+            format!("{mean:.2}"),
+            format!("{p99:.2}"),
+        ]);
+    }
+    t
+}
+
+/// Table 2: switch-reduce vs the hierarchical hub ring at the same worker
+/// count (2 workers per hub, no skew — pure scheme comparison).
+pub fn run_reduce(cfg: &ExperimentConfig) -> Table {
+    const LANES: usize = 512;
+    let hubs = cfg.platform.fabric.hubs.clamp(1, 4);
+    let workers = hubs * 2;
+    let n = reps(cfg);
+    let mut t = Table::new(
+        "hetero: allreduce scheme (switch line-rate vs hub ring)",
+        &["scheme", "hubs", "workers", "round_mean_us", "round_p99_us"],
+    );
+
+    // in-network: every worker streams into the one switch site
+    let mut fab = fabric(cfg, hubs);
+    let sites = fab.add_sites(&sites_for(cfg), cfg.platform.seed);
+    let mut sw = P4Switch::tofino();
+    let reduce =
+        SwitchReduce::new(&mut sw, sites.switches[0], workers as u32, LANES, QosSpec::default())
+            .expect("aggregation program fits a Tofino");
+    let hist = Rc::new(RefCell::new(Hist::new()));
+    let skews = vec![0u64; workers];
+    for r in 0..n {
+        let t0 = r as u64 * 500 * US;
+        let chunks: Vec<Vec<i32>> = vec![vec![1; LANES]; workers];
+        let h = hist.clone();
+        reduce.schedule_round(&mut fab, t0, r as u64 * 64, &chunks, &skews, move |at, sums| {
+            assert_eq!(sums[0] as usize, workers, "switch round lost a contribution");
+            h.borrow_mut().record(to_us(at - t0));
+        });
+    }
+    drain(&mut fab, cfg);
+    {
+        let mut hist = hist.borrow_mut();
+        assert_eq!(hist.len(), n, "switch rounds incomplete");
+        let (mean, p99) = (hist.mean(), hist.p99());
+        t.row(&[
+            "switch-reduce".into(),
+            hubs.to_string(),
+            workers.to_string(),
+            format!("{mean:.2}"),
+            format!("{p99:.2}"),
+        ]);
+    }
+
+    // hierarchical ring at the same population
+    let mut fab = fabric(cfg, hubs);
+    let app = HierarchicalAllreduce::new(
+        &mut fab,
+        HierConfig {
+            hubs,
+            workers_per_hub: 2,
+            chunk_lanes: LANES,
+            skew_us: 0.0,
+            seed: cfg.platform.seed,
+            qos: QosSpec::default(),
+        },
+    );
+    let hist = Rc::new(RefCell::new(Hist::new()));
+    let mut handles = Vec::with_capacity(n);
+    for r in 0..n {
+        let t0 = r as u64 * 500 * US;
+        let chunks: Vec<Vec<f32>> = vec![vec![1.0; LANES]; workers];
+        let h = hist.clone();
+        handles.push(app.schedule_round(&mut fab, t0, &chunks, move |_, worst| {
+            h.borrow_mut().record(to_us(worst - t0));
+        }));
+    }
+    drain(&mut fab, cfg);
+    for (r, handle) in handles.iter().enumerate() {
+        assert_eq!(handle.borrow().completed as usize, workers, "ring round {r} incomplete");
+    }
+    let mut hist = hist.borrow_mut();
+    let (mean, p99) = (hist.mean(), hist.p99());
+    t.row(&[
+        "hub-ring".into(),
+        hubs.to_string(),
+        workers.to_string(),
+        format!("{mean:.2}"),
+        format!("{p99:.2}"),
+    ]);
+    t
+}
+
+/// Table 3: the GPU-offload knee. One square GEMM per row, offloaded over
+/// PCIe vs computed on the hub's DSP array.
+pub fn run_knee(cfg: &ExperimentConfig) -> Table {
+    let mut t = Table::new(
+        "hetero: GPU-offload knee (square GEMM, offload vs hub DSP)",
+        &["m", "offload_us", "hub_us", "winner"],
+    );
+    for m in [256u64, 512, 1024, 2048, 4096] {
+        let mut fab = fabric(cfg, 1);
+        let sites = fab.add_sites(&sites_for(cfg), cfg.platform.seed);
+        let gpu = &sites.gpus[0];
+        let kernel = gpu.gpu.gemm_time(m, m, m, 1.0, 1.0);
+        let route = offload_route(
+            gpu,
+            HubId(0),
+            m,
+            QosSpec::default(),
+            4 * 2 * m * m,
+            4 * m * m,
+            kernel,
+        );
+        let done: Rc<Cell<Ps>> = Rc::new(Cell::new(0));
+        let d = done.clone();
+        fab.submit_route(0, route, move |_, at| d.set(at));
+        drain(&mut fab, cfg);
+        let offload = done.get();
+        assert!(offload > 0, "offload {m} never completed");
+        let hub = hub_gemm_ps(m, m, m);
+        t.row(&[
+            m.to_string(),
+            format!("{:.2}", to_us(offload)),
+            format!("{:.2}", to_us(hub)),
+            (if offload < hub { "gpu" } else { "hub" }).to_string(),
+        ]);
+    }
+    t
+}
+
+pub fn run(cfg: &ExperimentConfig) -> Vec<Table> {
+    vec![run_filter(cfg), run_reduce(cfg), run_knee(cfg)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filter_table_orders_csd_first() {
+        let t = run_filter(&ExperimentConfig::quick());
+        assert_eq!(t.rows.len(), 3);
+        let mean = |r: usize| t.rows[r][2].parse::<f64>().unwrap();
+        // rows follow FilterPlacement::ALL: csd, hub, ship-all
+        assert!(mean(0) < mean(2), "csd {} vs ship {}", mean(0), mean(2));
+        assert!(mean(2) < mean(1), "ship {} vs hub {}", mean(2), mean(1));
+    }
+
+    #[test]
+    fn switch_reduce_beats_the_ring() {
+        let t = run_reduce(&ExperimentConfig::quick());
+        assert_eq!(t.rows.len(), 2);
+        let sw: f64 = t.rows[0][3].parse().unwrap();
+        let ring: f64 = t.rows[1][3].parse().unwrap();
+        // one line-rate pass through the switch vs 2(h-1) ring legs
+        assert!(sw < ring, "switch {sw}µs vs ring {ring}µs");
+    }
+
+    #[test]
+    fn knee_crosses_exactly_once() {
+        let t = run_knee(&ExperimentConfig::quick());
+        let winners: Vec<&str> = t.rows.iter().map(|r| r[3].as_str()).collect();
+        assert_eq!(winners.first(), Some(&"hub"), "small GEMMs stay home");
+        assert_eq!(winners.last(), Some(&"gpu"), "large GEMMs offload");
+        let flips =
+            winners.windows(2).filter(|w| w[0] != w[1]).count();
+        assert_eq!(flips, 1, "knee must cross once: {winners:?}");
+    }
+
+    #[test]
+    fn parallel_engine_reproduces_the_sequential_tables() {
+        let cfg = ExperimentConfig::quick();
+        let mut pcfg = cfg.clone();
+        pcfg.platform.fabric_parallel = true;
+        pcfg.platform.fabric_threads = 2;
+        for (s, p) in run(&cfg).iter().zip(run(&pcfg).iter()) {
+            assert_eq!(s.rows, p.rows, "{} diverged across engines", s.title);
+        }
+    }
+}

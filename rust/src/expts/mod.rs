@@ -7,6 +7,7 @@ pub mod fig2;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod hetero;
 pub mod qos;
 pub mod reconfig;
 pub mod scale;
@@ -19,7 +20,7 @@ use crate::metrics::{write_csv, Table};
 /// All experiment names (CLI `fpgahub expt <name>`).
 pub const ALL: &[&str] = &[
     "fig2", "fig7a", "fig7b", "fig8", "fig9", "fig10a", "fig10b", "table1", "qos", "scale",
-    "reconfig",
+    "reconfig", "hetero",
 ];
 
 /// Dispatch by name.
@@ -36,6 +37,7 @@ pub fn run(name: &str, cfg: &ExperimentConfig) -> anyhow::Result<Vec<Table>> {
         "qos" => vec![qos::run(cfg)],
         "scale" => vec![scale::run(cfg)],
         "reconfig" => reconfig::run(cfg),
+        "hetero" => hetero::run(cfg),
         other => anyhow::bail!("unknown experiment '{other}' (have {ALL:?})"),
     };
     emit(&tables, cfg)?;

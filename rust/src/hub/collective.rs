@@ -43,11 +43,12 @@ impl CollectiveEngine {
         Ok(CollectiveEngine { workers, shift, agg, rounds: 0 })
     }
 
-    /// One worker contributes its f32 chunk (the hub encodes to fixed
-    /// point). Returns the decoded sum once all `workers` contributed.
-    pub fn contribute(&mut self, values: &[f32]) -> Option<AllreduceResult> {
+    /// Worker `worker` contributes its f32 chunk (the hub encodes to fixed
+    /// point). Returns the decoded sum once all `workers` distinct workers
+    /// contributed — retransmits from the same worker are idempotent.
+    pub fn contribute(&mut self, worker: u32, values: &[f32]) -> Option<AllreduceResult> {
         let (enc, saturated_in) = fixed::encode_slice(values, self.shift);
-        let done = self.agg.contribute(&enc)?;
+        let done = self.agg.contribute(worker, &enc)?;
         self.rounds += 1;
         let decoded =
             fixed::decode_slice(&done.iter().map(|&v| v as i64).collect::<Vec<_>>(), self.shift);
@@ -80,8 +81,8 @@ mod tests {
             .map(|w| (0..16).map(|i| 0.01 * (w * 16 + i) as f32).collect())
             .collect();
         let mut result = None;
-        for c in &chunks {
-            result = eng.contribute(c);
+        for (w, c) in chunks.iter().enumerate() {
+            result = eng.contribute(w as u32, c);
         }
         let res = result.expect("4th contribution completes the round");
         assert!(!res.saturated);
@@ -94,18 +95,30 @@ mod tests {
     #[test]
     fn incomplete_round_returns_none() {
         let (_sw, mut eng) = engine(3, 4);
-        assert!(eng.contribute(&[1.0; 4]).is_none());
-        assert!(eng.contribute(&[1.0; 4]).is_none());
-        assert!(eng.contribute(&[1.0; 4]).is_some());
+        assert!(eng.contribute(0, &[1.0; 4]).is_none());
+        assert!(eng.contribute(1, &[1.0; 4]).is_none());
+        assert!(eng.contribute(2, &[1.0; 4]).is_some());
         assert_eq!(eng.rounds, 1);
+    }
+
+    #[test]
+    fn retransmit_does_not_complete_a_round() {
+        let (_sw, mut eng) = engine(3, 4);
+        assert!(eng.contribute(0, &[1.0; 4]).is_none());
+        assert!(eng.contribute(0, &[1.0; 4]).is_none(), "same worker twice");
+        assert!(eng.contribute(1, &[1.0; 4]).is_none());
+        let res = eng.contribute(2, &[1.0; 4]).unwrap();
+        for v in res.values {
+            assert!((v - 3.0).abs() < 1e-4, "each worker counted once: {v}");
+        }
     }
 
     #[test]
     fn repeated_rounds_stay_correct() {
         let (_sw, mut eng) = engine(2, 4);
         for round in 1..=5 {
-            eng.contribute(&[round as f32; 4]);
-            let res = eng.contribute(&[round as f32; 4]).unwrap();
+            eng.contribute(0, &[round as f32; 4]);
+            let res = eng.contribute(1, &[round as f32; 4]).unwrap();
             for v in res.values {
                 assert!((v - 2.0 * round as f32).abs() < 1e-4);
             }
@@ -116,8 +129,8 @@ mod tests {
     fn saturation_reported_not_silent() {
         let (_sw, mut eng) = engine(2, 1);
         let huge = fixed::max_magnitude(DEFAULT_SHIFT) * 0.9;
-        eng.contribute(&[huge]);
-        let res = eng.contribute(&[huge]).unwrap();
+        eng.contribute(0, &[huge]);
+        let res = eng.contribute(1, &[huge]).unwrap();
         assert!(res.saturated, "i32 accumulator overflow must be surfaced");
     }
 

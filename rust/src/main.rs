@@ -23,6 +23,11 @@
 //!                                      swap latency × region count vs
 //!                                      miss penalty, plus the fabric
 //!                                      operator-pushdown comparison
+//!   fpgahub hetero [--hubs N] [--threads T]
+//!                                      heterogeneous peer sites: scan-filter
+//!                                      placement (CSD vs hub vs ship-all),
+//!                                      switch-reduce vs hub ring, and the
+//!                                      GPU-offload knee
 //!   fpgahub info                       platform + artifact status
 
 use fpgahub::anyhow;
@@ -36,7 +41,7 @@ use fpgahub::runtime_hub::ArbPolicy;
 fn usage() -> ! {
     eprintln!(
         "usage: fpgahub <list|expt NAME|all|train|fetch-demo|multi-tenant|qos|scale|reconfig|\
-         info> [options]\n\
+         hetero|info> [options]\n\
          options: --config FILE --samples N --steps N --workers N --requests N\n\
          \x20        --hubs N --threads N --arb fcfs|priority|wfq --no-csv"
     );
@@ -209,6 +214,10 @@ fn main() -> anyhow::Result<()> {
         }
         "reconfig" => {
             expts::run("reconfig", &cfg)?;
+        }
+        "hetero" => {
+            // --hubs/--threads are folded into the platform config by load_cfg
+            expts::run("hetero", &cfg)?;
         }
         "qos" => {
             let (t, outcomes) = expts::qos::run_with_outcomes(&cfg);

@@ -79,6 +79,7 @@ pub struct P4Switch {
     pub port_gbps: f64,
     pub sram_bytes: u64,
     sram_used: u64,
+    stages_used: u32,
     programs: Vec<P4Program>,
 }
 
@@ -97,17 +98,22 @@ impl P4Switch {
             port_gbps: constants::P4_PORT_GBPS,
             sram_bytes: constants::P4_SRAM_BYTES,
             sram_used: 0,
+            stages_used: 0,
             programs: Vec::new(),
         }
     }
 
-    /// Install a program if it fits all three constraints.
+    /// Install a program if it fits all three constraints. Stages, like
+    /// SRAM, are a *cumulative* physical resource: every resident program's
+    /// dependent chain occupies pipeline stages, so a second program only
+    /// gets what the first left behind.
     pub fn install(&mut self, prog: P4Program) -> Result<(), P4Error> {
-        if prog.dependent_stages > self.stages {
+        let stages_avail = self.stages - self.stages_used;
+        if prog.dependent_stages > stages_avail {
             return Err(P4Error::TooManyStages(
                 prog.name.clone(),
                 prog.dependent_stages,
-                self.stages,
+                stages_avail,
             ));
         }
         if let Some(op) = prog.ops.iter().find(|o| !o.supported()) {
@@ -118,12 +124,17 @@ impl P4Switch {
             return Err(P4Error::SramExceeded(prog.name.clone(), prog.sram_bytes, avail));
         }
         self.sram_used += prog.sram_bytes;
+        self.stages_used += prog.dependent_stages;
         self.programs.push(prog);
         Ok(())
     }
 
     pub fn sram_free(&self) -> u64 {
         self.sram_bytes - self.sram_used
+    }
+
+    pub fn stages_free(&self) -> u32 {
+        self.stages - self.stages_used
     }
 
     /// One packet's pipeline traversal latency ("roughly 1-2 us", §2.3.1).
@@ -146,18 +157,28 @@ pub struct SwitchAggregator {
     pub workers: u32,
     pub slots: usize,
     acc: Vec<i32>,
+    /// per-slot bitmap of workers seen this round — the 4 B/slot of SRAM
+    /// the program declaration has always billed for
     contributed: Vec<u32>,
+    /// widest chunk seen this round; completion checks [0, width)
+    width: usize,
     pub saturations: u64,
 }
 
 impl SwitchAggregator {
     /// Builds the aggregator *and* its P4 program; installation can fail if
     /// the slot count blows the SRAM budget (a real Tofino constraint).
+    /// The per-slot contribution bitmap is a 32-bit SRAM register, so the
+    /// worker fan-in is capped at 32 (the SwitchML pool-of-slots regime).
     pub fn install(
         switch: &mut P4Switch,
         workers: u32,
         slots: usize,
     ) -> Result<Self, P4Error> {
+        assert!(
+            (1..=32).contains(&workers),
+            "contribution bitmap is one 32-bit register per slot"
+        );
         let prog = P4Program {
             name: format!("switch-agg-{workers}w-{slots}s"),
             // parse, bitmap-update, add, count-check, multicast decision
@@ -172,15 +193,30 @@ impl SwitchAggregator {
             slots,
             acc: vec![0; slots],
             contributed: vec![0; slots],
+            width: 0,
             saturations: 0,
         })
     }
 
-    /// Worker `w`'s fixed-point chunk lands on slot range [0, len).
-    /// Returns Some(result) when this contribution completes the slot set.
-    pub fn contribute(&mut self, values: &[i32]) -> Option<Vec<i32>> {
+    fn full_mask(&self) -> u32 {
+        ((1u64 << self.workers) - 1) as u32
+    }
+
+    /// Worker `worker`'s fixed-point chunk lands on slot range [0, len).
+    /// A retransmit (same worker, slot already marked) is dropped
+    /// idempotently rather than double-counted — the per-slot bitmap is
+    /// what distinguishes "two packets" from "two workers". Returns
+    /// Some(result) when every slot touched this round has heard from
+    /// every worker; completion resets the *entire* slot array so no
+    /// stale accumulator state survives into a wider next round.
+    pub fn contribute(&mut self, worker: u32, values: &[i32]) -> Option<Vec<i32>> {
         assert!(values.len() <= self.slots, "chunk larger than slot array");
+        assert!(worker < self.workers, "worker id {worker} out of range");
+        let bit = 1u32 << worker;
         for (i, &v) in values.iter().enumerate() {
+            if self.contributed[i] & bit != 0 {
+                continue; // duplicate from this worker: idempotent drop
+            }
             let (sum, over) = self.acc[i].overflowing_add(v);
             if over {
                 self.saturations += 1;
@@ -188,14 +224,15 @@ impl SwitchAggregator {
             } else {
                 self.acc[i] = sum;
             }
-            self.contributed[i] += 1;
+            self.contributed[i] |= bit;
         }
-        if self.contributed[..values.len()].iter().all(|&c| c >= self.workers) {
-            let out = self.acc[..values.len()].to_vec();
-            for i in 0..values.len() {
-                self.acc[i] = 0;
-                self.contributed[i] = 0;
-            }
+        self.width = self.width.max(values.len());
+        let full = self.full_mask();
+        if self.width > 0 && self.contributed[..self.width].iter().all(|&c| c == full) {
+            let out = self.acc[..self.width].to_vec();
+            self.acc.iter_mut().for_each(|v| *v = 0);
+            self.contributed.iter_mut().for_each(|v| *v = 0);
+            self.width = 0;
             Some(out)
         } else {
             None
@@ -271,12 +308,45 @@ mod tests {
     }
 
     #[test]
+    fn cumulative_stage_accounting_across_programs() {
+        // regression: install used to check dependent_stages per-program
+        // only, so two 7-stage programs "fit" a 12-stage pipeline
+        let mut sw = P4Switch::tofino();
+        sw.install(P4Program {
+            name: "first".into(),
+            dependent_stages: 7,
+            ops: vec![AluOp::Add],
+            sram_bytes: 0,
+        })
+        .unwrap();
+        assert_eq!(sw.stages_free(), 5);
+        let err = sw
+            .install(P4Program {
+                name: "second".into(),
+                dependent_stages: 7,
+                ops: vec![AluOp::Add],
+                sram_bytes: 0,
+            })
+            .unwrap_err();
+        assert!(matches!(err, P4Error::TooManyStages(_, 7, 5)), "{err:?}");
+        // a program that fits the remaining stages still installs
+        sw.install(P4Program {
+            name: "third".into(),
+            dependent_stages: 5,
+            ops: vec![AluOp::Add],
+            sram_bytes: 0,
+        })
+        .unwrap();
+        assert_eq!(sw.stages_free(), 0);
+    }
+
+    #[test]
     fn aggregator_sums_all_workers() {
         let mut sw = P4Switch::tofino();
         let mut agg = SwitchAggregator::install(&mut sw, 4, 8).unwrap();
         for w in 0..4 {
             let chunk: Vec<i32> = (0..8).map(|i| (w * 10 + i) as i32).collect();
-            let res = agg.contribute(&chunk);
+            let res = agg.contribute(w as u32, &chunk);
             if w < 3 {
                 assert!(res.is_none());
             } else {
@@ -294,8 +364,8 @@ mod tests {
         let mut sw = P4Switch::tofino();
         let mut agg = SwitchAggregator::install(&mut sw, 2, 4).unwrap();
         for round in 0..3 {
-            assert!(agg.contribute(&[1, 2, 3, 4]).is_none());
-            let out = agg.contribute(&[10, 20, 30, 40]).unwrap();
+            assert!(agg.contribute(0, &[1, 2, 3, 4]).is_none());
+            let out = agg.contribute(1, &[10, 20, 30, 40]).unwrap();
             assert_eq!(out, vec![11, 22, 33, 44], "round {round}");
         }
     }
@@ -304,10 +374,49 @@ mod tests {
     fn aggregator_saturates_not_wraps() {
         let mut sw = P4Switch::tofino();
         let mut agg = SwitchAggregator::install(&mut sw, 2, 1).unwrap();
-        agg.contribute(&[i32::MAX]);
-        let out = agg.contribute(&[i32::MAX]).unwrap();
+        agg.contribute(0, &[i32::MAX]);
+        let out = agg.contribute(1, &[i32::MAX]).unwrap();
         assert_eq!(out[0], i32::MAX);
         assert_eq!(agg.saturations, 1);
+    }
+
+    #[test]
+    fn duplicate_contribution_does_not_complete_the_round() {
+        // regression: the old per-slot counter treated one worker's
+        // retransmit as a second worker, multicasting a wrong partial sum
+        let mut sw = P4Switch::tofino();
+        let mut agg = SwitchAggregator::install(&mut sw, 2, 4).unwrap();
+        assert!(agg.contribute(0, &[5, 5, 5, 5]).is_none());
+        assert!(agg.contribute(0, &[5, 5, 5, 5]).is_none(), "retransmit must not complete");
+        let out = agg.contribute(1, &[1, 1, 1, 1]).unwrap();
+        assert_eq!(out, vec![6, 6, 6, 6], "each worker counted exactly once");
+    }
+
+    #[test]
+    fn short_chunk_round_leaves_no_stale_tail_state() {
+        // regression: completion used to reset only [..values.len()],
+        // leaking tail accumulator state into the next wider round
+        let mut sw = P4Switch::tofino();
+        let mut agg = SwitchAggregator::install(&mut sw, 2, 4).unwrap();
+        // full-width round deposits state in all 4 slots
+        assert!(agg.contribute(0, &[1, 2, 3, 4]).is_none());
+        assert_eq!(agg.contribute(1, &[1, 2, 3, 4]).unwrap(), vec![2, 4, 6, 8]);
+        // short round: completing on the 2-slot prefix must clear the tail
+        assert!(agg.contribute(0, &[10, 10]).is_none());
+        assert_eq!(agg.contribute(1, &[10, 10]).unwrap(), vec![20, 20]);
+        // wider round again: tail slots start from zero, not round-1 leftovers
+        assert!(agg.contribute(0, &[1, 1, 1, 1]).is_none());
+        assert_eq!(agg.contribute(1, &[1, 1, 1, 1]).unwrap(), vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn mixed_width_round_waits_for_the_widest_chunk() {
+        // a round is only done when every *touched* slot heard every worker
+        let mut sw = P4Switch::tofino();
+        let mut agg = SwitchAggregator::install(&mut sw, 2, 4).unwrap();
+        assert!(agg.contribute(0, &[1, 1, 1, 1]).is_none());
+        assert!(agg.contribute(1, &[9, 9]).is_none(), "slots 2..4 still short a worker");
+        assert_eq!(agg.contribute(1, &[9, 9, 9, 9]).unwrap(), vec![10, 10, 10, 10]);
     }
 
     #[test]

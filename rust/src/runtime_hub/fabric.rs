@@ -38,9 +38,11 @@ use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::constants;
+use crate::devices::gpu::Gpu;
 use crate::nvme::ssd::SsdArray;
 use crate::sim::time::{ns_f, Ps};
 use crate::sim::Sim;
+use crate::util::Rng;
 
 use super::parallel::EngineMode;
 use super::{
@@ -60,12 +62,22 @@ impl HubId {
     }
 }
 
-/// Where a [`Hop`] executes: on one hub's resources, or on the
-/// interconnect (inter-hub links + cross-hub barriers).
+/// Where a [`Hop`] executes: on one hub's resources, on the
+/// interconnect (inter-hub links + cross-hub barriers), or on a typed
+/// peer device shard (ISSUE 8) — a GPU, a computational-storage drive,
+/// or a programmable switch, each a first-class cell on the event engine
+/// with its own links, arbiters, and completion log. Peer indices count
+/// per class, in registration order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Site {
     Hub(HubId),
     Net,
+    /// `i`-th GPU peer site
+    Gpu(u32),
+    /// `i`-th computational-storage peer site
+    Csd(u32),
+    /// `i`-th programmable-switch peer site
+    Switch(u32),
 }
 
 /// Interconnect shape: hub count, per-direction link rate, per-hop
@@ -96,6 +108,114 @@ impl FabricConfig {
     pub fn new(hubs: usize) -> Self {
         FabricConfig { hubs, ..Default::default() }
     }
+}
+
+/// Peer-site population (`PlatformConfig [sites]`): how many device shards
+/// of each class to hang off the fabric, and their link/engine rates.
+/// Defaults to zero peers — a hubs-only fabric is byte-identical to the
+/// pre-peer fabric (the committed golden hashes depend on it).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SitesConfig {
+    pub gpus: usize,
+    /// GPU host-link rate (PCIe), Gb/s per direction
+    pub gpu_pcie_gbps: f64,
+    pub csds: usize,
+    /// drives behind each CSD site's internal controller
+    pub csd_ssds: usize,
+    /// internal NAND-array scan rate the on-drive filter sees, Gb/s
+    pub csd_nand_gbps: f64,
+    /// CSD host-link rate, Gb/s per direction (the ship-raw bottleneck)
+    pub csd_link_gbps: f64,
+    pub switches: usize,
+    /// switch port rate, Gb/s per direction
+    pub switch_port_gbps: f64,
+}
+
+impl Default for SitesConfig {
+    fn default() -> Self {
+        SitesConfig {
+            gpus: 0,
+            gpu_pcie_gbps: constants::PCIE_GEN3_X16_GBPS,
+            csds: 0,
+            csd_ssds: constants::CSD_SSDS,
+            csd_nand_gbps: constants::CSD_NAND_GBPS,
+            csd_link_gbps: constants::CSD_LINK_GBPS,
+            switches: 0,
+            switch_port_gbps: constants::P4_PORT_GBPS,
+        }
+    }
+}
+
+/// Handle to one registered GPU peer site: its [`Site`] address, the
+/// ingress/egress PCIe link ids *on that cell*, the single-stream kernel
+/// queue (a 1-core pool — kernels on one GPU serialize), and the device
+/// model routes use to derive `Stage::Core` work from (roofline
+/// [`Gpu::gemm_time`], NCCL SM/HBM interference fractions).
+#[derive(Clone, Debug)]
+pub struct GpuSite {
+    pub site: Site,
+    pub ingress: LinkId,
+    pub egress: LinkId,
+    pub kernel_queue: PoolId,
+    pub gpu: Gpu,
+}
+
+/// Handle to one computational-storage peer site: host-link ids, the
+/// on-drive NVMe command queue (per-command IOPS machinery), and the
+/// internal NAND scan rate for bulk-filter `Stage::Delay` billing.
+#[derive(Clone, Copy, Debug)]
+pub struct CsdSite {
+    pub site: Site,
+    pub ingress: LinkId,
+    pub egress: LinkId,
+    pub array: ArrayId,
+    pub queue: NvmeId,
+    pub nand_gbps: f64,
+}
+
+impl CsdSite {
+    /// Time to scan `bytes` through the on-drive filter engine at internal
+    /// NAND bandwidth (the part a raw-ship plan pays over the host link
+    /// instead).
+    pub fn scan_ps(&self, bytes: u64) -> Ps {
+        ns_f(bytes as f64 * 8.0 / self.nand_gbps)
+    }
+}
+
+/// Handle to one programmable-switch peer site: shared ingress (all
+/// contributors serialize at line rate) and egress (multicast fan-out)
+/// link ids plus the match-action pipeline traversal latency. Aggregation
+/// *state* (the SRAM-budgeted [`SwitchAggregator`](crate::net::p4::SwitchAggregator))
+/// stays with the app that installed it — the fabric bills time, the
+/// switch model bills correctness.
+#[derive(Clone, Copy, Debug)]
+pub struct SwitchSite {
+    pub site: Site,
+    pub ingress: LinkId,
+    pub egress: LinkId,
+    pub pipeline: Ps,
+}
+
+/// The peer shards one [`Fabric::add_sites`] call registered.
+#[derive(Clone, Debug, Default)]
+pub struct HeteroSites {
+    pub gpus: Vec<GpuSite>,
+    pub csds: Vec<CsdSite>,
+    pub switches: Vec<SwitchSite>,
+}
+
+/// Peer device class (internal: trace tagging + site addressing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PeerKind {
+    Gpu,
+    Csd,
+    Switch,
+}
+
+/// One peer shard: its trace tag and state cell.
+struct PeerCell {
+    tag: u32,
+    cell: Rc<RefCell<HubState>>,
 }
 
 /// One leg of a cross-hub route: a descriptor bound to the site whose
@@ -147,6 +267,12 @@ pub struct TraceEntry {
 
 /// Site tag for [`Site::Net`] in a [`TraceEntry`].
 pub const TRACE_NET: u32 = u32::MAX;
+/// Trace tag base for [`Site::Gpu`] peers: tag = base + class index.
+pub const TRACE_GPU_BASE: u32 = 0xFFFF_0000;
+/// Trace tag base for [`Site::Csd`] peers.
+pub const TRACE_CSD_BASE: u32 = 0xFFFE_0000;
+/// Trace tag base for [`Site::Switch`] peers.
+pub const TRACE_SWITCH_BASE: u32 = 0xFFFD_0000;
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
@@ -247,6 +373,16 @@ pub struct Fabric {
     /// `routes[src][dst]` = interconnect link id for the directed pair
     /// (diagonal unused)
     routes: Vec<Vec<usize>>,
+    /// peer device shards, shard indices `N+1 ..` in registration order
+    peers: Vec<PeerCell>,
+    /// per-class peer ordinals → index into `peers`
+    gpu_peers: Vec<usize>,
+    csd_peers: Vec<usize>,
+    switch_peers: Vec<usize>,
+    /// the injection-billed hop share (0 unless Injection billing on an
+    /// eager fabric arbiter) — also the lookahead promised on hub → peer
+    /// edges, so peer registration reuses the mesh's decision
+    inject: Ps,
 }
 
 impl Fabric {
@@ -311,7 +447,19 @@ impl Fabric {
             st.la_to[net_idx] = inject;
         }
         net.borrow_mut().la_to = vec![0; cfg.hubs + 1];
-        Fabric { sim: Sim::new(), cfg, billing, hubs, net, routes }
+        Fabric {
+            sim: Sim::new(),
+            cfg,
+            billing,
+            hubs,
+            net,
+            routes,
+            peers: Vec::new(),
+            gpu_peers: Vec::new(),
+            csd_peers: Vec::new(),
+            switch_peers: Vec::new(),
+            inject,
+        }
     }
 
     pub fn config(&self) -> FabricConfig {
@@ -337,6 +485,22 @@ impl Fabric {
         ns_f(self.cfg.hop_ns)
     }
 
+    /// Index into `peers` for a per-class peer ordinal.
+    fn peer_ordinal(&self, site: Site) -> Option<usize> {
+        match site {
+            Site::Gpu(i) => Some(*self.gpu_peers.get(i as usize).unwrap_or_else(|| {
+                panic!("unknown GPU site {i} (have {})", self.gpu_peers.len())
+            })),
+            Site::Csd(i) => Some(*self.csd_peers.get(i as usize).unwrap_or_else(|| {
+                panic!("unknown CSD site {i} (have {})", self.csd_peers.len())
+            })),
+            Site::Switch(i) => Some(*self.switch_peers.get(i as usize).unwrap_or_else(|| {
+                panic!("unknown switch site {i} (have {})", self.switch_peers.len())
+            })),
+            _ => None,
+        }
+    }
+
     fn site_cell(&self, site: Site) -> &Rc<RefCell<HubState>> {
         match site {
             Site::Hub(h) => {
@@ -344,21 +508,25 @@ impl Fabric {
                 &self.hubs[h.index()]
             }
             Site::Net => &self.net,
+            _ => &self.peers[self.peer_ordinal(site).unwrap()].cell,
         }
     }
 
-    /// Shard index of a site: hubs `0..N`, interconnect `N`.
+    /// Shard index of a site: hubs `0..N`, interconnect `N`, peers `N+1..`.
     fn site_index(&self, site: Site) -> u32 {
         match site {
             Site::Hub(h) => h.0,
             Site::Net => self.hubs.len() as u32,
+            _ => (self.hubs.len() + 1 + self.peer_ordinal(site).unwrap()) as u32,
         }
     }
 
-    /// Every site cell in shard-index order (hubs, then the interconnect).
+    /// Every site cell in shard-index order (hubs, the interconnect, then
+    /// peer shards in registration order).
     fn all_cells(&self) -> Vec<Rc<RefCell<HubState>>> {
         let mut v = self.hubs.clone();
         v.push(self.net.clone());
+        v.extend(self.peers.iter().map(|p| p.cell.clone()));
         v
     }
 
@@ -423,6 +591,181 @@ impl Fabric {
     /// any hub rendezvous on it via a [`Site::Net`] hop.
     pub fn add_fabric_barrier(&mut self, need: usize) -> BarrierId {
         self.net.borrow_mut().register_barrier(need)
+    }
+
+    /// Register a barrier on any site — peer sites included. The
+    /// switch-reduce app rendezvouses all contributors *on the switch
+    /// shard* with one of these: release at the last arrival is exactly
+    /// the instant the aggregated value exists.
+    pub fn add_site_barrier(&mut self, site: Site, need: usize) -> BarrierId {
+        self.site_cell(site).borrow_mut().register_barrier(need)
+    }
+
+    // ------------------------------------------------- peer sites ----
+
+    /// Append one peer shard and wire its lookahead edges. A peer is
+    /// reached through an injection-billed ingress Xfer (the leading
+    /// stage of every hub → peer hop), so hub → peer edges promise the
+    /// same `inject` lookahead as hub → interconnect; a peer's own
+    /// outbound edges (reply legs back to hubs) promise nothing — the
+    /// same 0-lookahead class interconnect → hub legs have always used,
+    /// and exactly as sound (DESIGN.md §12). Rows are kept dense so the
+    /// parallel coordinator's matrix build stays positional.
+    fn add_peer_cell(&mut self, kind: PeerKind) -> (Site, Rc<RefCell<HubState>>) {
+        assert_eq!(self.total_submitted(), 0, "register peer sites before submitting work");
+        let shard = self.hubs.len() + 1 + self.peers.len();
+        let cell = Rc::new(RefCell::new(HubState::new(shard as u32)));
+        cell.borrow_mut().la_to = vec![0; shard + 1];
+        for h in &self.hubs {
+            let mut st = h.borrow_mut();
+            st.la_to.resize(shard + 1, 0);
+            st.la_to[shard] = self.inject;
+        }
+        self.net.borrow_mut().la_to.resize(shard + 1, 0);
+        for p in &self.peers {
+            p.cell.borrow_mut().la_to.resize(shard + 1, 0);
+        }
+        let ord = self.peers.len();
+        let (tag, site) = match kind {
+            PeerKind::Gpu => {
+                let i = self.gpu_peers.len() as u32;
+                self.gpu_peers.push(ord);
+                (TRACE_GPU_BASE + i, Site::Gpu(i))
+            }
+            PeerKind::Csd => {
+                let i = self.csd_peers.len() as u32;
+                self.csd_peers.push(ord);
+                (TRACE_CSD_BASE + i, Site::Csd(i))
+            }
+            PeerKind::Switch => {
+                let i = self.switch_peers.len() as u32;
+                self.switch_peers.push(ord);
+                (TRACE_SWITCH_BASE + i, Site::Switch(i))
+            }
+        };
+        self.peers.push(PeerCell { tag, cell: cell.clone() });
+        (site, cell)
+    }
+
+    /// Register a GPU peer site: PCIe ingress/egress links (hop-billed
+    /// like a mesh leg) and a single-stream kernel queue — concurrent
+    /// offloads serialize on the device, which is what makes the
+    /// GPU-offload knee a knee. Kernel durations come from the handle's
+    /// [`Gpu`] roofline model at route-construction time.
+    pub fn add_gpu_site(&mut self, gpu: Gpu, pcie_gbps: f64) -> GpuSite {
+        let (site, cell) = self.add_peer_cell(PeerKind::Gpu);
+        let hop = ns_f(self.cfg.hop_ns);
+        let (ingress, egress, kernel_queue) = {
+            let mut st = cell.borrow_mut();
+            let ingress = st.register_link_inject(
+                "gpu-pcie-in",
+                pcie_gbps,
+                hop,
+                self.inject,
+                self.cfg.policies.fabric,
+            );
+            let egress = st.register_link("gpu-pcie-out", pcie_gbps, hop, self.cfg.policies.fabric);
+            let kernel_queue = st.register_pool(1, self.cfg.policies.pools);
+            (ingress, egress, kernel_queue)
+        };
+        GpuSite { site, ingress, egress, kernel_queue, gpu }
+    }
+
+    /// Register a computational-storage peer site: a narrow host link
+    /// (ingress/egress), the drive array, and one NVMe command queue for
+    /// per-command IOPS billing. The on-drive filter scans at
+    /// `nand_gbps` internally ([`CsdSite::scan_ps`]) and ships only the
+    /// selected bytes back over the link.
+    pub fn add_csd_site(
+        &mut self,
+        ssds: usize,
+        nand_gbps: f64,
+        link_gbps: f64,
+        seed: u64,
+    ) -> CsdSite {
+        let (site, cell) = self.add_peer_cell(PeerKind::Csd);
+        let hop = ns_f(self.cfg.hop_ns);
+        let mut rng = Rng::new(seed);
+        let (ingress, egress, array, queue) = {
+            let mut st = cell.borrow_mut();
+            let ingress = st.register_link_inject(
+                "csd-link-in",
+                link_gbps,
+                hop,
+                self.inject,
+                self.cfg.policies.fabric,
+            );
+            let egress = st.register_link("csd-link-out", link_gbps, hop, self.cfg.policies.fabric);
+            let array = st.register_array(SsdArray::new(ssds, &mut rng));
+            let queue = st.register_nvme_queue(
+                array,
+                0,
+                constants::SSD_QUEUE_DEPTH,
+                ns_f(constants::PCIE_DMA_SETUP_NS),
+                ns_f(constants::PCIE_DMA_SETUP_NS),
+                self.cfg.policies.nvme,
+            );
+            (ingress, egress, array, queue)
+        };
+        CsdSite { site, ingress, egress, array, queue, nand_gbps }
+    }
+
+    /// Register a programmable-switch peer site: one shared line-rate
+    /// ingress (contributors serialize on it — that *is* the aggregation
+    /// time at line rate) and one shared egress (multicast copies
+    /// serialize out), plus the fixed match-action `pipeline` traversal.
+    pub fn add_switch_site(&mut self, port_gbps: f64, pipeline: Ps) -> SwitchSite {
+        let (site, cell) = self.add_peer_cell(PeerKind::Switch);
+        let hop = ns_f(self.cfg.hop_ns);
+        let (ingress, egress) = {
+            let mut st = cell.borrow_mut();
+            let ingress = st.register_link_inject(
+                "switch-port-in",
+                port_gbps,
+                hop,
+                self.inject,
+                self.cfg.policies.fabric,
+            );
+            let egress =
+                st.register_link("switch-port-out", port_gbps, hop, self.cfg.policies.fabric);
+            (ingress, egress)
+        };
+        SwitchSite { site, ingress, egress, pipeline }
+    }
+
+    /// Register the whole `[sites]` population from config: H100-class
+    /// GPUs, CSDs (drive RNGs forked off `seed`), and Tofino-class
+    /// switches, in that order.
+    pub fn add_sites(&mut self, sc: &SitesConfig, seed: u64) -> HeteroSites {
+        let mut out = HeteroSites::default();
+        for _ in 0..sc.gpus {
+            out.gpus.push(self.add_gpu_site(Gpu::h100(), sc.gpu_pcie_gbps));
+        }
+        for i in 0..sc.csds {
+            let csd_seed = seed ^ 0xC5D0 ^ ((i as u64) << 16);
+            out.csds
+                .push(self.add_csd_site(sc.csd_ssds, sc.csd_nand_gbps, sc.csd_link_gbps, csd_seed));
+        }
+        for _ in 0..sc.switches {
+            let pipeline = ns_f(constants::P4_STAGES as f64 * constants::P4_STAGE_NS);
+            out.switches.push(self.add_switch_site(sc.switch_port_gbps, pipeline));
+        }
+        out
+    }
+
+    /// Number of peer device shards registered.
+    pub fn num_peer_sites(&self) -> usize {
+        self.peers.len()
+    }
+
+    /// Read-only access to any site's state (hub, interconnect, or peer).
+    pub fn with_site<R>(&self, site: Site, f: impl FnOnce(&HubState) -> R) -> R {
+        f(&self.site_cell(site).borrow())
+    }
+
+    /// Clone of any site's state cell (for closures that submit follow-ups).
+    pub fn site_state(&self, site: Site) -> Rc<RefCell<HubState>> {
+        self.site_cell(site).clone()
     }
 
     // ------------------------------------------------------- routing ----
@@ -602,13 +945,16 @@ impl Fabric {
         f(&self.net.borrow())
     }
 
-    /// All sites in trace order: hubs by id, then the interconnect.
+    /// All sites in trace order: hubs by id, the interconnect, then peer
+    /// shards in registration order (tagged `TRACE_{GPU,CSD,SWITCH}_BASE
+    /// + class index`).
     fn sites(&self) -> impl Iterator<Item = (u32, &Rc<RefCell<HubState>>)> + '_ {
         self.hubs
             .iter()
             .enumerate()
             .map(|(i, st)| (i as u32, st))
             .chain(std::iter::once((TRACE_NET, &self.net)))
+            .chain(self.peers.iter().map(|p| (p.tag, &p.cell)))
     }
 
     /// Descriptors submitted across every site (each route hop counts once
@@ -903,6 +1249,214 @@ mod tests {
         assert_eq!(reports[0].completed, 2);
         assert_eq!(reports[0].bytes_moved, 3000);
         assert_eq!(reports[0].lat_us.n, 2);
+    }
+
+    /// A two-hub fabric with one GPU peer (PCIe at the mesh rate so the
+    /// arithmetic stays 1 µs per 12.5 KB).
+    fn two_hub_with_gpu() -> (Fabric, GpuSite) {
+        let mut fab = two_hub();
+        let gpu = fab.add_gpu_site(crate::devices::gpu::Gpu::h100(), 100.0);
+        (fab, gpu)
+    }
+
+    #[test]
+    fn gpu_offload_route_pays_pcie_kernel_and_reply() {
+        let (mut fab, gpu) = two_hub_with_gpu();
+        let done = Rc::new(Cell::new(0u64));
+        let d = done.clone();
+        let qos = QosSpec::default();
+        let route = RouteDesc::new()
+            .hop(
+                gpu.site,
+                TransferDesc::with_label(1)
+                    .qos(qos)
+                    .xfer(gpu.ingress, BYTES_1US)
+                    .on_core(gpu.kernel_queue, 2 * US)
+                    .xfer(gpu.egress, BYTES_1US),
+            )
+            .hop(Site::Hub(HubId(1)), TransferDesc::with_label(1).qos(qos).delay(US));
+        fab.submit_route(0, route, move |_, t| d.set(t));
+        fab.run();
+        // in: 1 µs wire + 500 ns hop; kernel 2 µs; out: 1 µs + 500 ns;
+        // then 1 µs on the landing hub
+        assert_eq!(done.get(), 6 * US);
+        assert_eq!(fab.total_completed(), 2);
+        assert_eq!(fab.routes_in_flight(), 0);
+        fab.with_site(gpu.site, |st| {
+            assert_eq!(st.links[gpu.ingress].bytes_moved, BYTES_1US);
+            assert_eq!(st.links[gpu.egress].bytes_moved, BYTES_1US);
+        });
+    }
+
+    #[test]
+    fn concurrent_gpu_offloads_serialize_on_the_kernel_queue() {
+        let (mut fab, gpu) = two_hub_with_gpu();
+        let times: Rc<RefCell<Vec<Ps>>> = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..2u64 {
+            let t = times.clone();
+            let route = RouteDesc::new().hop(
+                gpu.site,
+                TransferDesc::with_label(i)
+                    .qos(QosSpec::default())
+                    .xfer(gpu.ingress, BYTES_1US)
+                    .on_core(gpu.kernel_queue, 4 * US),
+            );
+            fab.submit_route(0, route, move |_, at| t.borrow_mut().push(at));
+        }
+        fab.run();
+        let mut got = times.borrow().clone();
+        got.sort_unstable();
+        // ingress serializes the transfers (arrivals 1.5 µs and 2.5 µs);
+        // the one-core kernel queue then runs them back to back:
+        // 1.5+4 = 5.5 µs and max(2.5, 5.5)+4 = 9.5 µs
+        assert_eq!(got, vec![5 * US + 500_000, 9 * US + 500_000]);
+    }
+
+    #[test]
+    fn peer_trace_tags_are_distinct_per_class() {
+        let mut fab = two_hub();
+        let gpu = fab.add_gpu_site(crate::devices::gpu::Gpu::h100(), 100.0);
+        let csd = fab.add_csd_site(2, 24.0, 100.0, 7);
+        let sw = fab.add_switch_site(100.0, US);
+        assert_eq!(fab.num_peer_sites(), 3);
+        assert_eq!(gpu.site, Site::Gpu(0));
+        assert_eq!(csd.site, Site::Csd(0));
+        assert_eq!(sw.site, Site::Switch(0));
+        for (site, link) in
+            [(gpu.site, gpu.ingress), (csd.site, csd.ingress), (sw.site, sw.ingress)]
+        {
+            let d = TransferDesc::with_label(3).xfer(link, BYTES_1US);
+            fab.submit_route_detached(0, RouteDesc::new().hop(site, d));
+        }
+        fab.run();
+        let trace = fab.completion_trace();
+        let tags: Vec<u32> = trace.iter().map(|e| e.site).collect();
+        assert!(tags.contains(&TRACE_GPU_BASE), "{tags:?}");
+        assert!(tags.contains(&TRACE_CSD_BASE), "{tags:?}");
+        assert!(tags.contains(&TRACE_SWITCH_BASE), "{tags:?}");
+    }
+
+    #[test]
+    fn peer_lookahead_rows_mirror_the_mesh_promise() {
+        let (fab, gpu) = two_hub_with_gpu();
+        let gpu_shard = fab.site_index(gpu.site) as usize;
+        assert_eq!(gpu_shard, 3, "hubs 0..2, net 2, peer 3");
+        let inject = fab.hop_latency();
+        for h in fab.hub_ids() {
+            fab.with_hub(h, |st| {
+                assert_eq!(st.la_to[gpu_shard], inject, "hub {h:?} promises the hop");
+                assert_eq!(st.la_to[fab.cfg.hubs], inject, "mesh promise unchanged");
+            });
+        }
+        fab.with_site(gpu.site, |st| {
+            assert!(st.la_to.iter().all(|&l| l == 0), "peers promise nothing outbound");
+        });
+        fab.with_net(|st| assert!(st.la_to.iter().all(|&l| l == 0)));
+    }
+
+    #[test]
+    fn csd_filter_reply_is_smaller_than_ship_all() {
+        // 1 MB scanned on-drive at 96 Gb/s aggregate NAND bandwidth with a
+        // 10% selectivity reply over the 32 Gb/s host link, vs shipping
+        // the raw MB over that link — the filter wins exactly because the
+        // drive's inside is faster than its outside
+        let mut fab = two_hub();
+        let csd = fab.add_csd_site(2, 96.0, 32.0, 7);
+        let scan = csd.scan_ps(1_000_000);
+        assert_eq!(scan, ns_f(1_000_000.0 * 8.0 / 96.0));
+        let qos = QosSpec::default();
+        let filtered = Rc::new(Cell::new(0u64));
+        let raw = Rc::new(Cell::new(0u64));
+        let (f2, r2) = (filtered.clone(), raw.clone());
+        let filter_route = RouteDesc::new().hop(
+            csd.site,
+            TransferDesc::with_label(1)
+                .qos(qos)
+                .xfer(csd.ingress, 64)
+                .nvme(csd.queue, crate::nvme::queue::NvmeOp::Read)
+                .delay(scan)
+                .xfer(csd.egress, 100_000),
+        );
+        fab.submit_route(0, filter_route, move |_, t| f2.set(t));
+        fab.run();
+        let mut fab2 = two_hub();
+        let csd2 = fab2.add_csd_site(2, 96.0, 32.0, 7);
+        let ship_route = RouteDesc::new().hop(
+            csd2.site,
+            TransferDesc::with_label(1)
+                .qos(qos)
+                .xfer(csd2.ingress, 64)
+                .nvme(csd2.queue, crate::nvme::queue::NvmeOp::Read)
+                .xfer(csd2.egress, 1_000_000),
+        );
+        fab2.submit_route(0, ship_route, move |_, t| r2.set(t));
+        fab2.run();
+        assert!(filtered.get() > 0 && raw.get() > 0);
+        assert!(
+            filtered.get() < raw.get(),
+            "on-drive filter ({}) must beat ship-all ({})",
+            filtered.get(),
+            raw.get()
+        );
+    }
+
+    #[test]
+    fn hubs_only_fabric_is_unchanged_by_the_peer_machinery() {
+        // the committed golden hashes ride on this: zero peers => the
+        // exact cell list, link tables, and trace of the pre-peer fabric
+        let fab = two_hub();
+        assert_eq!(fab.num_peer_sites(), 0);
+        assert_eq!(fab.all_cells().len(), 3);
+        for h in fab.hub_ids() {
+            fab.with_hub(h, |st| assert_eq!(st.la_to.len(), 3));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "register peer sites before submitting work")]
+    fn late_peer_registration_is_rejected() {
+        let mut fab = two_hub();
+        let l = fab.add_link(HubId(0), "port", 100.0, 0);
+        fab.submit(HubId(0), 0, TransferDesc::new().xfer(l, 100), |_, _| {});
+        fab.add_gpu_site(crate::devices::gpu::Gpu::h100(), 100.0);
+    }
+
+    #[test]
+    fn peer_routes_parallel_identical_to_sequential() {
+        let build = |parallel: bool| {
+            let (mut fab, gpu) = two_hub_with_gpu();
+            let qos = QosSpec::default();
+            for i in 0..8u64 {
+                let route = RouteDesc::new()
+                    .hop(
+                        Site::Hub(HubId((i % 2) as u32)),
+                        TransferDesc::with_label(i).qos(qos).delay(i * 100_000),
+                    )
+                    .hop(
+                        gpu.site,
+                        TransferDesc::with_label(i)
+                            .qos(qos)
+                            .xfer(gpu.ingress, BYTES_1US / 2 + i * 100)
+                            .on_core(gpu.kernel_queue, US + i * 50_000)
+                            .xfer(gpu.egress, 500 + i * 10),
+                    )
+                    .hop(
+                        Site::Hub(HubId(((i + 1) % 2) as u32)),
+                        TransferDesc::with_label(i).qos(qos).delay(US),
+                    );
+                fab.submit_route(0, route, |_, _| {});
+            }
+            if parallel {
+                fab.run_parallel(2);
+            } else {
+                fab.run();
+            }
+            (fab.trace_hash(), fab.completion_trace())
+        };
+        let (hs, ts) = build(false);
+        let (hp, tp) = build(true);
+        assert_eq!(hs, hp, "parallel peer-site drain diverged from sequential");
+        assert_eq!(ts, tp);
     }
 
     #[test]

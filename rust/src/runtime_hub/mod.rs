@@ -55,7 +55,11 @@ use crate::sim::time::{to_us, Ps};
 use crate::sim::{ContSlot, Event, ResourceId, Sim, World};
 use crate::util::Slab;
 
-pub use fabric::{Fabric, FabricConfig, Hop, HopBilling, HubId, RouteDesc, Site, TraceEntry};
+pub use fabric::{
+    CsdSite, Fabric, FabricConfig, GpuSite, HeteroSites, Hop, HopBilling, HubId, RouteDesc, Site,
+    SitesConfig, SwitchSite, TraceEntry, TRACE_CSD_BASE, TRACE_GPU_BASE, TRACE_NET,
+    TRACE_SWITCH_BASE,
+};
 pub use parallel::EngineMode;
 pub use reconfig::{
     OperatorKind, OperatorRates, Placement, ReconfigConfig, ReconfigPolicy, Region, RegionPlane,

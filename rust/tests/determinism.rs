@@ -24,12 +24,14 @@
 //!   parallel engine's correctness oracle.
 
 use fpgahub::apps::allreduce::{HierConfig, HierarchicalAllreduce};
+use fpgahub::apps::hetero::{build_hetero_mix, HeteroMixConfig};
 use fpgahub::apps::storage_fetch::{register_nic_fetch_path_fabric, FETCH_CMD_BYTES};
 use fpgahub::net::packet::HEADER_BYTES;
 use fpgahub::nvme::ssd::SsdArray;
 use fpgahub::runtime_hub::{
     Fabric, FabricConfig, HubId, OperatorKind, OperatorRates, QosSpec, ReconfigConfig,
     ResourcePolicies, RouteDesc, RunStats, Site, TenantId, TraceEntry, TransferDesc,
+    TRACE_CSD_BASE, TRACE_GPU_BASE, TRACE_SWITCH_BASE,
 };
 use fpgahub::sim::time::US;
 use fpgahub::util::Rng;
@@ -400,6 +402,59 @@ fn mixed_workload(mode: Mode) -> (Fabric, RunStats) {
     }
     let stats = drain(&mut fab, mode);
     (fab, stats)
+}
+
+// ------------------------------------- heterogeneous peer sites (ISSUE 8) ----
+
+/// The blended peer-site scenario from `apps::hetero`: scan-filter queries
+/// cycling CSD/hub/ship-all placements, GPU offloads (clean and
+/// NCCL-interfered), and switch-reduce rounds, all on one fabric with one
+/// GPU, one CSD, and one switch site. SSD media sampling makes it
+/// RNG-heavy (not constant-pinned), but both engines must agree bit for
+/// bit — this is the oracle that the appended peer lookahead cells are
+/// sound.
+fn hetero_fabric(hubs: usize, mode: Mode) -> (Fabric, RunStats) {
+    let cfg = HeteroMixConfig { hubs, ..HeteroMixConfig::default() };
+    let (mut fab, out) = build_hetero_mix(&cfg);
+    let stats = drain(&mut fab, mode);
+    let o = out.borrow();
+    assert_eq!(o.filters_done, cfg.filters as u64, "filters incomplete at {hubs} hubs");
+    assert_eq!(o.offloads_done, cfg.offloads as u64, "offloads incomplete at {hubs} hubs");
+    assert_eq!(o.reduce_results.len(), cfg.reduce_rounds, "reduce incomplete at {hubs} hubs");
+    drop(o);
+    (fab, stats)
+}
+
+#[test]
+fn hetero_mix_trace_identical_across_runs() {
+    let (f1, _) = hetero_fabric(1, Mode::Seq);
+    let (f2, _) = hetero_fabric(1, Mode::Seq);
+    let (t1, t2) = (f1.completion_trace(), f2.completion_trace());
+    assert!(!t1.is_empty());
+    assert_eq!(t1, t2, "peer-site schedule must be deterministic");
+    assert_eq!(f1.trace_hash(), f2.trace_hash());
+    // every peer class completed work under its own trace tag
+    for base in [TRACE_GPU_BASE, TRACE_CSD_BASE, TRACE_SWITCH_BASE] {
+        assert!(t1.iter().any(|e| e.site == base), "no completions at site {base:#x}");
+    }
+}
+
+#[test]
+fn parallel_hetero_matches_sequential_1hub() {
+    assert_engine_equivalence("hetero/1hub", None, |m| hetero_fabric(1, m));
+}
+
+#[test]
+fn parallel_hetero_matches_sequential_4hub() {
+    assert_engine_equivalence("hetero/4hub", None, |m| hetero_fabric(4, m));
+}
+
+#[test]
+fn hetero_topology_is_part_of_the_trace() {
+    assert_ne!(
+        hetero_fabric(1, Mode::Seq).0.trace_hash(),
+        hetero_fabric(4, Mode::Seq).0.trace_hash()
+    );
 }
 
 #[test]

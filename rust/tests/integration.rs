@@ -180,8 +180,8 @@ fn gpu_doorbell_triggers_collective_round() {
     let rings = bank.drain_visible(visible_at);
     assert_eq!(rings.len(), 4);
     let mut out = None;
-    for _ in &rings {
-        out = eng.contribute(&[0.25f32; 64]);
+    for (gpu, _) in rings.iter().enumerate() {
+        out = eng.contribute(gpu as u32, &[0.25f32; 64]);
     }
     let res = out.expect("4th contribution completes");
     assert!((res.values[0] - 1.0).abs() < 1e-4);
