@@ -10,8 +10,8 @@ use crate::config::parse::TomlDoc;
 use crate::constants;
 use crate::devices::fpga::FpgaBoard;
 use crate::runtime_hub::{
-    ArbPolicy, FabricConfig, OperatorRates, ReconfigConfig, ReconfigPolicy, ResourcePolicies,
-    SitesConfig,
+    ArbPolicy, FabricConfig, FaultsConfig, OperatorRates, RecoveryKind, ReconfigConfig,
+    ReconfigPolicy, ResourcePolicies, SitesConfig, CLASS_BULK, CLASS_NORMAL, CLASS_REALTIME,
 };
 
 /// The simulated platform (one §4.1 server/cluster).
@@ -43,6 +43,10 @@ pub struct PlatformConfig {
     /// heterogeneous peer sites attached to the fabric (`[sites]`, ISSUE 8):
     /// GPU / computational-storage / switch site counts and their link rates
     pub sites: SitesConfig,
+    /// deterministic fault plane (`[faults]`, ISSUE 9): per-resource
+    /// fault rates/windows, recovery timeout/retry knobs, and per-class
+    /// recovery policies; all rates default to zero = faults off
+    pub faults: FaultsConfig,
     pub artifacts_dir: PathBuf,
     pub results_dir: PathBuf,
 }
@@ -62,6 +66,7 @@ impl Default for PlatformConfig {
             fabric_threads: 0,
             reconfig: ReconfigConfig::default(),
             sites: SitesConfig::default(),
+            faults: FaultsConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             results_dir: PathBuf::from("results"),
         }
@@ -72,6 +77,78 @@ fn policy_or(doc: &TomlDoc, key: &str, default: ArbPolicy) -> anyhow::Result<Arb
     let s = doc.str_or("arbitration", key, default.name());
     ArbPolicy::parse(&s)
         .ok_or_else(|| anyhow::anyhow!("unknown arbitration policy '{s}' (fcfs|priority|wfq)"))
+}
+
+/// Peer-count ceiling for `[sites]`: anything above this is a typo, not a
+/// deployment (ISSUE 9 hardening — counts used to clamp silently).
+const MAX_SITE_COUNT: i64 = 4096;
+
+/// A `[sites]` count knob: negative and absurd values are hard errors.
+fn site_count(doc: &TomlDoc, key: &str, default: usize) -> anyhow::Result<usize> {
+    let v = doc.i64_or("sites", key, default as i64);
+    if v < 0 {
+        anyhow::bail!("[sites] {key} = {v}: peer counts cannot be negative");
+    }
+    if v > MAX_SITE_COUNT {
+        anyhow::bail!("[sites] {key} = {v}: absurd peer count (max {MAX_SITE_COUNT})");
+    }
+    Ok(v as usize)
+}
+
+/// A `[faults]` rate knob (events per second of sim time): must be finite
+/// and non-negative.
+fn fault_rate(doc: &TomlDoc, key: &str, default: f64) -> anyhow::Result<f64> {
+    let v = doc.f64_or("faults", key, default);
+    if !v.is_finite() || v < 0.0 {
+        anyhow::bail!("[faults] {key} = {v}: rates must be finite and >= 0");
+    }
+    Ok(v)
+}
+
+/// A `[faults]` per-command probability knob: within [0, 1].
+fn fault_prob(doc: &TomlDoc, key: &str, default: f64) -> anyhow::Result<f64> {
+    let v = fault_rate(doc, key, default)?;
+    if v > 1.0 {
+        anyhow::bail!("[faults] {key} = {v}: probabilities must be <= 1");
+    }
+    Ok(v)
+}
+
+fn recovery_or(doc: &TomlDoc, key: &str, default: RecoveryKind) -> anyhow::Result<RecoveryKind> {
+    let s = doc.str_or("faults", key, default.name());
+    RecoveryKind::parse(&s)
+        .ok_or_else(|| anyhow::anyhow!("unknown recovery policy '{s}' (fail|retry|failover)"))
+}
+
+/// The `[faults]` section (ISSUE 9): every rate defaults to zero, so an
+/// absent section parses to a disabled plane. `policy` sets the recovery
+/// policy for every service class; `realtime`/`normal`/`bulk` override
+/// per class.
+fn faults_from_doc(doc: &TomlDoc) -> anyhow::Result<FaultsConfig> {
+    let d = FaultsConfig::default();
+    let all = recovery_or(doc, "policy", RecoveryKind::default())?;
+    let mut policies = [all; crate::runtime_hub::NUM_CLASSES];
+    policies[CLASS_REALTIME as usize] = recovery_or(doc, "realtime", all)?;
+    policies[CLASS_NORMAL as usize] = recovery_or(doc, "normal", all)?;
+    policies[CLASS_BULK as usize] = recovery_or(doc, "bulk", all)?;
+    Ok(FaultsConfig {
+        seed: doc.i64_or("faults", "seed", d.seed as i64) as u64,
+        link_outage_per_s: fault_rate(doc, "link_outage_per_s", d.link_outage_per_s)?,
+        link_outage_us: fault_rate(doc, "link_outage_us", d.link_outage_us)?,
+        link_degrade_per_s: fault_rate(doc, "link_degrade_per_s", d.link_degrade_per_s)?,
+        link_degrade_us: fault_rate(doc, "link_degrade_us", d.link_degrade_us)?,
+        link_degrade_factor: fault_rate(doc, "link_degrade_factor", d.link_degrade_factor)?,
+        nvme_fail_rate: fault_prob(doc, "nvme_fail_rate", d.nvme_fail_rate)?,
+        nvme_dropout_per_s: fault_rate(doc, "nvme_dropout_per_s", d.nvme_dropout_per_s)?,
+        nvme_dropout_us: fault_rate(doc, "nvme_dropout_us", d.nvme_dropout_us)?,
+        swap_fail_rate: fault_prob(doc, "swap_fail_rate", d.swap_fail_rate)?,
+        peer_crash_per_s: fault_rate(doc, "peer_crash_per_s", d.peer_crash_per_s)?,
+        peer_down_us: fault_rate(doc, "peer_down_us", d.peer_down_us)?,
+        timeout_us: fault_rate(doc, "timeout_us", d.timeout_us)?,
+        retry_max: doc.i64_or("faults", "retry_max", d.retry_max as i64).max(0) as u32,
+        backoff_us: fault_rate(doc, "backoff_us", d.backoff_us)?,
+        policies,
+    })
 }
 
 impl PlatformConfig {
@@ -116,14 +193,24 @@ impl PlatformConfig {
             },
         };
         let ds = d.sites;
+        // counts are hard-validated (ISSUE 9): negative or absurd values
+        // used to clamp silently; a zero drive count still clamps (a CSD
+        // needs a drive) but says so
+        let csd_ssds = match site_count(doc, "csd_ssds", ds.csd_ssds)? {
+            0 => {
+                eprintln!("warning: [sites] csd_ssds = 0 clamped to 1 (a CSD needs a drive)");
+                1
+            }
+            n => n,
+        };
         let sites = SitesConfig {
-            gpus: doc.i64_or("sites", "gpus", ds.gpus as i64).max(0) as usize,
+            gpus: site_count(doc, "gpus", ds.gpus)?,
             gpu_pcie_gbps: doc.f64_or("sites", "gpu_pcie_gbps", ds.gpu_pcie_gbps),
-            csds: doc.i64_or("sites", "csds", ds.csds as i64).max(0) as usize,
-            csd_ssds: doc.i64_or("sites", "csd_ssds", ds.csd_ssds as i64).max(1) as usize,
+            csds: site_count(doc, "csds", ds.csds)?,
+            csd_ssds,
             csd_nand_gbps: doc.f64_or("sites", "csd_nand_gbps", ds.csd_nand_gbps),
             csd_link_gbps: doc.f64_or("sites", "csd_link_gbps", ds.csd_link_gbps),
-            switches: doc.i64_or("sites", "switches", ds.switches as i64).max(0) as usize,
+            switches: site_count(doc, "switches", ds.switches)?,
             switch_port_gbps: doc.f64_or("sites", "switch_port_gbps", ds.switch_port_gbps),
         };
         Ok(PlatformConfig {
@@ -140,6 +227,7 @@ impl PlatformConfig {
                 as usize,
             reconfig,
             sites,
+            faults: faults_from_doc(doc)?,
             artifacts_dir: PathBuf::from(doc.str_or("", "artifacts_dir", "artifacts")),
             results_dir: PathBuf::from(doc.str_or("", "results_dir", "results")),
         })
@@ -345,11 +433,78 @@ mod tests {
     }
 
     #[test]
-    fn sites_counts_clamped_nonnegative() {
-        let doc = TomlDoc::parse("[sites]\ngpus = -3\ncsd_ssds = 0\n").unwrap();
+    fn negative_site_counts_are_rejected() {
+        // the pre-ISSUE-9 parser clamped these silently
+        for toml in ["[sites]\ngpus = -3\n", "[sites]\ncsds = -1\n", "[sites]\nswitches = -2\n"] {
+            let doc = TomlDoc::parse(toml).unwrap();
+            let err = PlatformConfig::from_doc(&doc).expect_err(toml);
+            assert!(err.to_string().contains("negative"), "{err}");
+        }
+    }
+
+    #[test]
+    fn absurd_site_counts_are_rejected() {
+        let doc = TomlDoc::parse("[sites]\ngpus = 1000000\n").unwrap();
+        let err = PlatformConfig::from_doc(&doc).expect_err("a million GPUs is a typo");
+        assert!(err.to_string().contains("absurd"), "{err}");
+    }
+
+    #[test]
+    fn zero_csd_drives_clamp_with_a_warning() {
+        // still clamps (a CSD needs a drive), but no longer silently:
+        // from_doc prints a warning line on stderr
+        let doc = TomlDoc::parse("[sites]\ncsd_ssds = 0\n").unwrap();
         let p = PlatformConfig::from_doc(&doc).unwrap();
-        assert_eq!(p.sites.gpus, 0);
         assert_eq!(p.sites.csd_ssds, 1, "a CSD site needs at least one drive");
+    }
+
+    #[test]
+    fn faults_default_off() {
+        let p = PlatformConfig::default();
+        assert!(!p.faults.enabled(), "faults are strictly opt-in");
+        let doc = TomlDoc::parse("").unwrap();
+        let p = PlatformConfig::from_doc(&doc).unwrap();
+        assert!(!p.faults.enabled(), "an absent [faults] section parses to off");
+    }
+
+    #[test]
+    fn faults_overrides_from_toml() {
+        let doc = TomlDoc::parse(
+            "[faults]\nseed = 99\nlink_outage_per_s = 50.0\nlink_outage_us = 80.0\n\
+             nvme_fail_rate = 0.01\nswap_fail_rate = 0.005\npeer_crash_per_s = 2.0\n\
+             timeout_us = 25.0\nretry_max = 5\nbackoff_us = 10.0\n\
+             policy = \"failover\"\nbulk = \"fail\"\n",
+        )
+        .unwrap();
+        let p = PlatformConfig::from_doc(&doc).unwrap();
+        let f = &p.faults;
+        assert!(f.enabled());
+        assert_eq!(f.seed, 99);
+        assert_eq!(f.link_outage_per_s, 50.0);
+        assert_eq!(f.link_outage_us, 80.0);
+        assert_eq!(f.nvme_fail_rate, 0.01);
+        assert_eq!(f.swap_fail_rate, 0.005);
+        assert_eq!(f.peer_crash_per_s, 2.0);
+        assert_eq!(f.timeout_us, 25.0);
+        assert_eq!(f.retry_max, 5);
+        assert_eq!(f.backoff_us, 10.0);
+        assert_eq!(f.policies[CLASS_REALTIME as usize], RecoveryKind::Failover);
+        assert_eq!(f.policies[CLASS_NORMAL as usize], RecoveryKind::Failover);
+        assert_eq!(f.policies[CLASS_BULK as usize], RecoveryKind::Fail, "per-class override");
+    }
+
+    #[test]
+    fn bad_fault_knobs_are_rejected() {
+        for toml in [
+            "[faults]\nlink_outage_per_s = -1.0\n",
+            "[faults]\nnvme_fail_rate = 1.5\n",
+            "[faults]\nswap_fail_rate = -0.1\n",
+            "[faults]\npolicy = \"pray\"\n",
+            "[faults]\nbulk = \"giveup\"\n",
+        ] {
+            let doc = TomlDoc::parse(toml).unwrap();
+            assert!(PlatformConfig::from_doc(&doc).is_err(), "{toml} must be rejected");
+        }
     }
 
     #[test]

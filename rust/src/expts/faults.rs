@@ -1,0 +1,251 @@
+//! Degraded-mode goodput experiment (`fpgahub faults`, ISSUE 9): a
+//! fault-rate sweep × recovery policy on a two-hub fabric running a mixed
+//! local-I/O + cross-hub workload.
+//!
+//! Each row arms the deterministic fault plane at one rate tier, resolves
+//! every tenant class to one [`RecoveryKind`], drains, and reports:
+//!
+//! * **goodput** — completed / submitted (abandoned descriptors are the
+//!   complement; the counters must balance, asserted per scenario);
+//! * **p99 tail amplification** — the faulty p99 over the fault-free
+//!   baseline p99 of the identical workload;
+//! * **time-to-recover** — mean latency of the completions that survived
+//!   at least one recovery attempt ([`Fabric::degraded_completions`]).
+//!
+//! The drain honors `[fabric] parallel`/`threads`, and when the parallel
+//! engine is selected every scenario is *also* drained sequentially and
+//! the two trace hashes compared — `fpgahub faults --threads 4` is the
+//! CI's seq-vs-par divergence smoke for faulty schedules.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::config::ExperimentConfig;
+use crate::metrics::{Hist, Table};
+use crate::nvme::queue::NvmeOp;
+use crate::nvme::ssd::SsdArray;
+use crate::runtime_hub::{
+    Fabric, FabricConfig, FaultsConfig, HubId, QosSpec, RecoveryKind, Site, TenantId,
+    TransferDesc,
+};
+use crate::sim::time::{ns_f, to_us, US};
+use crate::util::Rng;
+
+/// Descriptors per hub per scenario — scales with the sample budget.
+fn reps(cfg: &ExperimentConfig) -> usize {
+    (cfg.samples / 10).clamp(30, 200)
+}
+
+/// One rate tier of the sweep, expanded into the `[faults]` knobs. The
+/// link/NVMe rates scale together so "rate" reads as overall fault
+/// pressure; windows are short relative to the ~20 µs submission cadence.
+fn faults_at(cfg: &ExperimentConfig, rate_per_s: f64, policy: RecoveryKind) -> FaultsConfig {
+    FaultsConfig {
+        seed: cfg.platform.faults.seed ^ cfg.platform.seed,
+        link_outage_per_s: rate_per_s,
+        link_outage_us: 40.0,
+        link_degrade_per_s: rate_per_s / 2.0,
+        link_degrade_us: 60.0,
+        link_degrade_factor: 4.0,
+        nvme_fail_rate: (rate_per_s / 2.0e5).min(0.5),
+        nvme_dropout_per_s: rate_per_s / 4.0,
+        nvme_dropout_us: 50.0,
+        timeout_us: 30.0,
+        retry_max: 3,
+        backoff_us: 10.0,
+        ..cfg.platform.faults.clone()
+    }
+    .with_policy(policy)
+}
+
+/// Build the scenario fabric and submit the workload: per-hub DRAM-port
+/// transfers chained into an NVMe read (the faultable local path) plus a
+/// detached cross-hub mesh transfer every third descriptor (the faultable
+/// interconnect path). Latencies of *completed* descriptors land in `hist`.
+fn build(cfg: &ExperimentConfig, fc: &FaultsConfig, hist: &Rc<RefCell<Hist>>) -> Fabric {
+    let mut fab = Fabric::with_config(FabricConfig { hubs: 2, ..cfg.platform.fabric });
+    let mut links = Vec::new();
+    let mut queues = Vec::new();
+    let setup = ns_f(crate::constants::PCIE_DMA_SETUP_NS);
+    for h in 0..2u32 {
+        let mut rng = Rng::new(cfg.platform.seed ^ 0xD15C ^ u64::from(h));
+        let l = fab.add_link(HubId(h), "dram-port", 100.0, 0);
+        let arr = fab.add_array(HubId(h), SsdArray::new(2, &mut rng));
+        let q = fab.add_nvme_queue(HubId(h), arr, 0, 16, setup, setup);
+        links.push(l);
+        queues.push(q);
+    }
+    fab.arm_faults(fc);
+    let n = reps(cfg);
+    for i in 0..n as u64 {
+        let h = (i % 2) as u32;
+        let qos = match i % 3 {
+            0 => QosSpec::latency_sensitive(TenantId(1)),
+            1 => QosSpec::default(),
+            _ => QosSpec::bulk(TenantId(2)),
+        };
+        let t0 = i * 20 * US;
+        let desc = TransferDesc::with_label(i)
+            .qos(qos)
+            .xfer(links[h as usize], 8_000 + i * 64)
+            .nvme(queues[h as usize], NvmeOp::Read);
+        let rec = hist.clone();
+        fab.submit(HubId(h), t0, desc, move |_, at| rec.borrow_mut().record(to_us(at - t0)));
+        if i % 3 == 0 {
+            let hop = fab.hop_desc(1000 + i, qos, HubId(h), HubId(1 - h), 4_000);
+            let route = crate::runtime_hub::RouteDesc::new().hop(Site::Net, hop);
+            fab.submit_route_detached(t0 + 5 * US, route);
+        }
+    }
+    fab
+}
+
+/// Drain per the `[fabric]` engine selection, then — when the parallel
+/// engine is on — drain an identical sequential build and assert the
+/// trace hashes match. A divergence here is exactly the bug the
+/// determinism suite pins, surfaced from the CLI.
+fn drain_checked(cfg: &ExperimentConfig, fc: &FaultsConfig, hist: &Rc<RefCell<Hist>>) -> Fabric {
+    let mut fab = build(cfg, fc, hist);
+    if cfg.platform.fabric_parallel {
+        fab.run_parallel(cfg.platform.fabric_threads);
+        let seq_hist = Rc::new(RefCell::new(Hist::new()));
+        let mut seq = build(cfg, fc, &seq_hist);
+        seq.run();
+        assert_eq!(
+            fab.trace_hash(),
+            seq.trace_hash(),
+            "parallel faulty drain diverged from sequential"
+        );
+    } else {
+        fab.run();
+    }
+    fab
+}
+
+pub fn run(cfg: &ExperimentConfig) -> Vec<Table> {
+    let mut t = Table::new(
+        "faults: goodput and tail vs fault rate x recovery policy",
+        &[
+            "rate_per_s",
+            "policy",
+            "submitted",
+            "completed",
+            "abandoned",
+            "retries",
+            "failovers",
+            "goodput_pct",
+            "p99_us",
+            "p99_x",
+            "recover_us",
+        ],
+    );
+
+    // fault-free baseline: the un-armed workload every row is judged against
+    let base_hist = Rc::new(RefCell::new(Hist::new()));
+    let base_cfg = FaultsConfig::default();
+    let base = drain_checked(cfg, &base_cfg, &base_hist);
+    assert_eq!(base.faults_injected(), 0, "zero rates must never arm the plane");
+    let base_p99 = base_hist.borrow_mut().p99().max(f64::MIN_POSITIVE);
+    t.row(&[
+        "0".into(),
+        "-".into(),
+        base.total_submitted().to_string(),
+        base.total_completed().to_string(),
+        "0".into(),
+        "0".into(),
+        "0".into(),
+        "100.0".into(),
+        format!("{base_p99:.2}"),
+        "1.00".into(),
+        "0.00".into(),
+    ]);
+
+    for rate in [1_000.0, 5_000.0, 20_000.0] {
+        for policy in [RecoveryKind::Fail, RecoveryKind::Retry, RecoveryKind::Failover] {
+            let fc = faults_at(cfg, rate, policy);
+            let hist = Rc::new(RefCell::new(Hist::new()));
+            let fab = drain_checked(cfg, &fc, &hist);
+            let submitted = fab.total_submitted();
+            let completed = fab.total_completed();
+            let abandoned = fab.total_abandoned();
+            assert_eq!(completed + abandoned, submitted, "a descriptor leaked");
+            let reports = fab.tenant_reports();
+            let (mut timeouts, mut retries, mut failovers, mut rep_abandoned) = (0, 0, 0, 0);
+            for r in &reports {
+                timeouts += r.timeouts;
+                retries += r.retries;
+                failovers += r.failovers;
+                rep_abandoned += r.abandoned;
+            }
+            assert_eq!(fab.faults_injected(), timeouts, "every fault must time out");
+            assert_eq!(
+                timeouts,
+                retries + failovers + rep_abandoned,
+                "recovery counters must balance"
+            );
+            let goodput = 100.0 * completed as f64 / submitted.max(1) as f64;
+            let p99 = hist.borrow_mut().p99();
+            let degraded = fab.degraded_completions();
+            let recover_us = if degraded.is_empty() {
+                0.0
+            } else {
+                degraded.iter().map(|&(_, lat)| to_us(lat)).sum::<f64>() / degraded.len() as f64
+            };
+            t.row(&[
+                format!("{rate:.0}"),
+                policy.name().to_string(),
+                submitted.to_string(),
+                completed.to_string(),
+                abandoned.to_string(),
+                retries.to_string(),
+                failovers.to_string(),
+                format!("{goodput:.1}"),
+                format!("{p99:.2}"),
+                format!("{:.2}", p99 / base_p99),
+                format!("{recover_us:.2}"),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_rows_cover_the_grid() {
+        let t = &run(&ExperimentConfig::quick())[0];
+        assert_eq!(t.rows.len(), 1 + 3 * 3, "baseline + 3 rates x 3 policies");
+        let goodput = |r: usize| t.rows[r][7].parse::<f64>().unwrap();
+        assert_eq!(goodput(0), 100.0, "the baseline row is fault-free");
+        // the retry/failover scenarios must beat abandon-on-first-fault at
+        // the highest rate tier (rows 7..10 are the 20k tier)
+        let fail = goodput(7);
+        let retry = goodput(8);
+        let failover = goodput(9);
+        assert!(retry >= fail, "retry {retry} vs fail {fail}");
+        assert!(failover >= fail, "failover {failover} vs fail {fail}");
+    }
+
+    #[test]
+    fn faults_actually_fire_in_the_sweep() {
+        let cfg = ExperimentConfig::quick();
+        let fc = faults_at(&cfg, 20_000.0, RecoveryKind::Retry);
+        let hist = Rc::new(RefCell::new(Hist::new()));
+        let mut fab = build(&cfg, &fc, &hist);
+        fab.run();
+        assert!(fab.faults_injected() > 0, "the top rate tier injected nothing");
+    }
+
+    #[test]
+    fn parallel_engine_reproduces_the_sequential_table() {
+        let cfg = ExperimentConfig::quick();
+        let mut pcfg = cfg.clone();
+        pcfg.platform.fabric_parallel = true;
+        pcfg.platform.fabric_threads = 2;
+        for (s, p) in run(&cfg).iter().zip(run(&pcfg).iter()) {
+            assert_eq!(s.rows, p.rows, "{} diverged across engines", s.title);
+        }
+    }
+}

@@ -2,6 +2,7 @@
 //! `metrics::Table` with the same rows/series the paper plots and, when
 //! configured, writes `results/<name>.csv`.
 
+pub mod faults;
 pub mod fig10;
 pub mod fig2;
 pub mod fig7;
@@ -20,7 +21,7 @@ use crate::metrics::{write_csv, Table};
 /// All experiment names (CLI `fpgahub expt <name>`).
 pub const ALL: &[&str] = &[
     "fig2", "fig7a", "fig7b", "fig8", "fig9", "fig10a", "fig10b", "table1", "qos", "scale",
-    "reconfig", "hetero",
+    "reconfig", "hetero", "faults",
 ];
 
 /// Dispatch by name.
@@ -38,6 +39,7 @@ pub fn run(name: &str, cfg: &ExperimentConfig) -> anyhow::Result<Vec<Table>> {
         "scale" => vec![scale::run(cfg)],
         "reconfig" => reconfig::run(cfg),
         "hetero" => hetero::run(cfg),
+        "faults" => faults::run(cfg),
         other => anyhow::bail!("unknown experiment '{other}' (have {ALL:?})"),
     };
     emit(&tables, cfg)?;

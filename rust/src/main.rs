@@ -28,6 +28,13 @@
 //!                                      placement (CSD vs hub vs ship-all),
 //!                                      switch-reduce vs hub ring, and the
 //!                                      GPU-offload knee
+//!   fpgahub faults [--threads T]       deterministic fault plane: fault-rate
+//!                                      sweep × recovery policy (fail/retry/
+//!                                      failover) reporting goodput, p99 tail
+//!                                      amplification, and time-to-recover;
+//!                                      with --threads the parallel drain is
+//!                                      checked against the sequential trace
+//!                                      hash per scenario
 //!   fpgahub info                       platform + artifact status
 
 use fpgahub::anyhow;
@@ -41,7 +48,7 @@ use fpgahub::runtime_hub::ArbPolicy;
 fn usage() -> ! {
     eprintln!(
         "usage: fpgahub <list|expt NAME|all|train|fetch-demo|multi-tenant|qos|scale|reconfig|\
-         hetero|info> [options]\n\
+         hetero|faults|info> [options]\n\
          options: --config FILE --samples N --steps N --workers N --requests N\n\
          \x20        --hubs N --threads N --arb fcfs|priority|wfq --no-csv"
     );
@@ -218,6 +225,12 @@ fn main() -> anyhow::Result<()> {
         "hetero" => {
             // --hubs/--threads are folded into the platform config by load_cfg
             expts::run("hetero", &cfg)?;
+        }
+        "faults" => {
+            // --threads opts the drain onto the parallel engine; the
+            // experiment then cross-checks every scenario's trace hash
+            // against a sequential reference drain
+            expts::run("faults", &cfg)?;
         }
         "qos" => {
             let (t, outcomes) = expts::qos::run_with_outcomes(&cfg);

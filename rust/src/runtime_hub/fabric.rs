@@ -46,9 +46,9 @@ use crate::util::Rng;
 
 use super::parallel::EngineMode;
 use super::{
-    submit_cont_at, submit_on, ArrayId, BarrierId, DoneAction, DoneFn, HubState, HubWorld, LinkId,
-    NvmeId, PoolId, QosSpec, ResourcePolicies, RunStats, Stage, TenantAccount, TenantReport,
-    TransferDesc,
+    submit_cont_at, submit_on, ArrayId, BarrierId, DoneAction, DoneFn, FaultsConfig, HubState,
+    HubWorld, LinkId, NvmeId, PoolId, QosSpec, ResourcePolicies, RunStats, Stage, TenantAccount,
+    TenantReport, TransferDesc,
 };
 
 /// Identity of one hub shard within a fabric.
@@ -758,6 +758,30 @@ impl Fabric {
         self.peers.len()
     }
 
+    // ------------------------------------------------- fault plane ----
+
+    /// Arm the deterministic fault plane (ISSUE 9) on every site. A no-op
+    /// when every rate in `fc` is zero — a zero-rate config is
+    /// bit-identical to an un-armed fabric, which is what keeps the
+    /// committed golden hashes valid. Fault streams are positional
+    /// (seeded per site tag / resource kind / resource index), so the
+    /// schedule depends only on `fc.seed` and the workload's arrival
+    /// pattern — not on registration or drain order. Must be called
+    /// before any work is submitted, like peer registration.
+    pub fn arm_faults(&mut self, fc: &FaultsConfig) {
+        if !fc.enabled() {
+            return;
+        }
+        assert_eq!(self.total_submitted(), 0, "arm the fault plane before submitting work");
+        for (i, h) in self.hubs.iter().enumerate() {
+            h.borrow_mut().arm_faults(fc, i as u32, false);
+        }
+        self.net.borrow_mut().arm_faults(fc, TRACE_NET, false);
+        for p in &self.peers {
+            p.cell.borrow_mut().arm_faults(fc, p.tag, true);
+        }
+    }
+
     /// Read-only access to any site's state (hub, interconnect, or peer).
     pub fn with_site<R>(&self, site: Site, f: impl FnOnce(&HubState) -> R) -> R {
         f(&self.site_cell(site).borrow())
@@ -878,7 +902,28 @@ impl Fabric {
     // ------------------------------------------------------ draining ----
 
     /// Drain the shared event queue; returns counters for this run.
+    /// Prints one warning line if the queue drained with work outstanding
+    /// (quiescence watchdog, ISSUE 9) — use [`Fabric::run_checked`] to
+    /// get the structured [`StuckReport`] instead.
     pub fn run(&mut self) -> RunStats {
+        let stats = self.drain_seq();
+        self.warn_if_stuck();
+        stats
+    }
+
+    /// [`Fabric::run`] plus the quiescence watchdog: `Err` with a
+    /// structured [`StuckReport`] when the event queue drains with
+    /// barrier waiters, parked arbiters, or in-flight descriptors
+    /// outstanding — a hidden hang turned into a diagnosable failure.
+    pub fn run_checked(&mut self) -> Result<RunStats, Box<StuckReport>> {
+        let stats = self.drain_seq();
+        match self.stuck_report() {
+            None => Ok(stats),
+            Some(report) => Err(report),
+        }
+    }
+
+    fn drain_seq(&mut self) -> RunStats {
         let events_before = self.sim.events_processed();
         let now_before = self.sim.now();
         let mut world = HubWorld::new(self.all_cells());
@@ -887,6 +932,12 @@ impl Fabric {
             events: self.sim.events_processed() - events_before,
             sim_elapsed: self.sim.now() - now_before,
             sim_now: self.sim.now(),
+        }
+    }
+
+    fn warn_if_stuck(&self) {
+        if let Some(report) = self.stuck_report() {
+            eprintln!("warning: event queue drained with work outstanding — {report}");
         }
     }
 
@@ -920,6 +971,22 @@ impl Fabric {
     /// zero lookahead, every cross-shard completion rendezvouses — kept
     /// as the bench baseline. Both are bit-identical to [`Fabric::run`].
     pub fn run_parallel_mode(&mut self, threads: usize, mode: EngineMode) -> RunStats {
+        let stats = self.drain_par(threads, mode);
+        self.warn_if_stuck();
+        stats
+    }
+
+    /// [`Fabric::run_parallel`] plus the quiescence watchdog — the
+    /// parallel twin of [`Fabric::run_checked`].
+    pub fn run_parallel_checked(&mut self, threads: usize) -> Result<RunStats, Box<StuckReport>> {
+        let stats = self.drain_par(threads, EngineMode::Lookahead);
+        match self.stuck_report() {
+            None => Ok(stats),
+            Some(report) => Err(report),
+        }
+    }
+
+    fn drain_par(&mut self, threads: usize, mode: EngineMode) -> RunStats {
         let threads = if threads == 0 {
             std::thread::available_parallelism().map_or(1, |n| n.get())
         } else {
@@ -996,6 +1063,63 @@ impl Fabric {
             .sum()
     }
 
+    /// Faults injected across every site's fault plane (0 when un-armed).
+    pub fn faults_injected(&self) -> u64 {
+        self.sites().map(|(_, st)| st.borrow().faults_injected()).sum()
+    }
+
+    /// Descriptors abandoned by the recovery control plane, across sites.
+    /// After a drained faulty run, `total_completed() + total_abandoned()
+    /// == total_submitted()`.
+    pub fn total_abandoned(&self) -> u64 {
+        self.sites().map(|(_, st)| st.borrow().abandoned).sum()
+    }
+
+    /// `(attempts, latency)` of every completion that survived at least
+    /// one recovery attempt — the time-to-recover distribution of a
+    /// faulty run (empty when the fault plane is un-armed).
+    pub fn degraded_completions(&self) -> Vec<(u32, Ps)> {
+        let mut out = Vec::new();
+        for (_, cell) in self.sites() {
+            for c in &cell.borrow().completions {
+                if c.attempts > 0 {
+                    out.push((c.attempts, c.done_at.saturating_sub(c.submitted_at)));
+                }
+            }
+        }
+        out
+    }
+
+    /// Quiescence watchdog (ISSUE 9): after a drain, diagnose any
+    /// outstanding work — descriptors neither completed nor abandoned,
+    /// continuations parked on arbiters, and unreleased barriers with
+    /// their waiter tokens. `None` means the fabric is quiescent.
+    pub fn stuck_report(&self) -> Option<Box<StuckReport>> {
+        let mut report = StuckReport::default();
+        for (tag, cell) in self.sites() {
+            let st = cell.borrow();
+            let in_flight =
+                st.submitted.saturating_sub(st.completed).saturating_sub(st.abandoned);
+            let parked = st.parked_waiters();
+            let barriers: Vec<(usize, Vec<u32>)> = st
+                .barrier_waiters
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| !w.is_empty())
+                .map(|(i, w)| (i, w.clone()))
+                .collect();
+            if in_flight > 0 || parked > 0 || !barriers.is_empty() {
+                report.sites.push(StuckSite { site: tag, in_flight, parked, barriers });
+            }
+        }
+        report.routes_in_flight = self.routes_in_flight();
+        if report.sites.is_empty() && report.routes_in_flight == 0 {
+            None
+        } else {
+            Some(Box::new(report))
+        }
+    }
+
     /// Per-tenant accounts merged across every site (sorted by tenant id).
     pub fn tenant_reports(&self) -> Vec<TenantReport> {
         let mut merged: Vec<TenantAccount> = Vec::new();
@@ -1011,6 +1135,10 @@ impl Fabric {
                             completed: 0,
                             bytes_moved: 0,
                             swaps: 0,
+                            timeouts: 0,
+                            retries: 0,
+                            failovers: 0,
+                            abandoned: 0,
                             lat: crate::metrics::Hist::new(),
                         });
                         merged.len() - 1
@@ -1021,6 +1149,10 @@ impl Fabric {
                 acct.completed += a.completed;
                 acct.bytes_moved += a.bytes_moved;
                 acct.swaps += a.swaps;
+                acct.timeouts += a.timeouts;
+                acct.retries += a.retries;
+                acct.failovers += a.failovers;
+                acct.abandoned += a.abandoned;
                 acct.lat.merge(&a.lat);
             }
         }
@@ -1032,6 +1164,10 @@ impl Fabric {
                 completed: a.completed,
                 bytes_moved: a.bytes_moved,
                 swaps: a.swaps,
+                timeouts: a.timeouts,
+                retries: a.retries,
+                failovers: a.failovers,
+                abandoned: a.abandoned,
                 lat_us: a.lat.quantiles(),
             })
             .collect();
@@ -1075,6 +1211,60 @@ impl Fabric {
             h = fnv1a_u64(h, e.done_at);
         }
         h
+    }
+}
+
+/// One stuck site inside a [`StuckReport`]: what the quiescence watchdog
+/// found outstanding there when the event queue drained.
+#[derive(Clone, Debug)]
+pub struct StuckSite {
+    /// trace tag of the site (hub index, [`TRACE_NET`], or a peer tag)
+    pub site: u32,
+    /// descriptors submitted but neither completed nor abandoned
+    pub in_flight: u64,
+    /// continuations parked on an arbiter waiting for a grant
+    pub parked: usize,
+    /// unreleased barriers: `(barrier id, waiter continuation tokens)`
+    pub barriers: Vec<(usize, Vec<u32>)>,
+}
+
+/// Structured diagnosis of a hung run (ISSUE 9 quiescence watchdog): the
+/// event queue drained but work is still outstanding — a barrier short of
+/// its quota, a parked arbiter waiter, or a route leg that never
+/// completed. Returned by [`Fabric::run_checked`] /
+/// [`Fabric::run_parallel_checked`]; [`Fabric::stuck_report`] computes it
+/// on demand after any drain.
+#[derive(Clone, Debug, Default)]
+pub struct StuckReport {
+    /// every site with outstanding work, in shard-index order
+    pub sites: Vec<StuckSite>,
+    /// multi-hop routes with a live leg somewhere in `sites`
+    pub routes_in_flight: usize,
+}
+
+impl StuckReport {
+    /// Descriptors in flight across all stuck sites.
+    pub fn total_in_flight(&self) -> u64 {
+        self.sites.iter().map(|s| s.in_flight).sum()
+    }
+}
+
+impl std::fmt::Display for StuckReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} descriptor(s) in flight across {} site(s), {} route leg(s) live",
+            self.total_in_flight(),
+            self.sites.len(),
+            self.routes_in_flight
+        )?;
+        for s in &self.sites {
+            write!(f, "; site {}: {} in flight, {} parked", s.site, s.in_flight, s.parked)?;
+            for (bar, waiters) in &s.barriers {
+                write!(f, ", barrier {bar} holds waiters {waiters:?}")?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -1219,6 +1409,39 @@ mod tests {
         fab.run();
         assert_eq!(fab.barrier_waiters(), 1, "the lone arrival stays parked");
         assert_eq!(fab.total_completed(), 0);
+    }
+
+    #[test]
+    fn watchdog_reports_the_stuck_barrier() {
+        let mut fab = two_hub();
+        let bar = fab.add_fabric_barrier(2); // only one participant will come
+        fab.submit_net(0, TransferDesc::with_label(1).barrier(bar), |_, _| {});
+        let report = fab.run_checked().expect_err("the lone waiter must trip the watchdog");
+        assert_eq!(report.sites.len(), 1);
+        assert_eq!(report.routes_in_flight, 0);
+        assert_eq!(report.total_in_flight(), 1);
+        let s = &report.sites[0];
+        assert_eq!(s.site, TRACE_NET, "the stuck barrier lives on the interconnect");
+        assert_eq!(s.in_flight, 1);
+        assert_eq!(s.barriers.len(), 1);
+        assert_eq!(s.barriers[0].0, bar, "watchdog names the barrier");
+        assert_eq!(s.barriers[0].1.len(), 1, "and records its one waiter token");
+        let line = report.to_string();
+        assert!(line.contains("barrier"), "{line}");
+    }
+
+    #[test]
+    fn watchdog_is_silent_on_a_clean_drain() {
+        let mut fab = two_hub();
+        let l = fab.add_link(HubId(0), "port", 100.0, 0);
+        fab.submit(HubId(0), 0, TransferDesc::new().xfer(l, BYTES_1US), |_, _| {});
+        let stats = fab.run_checked().expect("a drained run is quiescent");
+        assert!(stats.events > 0);
+        assert!(fab.stuck_report().is_none());
+        let mut par = two_hub();
+        let lp = par.add_link(HubId(0), "port", 100.0, 0);
+        par.submit(HubId(0), 0, TransferDesc::new().xfer(lp, BYTES_1US), |_, _| {});
+        assert!(par.run_parallel_checked(2).is_ok());
     }
 
     #[test]

@@ -1,0 +1,527 @@
+//! Deterministic fault plane (ISSUE 9): scheduled, seeded failures injected
+//! into the resource paths of a [`super::fabric::Fabric`], plus the
+//! hub-side recovery policies that mask them.
+//!
+//! The design constraint is the golden trace: with `[faults]` absent or all
+//! rates zero the plane is never armed (`HubState::faults` stays `None`) and
+//! the engine is bit-identical to a build without this module; with faults
+//! enabled, every fault decision is a *deterministic function of the
+//! per-site event order*, which the conservative parallel engine already
+//! preserves — so a faulty scenario hashes identically sequential vs
+//! parallel at every thread count (pinned in `tests/determinism.rs`).
+//!
+//! Two randomness sources, both derived from [`crate::util::rng::Rng`]:
+//!
+//! * **Window tracks** ([`WindowTrack`]) model link outage/degradation,
+//!   transient NVMe drive dropout, and peer-site crash/recovery as
+//!   alternating exponential up/down intervals. A track's stream is seeded
+//!   from `(faults.seed, site tag, resource kind, resource index)` alone —
+//!   not from when it is first queried — and queries are monotone in the
+//!   site's clock, so the window schedule is part of the scenario, not of
+//!   the execution interleaving.
+//! * **Per-command Bernoulli draws** (NVMe command failures, bitstream-swap
+//!   failures) come from one per-site stream consumed in stage-execution
+//!   order, which is identical on both engines.
+//!
+//! Faults never corrupt a resource: a faulted stage simply does not reach
+//! it. The hub detects the loss via its per-stage timeout and resolves a
+//! [`RecoveryPolicy`] per tenant class — `Fail` (abandon the descriptor),
+//! `Retry` (re-execute the stage after timeout + linear backoff, at most
+//! `max` extra attempts), or `Failover` (re-issue on a replica path that is
+//! immune to the fault schedule, paying the detection timeout). Timeout
+//! timers are lazily materialized: only the timer that *fires* is ever
+//! scheduled (the fault is known at stage-execution time, and a timer that
+//! would be cancelled by a clean completion is unobservable), so the
+//! armed-but-quiet plane adds zero events. See DESIGN.md §13.
+
+use crate::sim::time::Ps;
+use crate::util::rng::Rng;
+
+use super::sched::NUM_CLASSES;
+
+/// Picoseconds per microsecond, as f64 (mean window/backoff conversions).
+const PS_PER_US: f64 = 1_000_000.0;
+
+/// Convert a microsecond knob to integer picoseconds.
+fn us_to_ps(us: f64) -> Ps {
+    (us.max(0.0) * PS_PER_US).round() as Ps
+}
+
+// ------------------------------------------------------- recovery policy ----
+
+/// Config-level spelling of a recovery policy (the `Retry` knobs
+/// `retry_max`/`backoff_us` live beside it in [`FaultsConfig`] and are
+/// bound at arm time).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RecoveryKind {
+    /// Abandon the descriptor on the first fault.
+    Fail,
+    /// Re-execute the faulted stage after timeout + linear backoff.
+    #[default]
+    Retry,
+    /// Re-issue the faulted stage on a replica path after the timeout.
+    Failover,
+}
+
+impl RecoveryKind {
+    /// Parse a config spelling.
+    pub fn parse(s: &str) -> Option<RecoveryKind> {
+        match s {
+            "fail" => Some(RecoveryKind::Fail),
+            "retry" => Some(RecoveryKind::Retry),
+            "failover" => Some(RecoveryKind::Failover),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryKind::Fail => "fail",
+            RecoveryKind::Retry => "retry",
+            RecoveryKind::Failover => "failover",
+        }
+    }
+}
+
+/// A resolved per-class recovery policy, applied by the runtime when a
+/// stage's timeout fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Abandon the descriptor: it never completes, and the tenant's
+    /// `abandoned` counter records it.
+    Fail,
+    /// Re-execute the faulted stage at `timeout + attempts × backoff`
+    /// past the fault, at most `max` extra attempts, then abandon.
+    /// Shard-local: the resume event lands on the descriptor's own site.
+    Retry { max: u32, backoff: Ps },
+    /// Re-issue the faulted stage on a replica path at `timeout` past the
+    /// fault. The replica shares the primary's rate model; what failover
+    /// buys is immunity from the fault schedule for the re-issued stage,
+    /// at the price of the detection timeout.
+    Failover,
+}
+
+// ------------------------------------------------------------ the config ----
+
+/// The `[faults]` section of `PlatformConfig`: per-resource fault rates and
+/// the recovery knobs. Default is every rate zero — the plane is never
+/// armed and the simulation is bit-identical to a fault-free build.
+#[derive(Clone, Debug)]
+pub struct FaultsConfig {
+    /// master seed for every fault stream (window tracks and per-command
+    /// draws); part of the scenario identity
+    pub seed: u64,
+    /// link outage windows per second of sim time (0 = off)
+    pub link_outage_per_s: f64,
+    /// mean outage duration, µs
+    pub link_outage_us: f64,
+    /// link degradation windows per second of sim time (0 = off)
+    pub link_degrade_per_s: f64,
+    /// mean degradation duration, µs
+    pub link_degrade_us: f64,
+    /// serialization-time multiplier while a link is degraded (≥ 1)
+    pub link_degrade_factor: f64,
+    /// per-command NVMe failure probability (0 = off)
+    pub nvme_fail_rate: f64,
+    /// transient drive-dropout windows per second of sim time (0 = off)
+    pub nvme_dropout_per_s: f64,
+    /// mean dropout duration, µs
+    pub nvme_dropout_us: f64,
+    /// per-swap bitstream-load failure probability (0 = off)
+    pub swap_fail_rate: f64,
+    /// peer-site (GPU/CSD/switch) crash windows per second (0 = off)
+    pub peer_crash_per_s: f64,
+    /// mean peer downtime, µs
+    pub peer_down_us: f64,
+    /// hub-side detection timeout per faulted stage, µs
+    pub timeout_us: f64,
+    /// extra attempts granted by [`RecoveryKind::Retry`]
+    pub retry_max: u32,
+    /// linear backoff step between retry attempts, µs
+    pub backoff_us: f64,
+    /// recovery policy per service class (`sched::NUM_CLASSES` entries;
+    /// index = class)
+    pub policies: [RecoveryKind; NUM_CLASSES],
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            seed: 0xFA17,
+            link_outage_per_s: 0.0,
+            link_outage_us: 200.0,
+            link_degrade_per_s: 0.0,
+            link_degrade_us: 500.0,
+            link_degrade_factor: 4.0,
+            nvme_fail_rate: 0.0,
+            nvme_dropout_per_s: 0.0,
+            nvme_dropout_us: 300.0,
+            swap_fail_rate: 0.0,
+            peer_crash_per_s: 0.0,
+            peer_down_us: 1000.0,
+            timeout_us: 50.0,
+            retry_max: 3,
+            backoff_us: 20.0,
+            policies: [RecoveryKind::Retry; NUM_CLASSES],
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// Whether any fault source is live. A disabled config never arms the
+    /// plane, so it cannot perturb the golden trace.
+    pub fn enabled(&self) -> bool {
+        self.link_outage_per_s > 0.0
+            || self.link_degrade_per_s > 0.0
+            || self.nvme_fail_rate > 0.0
+            || self.nvme_dropout_per_s > 0.0
+            || self.swap_fail_rate > 0.0
+            || self.peer_crash_per_s > 0.0
+    }
+
+    /// The same recovery policy for every service class.
+    pub fn with_policy(mut self, kind: RecoveryKind) -> Self {
+        self.policies = [kind; NUM_CLASSES];
+        self
+    }
+
+    /// Resolve the class policy against the retry knobs.
+    pub fn policy_for(&self, class: u8) -> RecoveryPolicy {
+        let kind = self.policies[(class as usize).min(NUM_CLASSES - 1)];
+        match kind {
+            RecoveryKind::Fail => RecoveryPolicy::Fail,
+            RecoveryKind::Retry => {
+                RecoveryPolicy::Retry { max: self.retry_max, backoff: us_to_ps(self.backoff_us) }
+            }
+            RecoveryKind::Failover => RecoveryPolicy::Failover,
+        }
+    }
+
+    /// Detection timeout in picoseconds.
+    pub fn timeout_ps(&self) -> Ps {
+        us_to_ps(self.timeout_us)
+    }
+}
+
+// ---------------------------------------------------------- window tracks ----
+
+/// Resource-kind discriminants folded into window-track seeds, so every
+/// (site, kind, index) triple owns an independent deterministic stream.
+const KIND_LINK_OUTAGE: u64 = 1;
+const KIND_LINK_DEGRADE: u64 = 2;
+const KIND_NVME_DROPOUT: u64 = 3;
+const KIND_SITE_DOWN: u64 = 4;
+
+/// splitmix64-style finalizer: derive a track seed from the master seed,
+/// the site's trace tag, the resource kind, and the resource index. Purely
+/// positional — independent of when (or whether) the track is first
+/// queried, so lazy creation cannot perturb the schedule.
+fn mix_seed(seed: u64, tag: u32, kind: u64, idx: u64) -> u64 {
+    let mut z = seed ^ ((tag as u64) << 32) ^ (kind << 24) ^ idx;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Alternating exponential up/down intervals for one resource: the track
+/// starts up at t = 0, goes down for ~`down_mean` every ~`up_mean`, and
+/// answers monotone point queries ("is `t` inside a down window?") by
+/// unrolling the schedule forward on demand. The schedule is a pure
+/// function of the seed, so two runs — or the sequential and parallel
+/// engines — observe identical windows.
+#[derive(Clone, Debug)]
+pub struct WindowTrack {
+    rng: Rng,
+    up_mean_ps: f64,
+    down_mean_ps: f64,
+    down_start: Ps,
+    down_until: Ps,
+}
+
+impl WindowTrack {
+    /// A track producing `rate_per_s` down-windows per second of sim time,
+    /// each lasting ~`down_us` µs. `None` when the rate is zero.
+    pub fn new(seed: u64, rate_per_s: f64, down_us: f64) -> Option<WindowTrack> {
+        if rate_per_s <= 0.0 || down_us <= 0.0 {
+            return None;
+        }
+        Some(WindowTrack {
+            rng: Rng::new(seed),
+            up_mean_ps: 1e12 / rate_per_s,
+            down_mean_ps: down_us * PS_PER_US,
+            down_start: 0,
+            down_until: 0,
+        })
+    }
+
+    /// Is `t` inside a down window? Returns the window's end when so.
+    /// Queries must be non-decreasing in `t` (the site clock is), which
+    /// lets the track drop windows it has moved past.
+    pub fn down_at(&mut self, t: Ps) -> Option<Ps> {
+        while t >= self.down_until {
+            let up = self.rng.exponential(self.up_mean_ps).max(1.0) as Ps;
+            let down = self.rng.exponential(self.down_mean_ps).max(1.0) as Ps;
+            self.down_start = self.down_until.saturating_add(up);
+            self.down_until = self.down_start.saturating_add(down);
+        }
+        if t >= self.down_start {
+            Some(self.down_until)
+        } else {
+            None
+        }
+    }
+}
+
+// ------------------------------------------------------------- site plane ----
+
+/// What the fault plane says about a link at one instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkFault {
+    /// Healthy: reserve as usual.
+    Ok,
+    /// Degraded: serialization time is stretched by `milli`/1000
+    /// (`FifoLink::reserve_stretched`); the transfer still lands.
+    Degraded(u64),
+    /// Dark until the returned instant: the command is lost and the
+    /// recovery policy decides what happens next.
+    Out(Ps),
+}
+
+/// One site's armed share of the fault plane, hanging off
+/// `HubState::faults` (boxed; `None` = fault-free, zero overhead). Window
+/// tracks are created lazily per resource index but seeded positionally,
+/// so creation order is irrelevant.
+#[derive(Clone, Debug)]
+pub struct SiteFaults {
+    cfg: FaultsConfig,
+    tag: u32,
+    /// peer sites (GPU/CSD/switch shards) are the only crash-eligible ones
+    peer: bool,
+    /// per-site Bernoulli stream (NVMe command + swap failures), consumed
+    /// in stage-execution order
+    rng: Rng,
+    timeout_ps: Ps,
+    link_outage: Vec<Option<WindowTrack>>,
+    link_degrade: Vec<Option<WindowTrack>>,
+    nvme_drop: Vec<Option<WindowTrack>>,
+    down: Option<WindowTrack>,
+    /// faults injected at this site (== its share of the timeout count)
+    pub injected: u64,
+}
+
+impl SiteFaults {
+    /// Arm one site. `tag` is the site's trace tag (hub index, `TRACE_NET`,
+    /// or a peer tag) — it salts every stream so sites never share one.
+    pub fn new(cfg: &FaultsConfig, tag: u32, peer: bool) -> SiteFaults {
+        SiteFaults {
+            cfg: cfg.clone(),
+            tag,
+            peer,
+            rng: Rng::new(mix_seed(cfg.seed, tag, 0, 0)),
+            timeout_ps: cfg.timeout_ps(),
+            link_outage: Vec::new(),
+            link_degrade: Vec::new(),
+            nvme_drop: Vec::new(),
+            down: None,
+            injected: 0,
+        }
+    }
+
+    /// Detection timeout for a faulted stage at this site.
+    pub fn timeout(&self) -> Ps {
+        self.timeout_ps
+    }
+
+    /// Recovery policy for a service class.
+    pub fn policy_for(&self, class: u8) -> RecoveryPolicy {
+        self.cfg.policy_for(class)
+    }
+
+    fn track_at(
+        tracks: &mut Vec<Option<WindowTrack>>,
+        idx: usize,
+        seed: u64,
+        rate: f64,
+        dur_us: f64,
+    ) -> Option<&mut WindowTrack> {
+        if rate <= 0.0 {
+            return None;
+        }
+        if tracks.len() <= idx {
+            tracks.resize_with(idx + 1, || None);
+        }
+        if tracks[idx].is_none() {
+            tracks[idx] = WindowTrack::new(seed, rate, dur_us);
+        }
+        tracks[idx].as_mut()
+    }
+
+    /// Is this (peer) site crashed at `now`? Hubs and the interconnect
+    /// never crash — the hub is the recovery plane, not a fault domain.
+    pub fn site_down(&mut self, now: Ps) -> Option<Ps> {
+        if !self.peer || self.cfg.peer_crash_per_s <= 0.0 {
+            return None;
+        }
+        let seed = mix_seed(self.cfg.seed, self.tag, KIND_SITE_DOWN, 0);
+        if self.down.is_none() {
+            self.down = WindowTrack::new(seed, self.cfg.peer_crash_per_s, self.cfg.peer_down_us);
+        }
+        self.down.as_mut().and_then(|t| t.down_at(now))
+    }
+
+    /// Fault state of link `link` at `now`. Outage dominates degradation.
+    pub fn link_fault(&mut self, link: usize, now: Ps) -> LinkFault {
+        let seed = mix_seed(self.cfg.seed, self.tag, KIND_LINK_OUTAGE, link as u64);
+        if let Some(track) = Self::track_at(
+            &mut self.link_outage,
+            link,
+            seed,
+            self.cfg.link_outage_per_s,
+            self.cfg.link_outage_us,
+        ) {
+            if let Some(until) = track.down_at(now) {
+                return LinkFault::Out(until);
+            }
+        }
+        let seed = mix_seed(self.cfg.seed, self.tag, KIND_LINK_DEGRADE, link as u64);
+        if let Some(track) = Self::track_at(
+            &mut self.link_degrade,
+            link,
+            seed,
+            self.cfg.link_degrade_per_s,
+            self.cfg.link_degrade_us,
+        ) {
+            if track.down_at(now).is_some() {
+                let milli = (self.cfg.link_degrade_factor * 1000.0).round() as u64;
+                return LinkFault::Degraded(milli.max(1000));
+            }
+        }
+        LinkFault::Ok
+    }
+
+    /// Does the NVMe command on queue `q` issued at `now` fail? Transient
+    /// drive dropout dominates the per-command failure draw (no draw is
+    /// consumed inside a dropout window — window queries touch only the
+    /// track's own stream, so the per-site Bernoulli stream stays aligned
+    /// with stage-execution order).
+    pub fn nvme_fault(&mut self, q: usize, now: Ps) -> bool {
+        let seed = mix_seed(self.cfg.seed, self.tag, KIND_NVME_DROPOUT, q as u64);
+        if let Some(track) = Self::track_at(
+            &mut self.nvme_drop,
+            q,
+            seed,
+            self.cfg.nvme_dropout_per_s,
+            self.cfg.nvme_dropout_us,
+        ) {
+            if track.down_at(now).is_some() {
+                return true;
+            }
+        }
+        self.cfg.nvme_fail_rate > 0.0 && self.rng.f64() < self.cfg.nvme_fail_rate
+    }
+
+    /// Does this bitstream swap fail to load?
+    pub fn swap_fault(&mut self) -> bool {
+        self.cfg.swap_fail_rate > 0.0 && self.rng.f64() < self.cfg.swap_fail_rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_disabled() {
+        let cfg = FaultsConfig::default();
+        assert!(!cfg.enabled());
+        assert_eq!(cfg.policy_for(0), cfg.policy_for(9)); // clamped class
+    }
+
+    #[test]
+    fn any_positive_rate_enables() {
+        for set in [
+            |c: &mut FaultsConfig| c.link_outage_per_s = 1.0,
+            |c: &mut FaultsConfig| c.link_degrade_per_s = 1.0,
+            |c: &mut FaultsConfig| c.nvme_fail_rate = 0.1,
+            |c: &mut FaultsConfig| c.nvme_dropout_per_s = 1.0,
+            |c: &mut FaultsConfig| c.swap_fail_rate = 0.1,
+            |c: &mut FaultsConfig| c.peer_crash_per_s = 1.0,
+        ] {
+            let mut cfg = FaultsConfig::default();
+            set(&mut cfg);
+            assert!(cfg.enabled());
+        }
+    }
+
+    #[test]
+    fn policy_parsing_round_trips() {
+        for kind in [RecoveryKind::Fail, RecoveryKind::Retry, RecoveryKind::Failover] {
+            assert_eq!(RecoveryKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(RecoveryKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn window_track_is_deterministic() {
+        let mut a = WindowTrack::new(42, 5000.0, 50.0).expect("positive rate");
+        let mut b = WindowTrack::new(42, 5000.0, 50.0).expect("positive rate");
+        for t in (0..2_000_000_000u64).step_by(13_370_000) {
+            assert_eq!(a.down_at(t), b.down_at(t));
+        }
+    }
+
+    #[test]
+    fn window_track_alternates_and_moves_forward() {
+        let mut t = WindowTrack::new(7, 20_000.0, 20.0).expect("positive rate");
+        let mut down_seen = 0;
+        let mut up_seen = 0;
+        for q in (0..4_000_000_000u64).step_by(1_000_000) {
+            match t.down_at(q) {
+                Some(until) => {
+                    assert!(until > q);
+                    down_seen += 1;
+                }
+                None => up_seen += 1,
+            }
+        }
+        assert!(down_seen > 0, "no down windows sampled");
+        assert!(up_seen > 0, "no up windows sampled");
+    }
+
+    #[test]
+    fn zero_rate_track_is_none() {
+        assert!(WindowTrack::new(1, 0.0, 100.0).is_none());
+        assert!(SiteFaults::new(&FaultsConfig::default(), 3, false).site_down(1_000_000).is_none());
+    }
+
+    #[test]
+    fn hub_sites_never_crash() {
+        // absurdly crashy, so a quiet sweep below would be a real bug
+        let cfg = FaultsConfig { peer_crash_per_s: 1e6, ..FaultsConfig::default() };
+        let mut hub = SiteFaults::new(&cfg, 0, false);
+        let mut peer = SiteFaults::new(&cfg, 0xFFFF_0000, true);
+        let mut peer_down = false;
+        for t in (0..1_000_000_000u64).step_by(10_000_000) {
+            assert!(hub.site_down(t).is_none());
+            peer_down |= peer.site_down(t).is_some();
+        }
+        assert!(peer_down, "a crash-eligible peer never went down");
+    }
+
+    #[test]
+    fn link_fault_streams_are_per_link() {
+        let cfg = FaultsConfig {
+            link_outage_per_s: 10_000.0,
+            link_outage_us: 30.0,
+            ..FaultsConfig::default()
+        };
+        let mut site = SiteFaults::new(&cfg, 1, false);
+        let mut differs = false;
+        for t in (0..2_000_000_000u64).step_by(5_000_000) {
+            let a = site.link_fault(0, t);
+            let b = site.link_fault(1, t);
+            differs |= a != b;
+        }
+        assert!(differs, "independent links shared one outage schedule");
+    }
+}

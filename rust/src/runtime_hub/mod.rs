@@ -38,6 +38,7 @@
 //! are unchanged.
 
 pub mod fabric;
+pub mod faults;
 mod parallel;
 pub mod reconfig;
 pub mod sched;
@@ -57,16 +58,17 @@ use crate::util::Slab;
 
 pub use fabric::{
     CsdSite, Fabric, FabricConfig, GpuSite, HeteroSites, Hop, HopBilling, HubId, RouteDesc, Site,
-    SitesConfig, SwitchSite, TraceEntry, TRACE_CSD_BASE, TRACE_GPU_BASE, TRACE_NET,
-    TRACE_SWITCH_BASE,
+    SitesConfig, StuckReport, StuckSite, SwitchSite, TraceEntry, TRACE_CSD_BASE, TRACE_GPU_BASE,
+    TRACE_NET, TRACE_SWITCH_BASE,
 };
+pub use faults::{FaultsConfig, LinkFault, RecoveryKind, RecoveryPolicy, SiteFaults, WindowTrack};
 pub use parallel::EngineMode;
 pub use reconfig::{
     OperatorKind, OperatorRates, Placement, ReconfigConfig, ReconfigPolicy, Region, RegionPlane,
 };
 pub use sched::{
     dispatch_io, ArbPolicy, Arbiter, Barrier, FifoLink, GrantMeta, NvmeQueue, QosSpec,
-    ResourcePolicies, TenantId, CLASS_BULK, CLASS_NORMAL, CLASS_REALTIME,
+    ResourcePolicies, TenantId, CLASS_BULK, CLASS_NORMAL, CLASS_REALTIME, NUM_CLASSES,
 };
 
 /// Handle to a registered [`FifoLink`].
@@ -178,6 +180,10 @@ pub struct Completion {
     pub tenant: TenantId,
     pub submitted_at: Ps,
     pub done_at: Ps,
+    /// recovery attempts (retries + failovers) this descriptor survived —
+    /// 0 for a clean completion, > 0 marks a degraded one (ISSUE 9). Not
+    /// part of the golden trace fold, so fault-free hashes are unchanged.
+    pub attempts: u32,
 }
 
 /// Boxed completion callback: what every descriptor runs when it finishes.
@@ -208,6 +214,15 @@ struct Continuation {
     /// the next `Advance` fires `inject_ps` after the transfer reached
     /// the link and must back-date its reservation to the arrival.
     hop_charged: bool,
+    /// a faulted stage re-armed by the recovery plane (ISSUE 9): the next
+    /// `Advance` executes it instead of popping the stage iterator
+    retry_stage: Option<Stage>,
+    /// recovery attempts so far (bounds `RecoveryPolicy::Retry`)
+    attempts: u32,
+    /// the re-armed stage is a failover re-issue on the replica path —
+    /// consumed (reset) when the stage executes; replicas skip the fault
+    /// plane by contract
+    on_replica: bool,
 }
 
 /// What a parked continuation was waiting to do when its grant arrives.
@@ -234,6 +249,14 @@ pub struct TenantAccount {
     pub bytes_moved: u64,
     /// partial-reconfiguration swaps this tenant's descriptors caused
     pub swaps: u64,
+    /// stage timeouts detected (== faults injected on this tenant's path)
+    pub timeouts: u64,
+    /// faulted stages re-executed under `RecoveryPolicy::Retry`
+    pub retries: u64,
+    /// faulted stages re-issued on a replica under `Failover`
+    pub failovers: u64,
+    /// descriptors given up on (`Fail`, or retry budget exhausted)
+    pub abandoned: u64,
     pub lat: Hist,
 }
 
@@ -246,6 +269,14 @@ pub struct TenantReport {
     pub bytes_moved: u64,
     /// region swaps charged to this tenant (ISSUE 5)
     pub swaps: u64,
+    /// stage timeouts detected on this tenant's descriptors (ISSUE 9)
+    pub timeouts: u64,
+    /// faulted stages re-executed under `RecoveryPolicy::Retry`
+    pub retries: u64,
+    /// faulted stages re-issued on a replica under `Failover`
+    pub failovers: u64,
+    /// descriptors abandoned by the recovery plane (never completed)
+    pub abandoned: u64,
     pub lat_us: Quantiles,
 }
 
@@ -288,6 +319,14 @@ pub struct HubState {
     hazards: u64,
     /// live route legs on this site (each in-flight route has exactly one)
     route_live: u64,
+    /// descriptors the recovery plane gave up on (ISSUE 9):
+    /// `completed + abandoned == submitted` once the queue drains
+    pub abandoned: u64,
+    /// the armed fault plane (ISSUE 9). `None` — the default, and the only
+    /// state a zero-rate `[faults]` config ever produces — is bit-identical
+    /// to a build without the plane: no draws, no extra events, no branch
+    /// beyond this option check.
+    faults: Option<Box<SiteFaults>>,
 }
 
 impl HubState {
@@ -313,7 +352,23 @@ impl HubState {
             la_to: Vec::new(),
             hazards: 0,
             route_live: 0,
+            abandoned: 0,
+            faults: None,
         }
+    }
+
+    /// Arm this site's share of the fault plane (no-op for a disabled
+    /// config). `tag` is the site's trace tag; `peer` marks crash-eligible
+    /// GPU/CSD/switch shards.
+    fn arm_faults(&mut self, cfg: &FaultsConfig, tag: u32, peer: bool) {
+        if cfg.enabled() {
+            self.faults = Some(Box::new(SiteFaults::new(cfg, tag, peer)));
+        }
+    }
+
+    /// Faults injected at this site so far (0 when the plane is unarmed).
+    pub fn faults_injected(&self) -> u64 {
+        self.faults.as_ref().map_or(0, |f| f.injected)
     }
 
     /// Lookahead this site promises for injections into `site` (0 outside
@@ -346,6 +401,23 @@ impl HubState {
         }
     }
 
+    /// Would dropping this done action *unrun* free captured state — an
+    /// app closure's captures (possibly `Rc`s shared with other shards'
+    /// continuations), or a route's terminal callback? Abandonment (the
+    /// fault plane's `Fail`/exhausted-retry path) is the only place a
+    /// done action drops outside a completion, and such drops must only
+    /// happen on the coordinator — this is the parallel engine's
+    /// rendezvous predicate for mid-chain events while faults are armed.
+    /// Note it is neither a subset nor a superset of [`Self::done_is_hazard`]:
+    /// a callback-free route can be a hazard (uncovered first hop) yet
+    /// abandon as plain data, and a covered route can carry a callback.
+    fn done_holds_captures(&self, done: &DoneAction) -> bool {
+        match done {
+            DoneAction::Call(_) => true,
+            DoneAction::Route(rc) => rc.done.is_some(),
+        }
+    }
+
     /// The running account for `tenant`, created on first touch.
     pub fn tenant_mut(&mut self, tenant: TenantId) -> &mut TenantAccount {
         match self.tenants.iter().position(|a| a.tenant == tenant) {
@@ -357,6 +429,10 @@ impl HubState {
                     completed: 0,
                     bytes_moved: 0,
                     swaps: 0,
+                    timeouts: 0,
+                    retries: 0,
+                    failovers: 0,
+                    abandoned: 0,
                     lat: Hist::new(),
                 });
                 self.tenants.last_mut().expect("just pushed")
@@ -576,6 +652,15 @@ impl HubRuntime {
         self.state.borrow_mut().register_regions(cfg, policy)
     }
 
+    /// Arm the deterministic fault plane (ISSUE 9) on this single-site
+    /// runtime. No-op for a disabled (all rates zero) config; call before
+    /// submitting work so the fault schedule covers the whole run.
+    pub fn arm_faults(&mut self, cfg: &FaultsConfig) {
+        let mut st = self.state.borrow_mut();
+        assert_eq!(st.submitted, 0, "arm the fault plane before submitting work");
+        st.arm_faults(cfg, 0, false);
+    }
+
     /// Submit a descriptor at absolute time `at`; `done` fires when the
     /// last stage completes.
     pub fn submit(
@@ -646,6 +731,10 @@ impl HubRuntime {
                 completed: a.completed,
                 bytes_moved: a.bytes_moved,
                 swaps: a.swaps,
+                timeouts: a.timeouts,
+                retries: a.retries,
+                failovers: a.failovers,
+                abandoned: a.abandoned,
                 lat_us: a.lat.quantiles(),
             })
             .collect();
@@ -738,6 +827,9 @@ fn submit_cont_at(
             qos: desc.qos,
             t0: at,
             hop_charged: inj > 0,
+            retry_stage: None,
+            attempts: 0,
+            on_replica: false,
         };
         (st.site, st.conts.insert(cont), at + inj)
     };
@@ -922,6 +1014,9 @@ enum After {
     Region { swap_done: Option<Ps>, done: Ps, region: u32 },
     /// barrier released: resume the parked slots, then this one
     Released(Vec<ContSlot>),
+    /// abandoned by the recovery plane: drop the continuation (and its
+    /// done action, unrun) once the state borrow is released
+    Abandoned(Continuation),
     /// parked on an arbiter or barrier: a later event resumes it
     Parked,
 }
@@ -949,19 +1044,24 @@ fn advance(st: &Rc<RefCell<HubState>>, sim: &mut Sim, slot: ContSlot) -> Option<
         // so start/busy-chain/delivered are bit-identical to charging
         // inside the leg, while the event itself landed `inject_ps` into
         // this shard's future (the lookahead the parallel engine uses).
-        let (stage, qos, arrival) = {
+        let (stage, qos, arrival, replica) = {
             let c = state.conts.get_mut(slot).expect("advance on a dead continuation");
             let mut arrival = now;
             let mut arm = None;
-            if let Some(&Stage::Xfer { link, .. }) = c.stages.as_slice().first() {
-                let inj = state.links[link].inject_ps;
-                if inj > 0 {
-                    if c.hop_charged {
-                        c.hop_charged = false;
-                        arrival = now - inj;
-                    } else {
-                        c.hop_charged = true;
-                        arm = Some(now + inj);
+            // a recovery re-arm (retry_stage) re-executes an already-popped
+            // stage: its hop charge, if any, was consumed on the first
+            // attempt, so the billing peek below must not fire for it
+            if c.retry_stage.is_none() {
+                if let Some(&Stage::Xfer { link, .. }) = c.stages.as_slice().first() {
+                    let inj = state.links[link].inject_ps;
+                    if inj > 0 {
+                        if c.hop_charged {
+                            c.hop_charged = false;
+                            arrival = now - inj;
+                        } else {
+                            c.hop_charged = true;
+                            arm = Some(now + inj);
+                        }
                     }
                 }
             }
@@ -972,9 +1072,55 @@ fn advance(st: &Rc<RefCell<HubState>>, sim: &mut Sim, slot: ContSlot) -> Option<
                     sim.schedule(at, Event::Advance { site, slot });
                     return None;
                 }
-                None => (c.stages.next(), c.qos, arrival),
+                None => {
+                    let stage = match c.retry_stage.take() {
+                        Some(s) => Some(s),
+                        None => c.stages.next(),
+                    };
+                    let replica = c.on_replica;
+                    c.on_replica = false;
+                    (stage, c.qos, arrival, replica)
+                }
             }
         };
+        // Fault plane (ISSUE 9): resource stages consult the armed plane
+        // *before* touching their resource, in stage-execution order —
+        // which both engines reproduce exactly, so every draw (and thus the
+        // fault schedule) is part of the golden trace. Failover re-issues
+        // (`replica`) skip the plane by contract; an unarmed plane skips
+        // this entire block.
+        let mut stretch_milli = None;
+        let lost = match (&stage, replica, state.faults.as_deref_mut()) {
+            (Some(s), false, Some(f)) => match *s {
+                Stage::Xfer { link, .. } => {
+                    if f.site_down(now).is_some() {
+                        true
+                    } else {
+                        match f.link_fault(link, now) {
+                            LinkFault::Ok => false,
+                            LinkFault::Degraded(m) => {
+                                stretch_milli = Some(m);
+                                false
+                            }
+                            LinkFault::Out(_) => true,
+                        }
+                    }
+                }
+                Stage::Nvme { q, .. } => f.site_down(now).is_some() || f.nvme_fault(q, now),
+                Stage::Preproc { .. } => f.site_down(now).is_some() || f.swap_fault(),
+                Stage::Delay(_) | Stage::Until(_) | Stage::Core { .. } | Stage::Barrier(_) => {
+                    false
+                }
+            },
+            _ => false,
+        };
+        if lost {
+            let stage = stage.expect("only resource stages fault");
+            let after = recover(state, slot, stage, qos, now);
+            let site = state.site;
+            drop(guard);
+            return finish_advance(sim, site, slot, now, after);
+        }
         let after = match stage {
             None => {
                 let c = state.conts.remove(slot);
@@ -984,6 +1130,7 @@ fn advance(st: &Rc<RefCell<HubState>>, sim: &mut Sim, slot: ContSlot) -> Option<
                     tenant: c.qos.tenant,
                     submitted_at: c.t0,
                     done_at: now,
+                    attempts: c.attempts,
                 });
                 let acct = state.tenant_mut(c.qos.tenant);
                 acct.completed += 1;
@@ -1010,7 +1157,13 @@ fn advance(st: &Rc<RefCell<HubState>>, sim: &mut Sim, slot: ContSlot) -> Option<
                 let eager = state.link_arb[link].eager()
                     || (idle && state.link_arb[link].is_empty());
                 if eager {
-                    let (_, delivered) = state.links[link].reserve(arrival, bytes);
+                    // a degradation window (fault plane) stretches the
+                    // serialization share; outside one this is the exact
+                    // `reserve` path
+                    let (_, delivered) = match stretch_milli {
+                        Some(m) => state.links[link].reserve_stretched(arrival, bytes, m),
+                        None => state.links[link].reserve(arrival, bytes),
+                    };
                     state.tenant_mut(qos.tenant).bytes_moved += bytes;
                     After::At(delivered)
                 } else {
@@ -1087,6 +1240,18 @@ fn advance(st: &Rc<RefCell<HubState>>, sim: &mut Sim, slot: ContSlot) -> Option<
         };
         (state.site, after)
     };
+    finish_advance(sim, site, slot, now, after)
+}
+
+/// Emit the typed events an [`After`] outcome calls for, outside the state
+/// borrow (so completion callbacks can re-enter the state freely).
+fn finish_advance(
+    sim: &mut Sim,
+    site: u32,
+    slot: ContSlot,
+    now: Ps,
+    after: After,
+) -> Option<fabric::RouteDone> {
     match after {
         After::Done(c) => match c.done {
             DoneAction::Call(f) => f(sim, now),
@@ -1109,9 +1274,74 @@ fn advance(st: &Rc<RefCell<HubState>>, sim: &mut Sim, slot: ContSlot) -> Option<
             }
             sim.schedule(now, Event::Advance { site, slot });
         }
+        // the abandoned continuation's captures drop here, outside the
+        // borrow (a capture's Drop may touch the state cell)
+        After::Abandoned(c) => drop(c),
         After::Parked => {}
     }
     None
+}
+
+/// Resolve a detected fault on the stage the continuation at `slot` was
+/// about to execute: count the timeout, then apply the tenant class's
+/// recovery policy. A retry re-arms the same stage shard-locally (the
+/// resume is a plain `Advance` on this site at `now + timeout +
+/// attempts × backoff`, so the parallel engine's per-edge lookahead bound
+/// is untouched); a failover re-arms it flagged replica at `now +
+/// timeout`; `Fail` — and an exhausted retry budget — abandons the
+/// descriptor. The timeout timer is materialized lazily: only the timer
+/// that fires is ever scheduled, so an armed-but-quiet plane adds zero
+/// events (DESIGN.md §13).
+fn recover(state: &mut HubState, slot: ContSlot, stage: Stage, qos: QosSpec, now: Ps) -> After {
+    let (timeout, policy) = {
+        let f = state.faults.as_deref_mut().expect("fault implies an armed plane");
+        f.injected += 1;
+        (f.timeout(), f.policy_for(qos.class))
+    };
+    state.tenant_mut(qos.tenant).timeouts += 1;
+    match policy {
+        RecoveryPolicy::Fail => abandon(state, slot, qos),
+        RecoveryPolicy::Retry { max, backoff } => {
+            let c = state.conts.get_mut(slot).expect("faulted continuation is live");
+            if c.attempts < max {
+                c.attempts += 1;
+                c.retry_stage = Some(stage);
+                let resume = now
+                    .saturating_add(timeout)
+                    .saturating_add(backoff.saturating_mul(c.attempts as Ps));
+                state.tenant_mut(qos.tenant).retries += 1;
+                After::At(resume)
+            } else {
+                abandon(state, slot, qos)
+            }
+        }
+        RecoveryPolicy::Failover => {
+            let c = state.conts.get_mut(slot).expect("faulted continuation is live");
+            c.attempts += 1;
+            c.retry_stage = Some(stage);
+            c.on_replica = true;
+            state.tenant_mut(qos.tenant).failovers += 1;
+            After::At(now.saturating_add(timeout))
+        }
+    }
+}
+
+/// Abandon the continuation at `slot`: it never completes, and its done
+/// action is dropped unrun. The live-work bookkeeping is unwound exactly
+/// as a completion would unwind it (hazard and route-leg counters), but
+/// no `Completion` is logged — abandoned descriptors are visible only in
+/// the error accounting, never in the trace.
+fn abandon(state: &mut HubState, slot: ContSlot, qos: QosSpec) -> After {
+    let c = state.conts.remove(slot);
+    state.abandoned += 1;
+    if state.done_is_hazard(&c.done) {
+        state.hazards -= 1;
+    }
+    if matches!(c.done, DoneAction::Route(_)) {
+        state.route_live -= 1;
+    }
+    state.tenant_mut(qos.tenant).abandoned += 1;
+    After::Abandoned(c)
 }
 
 /// Park the continuation at `slot` on a link/pool arbiter. If it is the

@@ -252,8 +252,21 @@ impl Shard {
 fn is_boundary(st: &HubState, ev: &Event, mode: EngineMode) -> bool {
     let completes_as_boundary = |slot: u32| match st.conts.get(slot) {
         Some(c) => {
-            c.stages.as_slice().is_empty()
-                && (mode == EngineMode::Rendezvous || st.done_is_hazard(&c.done))
+            // a pending recovery re-arm (ISSUE 9) means the next advance
+            // re-executes a stage, not the done action
+            let completes = c.retry_stage.is_none() && c.stages.as_slice().is_empty();
+            if completes {
+                mode == EngineMode::Rendezvous || st.done_is_hazard(&c.done)
+            } else {
+                // fault plane armed: a mid-chain stage can abandon, which
+                // drops the done action unrun — an app callback or terminal
+                // route callback (and its captured `Rc`s) must only ever
+                // drop on the coordinator, so any event that could abandon
+                // a capture-holding continuation rendezvouses. Callback-free
+                // routes abandon as plain data and stay worker-side.
+                // Unarmed sites take none of this.
+                st.faults.is_some() && st.done_holds_captures(&c.done)
+            }
         }
         None => true,
     };

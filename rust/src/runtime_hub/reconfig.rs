@@ -24,6 +24,14 @@
 //! [`ReconfigPolicy`]: which region serves a request and which residency a
 //! miss evicts. Swap commits and streaming completions ride the zero-alloc
 //! typed event path (`sim::Event::RegionSwapDone` / `RegionDone`).
+//!
+//! Fault injection (ISSUE 9) deliberately lives *outside* this module: a
+//! bitstream-swap failure is decided by the site's
+//! [`SiteFaults`](super::SiteFaults) when the `Preproc` stage is consulted
+//! in `HubState::advance`, *before* the request ever reaches the plane. A
+//! faulted swap therefore never mutates region residency — the plane state
+//! stays identical to the fault-free schedule, which is what keeps the
+//! zero-rate golden traces bit-identical (DESIGN.md §13).
 
 use crate::sim::time::{ns_f, us_f, wire_time, Ps};
 

@@ -447,6 +447,22 @@ impl FifoLink {
         (start, ser_done + self.post_ps)
     }
 
+    /// [`FifoLink::reserve`] with the serialization share stretched by
+    /// `stretch_milli`/1000 — the fault plane's link-degradation path
+    /// (ISSUE 9). `stretch_milli == 1000` reproduces `reserve` exactly;
+    /// the multiply runs in u128 so a long transfer under a large factor
+    /// cannot wrap. FIFO order is untouched: the stretched transfer still
+    /// occupies the wire back to back behind earlier grants.
+    pub fn reserve_stretched(&mut self, now: Ps, bytes: u64, stretch_milli: u64) -> (Ps, Ps) {
+        let start = now.max(self.busy_until);
+        let ser = self.ser_time(bytes) as u128 * stretch_milli.max(1000) as u128 / 1000;
+        let ser_done = start.saturating_add(ser.min(u64::MAX as u128) as Ps);
+        self.busy_until = ser_done;
+        self.bytes_moved += bytes;
+        self.grants += 1;
+        (start, ser_done + self.post_ps)
+    }
+
     pub fn busy_until(&self) -> Ps {
         self.busy_until
     }

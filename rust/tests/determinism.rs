@@ -27,11 +27,12 @@ use fpgahub::apps::allreduce::{HierConfig, HierarchicalAllreduce};
 use fpgahub::apps::hetero::{build_hetero_mix, HeteroMixConfig};
 use fpgahub::apps::storage_fetch::{register_nic_fetch_path_fabric, FETCH_CMD_BYTES};
 use fpgahub::net::packet::HEADER_BYTES;
+use fpgahub::nvme::queue::NvmeOp;
 use fpgahub::nvme::ssd::SsdArray;
 use fpgahub::runtime_hub::{
-    Fabric, FabricConfig, HubId, OperatorKind, OperatorRates, QosSpec, ReconfigConfig,
-    ResourcePolicies, RouteDesc, RunStats, Site, TenantId, TraceEntry, TransferDesc,
-    TRACE_CSD_BASE, TRACE_GPU_BASE, TRACE_SWITCH_BASE,
+    Fabric, FabricConfig, FaultsConfig, HubId, OperatorKind, OperatorRates, QosSpec,
+    ReconfigConfig, RecoveryKind, ResourcePolicies, RouteDesc, RunStats, Site, TenantId,
+    TraceEntry, TransferDesc, TRACE_CSD_BASE, TRACE_GPU_BASE, TRACE_SWITCH_BASE,
 };
 use fpgahub::sim::time::US;
 use fpgahub::util::Rng;
@@ -470,4 +471,190 @@ fn mixed_workload_trace_identical_across_runs() {
 #[test]
 fn parallel_mixed_workload_matches_sequential() {
     assert_engine_equivalence("mixed", None, mixed_workload);
+}
+
+// ------------------------------------- deterministic fault plane (ISSUE 9) ----
+
+/// Aggressive-but-not-total fault pressure for the pinned faulty scenario:
+/// every fault source live, short windows, a 30 µs detection timeout.
+fn faulty_config(seed: u64, policy: RecoveryKind) -> FaultsConfig {
+    FaultsConfig {
+        seed,
+        link_outage_per_s: 8_000.0,
+        link_outage_us: 40.0,
+        link_degrade_per_s: 4_000.0,
+        link_degrade_us: 60.0,
+        link_degrade_factor: 4.0,
+        nvme_fail_rate: 0.08,
+        nvme_dropout_per_s: 2_000.0,
+        nvme_dropout_us: 50.0,
+        timeout_us: 30.0,
+        retry_max: 2,
+        backoff_us: 10.0,
+        ..FaultsConfig::default()
+    }
+    .with_policy(policy)
+}
+
+/// The pinned faulty scenario: two hubs running xfer→NVMe chains across
+/// all three service classes plus detached cross-hub mesh legs, with the
+/// fault plane armed. Fault decisions ride the per-site event order, so
+/// this must be bit-identical run-to-run *and* sequential-vs-parallel.
+fn faulty_fabric(seed: u64, policy: RecoveryKind, mode: Mode) -> (Fabric, RunStats) {
+    let mut fab = Fabric::with_config(FabricConfig {
+        hubs: 2,
+        gbps: 100.0,
+        hop_ns: 500.0,
+        policies: ResourcePolicies::default(),
+    });
+    let mut links = Vec::new();
+    let mut queues = Vec::new();
+    for h in 0..2u32 {
+        let mut rng = Rng::new(0xBEEF ^ u64::from(h));
+        let hub = HubId(h);
+        links.push(fab.add_link(hub, "dram-port", 100.0, 0));
+        let arr = fab.add_array(hub, SsdArray::new(2, &mut rng));
+        queues.push(fab.add_nvme_queue(hub, arr, 0, 8, 0, 0));
+    }
+    fab.arm_faults(&faulty_config(seed, policy));
+    for i in 0..40u64 {
+        let h = (i % 2) as u32;
+        let qos = match i % 3 {
+            0 => QosSpec::latency_sensitive(TenantId(1)),
+            1 => QosSpec::default(),
+            _ => QosSpec::bulk(TenantId(2)),
+        };
+        let desc = TransferDesc::with_label(i)
+            .qos(qos)
+            .xfer(links[h as usize], 6_000 + i * 128)
+            .nvme(queues[h as usize], NvmeOp::Read);
+        fab.submit(HubId(h), i * 15 * US, desc, |_, _| {});
+        if i % 4 == 0 {
+            let hop = fab.hop_desc(500 + i, qos, HubId(h), HubId(1 - h), 3_000);
+            fab.submit_route_detached(i * 15 * US + 3 * US, RouteDesc::new().hop(Site::Net, hop));
+        }
+    }
+    let stats = drain(&mut fab, mode);
+    (fab, stats)
+}
+
+#[test]
+fn faulty_trace_identical_across_runs() {
+    let (f1, _) = faulty_fabric(0xFA17, RecoveryKind::Retry, Mode::Seq);
+    let (f2, _) = faulty_fabric(0xFA17, RecoveryKind::Retry, Mode::Seq);
+    assert!(f1.faults_injected() > 0, "the pinned scenario must actually fault");
+    assert_eq!(f1.faults_injected(), f2.faults_injected());
+    assert_eq!(f1.completion_trace(), f2.completion_trace());
+    assert_eq!(f1.trace_hash(), f2.trace_hash());
+    assert_eq!(
+        format!("{:?}", f1.tenant_reports()),
+        format!("{:?}", f2.tenant_reports()),
+        "error accounting must be deterministic too"
+    );
+}
+
+#[test]
+fn fault_schedule_is_part_of_the_scenario() {
+    let (f1, _) = faulty_fabric(0xFA17, RecoveryKind::Retry, Mode::Seq);
+    let (f2, _) = faulty_fabric(0xFA18, RecoveryKind::Retry, Mode::Seq);
+    assert_ne!(f1.trace_hash(), f2.trace_hash(), "the fault seed must move the trace");
+}
+
+#[test]
+fn parallel_faulty_matches_sequential_retry() {
+    assert_engine_equivalence("faults/retry", None, |m| {
+        faulty_fabric(0xFA17, RecoveryKind::Retry, m)
+    });
+}
+
+#[test]
+fn parallel_faulty_matches_sequential_fail() {
+    assert_engine_equivalence("faults/fail", None, |m| {
+        faulty_fabric(0xFA17, RecoveryKind::Fail, m)
+    });
+}
+
+#[test]
+fn parallel_faulty_matches_sequential_failover() {
+    assert_engine_equivalence("faults/failover", None, |m| {
+        faulty_fabric(0xFA17, RecoveryKind::Failover, m)
+    });
+}
+
+/// The acceptance property: injected faults == timeouts == retries +
+/// failovers + abandons, and completed + abandoned == submitted, over a
+/// grid of fault seeds × recovery policies, with the queue fully
+/// quiescent afterwards.
+#[test]
+fn fault_counters_balance_across_seeds_and_policies() {
+    for seed in [1u64, 2, 3, 0xFA17] {
+        for policy in [RecoveryKind::Fail, RecoveryKind::Retry, RecoveryKind::Failover] {
+            let (fab, _) = faulty_fabric(seed, policy, Mode::Seq);
+            let name = format!("seed {seed:#x} / {}", policy.name());
+            assert!(fab.faults_injected() > 0, "{name}: no faults fired");
+            let (mut timeouts, mut retries, mut failovers, mut abandoned) = (0, 0, 0, 0);
+            for r in fab.tenant_reports() {
+                timeouts += r.timeouts;
+                retries += r.retries;
+                failovers += r.failovers;
+                abandoned += r.abandoned;
+            }
+            assert_eq!(fab.faults_injected(), timeouts, "{name}: a fault escaped detection");
+            assert_eq!(
+                timeouts,
+                retries + failovers + abandoned,
+                "{name}: recovery counters must balance"
+            );
+            assert_eq!(fab.total_abandoned(), abandoned, "{name}: abandon accounting split");
+            assert_eq!(
+                fab.total_completed() + fab.total_abandoned(),
+                fab.total_submitted(),
+                "{name}: a descriptor leaked"
+            );
+            match policy {
+                RecoveryKind::Fail => {
+                    assert_eq!(retries + failovers, 0, "{name}: Fail never retries")
+                }
+                RecoveryKind::Retry => assert_eq!(failovers, 0, "{name}: Retry never fails over"),
+                RecoveryKind::Failover => {
+                    assert_eq!(retries + abandoned, 0, "{name}: Failover masks every fault")
+                }
+            }
+            assert!(fab.stuck_report().is_none(), "{name}: drained run must be quiescent");
+        }
+    }
+}
+
+/// A zero-rate `[faults]` config must be indistinguishable from never
+/// arming the plane — this is what keeps every committed golden hash
+/// above valid with the fault machinery merged.
+#[test]
+fn zero_rate_faults_are_bit_identical_to_unarmed() {
+    let build = |arm: bool| {
+        let mut fab = Fabric::with_config(FabricConfig {
+            hubs: 2,
+            gbps: 100.0,
+            hop_ns: 500.0,
+            policies: ResourcePolicies::default(),
+        });
+        let mut links = Vec::new();
+        for h in 0..2u32 {
+            links.push(fab.add_link(HubId(h), "dram-port", 100.0, 0));
+        }
+        if arm {
+            fab.arm_faults(&FaultsConfig::default());
+        }
+        for i in 0..12u64 {
+            let h = (i % 2) as u32;
+            let desc = TransferDesc::with_label(i).xfer(links[h as usize], 9_000);
+            fab.submit(HubId(h), i * 10 * US, desc, |_, _| {});
+        }
+        fab.run();
+        (fab.trace_hash(), fab.completion_trace(), fab.faults_injected())
+    };
+    let (armed_hash, armed_trace, injected) = build(true);
+    let (plain_hash, plain_trace, _) = build(false);
+    assert_eq!(injected, 0, "zero rates must never inject");
+    assert_eq!(armed_hash, plain_hash);
+    assert_eq!(armed_trace, plain_trace);
 }

@@ -1,0 +1,48 @@
+//! Regression test (ISSUE 9 satellite): a panic on a parallel-engine
+//! worker thread must be rethrown on the coordinator with its original
+//! payload. The PR 6 review fixed exactly this (a worker panic used to
+//! deadlock the window handshake); this pins the fix.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use fpgahub::runtime_hub::{
+    Fabric, FabricConfig, HubId, OperatorKind, QosSpec, ResourcePolicies, TransferDesc,
+};
+use fpgahub::sim::time::US;
+
+#[test]
+fn worker_panic_is_rethrown_with_its_payload() {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let mut fab = Fabric::with_config(FabricConfig {
+            hubs: 2,
+            gbps: 100.0,
+            hop_ns: 500.0,
+            policies: ResourcePolicies::default(),
+        });
+        // No add_regions anywhere: each Preproc stage below panics in the
+        // RegionPlane when its Advance executes. The stage sits
+        // mid-descriptor (a Delay follows), so the event is not a
+        // completion boundary and executes on a worker thread; both hubs
+        // carry overlapping work so the drain cannot collapse to the
+        // single-shard fast path.
+        for h in 0..2u32 {
+            let desc = TransferDesc::with_label(u64::from(h))
+                .qos(QosSpec::default())
+                .delay(US)
+                .preproc(OperatorKind::Filter, 1_000)
+                .delay(US);
+            fab.submit(HubId(h), 0, desc, |_, _| {});
+        }
+        fab.run_parallel(2);
+    }));
+    let payload = result.expect_err("the worker panic must propagate to the coordinator");
+    let msg = payload
+        .downcast_ref::<String>()
+        .map(String::as_str)
+        .or_else(|| payload.downcast_ref::<&str>().copied())
+        .unwrap_or("<non-string payload>");
+    assert!(
+        msg.contains("no partial-reconfiguration regions"),
+        "panic payload lost in propagation: {msg}"
+    );
+}
