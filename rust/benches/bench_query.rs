@@ -1,0 +1,209 @@
+//! Dataflow query-plane bench (ISSUE 10): a planner-lowered mixed
+//! workload — CSD-style pushdown filters, ship-all filters at the
+//! origin, and fused scan→filter→partition region chains — on a 4-hub
+//! fabric, timed on the sequential engine and, with `-- --threads N`,
+//! on the conservative parallel engine. Every parallel run is
+//! hash-gated against the sequential reference before any number is
+//! reported, so a determinism break anywhere in the lowering (emitters,
+//! fused preproc chains, hop billing) fails the bench outright.
+//! `-- --json BENCH_query.json` persists the numbers for the cross-PR
+//! perf trajectory.
+
+use std::cell::Cell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use fpgahub::apps::storage_fetch::{register_nic_fetch_path_fabric, FETCH_CMD_BYTES};
+use fpgahub::apps::{owner_shard_route, TENANT_PIPELINE};
+use fpgahub::bench_harness::{banner, bench_sim, bench_sim_t};
+use fpgahub::net::packet::HEADER_BYTES;
+use fpgahub::nvme::ssd::SsdArray;
+use fpgahub::query::{
+    CostModel, DataSource, LogicalOp, PlanContext, Planner, QueryDag, SiteChoice,
+};
+use fpgahub::runtime_hub::{
+    Fabric, FabricConfig, HubId, QosSpec, ReconfigConfig, RunStats, SitesConfig, TransferDesc,
+};
+use fpgahub::sim::time::{to_us, Ps, US};
+use fpgahub::util::Rng;
+
+const HUBS: usize = 4;
+const SSDS: usize = 2;
+const REQS: u64 = 96;
+const GAP: Ps = 15 * US;
+const BLOCKS: u32 = 16;
+
+/// One measured run: `REQS` queries, each lowered by the planner pinned
+/// to a rotating placement (pushdown at the owner / ship-all to the
+/// origin / fused two-operator chain), drained sequentially
+/// (`threads: None`) or on the parallel engine. Completion is asserted —
+/// a stuck route would otherwise read as a fast iteration.
+fn query_fabric(threads: Option<usize>) -> (Fabric, RunStats) {
+    let mut rng = Rng::new(0xF26A);
+    let mut fab = Fabric::with_config(FabricConfig { hubs: HUBS, ..Default::default() });
+    let rc = ReconfigConfig { regions: 2, swap_us: 150.0, ..Default::default() };
+    let all_ssds: Vec<usize> = (0..SSDS).collect();
+    let paths: Vec<_> = (0..HUBS)
+        .map(|h| {
+            let hub = HubId(h as u32);
+            fab.add_regions(hub, &rc);
+            let arr = fab.add_array(hub, SsdArray::new(SSDS, &mut rng));
+            let mut p = register_nic_fetch_path_fabric(&mut fab, hub, arr, &all_ssds);
+            p.qos = QosSpec::latency_sensitive(TENANT_PIPELINE);
+            p
+        })
+        .collect();
+
+    let planner = Planner::new(
+        CostModel::from_platform(
+            &FabricConfig { hubs: HUBS, ..Default::default() },
+            &SitesConfig::default(),
+            &rc,
+        ),
+        HUBS,
+    );
+    // the two query shapes: scan → filter (keep the quarter), and the
+    // fused scan → filter → partition region chain
+    let mut fdag = QueryDag::new();
+    let fs = fdag.scan(BLOCKS as u64);
+    let ff = fdag.node(LogicalOp::Filter, &[fs], 25);
+    let mut cdag = QueryDag::new();
+    let cs = cdag.scan(BLOCKS as u64);
+    let cf = cdag.node(LogicalOp::Filter, &[cs], 50);
+    let cp = cdag.node(LogicalOp::Partition, &[cf], 50);
+
+    let done = Rc::new(Cell::new(0u64));
+    for i in 0..REQS {
+        let t0 = i * GAP;
+        let origin = HubId((i % HUBS as u64) as u32);
+        let shard = i % (HUBS * SSDS) as u64;
+        let owner = HubId((shard / SSDS as u64) as u32);
+        let ssd = (shard % SSDS as u64) as usize;
+        let qos = paths[owner.index()].qos;
+        let ctx = PlanContext { origin, owner, qos, data: DataSource::HubNvme };
+        let fetch = paths[owner.index()].fetch_desc(i, ssd, BLOCKS);
+        let route = if i % 3 == 2 {
+            // fused two-operator chain at the owner
+            let plan = planner.plan_pinned(
+                &cdag,
+                &ctx,
+                &[(cf, SiteChoice::Hub(owner)), (cp, SiteChoice::Hub(owner))],
+            );
+            owner_shard_route(
+                &fab,
+                i,
+                qos,
+                origin,
+                owner,
+                plan.chain_hub_stages(fetch),
+                FETCH_CMD_BYTES,
+                plan.step(cp).bytes_out + HEADER_BYTES,
+                None,
+            )
+        } else if i % 3 == 1 && origin != owner {
+            // ship the whole block, filter at the origin
+            let plan = planner.plan_pinned(&fdag, &ctx, &[(ff, SiteChoice::ShipAll(origin))]);
+            owner_shard_route(
+                &fab,
+                i,
+                qos,
+                origin,
+                owner,
+                fetch,
+                FETCH_CMD_BYTES,
+                plan.step(ff).bytes_in + HEADER_BYTES,
+                Some(plan.chain_hub_stages(TransferDesc::with_label(i).qos(qos))),
+            )
+        } else {
+            // filter pushed to the owner
+            let plan = planner.plan_pinned(&fdag, &ctx, &[(ff, SiteChoice::Hub(owner))]);
+            owner_shard_route(
+                &fab,
+                i,
+                qos,
+                origin,
+                owner,
+                plan.chain_hub_stages(fetch),
+                FETCH_CMD_BYTES,
+                plan.step(ff).bytes_out + HEADER_BYTES,
+                None,
+            )
+        };
+        let d = done.clone();
+        fab.submit_route(t0, route, move |_, _| d.set(d.get() + 1));
+    }
+    let stats = match threads {
+        None => fab.run(),
+        Some(t) => fab.run_parallel(t),
+    };
+    assert_eq!(done.get(), REQS, "query routes incomplete");
+    (fab, stats)
+}
+
+/// Worker threads for the parallel cases: `-- --threads N`, defaulting to
+/// the machine's available parallelism.
+fn cli_threads() -> usize {
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == "--threads" {
+            if let Some(n) = args.next().and_then(|v| v.parse::<usize>().ok()) {
+                return n.max(1);
+            }
+        }
+    }
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
+
+fn main() {
+    let threads = cli_threads();
+
+    banner("query plane: planner-lowered mix (pushdown / ship-all / fused chain)");
+    let seq_hash = {
+        let (fab, stats) = query_fabric(None);
+        println!(
+            "{REQS} queries on {HUBS} hubs: {} events, sim {:.1}µs, hash {:#018x}",
+            stats.events,
+            to_us(stats.sim_elapsed),
+            fab.trace_hash()
+        );
+        fab.trace_hash()
+    };
+
+    // Correctness gate + speedup report: the parallel engine must
+    // reproduce the sequential trace of the lowered mix bit for bit.
+    banner(&format!("sequential vs parallel ({threads} threads): same plans, same trace"));
+    {
+        let t0 = Instant::now();
+        let (_, seq_stats) = query_fabric(None);
+        let seq_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = Instant::now();
+        let (par_fab, par_stats) = query_fabric(Some(threads));
+        let par_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let ph = par_fab.trace_hash();
+        assert_eq!(
+            ph, seq_hash,
+            "parallel query mix hash {ph:#018x} diverged from sequential {seq_hash:#018x}"
+        );
+        assert_eq!(
+            par_stats.events, seq_stats.events,
+            "parallel event count diverged from sequential"
+        );
+        let speedup = if par_ms > 0.0 { seq_ms / par_ms } else { 0.0 };
+        println!(
+            "seq {seq_ms:>8.2}ms  par {par_ms:>8.2}ms  speedup {speedup:>5.2}x  \
+             hash {seq_hash:#018x}"
+        );
+    }
+
+    banner("query mix: engine throughput (sequential)");
+    bench_sim(&format!("query/mix_{HUBS}hubs"), 2, 10, || query_fabric(None).1.into());
+
+    banner(&format!("query mix: engine throughput ({threads} threads)"));
+    bench_sim_t(&format!("query/mix_{HUBS}hubs_par"), threads, 2, 10, move || {
+        let (fab, stats) = query_fabric(Some(threads));
+        assert_eq!(fab.trace_hash(), seq_hash, "parallel query trace diverged mid-bench");
+        stats.into()
+    });
+
+    fpgahub::bench_harness::finish().expect("bench json");
+}

@@ -26,12 +26,14 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
+use super::hub_peer_route;
 use crate::constants;
 use crate::net::p4::{P4Error, P4Switch, SwitchAggregator};
 use crate::nvme::queue::NvmeOp;
+use crate::query::{CostModel, DataSource, LogicalOp, PlanContext, Planner, QueryDag, SiteChoice};
 use crate::runtime_hub::{
-    CsdSite, Fabric, FabricConfig, GpuSite, HubId, QosSpec, ResourcePolicies, RouteDesc, Site,
-    SitesConfig, SwitchSite, TenantId, TransferDesc,
+    CsdSite, Fabric, FabricConfig, GpuSite, HubId, QosSpec, ReconfigConfig, ResourcePolicies,
+    RouteDesc, SitesConfig, SwitchSite, TenantId, TransferDesc,
 };
 use crate::sim::time::{ns_f, Ps, US};
 use crate::sim::Sim;
@@ -65,6 +67,19 @@ impl FilterPlacement {
             FilterPlacement::Hub => "filter-at-hub",
             FilterPlacement::ShipAll => "ship-all",
         }
+    }
+}
+
+/// Map a planner placement onto this workload's filter arm. With the
+/// data inside a drive, ship-all means "ship raw, filter nowhere" — the
+/// planner never *chooses* that (it is strictly dominated); pins express
+/// it for the baseline arm of the comparison.
+pub fn filter_placement_of(choice: SiteChoice) -> FilterPlacement {
+    match choice {
+        SiteChoice::Csd(_) => FilterPlacement::Csd,
+        SiteChoice::Hub(_) => FilterPlacement::Hub,
+        SiteChoice::ShipAll(_) => FilterPlacement::ShipAll,
+        c => panic!("no filter arm for {}", c.describe()),
     }
 }
 
@@ -106,7 +121,7 @@ pub fn filter_route(
             TransferDesc::with_label(label).qos(qos).delay(landing_ps()),
         ),
     };
-    RouteDesc::new().hop(Site::Hub(hub), cmd).hop(csd.site, drive).hop(Site::Hub(hub), back)
+    hub_peer_route(hub, csd.site, cmd, drive, back)
 }
 
 /// GEMM time on the hub's own DSP array: the stay-home arm of the knee.
@@ -130,17 +145,17 @@ pub fn offload_route(
     out_bytes: u64,
     kernel: Ps,
 ) -> RouteDesc {
-    RouteDesc::new()
-        .hop(Site::Hub(hub), TransferDesc::with_label(label).qos(qos).delay(landing_ps()))
-        .hop(
-            gpu.site,
-            TransferDesc::with_label(label)
-                .qos(qos)
-                .xfer(gpu.ingress, in_bytes)
-                .on_core(gpu.kernel_queue, kernel)
-                .xfer(gpu.egress, out_bytes),
-        )
-        .hop(Site::Hub(hub), TransferDesc::with_label(label).qos(qos).delay(landing_ps()))
+    hub_peer_route(
+        hub,
+        gpu.site,
+        TransferDesc::with_label(label).qos(qos).delay(landing_ps()),
+        TransferDesc::with_label(label)
+            .qos(qos)
+            .xfer(gpu.ingress, in_bytes)
+            .on_core(gpu.kernel_queue, kernel)
+            .xfer(gpu.egress, out_bytes),
+        TransferDesc::with_label(label).qos(qos).delay(landing_ps()),
+    )
 }
 
 /// In-network allreduce on a switch peer site. Timing rides the fabric
@@ -199,24 +214,18 @@ impl SwitchReduce {
         for (w, chunk) in chunks.iter().enumerate() {
             let hub = HubId((w % hubs) as u32);
             let label = base_label + w as u64;
-            let route = RouteDesc::new()
-                .hop(
-                    Site::Hub(hub),
-                    TransferDesc::with_label(label).qos(self.qos).delay(skews[w]),
-                )
-                .hop(
-                    self.site.site,
-                    TransferDesc::with_label(label)
-                        .qos(self.qos)
-                        .xfer(self.site.ingress, bytes)
-                        .delay(self.site.pipeline)
-                        .barrier(bar)
-                        .xfer(self.site.egress, bytes),
-                )
-                .hop(
-                    Site::Hub(hub),
-                    TransferDesc::with_label(label).qos(self.qos).delay(landing_ps()),
-                );
+            let route = hub_peer_route(
+                hub,
+                self.site.site,
+                TransferDesc::with_label(label).qos(self.qos).delay(skews[w]),
+                TransferDesc::with_label(label)
+                    .qos(self.qos)
+                    .xfer(self.site.ingress, bytes)
+                    .delay(self.site.pipeline)
+                    .barrier(bar)
+                    .xfer(self.site.egress, bytes),
+                TransferDesc::with_label(label).qos(self.qos).delay(landing_ps()),
+            );
             let (agg, hold, chunk) = (self.agg.clone(), holder.clone(), chunk.clone());
             let w = w as u32;
             fab.submit_route(t0, route, move |_s: &mut Sim, t: Ps| {
@@ -306,11 +315,40 @@ pub fn build_hetero_mix(cfg: &HeteroMixConfig) -> (Fabric, Rc<RefCell<HeteroMixO
     let sites = fab.add_sites(&cfg.sites, cfg.seed);
     let out = Rc::new(RefCell::new(HeteroMixOutcome::default()));
 
+    // one planner for the whole mix, costed from this platform's rates;
+    // every job's legacy placement rides through a pinned plan so the
+    // lowering (and its byte accounting) is the query plane's
+    let planner = Planner::new(
+        CostModel::from_platform(
+            &FabricConfig {
+                hubs: cfg.hubs,
+                gbps: 100.0,
+                hop_ns: 500.0,
+                policies: ResourcePolicies::default(),
+            },
+            &cfg.sites,
+            &ReconfigConfig::default(),
+        ),
+        cfg.hubs,
+    );
+
     let qos_f = QosSpec::bulk(TenantId(1));
+    let mut fdag = QueryDag::new();
+    let fscan = fdag.scan(cfg.filter_bytes.div_ceil(4096));
+    let fnode = fdag.node(LogicalOp::Filter, &[fscan], cfg.selectivity_pct);
     for i in 0..cfg.filters {
-        let csd = &sites.csds[i % sites.csds.len()];
+        let drive = (i % sites.csds.len()) as u32;
+        let csd = &sites.csds[drive as usize];
         let hub = HubId((i % cfg.hubs) as u32);
-        let placement = FilterPlacement::ALL[i % 3];
+        let pin = match FilterPlacement::ALL[i % 3] {
+            FilterPlacement::Csd => SiteChoice::Csd(drive),
+            FilterPlacement::Hub => SiteChoice::Hub(hub),
+            FilterPlacement::ShipAll => SiteChoice::ShipAll(hub),
+        };
+        let ctx =
+            PlanContext { origin: hub, owner: hub, qos: qos_f, data: DataSource::Csd(drive) };
+        let plan = planner.plan_pinned(&fdag, &ctx, &[(fnode, pin)]);
+        let placement = filter_placement_of(plan.choice(fnode));
         let selected = cfg.filter_bytes * cfg.selectivity_pct / 100;
         let route = filter_route(
             csd,
@@ -332,8 +370,20 @@ pub fn build_hetero_mix(cfg: &HeteroMixConfig) -> (Fabric, Rc<RefCell<HeteroMixO
 
     let qos_g = QosSpec::latency_sensitive(TenantId(2));
     let (m, n, k) = cfg.gemm;
-    let in_bytes = 4 * (m * k + k * n);
-    let out_bytes = 4 * m * n;
+    // operand/result bytes come from the gemm node's plan step
+    // (4·(m·k + k·n) in, 4·m·n out — the same integers the hand-wired
+    // mix used)
+    let mut gdag = QueryDag::new();
+    let gnode = gdag.node(LogicalOp::Gemm { m, n, k }, &[], 100);
+    let gctx = PlanContext {
+        origin: HubId(0),
+        owner: HubId(0),
+        qos: qos_g,
+        data: DataSource::HubNvme,
+    };
+    let gplan = planner.plan_pinned(&gdag, &gctx, &[(gnode, SiteChoice::Gpu(0))]);
+    let in_bytes = gplan.step(gnode).bytes_in;
+    let out_bytes = gplan.step(gnode).bytes_out;
     for i in 0..cfg.offloads {
         let gpu = &sites.gpus[i % sites.gpus.len()];
         let hub = HubId((i % cfg.hubs) as u32);

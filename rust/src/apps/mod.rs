@@ -1,6 +1,12 @@
 //! Applications built *on* the hub's public API — the workloads §4
 //! evaluates, plus the multi-tenant scenario that exercises cross-workload
 //! contention on the shared hub resources.
+//!
+//! The two route emitters below ([`owner_shard_route`],
+//! [`hub_peer_route`]) are the *only* route shapes the apps use — they
+//! are also exactly what the query planner's lowering emits, which is
+//! how planner-lowered plans reproduce the hand-wired apps'
+//! `completion_trace()` bit-for-bit (pinned by `tests/query_plan.rs`).
 
 pub mod allreduce;
 pub mod block_storage;
@@ -13,8 +19,8 @@ pub mod storage_fetch;
 pub use allreduce::{FpgaSwitchAllreduce, HierConfig, HierarchicalAllreduce};
 pub use block_storage::HubMiddleTier;
 pub use hetero::{
-    build_hetero_mix, filter_route, hub_gemm_ps, mix_chunk, offload_route, FilterPlacement,
-    HeteroMixConfig, HeteroMixOutcome, SwitchReduce, FILTER_CMD_BYTES,
+    build_hetero_mix, filter_placement_of, filter_route, hub_gemm_ps, mix_chunk, offload_route,
+    FilterPlacement, HeteroMixConfig, HeteroMixOutcome, SwitchReduce, FILTER_CMD_BYTES,
 };
 pub use llm_step::{LlmStepConfig, LlmStepReport};
 pub use multi_tenant::{
@@ -26,3 +32,50 @@ pub use preprocess::{
     PushdownReport, TENANT_PIPELINE, TENANT_THRASH,
 };
 pub use storage_fetch::{run_fetch_demo, run_sharded_fetch, ShardedFetchConfig, ShardedFetchReport};
+
+use crate::runtime_hub::{Fabric, HubId, QosSpec, RouteDesc, Site, TransferDesc};
+
+/// The owner-shard route shape shared by every sharded workload (and
+/// emitted by the query planner's lowering): execute `work` on the hub
+/// that owns the shard. A local request is the single work hop; a
+/// remote one wraps it in a command capsule out and a reply back over
+/// the interconnect, with an optional origin-side tail (e.g. ship-all's
+/// filter-at-origin stage).
+#[allow(clippy::too_many_arguments)]
+pub fn owner_shard_route(
+    fab: &Fabric,
+    label: u64,
+    qos: QosSpec,
+    origin: HubId,
+    owner: HubId,
+    work: TransferDesc,
+    cmd_bytes: u64,
+    reply_bytes: u64,
+    origin_tail: Option<TransferDesc>,
+) -> RouteDesc {
+    if origin == owner {
+        debug_assert!(origin_tail.is_none(), "a local request has no origin tail");
+        return RouteDesc::new().hop(Site::Hub(owner), work);
+    }
+    let mut route = RouteDesc::new()
+        .hop(Site::Net, fab.hop_desc(label, qos, origin, owner, cmd_bytes))
+        .hop(Site::Hub(owner), work)
+        .hop(Site::Net, fab.hop_desc(label, qos, owner, origin, reply_bytes));
+    if let Some(tail) = origin_tail {
+        route = route.hop(Site::Hub(origin), tail);
+    }
+    route
+}
+
+/// The hub↔peer route shape shared by every peer-site workload (and
+/// emitted by the query planner's lowering): a command stage on the
+/// commanding hub, the peer-side leg, and the hub-side landing.
+pub fn hub_peer_route(
+    hub: HubId,
+    peer: Site,
+    cmd: TransferDesc,
+    leg: TransferDesc,
+    back: TransferDesc,
+) -> RouteDesc {
+    RouteDesc::new().hop(Site::Hub(hub), cmd).hop(peer, leg).hop(Site::Hub(hub), back)
+}

@@ -30,9 +30,10 @@ use crate::constants;
 use crate::metrics::{Hist, Quantiles};
 use crate::net::packet::HEADER_BYTES;
 use crate::nvme::ssd::SsdArray;
+use crate::query::{CostModel, DataSource, LogicalOp, PlanContext, Planner, QueryDag, SiteChoice};
 use crate::runtime_hub::{
     Fabric, FabricConfig, HubId, HubRuntime, OperatorKind, OperatorRates, QosSpec,
-    ReconfigConfig, ReconfigPolicy, ResourcePolicies, RouteDesc, RunStats, Site, TenantId,
+    ReconfigConfig, ReconfigPolicy, ResourcePolicies, RunStats, SitesConfig, TenantId,
     TransferDesc,
 };
 use crate::sim::time::{to_us, Ps, US};
@@ -171,23 +172,40 @@ fn build_runtime(cfg: &PreprocessConfig) -> HubRuntime {
 /// Schedule the ETL pipeline: job `i` scans `blocks_4k` blocks over the
 /// NIC-initiated fetch path, filters them (dropping half), hash-partitions
 /// the survivors, and ships the selected quarter out the egress port.
+///
+/// The pipeline is a logical DAG — scan → filter (keep half) →
+/// partition (keep half) — lowered by the query planner pinned to its
+/// legacy placement: both region operators fuse onto hub 0, and
+/// [`crate::query::PhysicalPlan::chain_hub_stages`] emits the exact
+/// `Stage::Preproc` chain the hand-wired version carried.
 fn schedule_pipeline(rt: &mut HubRuntime, cfg: &PreprocessConfig) -> Rc<RefCell<Hist>> {
     let mut rng = Rng::new(cfg.seed ^ 0x9E7);
     let arr = rt.add_array(SsdArray::new(cfg.num_ssds, &mut rng));
     let mut path = register_nic_fetch_path(rt, arr, cfg.num_ssds);
     path.qos = QosSpec::latency_sensitive(TENANT_PIPELINE);
     let egress = rt.add_link("etl-egress", constants::ETH_GBPS, 0);
-    let bytes = cfg.blocks_4k as u64 * 4096;
+
+    let mut dag = QueryDag::new();
+    let s = dag.scan(cfg.blocks_4k as u64);
+    let f = dag.node(LogicalOp::Filter, &[s], 50);
+    let p = dag.node(LogicalOp::Partition, &[f], 50);
+    let hub = HubId(0);
+    let ctx = PlanContext { origin: hub, owner: hub, qos: path.qos, data: DataSource::HubNvme };
+    let planner = Planner::new(CostModel::default(), 1);
+    let plan = planner.plan_pinned(
+        &dag,
+        &ctx,
+        &[(f, SiteChoice::Hub(hub)), (p, SiteChoice::Hub(hub))],
+    );
+    let egress_bytes = plan.step(p).bytes_out + HEADER_BYTES;
 
     let hist = Rc::new(RefCell::new(Hist::new()));
     for i in 0..cfg.jobs {
         let t0 = i * cfg.job_gap;
         let ssd = (i as usize) % cfg.num_ssds;
-        let desc = path
-            .fetch_desc(i, ssd, cfg.blocks_4k)
-            .preproc(OperatorKind::Filter, bytes)
-            .preproc(OperatorKind::HashPartition, bytes / 2)
-            .xfer(egress, bytes / 4 + HEADER_BYTES);
+        let desc = plan
+            .chain_hub_stages(path.fetch_desc(i, ssd, cfg.blocks_4k))
+            .xfer(egress, egress_bytes);
         let h = hist.clone();
         rt.submit(t0, desc, move |_, done| h.borrow_mut().record(to_us(done - t0)));
     }
@@ -350,9 +368,22 @@ fn run_pushdown_mode(cfg: &PushdownConfig, pushdown: bool) -> PushdownMode {
         })
         .collect();
 
-    let bytes = cfg.blocks_4k as u64 * 4096;
-    let full_reply = bytes + HEADER_BYTES;
-    let filtered_reply = bytes / 4 + HEADER_BYTES;
+    // each request is a scan → filter (keep the quarter) query, lowered
+    // by the planner pinned to the mode's legacy placement: filter at
+    // the owner hub (pushdown, and every local request) or ship-all to
+    // the origin hub
+    let planner = Planner::new(
+        CostModel::from_platform(
+            &FabricConfig { hubs: cfg.hubs, ..Default::default() },
+            &SitesConfig::default(),
+            &rc,
+        ),
+        cfg.hubs,
+    );
+    let mut dag = QueryDag::new();
+    let scan = dag.scan(cfg.blocks_4k as u64);
+    let filter = dag.node(LogicalOp::Filter, &[scan], 25);
+
     let total_shards = (cfg.hubs * cfg.ssds_per_hub) as u64;
     let hist = Rc::new(RefCell::new(Hist::new()));
     for i in 0..cfg.requests {
@@ -362,26 +393,40 @@ fn run_pushdown_mode(cfg: &PushdownConfig, pushdown: bool) -> PushdownMode {
         let owner = HubId((shard / cfg.ssds_per_hub as u64) as u32);
         let ssd = (shard % cfg.ssds_per_hub as u64) as usize;
         let qos = paths[owner.index()].qos;
-        let fetch = paths[owner.index()].fetch_desc(i, ssd, cfg.blocks_4k);
-        let route = if origin == owner {
-            // local shard: scan + filter on the one hub, both modes alike
-            RouteDesc::new().hop(Site::Hub(owner), fetch.preproc(OperatorKind::Filter, bytes))
-        } else if pushdown {
-            // filter where the data lives; the wire carries the quarter
-            RouteDesc::new()
-                .hop(Site::Net, fab.hop_desc(i, qos, origin, owner, FETCH_CMD_BYTES))
-                .hop(Site::Hub(owner), fetch.preproc(OperatorKind::Filter, bytes))
-                .hop(Site::Net, fab.hop_desc(i, qos, owner, origin, filtered_reply))
+        let ctx = PlanContext { origin, owner, qos, data: DataSource::HubNvme };
+        let pin = if origin == owner || pushdown {
+            SiteChoice::Hub(owner)
         } else {
+            SiteChoice::ShipAll(origin)
+        };
+        let plan = planner.plan_pinned(&dag, &ctx, &[(filter, pin)]);
+        let fetch = paths[owner.index()].fetch_desc(i, ssd, cfg.blocks_4k);
+        let route = match plan.choice(filter) {
+            // filter where the data lives; the wire carries the quarter
+            SiteChoice::Hub(_) => crate::apps::owner_shard_route(
+                &fab,
+                i,
+                qos,
+                origin,
+                owner,
+                plan.chain_hub_stages(fetch),
+                FETCH_CMD_BYTES,
+                plan.step(filter).bytes_out + HEADER_BYTES,
+                None,
+            ),
             // ship the whole block, filter at the origin hub
-            RouteDesc::new()
-                .hop(Site::Net, fab.hop_desc(i, qos, origin, owner, FETCH_CMD_BYTES))
-                .hop(Site::Hub(owner), fetch)
-                .hop(Site::Net, fab.hop_desc(i, qos, owner, origin, full_reply))
-                .hop(
-                    Site::Hub(origin),
-                    TransferDesc::with_label(i).qos(qos).preproc(OperatorKind::Filter, bytes),
-                )
+            SiteChoice::ShipAll(_) => crate::apps::owner_shard_route(
+                &fab,
+                i,
+                qos,
+                origin,
+                owner,
+                fetch,
+                FETCH_CMD_BYTES,
+                plan.step(filter).bytes_in + HEADER_BYTES,
+                Some(plan.chain_hub_stages(TransferDesc::with_label(i).qos(qos))),
+            ),
+            c => unreachable!("pushdown lowers filters onto hubs, got {}", c.describe()),
         };
         let h = hist.clone();
         fab.submit_route(t0, route, move |_, done| h.borrow_mut().record(to_us(done - t0)));

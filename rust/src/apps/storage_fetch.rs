@@ -20,9 +20,9 @@ use crate::metrics::Hist;
 use crate::net::packet::HEADER_BYTES;
 use crate::nvme::queue::NvmeOp;
 use crate::nvme::ssd::SsdArray;
+use crate::query::{CostModel, DataSource, PlanContext, Planner, QueryDag, SiteChoice};
 use crate::runtime_hub::{
-    ArrayId, Fabric, HubId, HubRuntime, LinkId, NvmeId, QosSpec, RouteDesc, RunStats, Site,
-    TenantId, TransferDesc,
+    ArrayId, Fabric, HubId, HubRuntime, LinkId, NvmeId, QosSpec, RunStats, TenantId, TransferDesc,
 };
 use crate::sim::time::{cycles, ns_f, to_us, us_f, Ps, US};
 use crate::util::Rng;
@@ -238,6 +238,11 @@ impl ShardedFetchReport {
 /// `i mod (H·S)`; a remote shard costs a command hop to the owner, the
 /// NIC-initiated fetch there, and the reply hop back — every leg a
 /// contended resource.
+///
+/// Each request is a one-operator query (a bare scan) lowered by the
+/// query planner pinned to its legacy placement — the route comes out
+/// of [`owner_shard_route`], the shared lowering emitter, so the trace
+/// is bit-identical to the historical hand-wired construction.
 pub fn run_sharded_fetch(cfg: &ShardedFetchConfig) -> ShardedFetchReport {
     assert!(cfg.hubs >= 1 && cfg.ssds_per_hub >= 1);
     let mut rng = Rng::new(cfg.seed);
@@ -253,8 +258,11 @@ pub fn run_sharded_fetch(cfg: &ShardedFetchConfig) -> ShardedFetchReport {
         })
         .collect();
 
+    let planner = Planner::new(CostModel::default(), cfg.hubs);
+    let mut dag = QueryDag::new();
+    let scan = dag.scan(cfg.blocks_4k as u64);
+
     let total_shards = (cfg.hubs * cfg.ssds_per_hub) as u64;
-    let reply_bytes = cfg.blocks_4k as u64 * 4096 + HEADER_BYTES;
     let local = Rc::new(RefCell::new(Hist::new()));
     let remote = Rc::new(RefCell::new(Hist::new()));
     for i in 0..cfg.requests {
@@ -264,16 +272,23 @@ pub fn run_sharded_fetch(cfg: &ShardedFetchConfig) -> ShardedFetchReport {
         let owner = HubId((shard / cfg.ssds_per_hub as u64) as u32);
         let ssd = (shard % cfg.ssds_per_hub as u64) as usize;
         let qos = paths[owner.index()].qos;
+        let ctx =
+            PlanContext { origin, owner, qos, data: DataSource::HubNvme };
+        let plan = planner.plan_pinned(&dag, &ctx, &[(scan, SiteChoice::Hub(owner))]);
+        let reply_bytes = plan.step(scan).bytes_out + HEADER_BYTES;
         let fetch = paths[owner.index()].fetch_desc(i, ssd, cfg.blocks_4k);
-        let (route, hist) = if origin == owner {
-            (RouteDesc::new().hop(Site::Hub(owner), fetch), local.clone())
-        } else {
-            let route = RouteDesc::new()
-                .hop(Site::Net, fab.hop_desc(i, qos, origin, owner, FETCH_CMD_BYTES))
-                .hop(Site::Hub(owner), fetch)
-                .hop(Site::Net, fab.hop_desc(i, qos, owner, origin, reply_bytes));
-            (route, remote.clone())
-        };
+        let route = crate::apps::owner_shard_route(
+            &fab,
+            i,
+            qos,
+            origin,
+            owner,
+            fetch,
+            FETCH_CMD_BYTES,
+            reply_bytes,
+            None,
+        );
+        let hist = if origin == owner { local.clone() } else { remote.clone() };
         fab.submit_route(t0, route, move |_, done| {
             hist.borrow_mut().record(to_us(done - t0))
         });

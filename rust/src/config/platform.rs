@@ -212,6 +212,15 @@ impl PlatformConfig {
             csd_link_gbps: doc.f64_or("sites", "csd_link_gbps", ds.csd_link_gbps),
             switches: site_count(doc, "switches", ds.switches)?,
             switch_port_gbps: doc.f64_or("sites", "switch_port_gbps", ds.switch_port_gbps),
+            cpus: site_count(doc, "cpus", ds.cpus)?,
+            cpu_cores: match site_count(doc, "cpu_cores", ds.cpu_cores)? {
+                0 => {
+                    eprintln!("warning: [sites] cpu_cores = 0 clamped to 1 (a CPU needs a core)");
+                    1
+                }
+                n => n,
+            },
+            cpu_link_gbps: doc.f64_or("sites", "cpu_link_gbps", ds.cpu_link_gbps),
         };
         Ok(PlatformConfig {
             seed: doc.i64_or("", "seed", d.seed as i64) as u64,
@@ -247,6 +256,8 @@ pub struct ExperimentConfig {
     /// training steps for the e2e example
     pub train_steps: usize,
     pub csv: bool,
+    /// print per-operator planner cost breakdowns (`fpgahub query --explain`)
+    pub explain: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -256,6 +267,7 @@ impl Default for ExperimentConfig {
             samples: 5_000,
             train_steps: 200,
             csv: true,
+            explain: false,
         }
     }
 }
@@ -267,6 +279,7 @@ impl ExperimentConfig {
             samples: doc.i64_or("experiment", "samples", 5_000) as usize,
             train_steps: doc.i64_or("experiment", "train_steps", 200) as usize,
             csv: doc.bool_or("experiment", "csv", true),
+            explain: false,
         })
     }
 
@@ -411,6 +424,7 @@ mod tests {
         assert_eq!(p.sites.gpus, 0, "peer sites are opt-in");
         assert_eq!(p.sites.csds, 0);
         assert_eq!(p.sites.switches, 0);
+        assert_eq!(p.sites.cpus, 0);
     }
 
     #[test]
@@ -418,7 +432,7 @@ mod tests {
         let doc = TomlDoc::parse(
             "[sites]\ngpus = 2\ngpu_pcie_gbps = 128.0\ncsds = 1\ncsd_ssds = 8\n\
              csd_nand_gbps = 192.0\ncsd_link_gbps = 64.0\nswitches = 1\n\
-             switch_port_gbps = 400.0\n",
+             switch_port_gbps = 400.0\ncpus = 2\ncpu_cores = 16\ncpu_link_gbps = 64.0\n",
         )
         .unwrap();
         let p = PlatformConfig::from_doc(&doc).unwrap();
@@ -430,12 +444,20 @@ mod tests {
         assert_eq!(p.sites.csd_link_gbps, 64.0);
         assert_eq!(p.sites.switches, 1);
         assert_eq!(p.sites.switch_port_gbps, 400.0);
+        assert_eq!(p.sites.cpus, 2);
+        assert_eq!(p.sites.cpu_cores, 16);
+        assert_eq!(p.sites.cpu_link_gbps, 64.0);
     }
 
     #[test]
     fn negative_site_counts_are_rejected() {
         // the pre-ISSUE-9 parser clamped these silently
-        for toml in ["[sites]\ngpus = -3\n", "[sites]\ncsds = -1\n", "[sites]\nswitches = -2\n"] {
+        for toml in [
+            "[sites]\ngpus = -3\n",
+            "[sites]\ncsds = -1\n",
+            "[sites]\nswitches = -2\n",
+            "[sites]\ncpus = -1\n",
+        ] {
             let doc = TomlDoc::parse(toml).unwrap();
             let err = PlatformConfig::from_doc(&doc).expect_err(toml);
             assert!(err.to_string().contains("negative"), "{err}");

@@ -10,6 +10,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod hetero;
 pub mod qos;
+pub mod query;
 pub mod reconfig;
 pub mod scale;
 pub mod table1;
@@ -21,7 +22,7 @@ use crate::metrics::{write_csv, Table};
 /// All experiment names (CLI `fpgahub expt <name>`).
 pub const ALL: &[&str] = &[
     "fig2", "fig7a", "fig7b", "fig8", "fig9", "fig10a", "fig10b", "table1", "qos", "scale",
-    "reconfig", "hetero", "faults",
+    "reconfig", "hetero", "faults", "query",
 ];
 
 /// Dispatch by name.
@@ -40,6 +41,7 @@ pub fn run(name: &str, cfg: &ExperimentConfig) -> anyhow::Result<Vec<Table>> {
         "reconfig" => reconfig::run(cfg),
         "hetero" => hetero::run(cfg),
         "faults" => faults::run(cfg),
+        "query" => query::run(cfg),
         other => anyhow::bail!("unknown experiment '{other}' (have {ALL:?})"),
     };
     emit(&tables, cfg)?;

@@ -1,0 +1,582 @@
+//! Dataflow query plane experiment (`fpgahub query`, ISSUE 10): sweep
+//! the knobs the cost model reads and show the planner crossing each
+//! placement boundary exactly where the *measured* winner flips.
+//!
+//! 1. **Filter placement vs NAND rate** — pushdown onto the CSD wins
+//!    while the drive's inside outruns shipping raw over its host link.
+//! 2. **Pushdown vs ship-all** — with the origin hub's filter bitstream
+//!    warm and the owner's cold, small jobs ship raw bytes to dodge the
+//!    400 µs swap; big jobs eat the swap because the extra wire time
+//!    passes it.
+//! 3. **GEMM knee** — small GEMMs stay on the hub's DSP array, big ones
+//!    offload to the GPU past the PCIe round-trip.
+//! 4. **Aggregate scheme** — small reduction buffers ride the switch's
+//!    match-action pipeline, big ones the hub ring (the switch pays
+//!    per-worker serialization on one shared port).
+//! 5. **Compress placement** — only a crippled region engine loses to
+//!    the CPU peer's software LZ4.
+//! 6. **Prefetch** — the planner knows the next DAG operator, so a swap
+//!    whose upstream step is longer than the bitstream load is hidden.
+//!
+//! Each row shows the model's per-arm step cost, the planner's pick,
+//! and (where a simulated arm exists) the measured winner. Like
+//! `hetero`, the drain honors `[fabric] parallel`/`threads` and the
+//! tables are bit-identical across engines.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use crate::apps::allreduce::{HierConfig, HierarchicalAllreduce};
+use crate::apps::hetero::{filter_route, offload_route, FilterPlacement};
+use crate::apps::{hub_peer_route, owner_shard_route, SwitchReduce};
+use crate::config::ExperimentConfig;
+use crate::constants;
+use crate::devices::cpu::SwCost;
+use crate::metrics::Table;
+use crate::net::p4::P4Switch;
+use crate::query::{
+    CostModel, DataSource, LogicalOp, PhysicalPlan, PlanContext, Planner, QueryDag, SiteChoice,
+};
+use crate::runtime_hub::{
+    Fabric, FabricConfig, HubId, OperatorKind, OperatorRates, QosSpec, ReconfigConfig, RouteDesc,
+    Site, SitesConfig, TenantId, TransferDesc, CLASS_NORMAL,
+};
+use crate::sim::time::{ns_f, to_us, Ps, MS};
+
+/// Command-capsule bytes of a remote query request (matches the
+/// preprocess app's `FETCH_CMD_BYTES`).
+const CMD_BYTES: u64 = 128;
+
+fn fabric(cfg: &ExperimentConfig, hubs: usize) -> Fabric {
+    Fabric::with_config(FabricConfig { hubs, ..cfg.platform.fabric })
+}
+
+fn drain(fab: &mut Fabric, cfg: &ExperimentConfig) {
+    if cfg.platform.fabric_parallel {
+        fab.run_parallel(cfg.platform.fabric_threads);
+    } else {
+        fab.run();
+    }
+}
+
+fn qos_normal() -> QosSpec {
+    QosSpec::new(TenantId(9), CLASS_NORMAL, 1)
+}
+
+/// Run one route on a fresh fabric and return its completion latency.
+fn measure(fab: &mut Fabric, cfg: &ExperimentConfig, t0: Ps, route: RouteDesc) -> Ps {
+    let done: Rc<Cell<Ps>> = Rc::new(Cell::new(0));
+    let d = done.clone();
+    fab.submit_route(t0, route, move |_, at| d.set(at - t0));
+    drain(fab, cfg);
+    assert!(done.get() > 0, "measured route never completed");
+    done.get()
+}
+
+fn explain_if(cfg: &ExperimentConfig, what: &str, plan: &PhysicalPlan) {
+    if cfg.platform.explain {
+        println!("plan [{what}]:\n{}", plan.explain());
+    }
+}
+
+fn us(ps: Ps) -> String {
+    format!("{:.2}", to_us(ps))
+}
+
+/// Table 1: scan-filter placement (csd ↔ hub) across the drive's
+/// internal NAND rate. 1 MiB queries at 10% selectivity; the CSD's host
+/// link stays at its default 32 Gb/s.
+pub fn run_filter_placement(cfg: &ExperimentConfig) -> Table {
+    const BLOCKS: u64 = 256; // 1 MiB
+    const KEEP: u64 = 10;
+    let bytes = BLOCKS * 4096;
+    let mut t = Table::new(
+        "query: filter placement vs CSD NAND rate (1 MiB, 10% selectivity)",
+        &["nand_gbps", "model_csd_us", "model_hub_us", "plan", "sim_csd_us", "sim_hub_us", "sim_winner"],
+    );
+    let mut dag = QueryDag::new();
+    let s = dag.scan(BLOCKS);
+    let f = dag.node(LogicalOp::Filter, &[s], KEEP);
+    let ctx = PlanContext {
+        origin: HubId(0),
+        owner: HubId(0),
+        qos: qos_normal(),
+        data: DataSource::Csd(0),
+    };
+    for nand in [8.0, 16.0, 24.0, 32.0, 64.0, 96.0] {
+        let planner = Planner::new(CostModel { csd_nand_gbps: nand, ..CostModel::default() }, 1);
+        let plan = planner.clone().plan(&dag, &ctx);
+        let csd_model = planner.plan_pinned(&dag, &ctx, &[(f, SiteChoice::Csd(0))]);
+        let hub_model = planner.plan_pinned(&dag, &ctx, &[(f, SiteChoice::Hub(HubId(0)))]);
+        explain_if(cfg, &format!("filter, nand={nand} Gb/s"), &plan);
+
+        let sim = |placement: FilterPlacement| -> Ps {
+            let mut fab = fabric(cfg, 1);
+            let sites = fab.add_sites(
+                &SitesConfig { csds: 1, csd_nand_gbps: nand, ..SitesConfig::default() },
+                cfg.platform.seed,
+            );
+            let route = filter_route(
+                &sites.csds[0],
+                HubId(0),
+                placement,
+                1,
+                qos_normal(),
+                bytes,
+                bytes * KEEP / 100,
+                constants::FPGA_COMPRESS_GBPS,
+            );
+            measure(&mut fab, cfg, 0, route)
+        };
+        let (sim_csd, sim_hub) = (sim(FilterPlacement::Csd), sim(FilterPlacement::Hub));
+        let sim_winner =
+            if sim_csd < sim_hub { SiteChoice::Csd(0) } else { SiteChoice::Hub(HubId(0)) };
+        t.row(&[
+            format!("{nand}"),
+            us(csd_model.step(f).cost.total()),
+            us(hub_model.step(f).cost.total()),
+            plan.choice(f).describe(),
+            us(sim_csd),
+            us(sim_hub),
+            sim_winner.describe(),
+        ]);
+    }
+    t
+}
+
+/// Table 2: remote filter, origin's bitstream warm, owner's cold —
+/// pushdown (eat the swap at the owner) vs ship-all (raw bytes to the
+/// warm origin) across the job size.
+pub fn run_pushdown_shipall(cfg: &ExperimentConfig) -> Table {
+    const KEEP: u64 = 25;
+    let origin = HubId(0);
+    let owner = HubId(1);
+    let rc = ReconfigConfig::default();
+    let mut t = Table::new(
+        "query: pushdown vs ship-all (origin warm, owner cold, 25% selectivity)",
+        &["blocks", "model_hub_us", "model_ship_us", "plan", "sim_hub_us", "sim_ship_us", "sim_winner"],
+    );
+    for blocks in [256u64, 1024, 2048, 4096] {
+        let mut dag = QueryDag::new();
+        let s = dag.scan(blocks);
+        let f = dag.node(LogicalOp::Filter, &[s], KEEP);
+        let mut planner = Planner::new(
+            CostModel::from_platform(
+                &FabricConfig { hubs: 2, ..cfg.platform.fabric },
+                &SitesConfig::default(),
+                &rc,
+            ),
+            2,
+        );
+        planner.warm(origin, OperatorKind::Filter);
+        let ctx = PlanContext { origin, owner, qos: qos_normal(), data: DataSource::HubNvme };
+        let plan = planner.clone().plan(&dag, &ctx);
+        let hub_model = planner.plan_pinned(&dag, &ctx, &[(f, SiteChoice::Hub(owner))]);
+        let ship_model = planner.plan_pinned(&dag, &ctx, &[(f, SiteChoice::ShipAll(origin))]);
+        explain_if(cfg, &format!("pushdown/ship-all, {blocks} blocks"), &plan);
+
+        let bytes = blocks * 4096;
+        let sim = |ship: bool| -> Ps {
+            let mut fab = fabric(cfg, 2);
+            fab.add_regions(origin, &rc);
+            fab.add_regions(owner, &rc);
+            // warm the origin's filter bitstream ahead of the query
+            let warm = RouteDesc::new().hop(
+                Site::Hub(origin),
+                TransferDesc::with_label(7777)
+                    .qos(qos_normal())
+                    .preproc(OperatorKind::Filter, 1),
+            );
+            fab.submit_route(0, warm, |_, _| {});
+            let work = TransferDesc::with_label(1).qos(qos_normal()).delay(1);
+            let route = if ship {
+                owner_shard_route(
+                    &fab,
+                    1,
+                    qos_normal(),
+                    origin,
+                    owner,
+                    work,
+                    CMD_BYTES,
+                    bytes,
+                    Some(
+                        TransferDesc::with_label(1)
+                            .qos(qos_normal())
+                            .preproc(OperatorKind::Filter, bytes),
+                    ),
+                )
+            } else {
+                owner_shard_route(
+                    &fab,
+                    1,
+                    qos_normal(),
+                    origin,
+                    owner,
+                    work.preproc(OperatorKind::Filter, bytes),
+                    CMD_BYTES,
+                    bytes * KEEP / 100,
+                    None,
+                )
+            };
+            measure(&mut fab, cfg, MS, route)
+        };
+        let (sim_hub, sim_ship) = (sim(false), sim(true));
+        let sim_winner =
+            if sim_ship < sim_hub { SiteChoice::ShipAll(origin) } else { SiteChoice::Hub(owner) };
+        t.row(&[
+            blocks.to_string(),
+            us(hub_model.step(f).cost.total()),
+            us(ship_model.step(f).cost.total()),
+            plan.choice(f).describe(),
+            us(sim_hub),
+            us(sim_ship),
+            sim_winner.describe(),
+        ]);
+    }
+    t
+}
+
+/// Table 3: the GEMM knee — hub DSP array vs GPU offload over PCIe.
+pub fn run_gemm_knee(cfg: &ExperimentConfig) -> Table {
+    let mut t = Table::new(
+        "query: GEMM placement knee (hub DSP vs GPU offload)",
+        &["m", "model_hub_us", "model_gpu_us", "plan", "sim_hub_us", "sim_gpu_us", "sim_winner"],
+    );
+    for m in [256u64, 512, 1024, 2048, 4096] {
+        let mut dag = QueryDag::new();
+        let g = dag.node(LogicalOp::Gemm { m, n: m, k: m }, &[], 100);
+        let planner = Planner::new(CostModel::default(), 1);
+        let ctx = PlanContext {
+            origin: HubId(0),
+            owner: HubId(0),
+            qos: qos_normal(),
+            data: DataSource::HubNvme,
+        };
+        let plan = planner.clone().plan(&dag, &ctx);
+        let hub_model = planner.plan_pinned(&dag, &ctx, &[(g, SiteChoice::Hub(HubId(0)))]);
+        let gpu_model = planner.plan_pinned(&dag, &ctx, &[(g, SiteChoice::Gpu(0))]);
+        explain_if(cfg, &format!("gemm, m={m}"), &plan);
+
+        // measured GPU arm; the hub arm *is* the closed form the
+        // simulator would bill (`hub_gemm_ps`)
+        let mut fab = fabric(cfg, 1);
+        let sites =
+            fab.add_sites(&SitesConfig { gpus: 1, ..SitesConfig::default() }, cfg.platform.seed);
+        let gpu = &sites.gpus[0];
+        let route = offload_route(
+            gpu,
+            HubId(0),
+            m,
+            qos_normal(),
+            4 * 2 * m * m,
+            4 * m * m,
+            gpu.gpu.gemm_time(m, m, m, 1.0, 1.0),
+        );
+        let sim_gpu = measure(&mut fab, cfg, 0, route);
+        let sim_hub = crate::apps::hub_gemm_ps(m, m, m);
+        let sim_winner =
+            if sim_gpu < sim_hub { SiteChoice::Gpu(0) } else { SiteChoice::Hub(HubId(0)) };
+        t.row(&[
+            m.to_string(),
+            us(hub_model.step(g).cost.total()),
+            us(gpu_model.step(g).cost.total()),
+            plan.choice(g).describe(),
+            us(sim_hub),
+            us(sim_gpu),
+            sim_winner.describe(),
+        ]);
+    }
+    t
+}
+
+/// Table 4: aggregate scheme (switch pipeline vs hub ring) across the
+/// reduction buffer size, on an 8-hub fabric with 16 workers. The
+/// simulated arms run at the sweep's endpoints, where the margin is
+/// wide; near the crossing the two schemes' second-order serialization
+/// details are closer than the closed forms.
+pub fn run_reduce_scheme(cfg: &ExperimentConfig) -> Table {
+    const HUBS: usize = 8;
+    const WORKERS: u32 = 16;
+    let lanes_sweep = [64usize, 256, 1024, 4096, 16384];
+    let mut t = Table::new(
+        "query: aggregate scheme vs buffer size (switch vs hub ring, 8 hubs)",
+        &["lanes", "model_switch_us", "model_ring_us", "plan", "sim_winner"],
+    );
+    for (row, &lanes) in lanes_sweep.iter().enumerate() {
+        let mut dag = QueryDag::new();
+        let a = dag.node(LogicalOp::Aggregate { workers: WORKERS, lanes: lanes as u64 }, &[], 100);
+        let planner = Planner::new(CostModel::default(), HUBS);
+        let ctx = PlanContext {
+            origin: HubId(0),
+            owner: HubId(0),
+            qos: qos_normal(),
+            data: DataSource::HubNvme,
+        };
+        let plan = planner.clone().plan(&dag, &ctx);
+        let switch_model = planner.plan_pinned(&dag, &ctx, &[(a, SiteChoice::Switch(0))]);
+        let ring_model = planner.plan_pinned(&dag, &ctx, &[(a, SiteChoice::Hub(HubId(0)))]);
+        explain_if(cfg, &format!("aggregate, lanes={lanes}"), &plan);
+
+        let endpoint = row == 0 || row == lanes_sweep.len() - 1;
+        let sim_winner = if endpoint {
+            // switch arm
+            let mut fab = fabric(cfg, HUBS);
+            let sites = fab
+                .add_sites(&SitesConfig { switches: 1, ..SitesConfig::default() }, cfg.platform.seed);
+            let mut sw = P4Switch::tofino();
+            let reduce =
+                SwitchReduce::new(&mut sw, sites.switches[0], WORKERS, lanes, qos_normal())
+                    .expect("aggregation program fits a Tofino");
+            let chunks: Vec<Vec<i32>> = vec![vec![1; lanes]; WORKERS as usize];
+            let skews = vec![0; WORKERS as usize];
+            let done: Rc<Cell<Ps>> = Rc::new(Cell::new(0));
+            let d = done.clone();
+            reduce.schedule_round(&mut fab, 0, 100, &chunks, &skews, move |at, _| d.set(at));
+            drain(&mut fab, cfg);
+            let switch_t = done.get();
+            assert!(switch_t > 0, "switch round incomplete");
+
+            // ring arm at the same worker population
+            let mut fab = fabric(cfg, HUBS);
+            let app = HierarchicalAllreduce::new(
+                &mut fab,
+                HierConfig {
+                    hubs: HUBS,
+                    workers_per_hub: 2,
+                    chunk_lanes: lanes,
+                    skew_us: 0.0,
+                    seed: cfg.platform.seed,
+                    qos: qos_normal(),
+                },
+            );
+            let chunks: Vec<Vec<f32>> = vec![vec![1.0; lanes]; WORKERS as usize];
+            let done: Rc<Cell<Ps>> = Rc::new(Cell::new(0));
+            let d = done.clone();
+            let handle = app.schedule_round(&mut fab, 0, &chunks, move |_, worst| d.set(worst));
+            drain(&mut fab, cfg);
+            assert_eq!(handle.borrow().completed as usize, WORKERS as usize, "ring incomplete");
+            let ring_t = done.get();
+            let w = if switch_t < ring_t { SiteChoice::Switch(0) } else { SiteChoice::Hub(HubId(0)) };
+            w.describe()
+        } else {
+            "-".to_string()
+        };
+        t.row(&[
+            lanes.to_string(),
+            us(switch_model.step(a).cost.total()),
+            us(ring_model.step(a).cost.total()),
+            plan.choice(a).describe(),
+            sim_winner,
+        ]);
+    }
+    t
+}
+
+/// Table 5: compress placement — the hub's (warm) region engine vs the
+/// CPU peer's software LZ4, across the region engine's rate. Only a
+/// crippled engine (below the CPU's 1.6 Gb/s) loses.
+pub fn run_compress_placement(cfg: &ExperimentConfig) -> Table {
+    const BLOCKS: u64 = 256; // 1 MiB
+    const KEEP: u64 = 50;
+    let bytes = BLOCKS * 4096;
+    let mut t = Table::new(
+        "query: compress placement vs region engine rate (hub vs CPU peer)",
+        &["compress_gbps", "model_hub_us", "model_cpu_us", "plan", "sim_hub_us", "sim_cpu_us", "sim_winner"],
+    );
+    let mut dag = QueryDag::new();
+    let s = dag.scan(BLOCKS);
+    let c = dag.node(LogicalOp::Compress, &[s], KEEP);
+    let ctx = PlanContext {
+        origin: HubId(0),
+        owner: HubId(0),
+        qos: qos_normal(),
+        data: DataSource::HubNvme,
+    };
+    for rate in [0.8, 1.6, 6.4, 25.0] {
+        let rc = ReconfigConfig {
+            rates: OperatorRates { compress_gbps: rate, ..OperatorRates::default() },
+            ..ReconfigConfig::default()
+        };
+        let sites = SitesConfig { cpus: 1, ..SitesConfig::default() };
+        let mut planner = Planner::new(
+            CostModel::from_platform(&FabricConfig { hubs: 1, ..cfg.platform.fabric }, &sites, &rc),
+            1,
+        );
+        planner.warm(HubId(0), OperatorKind::Compress);
+        let plan = planner.clone().plan(&dag, &ctx);
+        let hub_model = planner.plan_pinned(&dag, &ctx, &[(c, SiteChoice::Hub(HubId(0)))]);
+        let cpu_model = planner.plan_pinned(&dag, &ctx, &[(c, SiteChoice::Cpu(0))]);
+        explain_if(cfg, &format!("compress, engine {rate} Gb/s"), &plan);
+
+        // hub arm: warm the compress bitstream, then stream through it
+        let mut fab = fabric(cfg, 1);
+        fab.add_regions(HubId(0), &rc);
+        let warm = RouteDesc::new().hop(
+            Site::Hub(HubId(0)),
+            TransferDesc::with_label(7777).qos(qos_normal()).preproc(OperatorKind::Compress, 1),
+        );
+        fab.submit_route(0, warm, |_, _| {});
+        let route = RouteDesc::new().hop(
+            Site::Hub(HubId(0)),
+            TransferDesc::with_label(1).qos(qos_normal()).preproc(OperatorKind::Compress, bytes),
+        );
+        let sim_hub = measure(&mut fab, cfg, MS, route);
+
+        // CPU arm: ship, software LZ4 on the core pool, ship back
+        let mut fab = fabric(cfg, 1);
+        let peers = fab.add_sites(&sites, cfg.platform.seed);
+        let cpu = &peers.cpus[0];
+        let route = hub_peer_route(
+            HubId(0),
+            cpu.site,
+            TransferDesc::with_label(1).qos(qos_normal()).delay(ns_f(constants::PCIE_DMA_SETUP_NS)),
+            TransferDesc::with_label(1)
+                .qos(qos_normal())
+                .xfer(cpu.ingress, bytes)
+                .on_core(cpu.pool, SwCost::lz4(bytes))
+                .xfer(cpu.egress, bytes * KEEP / 100),
+            TransferDesc::with_label(1).qos(qos_normal()).delay(ns_f(constants::PCIE_DMA_SETUP_NS)),
+        );
+        let sim_cpu = measure(&mut fab, cfg, 0, route);
+        let sim_winner =
+            if sim_cpu < sim_hub { SiteChoice::Cpu(0) } else { SiteChoice::Hub(HubId(0)) };
+        t.row(&[
+            format!("{rate}"),
+            us(hub_model.step(c).cost.total()),
+            us(cpu_model.step(c).cost.total()),
+            plan.choice(c).describe(),
+            us(sim_hub),
+            us(sim_cpu),
+            sim_winner.describe(),
+        ]);
+    }
+    t
+}
+
+/// Table 6: bitstream prefetch — the planner knows the next DAG
+/// operator, so a cold swap hides behind an upstream step that outlasts
+/// the bitstream load. Model-side demonstration (the pinned legacy apps
+/// pay swaps inline, so prefetch stays off their path).
+pub fn run_prefetch(cfg: &ExperimentConfig) -> Table {
+    const KEEP: u64 = 25;
+    let mut t = Table::new(
+        "query: bitstream prefetch (swap hidden behind the upstream scan)",
+        &["blocks", "inline_swap_us", "with_prefetch_us", "swap_hidden"],
+    );
+    let ctx = PlanContext {
+        origin: HubId(0),
+        owner: HubId(0),
+        qos: qos_normal(),
+        data: DataSource::HubNvme,
+    };
+    for blocks in [16u64, 4096] {
+        let mut dag = QueryDag::new();
+        let s = dag.scan(blocks);
+        let f = dag.node(LogicalOp::Filter, &[s], KEEP);
+        let inline = Planner::new(CostModel::default(), 1).plan(&dag, &ctx);
+        let pref =
+            Planner::new(CostModel { prefetch: true, ..CostModel::default() }, 1).plan(&dag, &ctx);
+        explain_if(cfg, &format!("prefetch, {blocks} blocks"), &pref);
+        t.row(&[
+            blocks.to_string(),
+            us(inline.step(f).cost.total()),
+            us(pref.step(f).cost.total()),
+            (if pref.step(f).prefetched { "yes" } else { "no" }).to_string(),
+        ]);
+    }
+    t
+}
+
+pub fn run(cfg: &ExperimentConfig) -> Vec<Table> {
+    vec![
+        run_filter_placement(cfg),
+        run_pushdown_shipall(cfg),
+        run_gemm_knee(cfg),
+        run_reduce_scheme(cfg),
+        run_compress_placement(cfg),
+        run_prefetch(cfg),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flips(winners: &[&str]) -> usize {
+        winners.windows(2).filter(|w| w[0] != w[1]).count()
+    }
+
+    #[test]
+    fn filter_placement_flips_where_the_model_says() {
+        let t = run_filter_placement(&ExperimentConfig::quick());
+        let plans: Vec<&str> = t.rows.iter().map(|r| r[3].as_str()).collect();
+        let sims: Vec<&str> = t.rows.iter().map(|r| r[6].as_str()).collect();
+        assert_eq!(plans, sims, "planner and measured winner disagree");
+        assert_eq!(plans.first(), Some(&"hub0"), "slow NAND ships raw");
+        assert_eq!(plans.last(), Some(&"csd0"), "fast NAND pushes down");
+        assert_eq!(flips(&plans), 1, "exactly one crossing: {plans:?}");
+    }
+
+    #[test]
+    fn pushdown_shipall_crossing_matches_the_swap_economics() {
+        let t = run_pushdown_shipall(&ExperimentConfig::quick());
+        let plans: Vec<&str> = t.rows.iter().map(|r| r[3].as_str()).collect();
+        let sims: Vec<&str> = t.rows.iter().map(|r| r[6].as_str()).collect();
+        assert_eq!(plans, sims, "planner and measured winner disagree");
+        assert_eq!(plans.first(), Some(&"ship-all→hub0"), "small jobs dodge the swap");
+        assert_eq!(plans.last(), Some(&"hub1"), "big jobs eat the swap");
+        assert_eq!(flips(&plans), 1, "exactly one crossing: {plans:?}");
+    }
+
+    #[test]
+    fn gemm_knee_matches_the_measured_crossover() {
+        let t = run_gemm_knee(&ExperimentConfig::quick());
+        let plans: Vec<&str> = t.rows.iter().map(|r| r[3].as_str()).collect();
+        let sims: Vec<&str> = t.rows.iter().map(|r| r[6].as_str()).collect();
+        assert_eq!(plans, sims, "planner and measured winner disagree");
+        assert_eq!(plans.first(), Some(&"hub0"), "small GEMMs stay home");
+        assert_eq!(plans.last(), Some(&"gpu0"), "large GEMMs offload");
+        assert_eq!(flips(&plans), 1, "exactly one knee: {plans:?}");
+    }
+
+    #[test]
+    fn reduce_scheme_flips_once_and_agrees_at_the_endpoints() {
+        let t = run_reduce_scheme(&ExperimentConfig::quick());
+        let plans: Vec<&str> = t.rows.iter().map(|r| r[3].as_str()).collect();
+        assert_eq!(plans.first(), Some(&"switch0"), "small buffers ride the switch");
+        assert_eq!(plans.last(), Some(&"hub0"), "big buffers ride the ring");
+        assert_eq!(flips(&plans), 1, "exactly one crossing: {plans:?}");
+        assert_eq!(t.rows.first().unwrap()[4], "switch0");
+        assert_eq!(t.rows.last().unwrap()[4], "hub0");
+    }
+
+    #[test]
+    fn compress_placement_only_loses_to_cpu_when_crippled() {
+        let t = run_compress_placement(&ExperimentConfig::quick());
+        let plans: Vec<&str> = t.rows.iter().map(|r| r[3].as_str()).collect();
+        let sims: Vec<&str> = t.rows.iter().map(|r| r[6].as_str()).collect();
+        assert_eq!(plans, sims, "planner and measured winner disagree");
+        assert_eq!(plans, vec!["cpu0", "hub0", "hub0", "hub0"]);
+    }
+
+    #[test]
+    fn prefetch_hides_the_swap_only_behind_a_long_scan() {
+        let t = run_prefetch(&ExperimentConfig::quick());
+        assert_eq!(t.rows[0][3], "no", "a tiny scan cannot hide the swap");
+        assert_eq!(t.rows[1][3], "yes", "a long scan hides it");
+        let inline: f64 = t.rows[1][1].parse().unwrap();
+        let pref: f64 = t.rows[1][2].parse().unwrap();
+        assert!(pref < inline, "hidden swap must be cheaper: {pref} vs {inline}");
+    }
+
+    #[test]
+    fn parallel_engine_reproduces_the_sequential_tables() {
+        let cfg = ExperimentConfig::quick();
+        let mut pcfg = cfg.clone();
+        pcfg.platform.fabric_parallel = true;
+        pcfg.platform.fabric_threads = 2;
+        for (s, p) in run(&cfg).iter().zip(run(&pcfg).iter()) {
+            assert_eq!(s.rows, p.rows, "{} diverged across engines", s.title);
+        }
+    }
+}

@@ -15,7 +15,9 @@
 //!   the [`runtime_hub::HubRuntime`] that executes descriptor-driven
 //!   transfers as events on [`sim::Sim`], so concurrent workloads contend
 //!   for the hub's shared links, DMA engines, and NVMe queues.
-//! * **Evaluation** — baselines ([`baselines`]), applications ([`apps`]),
+//! * **Evaluation** — the dataflow query plane ([`query`]: logical
+//!   operator DAGs lowered by a cost-based planner), baselines
+//!   ([`baselines`]), applications ([`apps`]),
 //!   experiment harnesses ([`expts`]) reproducing every figure/table of §4,
 //!   and a PJRT [`runtime`] (behind the `pjrt` feature; deterministic stub
 //!   otherwise) that executes the AOT-lowered JAX/Pallas artifacts so real
@@ -36,6 +38,7 @@ pub mod metrics;
 pub mod net;
 pub mod nvme;
 pub mod pcie;
+pub mod query;
 pub mod runtime;
 pub mod runtime_hub;
 pub mod sim;

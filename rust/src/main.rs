@@ -35,6 +35,15 @@
 //!                                      with --threads the parallel drain is
 //!                                      checked against the sequential trace
 //!                                      hash per scenario
+//!   fpgahub query [--explain] [--threads T]
+//!                                      dataflow query plane: cost-based
+//!                                      planner sweeps (CSD pushdown vs hub
+//!                                      vs ship-all, GPU-offload knee,
+//!                                      switch vs ring aggregation, CPU
+//!                                      compress, bitstream prefetch) with
+//!                                      the measured winner next to the
+//!                                      planner's pick; --explain prints
+//!                                      per-operator cost breakdowns
 //!   fpgahub info                       platform + artifact status
 
 use fpgahub::anyhow;
@@ -48,9 +57,9 @@ use fpgahub::runtime_hub::ArbPolicy;
 fn usage() -> ! {
     eprintln!(
         "usage: fpgahub <list|expt NAME|all|train|fetch-demo|multi-tenant|qos|scale|reconfig|\
-         hetero|faults|info> [options]\n\
+         hetero|faults|query|info> [options]\n\
          options: --config FILE --samples N --steps N --workers N --requests N\n\
-         \x20        --hubs N --threads N --arb fcfs|priority|wfq --no-csv"
+         \x20        --hubs N --threads N --arb fcfs|priority|wfq --explain --no-csv"
     );
     std::process::exit(2);
 }
@@ -66,6 +75,7 @@ struct Args {
     hubs: Option<usize>,
     threads: Option<usize>,
     arb: Option<ArbPolicy>,
+    explain: bool,
     no_csv: bool,
 }
 
@@ -83,6 +93,7 @@ fn parse_args() -> Args {
         hubs: None,
         threads: None,
         arb: None,
+        explain: false,
         no_csv: false,
     };
     let mut positional: Vec<String> = Vec::new();
@@ -113,6 +124,7 @@ fn parse_args() -> Args {
                     }
                 }
             }
+            "--explain" => a.explain = true,
             "--no-csv" => a.no_csv = true,
             other if !other.starts_with("--") => positional.push(other.to_string()),
             other => {
@@ -146,6 +158,9 @@ fn load_cfg(a: &Args) -> anyhow::Result<ExperimentConfig> {
         // --threads opts into the parallel engine; 0 = all cores
         cfg.platform.fabric_parallel = true;
         cfg.platform.fabric_threads = t;
+    }
+    if a.explain {
+        cfg.platform.explain = true;
     }
     if a.no_csv {
         cfg.csv = false;
@@ -231,6 +246,11 @@ fn main() -> anyhow::Result<()> {
             // experiment then cross-checks every scenario's trace hash
             // against a sequential reference drain
             expts::run("faults", &cfg)?;
+        }
+        "query" => {
+            // --explain folds into the platform config by load_cfg; the
+            // tables print the planner's pick next to the measured winner
+            expts::run("query", &cfg)?;
         }
         "qos" => {
             let (t, outcomes) = expts::qos::run_with_outcomes(&cfg);

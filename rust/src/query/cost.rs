@@ -1,0 +1,250 @@
+//! Closed-form placement costs for the query planner.
+//!
+//! Every formula here is the planner-side mirror of a mechanism the
+//! simulator already bills: wire times come from the same
+//! [`wire_time`] the links use, region serialization/setup/swap from
+//! the [`OperatorRates`] / [`ReconfigConfig`] the region plane uses,
+//! GPU kernels from the same roofline [`Gpu::gemm_time`], and the hub
+//! GEMM arm from the same `FPGA_GEMM_TFLOPS` closed form as
+//! `apps::hetero::hub_gemm_ps`. Keeping both sides on one set of
+//! constants is what lets `expts/query.rs` check that the planner
+//! crosses each placement boundary exactly where the *measured* winner
+//! flips.
+//!
+//! All fields are public so experiments can sweep a knob (NAND rate,
+//! region compress rate, …) in the model and in the matching
+//! [`SitesConfig`] / [`ReconfigConfig`] at the same time.
+
+use crate::constants;
+use crate::devices::gpu::Gpu;
+use crate::runtime_hub::{FabricConfig, OperatorKind, OperatorRates, ReconfigConfig, SitesConfig};
+use crate::sim::time::{ns_f, us_f, wire_time, Ps};
+
+/// Itemized cost of one plan step, in integer picoseconds.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CostBreakdown {
+    /// `(term name, cost)` in the order the planner billed them.
+    pub terms: Vec<(&'static str, Ps)>,
+}
+
+impl CostBreakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, term: &'static str, ps: Ps) {
+        self.terms.push((term, ps));
+    }
+
+    pub fn total(&self) -> Ps {
+        self.terms.iter().map(|&(_, ps)| ps).sum()
+    }
+}
+
+/// The planner's view of the platform: link rates, hop latencies,
+/// region-plane rates and swap cost, peer-site rates.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// inter-hub mesh link rate, Gb/s (`FabricConfig::gbps`)
+    pub fabric_gbps: f64,
+    /// per-mesh-hop fixed latency, ns (`FabricConfig::hop_ns`)
+    pub fabric_hop_ns: f64,
+    /// generic host/PCIe link rate, Gb/s (scan egress, CPU peer link)
+    pub host_link_gbps: f64,
+    /// DMA descriptor setup / landing cost, ns
+    pub landing_ns: f64,
+    /// mean NVMe media read latency, µs (scan's fixed term)
+    pub media_read_us: f64,
+    /// on-drive NAND scan rate of a CSD, Gb/s
+    pub csd_nand_gbps: f64,
+    /// CSD host-link rate, Gb/s (the ship-raw bottleneck)
+    pub csd_link_gbps: f64,
+    /// streaming filter rate of a hub processing CSD-shipped raw data,
+    /// Gb/s (the `hub_filter_gbps` arm of `filter_route`)
+    pub hub_stream_gbps: f64,
+    /// region-plane operator rates (serialization term)
+    pub rates: OperatorRates,
+    /// reconfig regions per hub (residency capacity)
+    pub regions: usize,
+    /// partial-reconfiguration swap latency, µs
+    pub swap_us: f64,
+    /// hub systolic GEMM throughput, TFLOP/s
+    pub hub_gemm_tflops: f64,
+    /// GPU peer model (roofline + launch)
+    pub gpu: Gpu,
+    /// GPU host-link rate, Gb/s
+    pub gpu_pcie_gbps: f64,
+    /// CPU software compression rate, Gb/s
+    pub cpu_lz4_gbps: f64,
+    /// CPU peer host-link rate, Gb/s
+    pub cpu_link_gbps: f64,
+    /// switch port rate, Gb/s
+    pub switch_port_gbps: f64,
+    /// switch match-action pipeline traversal, ns
+    pub switch_pipeline_ns: f64,
+    /// when true, a region swap whose upstream step is at least as long
+    /// as the swap is billed as hidden (the hub loads the bitstream
+    /// while the previous operator still runs — it knows the next DAG
+    /// operator ahead of time)
+    pub prefetch: bool,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            fabric_gbps: constants::FABRIC_GBPS,
+            fabric_hop_ns: constants::FABRIC_HOP_NS,
+            host_link_gbps: constants::PCIE_GEN3_X16_GBPS,
+            landing_ns: constants::PCIE_DMA_SETUP_NS,
+            media_read_us: constants::SSD_READ_LAT_US.0,
+            csd_nand_gbps: constants::CSD_NAND_GBPS,
+            csd_link_gbps: constants::CSD_LINK_GBPS,
+            hub_stream_gbps: constants::FPGA_COMPRESS_GBPS,
+            rates: OperatorRates::default(),
+            regions: ReconfigConfig::default().regions,
+            swap_us: ReconfigConfig::default().swap_us,
+            hub_gemm_tflops: constants::FPGA_GEMM_TFLOPS,
+            gpu: Gpu::h100(),
+            gpu_pcie_gbps: constants::PCIE_GEN3_X16_GBPS,
+            cpu_lz4_gbps: constants::CPU_LZ4_GBPS,
+            cpu_link_gbps: constants::PCIE_GEN3_X16_GBPS,
+            switch_port_gbps: constants::P4_PORT_GBPS,
+            switch_pipeline_ns: constants::P4_STAGES as f64 * constants::P4_STAGE_NS,
+            prefetch: false,
+        }
+    }
+}
+
+impl CostModel {
+    /// Build a model matching a concrete fabric + site + region-plane
+    /// configuration (the one the simulator will run).
+    pub fn from_platform(fab: &FabricConfig, sites: &SitesConfig, rc: &ReconfigConfig) -> Self {
+        CostModel {
+            fabric_gbps: fab.gbps,
+            fabric_hop_ns: fab.hop_ns,
+            csd_nand_gbps: sites.csd_nand_gbps,
+            csd_link_gbps: sites.csd_link_gbps,
+            gpu_pcie_gbps: sites.gpu_pcie_gbps,
+            cpu_link_gbps: sites.cpu_link_gbps,
+            switch_port_gbps: sites.switch_port_gbps,
+            rates: rc.rates,
+            regions: rc.regions,
+            swap_us: rc.swap_us,
+            ..CostModel::default()
+        }
+    }
+
+    /// Serialization over a link at `gbps` — identical arithmetic to
+    /// the simulator's links.
+    pub fn wire(&self, bytes: u64, gbps: f64) -> Ps {
+        wire_time(bytes, gbps)
+    }
+
+    /// One mesh hop's fixed latency.
+    pub fn hop_ps(&self) -> Ps {
+        ns_f(self.fabric_hop_ns)
+    }
+
+    /// One DMA landing.
+    pub fn landing_ps(&self) -> Ps {
+        ns_f(self.landing_ns)
+    }
+
+    /// Mean NVMe media read latency.
+    pub fn media_ps(&self) -> Ps {
+        us_f(self.media_read_us)
+    }
+
+    /// Partial-reconfiguration swap.
+    pub fn swap_ps(&self) -> Ps {
+        us_f(self.swap_us)
+    }
+
+    /// Region-program execution: per-operator setup plus serialization
+    /// at the operator's line rate (mirrors `RegionPlane::ser_ps` +
+    /// `setup_ps`).
+    pub fn region_exec_ps(&self, op: OperatorKind, bytes: u64) -> Ps {
+        ns_f(self.rates.setup_ns) + wire_time(bytes, self.rates.gbps(op))
+    }
+
+    /// Hub systolic-array GEMM (same closed form as
+    /// `apps::hetero::hub_gemm_ps`, parameterized on the model's
+    /// TFLOP/s so experiments can sweep it).
+    pub fn hub_gemm_ps(&self, m: u64, n: u64, k: u64) -> Ps {
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        ns_f(flops / (self.hub_gemm_tflops * 1e12) * 1e9)
+    }
+
+    /// Full GPU offload: landing + operand ship-out + roofline kernel +
+    /// result ship-back + landing (mirrors `offload_route`).
+    pub fn gpu_gemm_ps(&self, m: u64, n: u64, k: u64) -> Ps {
+        let in_bytes = 4 * (m * k + k * n);
+        let out_bytes = 4 * m * n;
+        2 * self.landing_ps()
+            + self.wire(in_bytes, self.gpu_pcie_gbps)
+            + self.gpu.gemm_time(m, n, k, 1.0, 1.0)
+            + self.wire(out_bytes, self.gpu_pcie_gbps)
+    }
+
+    /// In-network switch aggregation of `workers` contributions of
+    /// `bytes` each: all contributions serialize into the shared
+    /// ingress port, one pipeline traversal, the result fans back out
+    /// over the shared egress port (mirrors `SwitchReduce`).
+    pub fn switch_reduce_ps(&self, workers: u32, bytes: u64) -> Ps {
+        2 * u64::from(workers) * self.wire(bytes, self.switch_port_gbps)
+            + ns_f(self.switch_pipeline_ns)
+            + 2 * self.hop_ps()
+            + self.landing_ps()
+    }
+
+    /// Hub-ring aggregation baseline: `2·(hubs−1)` sequential mesh legs
+    /// carrying the reduction buffer.
+    pub fn hub_ring_ps(&self, hubs: usize, bytes: u64) -> Ps {
+        let legs = 2 * (hubs.saturating_sub(1)) as u64;
+        legs * (self.wire(bytes, self.fabric_gbps) + self.hop_ps())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::US;
+
+    #[test]
+    fn breakdown_totals_its_terms() {
+        let mut b = CostBreakdown::new();
+        b.push("a", 10);
+        b.push("b", 32);
+        assert_eq!(b.total(), 42);
+    }
+
+    #[test]
+    fn default_model_matches_platform_constants() {
+        let m = CostModel::default();
+        assert_eq!(m.swap_ps(), 400 * US);
+        assert_eq!(m.wire(1250, 100.0), 100_000); // 100 ns in ps
+        assert_eq!(m.hop_ps(), 500_000);
+        // hub GEMM closed form agrees with the hetero app's helper
+        assert_eq!(
+            m.hub_gemm_ps(512, 512, 512),
+            crate::apps::hetero::hub_gemm_ps(512, 512, 512)
+        );
+    }
+
+    #[test]
+    fn from_platform_picks_up_swept_rates() {
+        let sites = SitesConfig { csd_nand_gbps: 17.0, ..SitesConfig::default() };
+        let rc = ReconfigConfig { swap_us: 123.0, ..ReconfigConfig::default() };
+        let m = CostModel::from_platform(&FabricConfig::default(), &sites, &rc);
+        assert_eq!(m.csd_nand_gbps, 17.0);
+        assert_eq!(m.swap_us, 123.0);
+    }
+
+    #[test]
+    fn region_exec_uses_operator_rates() {
+        let m = CostModel::default();
+        // 1 MB through the 80 Gb/s filter: 100 µs + 200 ns setup
+        let t = m.region_exec_ps(OperatorKind::Filter, 1_000_000);
+        assert_eq!(t, ns_f(200.0) + wire_time(1_000_000, 80.0));
+    }
+}

@@ -1,0 +1,276 @@
+//! Dataflow query plane (ISSUE 10): queries as logical operator DAGs,
+//! lowered onto the physical platform by a deterministic cost-based
+//! planner.
+//!
+//! The paper's thesis is that the FPGA hub is the *data and control
+//! plane* of a heterogeneous fleet — it decides where each piece of work
+//! runs, not just how bytes move. Before this module every workload
+//! hand-wired that decision (`apps::preprocess` hardcoded
+//! scan→filter→partition, `run_pushdown` hardcoded its two plans,
+//! `apps::hetero` hand-built every route). Here the decision becomes
+//! data:
+//!
+//! * [`QueryDag`] — a DAG of [`LogicalOp`]s (scan, filter, project,
+//!   partition, join, aggregate, compress, gemm) annotated with
+//!   per-operator selectivity (`keep_pct`), from which exact integer
+//!   byte flows are derived.
+//! * [`CostModel`] — closed-form per-placement costs read off the
+//!   structures that already exist: region residency and swap cost
+//!   (`reconfig.rs` rates), per-edge link rates and hop billing
+//!   (`fabric.rs`), peer-site rates (`SitesConfig`), tenant QoS class.
+//! * [`Planner`] — lowers each operator onto a [`SiteChoice`] (which
+//!   hub, which reconfig region, which peer site) by strict cost
+//!   minimization over a fixed candidate order, tracking per-hub
+//!   bitstream residency (LRU, capacity = region count). Fused chains
+//!   of hub region operators become one descriptor chain —
+//!   `Stage::Preproc` sequencing falls out of DAG fusion — and
+//!   bitstream prefetch falls out of the planner knowing the next
+//!   operator in the DAG.
+//!
+//! Everything is integer-picosecond deterministic: same DAG + same
+//! context + same model ⇒ bit-identical [`PhysicalPlan`] (pinned by
+//! `tests/query_plan.rs`, sequential and parallel). The legacy apps
+//! call [`Planner::plan_pinned`] with their historical placements, so
+//! their completion traces — and the four committed golden FNV hashes —
+//! are unchanged by construction.
+
+pub mod cost;
+pub mod plan;
+
+pub use cost::{CostBreakdown, CostModel};
+pub use plan::{DataSource, PhysicalPlan, PlanContext, PlanStep, Planner, SiteChoice};
+
+use crate::runtime_hub::OperatorKind;
+
+/// Index of a node inside its [`QueryDag`] (nodes are appended, so an
+/// id is also a topological position: inputs always have smaller ids).
+pub type NodeId = usize;
+
+/// A logical operator — what the query wants done, with no placement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LogicalOp {
+    /// read `blocks_4k` 4 KB blocks off storage
+    Scan { blocks_4k: u64 },
+    /// predicate evaluation (drops non-matching tuples)
+    Filter,
+    /// column projection (drops unused fields)
+    Project,
+    /// hash-partition / scatter
+    Partition,
+    /// block compression
+    Compress,
+    /// hash join of its inputs
+    Join,
+    /// allreduce-style aggregation of `workers` contributions of
+    /// `lanes` 4-byte lanes each
+    Aggregate { workers: u32, lanes: u64 },
+    /// dense (M,K)×(K,N) GEMM on f32 operands
+    Gemm { m: u64, n: u64, k: u64 },
+}
+
+impl LogicalOp {
+    /// The reconfig-region program implementing this operator on a hub,
+    /// when one exists (`None` for scan/aggregate/gemm, which never run
+    /// in a region).
+    pub fn region_op(self) -> Option<OperatorKind> {
+        match self {
+            LogicalOp::Filter => Some(OperatorKind::Filter),
+            LogicalOp::Project => Some(OperatorKind::Project),
+            LogicalOp::Partition | LogicalOp::Join => Some(OperatorKind::HashPartition),
+            LogicalOp::Compress => Some(OperatorKind::Compress),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LogicalOp::Scan { .. } => "scan",
+            LogicalOp::Filter => "filter",
+            LogicalOp::Project => "project",
+            LogicalOp::Partition => "partition",
+            LogicalOp::Compress => "compress",
+            LogicalOp::Join => "join",
+            LogicalOp::Aggregate { .. } => "aggregate",
+            LogicalOp::Gemm { .. } => "gemm",
+        }
+    }
+
+    /// Whether the operator may start a DAG (produce bytes from nothing
+    /// the DAG models: storage, worker buffers, host operands).
+    pub fn is_source(self) -> bool {
+        matches!(
+            self,
+            LogicalOp::Scan { .. } | LogicalOp::Aggregate { .. } | LogicalOp::Gemm { .. }
+        )
+    }
+}
+
+/// One DAG node: the operator, its inputs, and the integer selectivity
+/// applied to the input bytes (percent surviving; 100 = pass-through).
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: LogicalOp,
+    pub inputs: Vec<NodeId>,
+    pub keep_pct: u64,
+}
+
+/// A logical query: an append-only DAG (acyclic by construction — a
+/// node may only name already-existing nodes as inputs).
+#[derive(Clone, Debug, Default)]
+pub struct QueryDag {
+    nodes: Vec<Node>,
+}
+
+impl QueryDag {
+    pub fn new() -> Self {
+        QueryDag { nodes: Vec::new() }
+    }
+
+    /// Append a scan source.
+    pub fn scan(&mut self, blocks_4k: u64) -> NodeId {
+        self.node(LogicalOp::Scan { blocks_4k }, &[], 100)
+    }
+
+    /// Append an operator consuming `inputs` and keeping `keep_pct`
+    /// percent of its input bytes.
+    pub fn node(&mut self, op: LogicalOp, inputs: &[NodeId], keep_pct: u64) -> NodeId {
+        let id = self.nodes.len();
+        assert!(
+            inputs.iter().all(|&i| i < id),
+            "a node may only consume already-appended nodes (acyclic by construction)"
+        );
+        assert!((1..=100).contains(&keep_pct), "keep_pct must be 1..=100, got {keep_pct}");
+        assert!(
+            op.is_source() || !inputs.is_empty(),
+            "{} needs at least one input",
+            op.name()
+        );
+        assert!(
+            !(matches!(op, LogicalOp::Scan { .. }) && !inputs.is_empty()),
+            "a scan reads storage, it has no DAG inputs"
+        );
+        self.nodes.push(Node { op, inputs: inputs.to_vec(), keep_pct });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node_ref(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Bytes entering node `id`: the sum of its inputs' outputs, or the
+    /// source's own ingest (media bytes for a scan, operand bytes for a
+    /// gemm, all contributions for an aggregate).
+    pub fn bytes_in(&self, id: NodeId) -> u64 {
+        let n = &self.nodes[id];
+        match n.op {
+            LogicalOp::Scan { blocks_4k } => blocks_4k * 4096,
+            LogicalOp::Gemm { m, n: nn, k } => 4 * (m * k + k * nn),
+            LogicalOp::Aggregate { workers, lanes } => u64::from(workers) * 4 * lanes,
+            _ => n.inputs.iter().map(|&i| self.bytes_out(i)).sum(),
+        }
+    }
+
+    /// Bytes leaving node `id` (exact integer arithmetic, so plans are
+    /// bit-identical run to run).
+    pub fn bytes_out(&self, id: NodeId) -> u64 {
+        let n = &self.nodes[id];
+        match n.op {
+            LogicalOp::Gemm { m, n: nn, .. } => 4 * m * nn,
+            LogicalOp::Aggregate { lanes, .. } => 4 * lanes,
+            _ => self.bytes_in(id) * n.keep_pct / 100,
+        }
+    }
+
+    /// Whether nothing downstream consumes `id`.
+    pub fn is_sink(&self, id: NodeId) -> bool {
+        !self.nodes.iter().any(|n| n.inputs.contains(&id))
+    }
+
+    /// Structural validity: non-empty, exactly one sink (a query has
+    /// one result), and no orphan operators (everything that is not the
+    /// sink is consumed by someone).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("empty DAG".into());
+        }
+        let sinks: Vec<NodeId> =
+            (0..self.nodes.len()).filter(|&i| self.is_sink(i)).collect();
+        if sinks.len() != 1 {
+            return Err(format!("a query has exactly one sink, found {sinks:?}"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_flow_is_exact_integer_selectivity() {
+        let mut dag = QueryDag::new();
+        let s = dag.scan(16); // 65536 bytes
+        let f = dag.node(LogicalOp::Filter, &[s], 50);
+        let p = dag.node(LogicalOp::Partition, &[f], 50);
+        assert_eq!(dag.bytes_out(s), 65_536);
+        assert_eq!(dag.bytes_in(f), 65_536);
+        assert_eq!(dag.bytes_out(f), 32_768);
+        assert_eq!(dag.bytes_in(p), 32_768);
+        assert_eq!(dag.bytes_out(p), 16_384);
+        assert!(dag.validate().is_ok());
+    }
+
+    #[test]
+    fn join_sums_its_inputs() {
+        let mut dag = QueryDag::new();
+        let a = dag.scan(4);
+        let b = dag.scan(8);
+        let j = dag.node(LogicalOp::Join, &[a, b], 25);
+        assert_eq!(dag.bytes_in(j), 12 * 4096);
+        assert_eq!(dag.bytes_out(j), 3 * 4096);
+    }
+
+    #[test]
+    fn gemm_and_aggregate_shapes() {
+        let mut dag = QueryDag::new();
+        let g = dag.node(LogicalOp::Gemm { m: 8, n: 4, k: 2 }, &[], 100);
+        assert_eq!(dag.bytes_in(g), 4 * (8 * 2 + 2 * 4));
+        assert_eq!(dag.bytes_out(g), 4 * 8 * 4);
+        let mut dag2 = QueryDag::new();
+        let a = dag2.node(LogicalOp::Aggregate { workers: 4, lanes: 64 }, &[], 100);
+        assert_eq!(dag2.bytes_in(a), 4 * 4 * 64);
+        assert_eq!(dag2.bytes_out(a), 4 * 64);
+    }
+
+    #[test]
+    fn two_sinks_fail_validation() {
+        let mut dag = QueryDag::new();
+        let s = dag.scan(1);
+        let _f = dag.node(LogicalOp::Filter, &[s], 50);
+        let _p = dag.node(LogicalOp::Project, &[s], 50);
+        assert!(dag.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "needs at least one input")]
+    fn non_source_without_inputs_panics() {
+        let mut dag = QueryDag::new();
+        dag.node(LogicalOp::Filter, &[], 50);
+    }
+
+    #[test]
+    fn region_op_mapping() {
+        assert_eq!(LogicalOp::Filter.region_op(), Some(OperatorKind::Filter));
+        assert_eq!(LogicalOp::Join.region_op(), Some(OperatorKind::HashPartition));
+        assert_eq!(LogicalOp::Scan { blocks_4k: 1 }.region_op(), None);
+        assert_eq!(LogicalOp::Gemm { m: 1, n: 1, k: 1 }.region_op(), None);
+    }
+}

@@ -1,0 +1,740 @@
+//! The deterministic cost-based planner: lowering a [`QueryDag`] onto
+//! hubs, reconfig regions, and peer sites.
+//!
+//! Determinism argument (pinned by `tests/query_plan.rs`): the planner
+//! walks nodes in id order (ids are topological by construction),
+//! enumerates candidates for each node in a *fixed* order, and replaces
+//! the incumbent only on strictly lower cost — so ties resolve to the
+//! earlier candidate. Costs are integer picoseconds computed from the
+//! model's fields with the same arithmetic every run; there is no
+//! clock, RNG, or hash-map iteration anywhere in the path. Same DAG +
+//! same context + same model + same residency ⇒ bit-identical
+//! [`PhysicalPlan`], sequential or parallel, every run.
+
+use super::cost::{CostBreakdown, CostModel};
+use super::{LogicalOp, NodeId, QueryDag};
+use crate::runtime_hub::{HubId, OperatorKind, QosSpec, TransferDesc, CLASS_REALTIME};
+use crate::sim::time::{to_us, Ps};
+
+/// A physical placement for one operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SiteChoice {
+    /// run at hub `h` (region program for region ops, systolic array
+    /// for gemm, ring reduction for aggregate)
+    Hub(HubId),
+    /// ship the raw input over the fabric and run the region program at
+    /// hub `h` instead of where the data currently sits
+    ShipAll(HubId),
+    /// push the operator down into CSD peer `i`'s on-drive filter
+    Csd(u32),
+    /// offload to GPU peer `i` over its host link
+    Gpu(u32),
+    /// aggregate in switch peer `i`'s match-action pipeline
+    Switch(u32),
+    /// run on CPU peer `i`'s core pool (software implementation)
+    Cpu(u32),
+}
+
+impl SiteChoice {
+    pub fn describe(self) -> String {
+        match self {
+            SiteChoice::Hub(h) => format!("hub{}", h.0),
+            SiteChoice::ShipAll(h) => format!("ship-all→hub{}", h.0),
+            SiteChoice::Csd(i) => format!("csd{i}"),
+            SiteChoice::Gpu(i) => format!("gpu{i}"),
+            SiteChoice::Switch(i) => format!("switch{i}"),
+            SiteChoice::Cpu(i) => format!("cpu{i}"),
+        }
+    }
+
+    /// Stable small integer for hashing into a plan signature.
+    fn encode(self) -> u64 {
+        match self {
+            SiteChoice::Hub(h) => 0x100 + u64::from(h.0),
+            SiteChoice::ShipAll(h) => 0x10_000 + u64::from(h.0),
+            SiteChoice::Csd(i) => 0x1_000_000 + u64::from(i),
+            SiteChoice::Gpu(i) => 0x2_000_000 + u64::from(i),
+            SiteChoice::Switch(i) => 0x3_000_000 + u64::from(i),
+            SiteChoice::Cpu(i) => 0x4_000_000 + u64::from(i),
+        }
+    }
+}
+
+/// Where the query's base data lives — cost semantics differ between
+/// data behind a hub's own NVMe array and data inside a computational
+/// drive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataSource {
+    /// behind the owner hub's NVMe array
+    HubNvme,
+    /// inside CSD peer `i` (pushdown candidate)
+    Csd(u32),
+}
+
+/// Everything about a query that is not the DAG itself.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanContext {
+    /// hub that issued the query and wants the result
+    pub origin: HubId,
+    /// hub that owns the shard the data sits behind
+    pub owner: HubId,
+    /// tenant QoS class (REALTIME tenants bill region swaps double —
+    /// a miss on the latency path is worth paying bytes to avoid)
+    pub qos: QosSpec,
+    pub data: DataSource,
+}
+
+/// Where a node's output physically sits after its step runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Loc {
+    Hub(HubId),
+    /// still inside CSD peer `i` (only a scan leaves data there)
+    Csd(u32),
+}
+
+/// One lowered operator.
+#[derive(Clone, Debug)]
+pub struct PlanStep {
+    pub node: NodeId,
+    pub op: LogicalOp,
+    pub choice: SiteChoice,
+    /// chained into the previous step's descriptor (one region program
+    /// per fused chain — this is what replaced hand-wired
+    /// `Stage::Preproc` sequencing)
+    pub fused_with_prev: bool,
+    /// region swap hidden behind the upstream operator (the planner
+    /// knows the next DAG operator, so the hub can load its bitstream
+    /// early)
+    pub prefetched: bool,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub cost: CostBreakdown,
+}
+
+/// The lowered query: one step per DAG node, in node-id order.
+#[derive(Clone, Debug, Default)]
+pub struct PhysicalPlan {
+    pub steps: Vec<PlanStep>,
+}
+
+impl PhysicalPlan {
+    pub fn step(&self, node: NodeId) -> &PlanStep {
+        &self.steps[node]
+    }
+
+    pub fn choice(&self, node: NodeId) -> SiteChoice {
+        self.steps[node].choice
+    }
+
+    /// Modeled end-to-end cost (sum of step costs; fused steps already
+    /// bill only their marginal work).
+    pub fn total_ps(&self) -> Ps {
+        self.steps.iter().map(|s| s.cost.total()).sum()
+    }
+
+    /// Append the plan's fused hub region chain to a descriptor:
+    /// every hub-placed region operator becomes one `Stage::Preproc`
+    /// stage, in DAG order. This is the lowering emitter that replaces
+    /// the hand-wired `.preproc(..)` chains in `apps::preprocess`.
+    pub fn chain_hub_stages(&self, mut desc: TransferDesc) -> TransferDesc {
+        for s in &self.steps {
+            if let (Some(op), SiteChoice::Hub(_) | SiteChoice::ShipAll(_)) =
+                (s.op.region_op(), s.choice)
+            {
+                desc = desc.preproc(op, s.bytes_in);
+            }
+        }
+        desc
+    }
+
+    /// FNV-1a over every placement-relevant field — two plans with the
+    /// same signature made the same decisions.
+    pub fn signature(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut eat = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        for s in &self.steps {
+            eat(s.node as u64);
+            eat(s.choice.encode());
+            eat(u64::from(s.fused_with_prev) | (u64::from(s.prefetched) << 1));
+            eat(s.bytes_in);
+            eat(s.bytes_out);
+            eat(s.cost.total());
+        }
+        h
+    }
+
+    /// Human-readable per-operator cost breakdown (`fpgahub query
+    /// --explain`).
+    pub fn explain(&self) -> String {
+        let mut out = String::new();
+        for s in &self.steps {
+            let terms: Vec<String> = s
+                .cost
+                .terms
+                .iter()
+                .map(|&(name, ps)| format!("{name}={:.2}µs", to_us(ps)))
+                .collect();
+            let mut flags = String::new();
+            if s.fused_with_prev {
+                flags.push_str(" +fused");
+            }
+            if s.prefetched {
+                flags.push_str(" +prefetch");
+            }
+            out.push_str(&format!(
+                "  #{:<2} {:<9} @ {:<14}{} in={}B out={}B total={:.2}µs [{}]\n",
+                s.node,
+                s.op.name(),
+                s.choice.describe(),
+                flags,
+                s.bytes_in,
+                s.bytes_out,
+                to_us(s.cost.total()),
+                terms.join(" "),
+            ));
+        }
+        out
+    }
+}
+
+/// Result of costing one candidate placement.
+struct Eval {
+    cost: CostBreakdown,
+    prefetched: bool,
+    /// region program executed at this hub (residency must be updated)
+    region_at: Option<(HubId, OperatorKind)>,
+}
+
+/// The cost-based planner. Owns per-hub bitstream residency (LRU over
+/// `model.regions` slots, mirroring the region plane's behaviour) so
+/// consecutive `plan()` calls see the operators earlier plans left
+/// loaded.
+#[derive(Clone, Debug)]
+pub struct Planner {
+    pub model: CostModel,
+    hubs: usize,
+    /// per hub: loaded operators, least recently used first
+    residency: Vec<Vec<OperatorKind>>,
+}
+
+impl Planner {
+    pub fn new(model: CostModel, hubs: usize) -> Self {
+        assert!(hubs >= 1, "a platform has at least one hub");
+        Planner { model, hubs, residency: vec![Vec::new(); hubs] }
+    }
+
+    pub fn hubs(&self) -> usize {
+        self.hubs
+    }
+
+    /// Pre-load `op` into `hub`'s residency (e.g. a warm plane left by
+    /// earlier traffic).
+    pub fn warm(&mut self, hub: HubId, op: OperatorKind) {
+        Self::touch(&mut self.residency, self.model.regions, hub, op);
+    }
+
+    pub fn resident(&self, hub: HubId) -> &[OperatorKind] {
+        &self.residency[hub.index()]
+    }
+
+    /// Lower `dag` by cost minimization, committing the resulting
+    /// residency so later plans see what this one loaded.
+    pub fn plan(&mut self, dag: &QueryDag, ctx: &PlanContext) -> PhysicalPlan {
+        let mut residency = self.residency.clone();
+        let plan = self.lower(dag, ctx, &mut residency, None);
+        self.residency = residency;
+        plan
+    }
+
+    /// Lower `dag` with every node's placement dictated by `pins`
+    /// (falling back to the forced/default choice for unpinned nodes).
+    /// Costs are still computed — so `--explain` works — but nothing is
+    /// compared, no prefetch is annotated, and the planner's residency
+    /// is left untouched. This is the legacy-compatibility path: the
+    /// refactored apps pin their historical placements through here and
+    /// must produce bit-identical traces.
+    pub fn plan_pinned(
+        &self,
+        dag: &QueryDag,
+        ctx: &PlanContext,
+        pins: &[(NodeId, SiteChoice)],
+    ) -> PhysicalPlan {
+        let mut residency = self.residency.clone();
+        self.lower(dag, ctx, &mut residency, Some(pins))
+    }
+
+    fn lower(
+        &self,
+        dag: &QueryDag,
+        ctx: &PlanContext,
+        residency: &mut [Vec<OperatorKind>],
+        pins: Option<&[(NodeId, SiteChoice)]>,
+    ) -> PhysicalPlan {
+        dag.validate().expect("planner input must be a valid DAG");
+        let mut steps: Vec<PlanStep> = Vec::with_capacity(dag.len());
+        for id in 0..dag.len() {
+            let upstream = Self::upstream_loc_and_cost(dag, id, &steps, ctx);
+            let (choice, eval) = match pins {
+                Some(p) => {
+                    let c = p
+                        .iter()
+                        .find(|&&(n, _)| n == id)
+                        .map(|&(_, c)| c)
+                        .unwrap_or_else(|| Self::default_choice(dag, id, ctx));
+                    // pinned path: prefetch annotation off (legacy apps
+                    // pay swaps inline, and so must the model)
+                    (c, self.eval(dag, id, ctx, c, residency, upstream, false))
+                }
+                None => {
+                    let mut best: Option<(SiteChoice, Eval)> = None;
+                    for c in self.candidates(dag, id, ctx, upstream.0) {
+                        let e = self.eval(dag, id, ctx, c, residency, upstream, self.model.prefetch);
+                        let better = match &best {
+                            None => true,
+                            Some((_, b)) => e.cost.total() < b.cost.total(),
+                        };
+                        if better {
+                            best = Some((c, e));
+                        }
+                    }
+                    best.expect("every operator has at least one candidate placement")
+                }
+            };
+            if let Some((hub, op)) = eval.region_at {
+                Self::touch(residency, self.model.regions, hub, op);
+            }
+            let fused = self.fused_with_prev(dag, id, choice, &steps);
+            steps.push(PlanStep {
+                node: id,
+                op: dag.node_ref(id).op,
+                choice,
+                fused_with_prev: fused,
+                prefetched: eval.prefetched,
+                bytes_in: dag.bytes_in(id),
+                bytes_out: dag.bytes_out(id),
+                cost: eval.cost,
+            });
+        }
+        PhysicalPlan { steps }
+    }
+
+    /// LRU touch: hit moves to the back, miss loads (evicting the
+    /// least-recently-used operator when all regions are full).
+    fn touch(residency: &mut [Vec<OperatorKind>], regions: usize, hub: HubId, op: OperatorKind) {
+        let res = &mut residency[hub.index()];
+        if let Some(pos) = res.iter().position(|&k| k == op) {
+            res.remove(pos);
+        } else if res.len() >= regions {
+            res.remove(0);
+        }
+        res.push(op);
+    }
+
+    /// Location of the node's input data and the modeled cost of the
+    /// step that produced it (the window a prefetched swap can hide
+    /// behind).
+    fn upstream_loc_and_cost(
+        dag: &QueryDag,
+        id: NodeId,
+        steps: &[PlanStep],
+        ctx: &PlanContext,
+    ) -> (Loc, Ps) {
+        match dag.node_ref(id).inputs.first() {
+            None => match ctx.data {
+                DataSource::Csd(d) => (Loc::Csd(d), 0),
+                DataSource::HubNvme => (Loc::Hub(ctx.owner), 0),
+            },
+            Some(&input) => {
+                let s = &steps[input];
+                let loc = match (s.op, s.choice) {
+                    (LogicalOp::Scan { .. }, SiteChoice::Csd(d)) => Loc::Csd(d),
+                    (_, SiteChoice::Hub(h) | SiteChoice::ShipAll(h)) => Loc::Hub(h),
+                    _ => Loc::Hub(ctx.owner),
+                };
+                (loc, s.cost.total())
+            }
+        }
+    }
+
+    /// Fixed candidate order — the determinism contract depends on it.
+    fn candidates(
+        &self,
+        dag: &QueryDag,
+        id: NodeId,
+        ctx: &PlanContext,
+        loc: Loc,
+    ) -> Vec<SiteChoice> {
+        let node = dag.node_ref(id);
+        match node.op {
+            LogicalOp::Scan { .. } => vec![Self::default_choice(dag, id, ctx)],
+            LogicalOp::Gemm { .. } => vec![SiteChoice::Hub(ctx.owner), SiteChoice::Gpu(0)],
+            LogicalOp::Aggregate { .. } => {
+                vec![SiteChoice::Switch(0), SiteChoice::Hub(ctx.owner)]
+            }
+            _ => {
+                // region operator: placement depends on where the input
+                // currently sits
+                match loc {
+                    Loc::Csd(d) => vec![SiteChoice::Csd(d), SiteChoice::Hub(ctx.owner)],
+                    Loc::Hub(_) => {
+                        let mut c = vec![SiteChoice::Hub(ctx.owner)];
+                        if ctx.origin != ctx.owner {
+                            c.push(SiteChoice::ShipAll(ctx.origin));
+                        }
+                        if node.op == LogicalOp::Compress {
+                            c.push(SiteChoice::Cpu(0));
+                        }
+                        c
+                    }
+                }
+            }
+        }
+    }
+
+    fn default_choice(dag: &QueryDag, id: NodeId, ctx: &PlanContext) -> SiteChoice {
+        match (dag.node_ref(id).op, ctx.data) {
+            (LogicalOp::Scan { .. }, DataSource::Csd(d)) => SiteChoice::Csd(d),
+            _ => SiteChoice::Hub(ctx.owner),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn eval(
+        &self,
+        dag: &QueryDag,
+        id: NodeId,
+        ctx: &PlanContext,
+        choice: SiteChoice,
+        residency: &[Vec<OperatorKind>],
+        upstream: (Loc, Ps),
+        prefetch: bool,
+    ) -> Eval {
+        let m = &self.model;
+        let node = dag.node_ref(id);
+        let bytes_in = dag.bytes_in(id);
+        let bytes_out = dag.bytes_out(id);
+        let (loc, upstream_ps) = upstream;
+        let mut cost = CostBreakdown::new();
+        let mut prefetched = false;
+        let mut region_at = None;
+
+        match (node.op, choice) {
+            // ---- sources -------------------------------------------------
+            (LogicalOp::Scan { .. }, SiteChoice::Csd(_)) => {
+                // the drive reads its own media; bytes stay on-drive and
+                // the next operator's placement decides what crosses the
+                // host link
+                cost.push("media", m.media_ps());
+            }
+            (LogicalOp::Scan { .. }, SiteChoice::Hub(_)) => {
+                cost.push("media", m.media_ps());
+                cost.push("dma", m.landing_ps());
+                cost.push("host-wire", m.wire(bytes_out, m.host_link_gbps));
+            }
+            (LogicalOp::Gemm { m: gm, n: gn, k: gk }, SiteChoice::Hub(_)) => {
+                cost.push("hub-gemm", m.hub_gemm_ps(gm, gn, gk));
+            }
+            (LogicalOp::Gemm { m: gm, n: gn, k: gk }, SiteChoice::Gpu(_)) => {
+                cost.push("dma", 2 * m.landing_ps());
+                cost.push("pcie-out", m.wire(bytes_in, m.gpu_pcie_gbps));
+                cost.push("kernel", m.gpu.gemm_time(gm, gn, gk, 1.0, 1.0));
+                cost.push("pcie-back", m.wire(bytes_out, m.gpu_pcie_gbps));
+            }
+            (LogicalOp::Aggregate { workers, lanes }, SiteChoice::Switch(_)) => {
+                let b = 4 * lanes;
+                cost.push("ingress", u64::from(workers) * m.wire(b, m.switch_port_gbps));
+                cost.push("pipeline", crate::sim::time::ns_f(m.switch_pipeline_ns));
+                cost.push("egress", u64::from(workers) * m.wire(b, m.switch_port_gbps));
+                cost.push("hops", 2 * m.hop_ps());
+                cost.push("dma", m.landing_ps());
+            }
+            (LogicalOp::Aggregate { lanes, .. }, SiteChoice::Hub(_)) => {
+                cost.push("ring", m.hub_ring_ps(self.hubs, 4 * lanes));
+            }
+            // ---- region operators ---------------------------------------
+            (_, SiteChoice::Csd(_)) => {
+                // pushdown: on-drive filter scans NAND at the internal
+                // rate, only survivors cross the host link
+                cost.push("nand-scan", m.wire(bytes_in, m.csd_nand_gbps));
+                cost.push("csd-egress", m.wire(bytes_out, m.csd_link_gbps));
+                cost.push("dma", m.landing_ps());
+            }
+            (_, SiteChoice::Hub(_)) if matches!(loc, Loc::Csd(_)) => {
+                // ship raw off the drive, stream through the hub's
+                // always-on filter datapath (no region program involved)
+                cost.push("csd-egress", m.wire(bytes_in, m.csd_link_gbps));
+                cost.push("hub-stream", m.wire(bytes_in, m.hub_stream_gbps));
+                cost.push("dma", m.landing_ps());
+            }
+            (_, SiteChoice::Hub(h)) => {
+                let op = node.op.region_op().expect("hub region placement needs a region op");
+                if let Loc::Hub(src) = loc {
+                    if src != h {
+                        cost.push("fabric", m.wire(bytes_in, m.fabric_gbps) + m.hop_ps());
+                    }
+                }
+                prefetched = self.bill_region(
+                    &mut cost, residency, h, op, bytes_in, ctx.qos, upstream_ps, prefetch,
+                );
+                region_at = Some((h, op));
+                if dag.is_sink(id) && h != ctx.origin {
+                    cost.push("reply", m.wire(bytes_out, m.fabric_gbps) + m.hop_ps());
+                }
+            }
+            (_, SiteChoice::ShipAll(h)) => {
+                let op = node.op.region_op().expect("ship-all placement needs a region op");
+                cost.push("ship-raw", m.wire(bytes_in, m.fabric_gbps) + m.hop_ps());
+                prefetched = self.bill_region(
+                    &mut cost, residency, h, op, bytes_in, ctx.qos, upstream_ps, prefetch,
+                );
+                region_at = Some((h, op));
+            }
+            (LogicalOp::Compress, SiteChoice::Cpu(_)) => {
+                cost.push("cpu-ship", m.wire(bytes_in, m.cpu_link_gbps));
+                cost.push("lz4", m.wire(bytes_in, m.cpu_lz4_gbps));
+                cost.push("cpu-return", m.wire(bytes_out, m.cpu_link_gbps));
+                cost.push("dma", 2 * m.landing_ps());
+            }
+            (op, c) => panic!("no cost rule for {} at {}", op.name(), c.describe()),
+        }
+
+        Eval { cost, prefetched, region_at }
+    }
+
+    /// Bill a region execution at `hub`: setup + serialization, plus a
+    /// swap when the operator is not resident. REALTIME tenants bill the
+    /// swap double (a miss on the latency path is worth shipping bytes
+    /// to avoid); a prefetch-eligible swap (upstream step at least as
+    /// long as the swap) is billed as hidden.
+    #[allow(clippy::too_many_arguments)]
+    fn bill_region(
+        &self,
+        cost: &mut CostBreakdown,
+        residency: &[Vec<OperatorKind>],
+        hub: HubId,
+        op: OperatorKind,
+        bytes: u64,
+        qos: QosSpec,
+        upstream_ps: Ps,
+        prefetch: bool,
+    ) -> bool {
+        let m = &self.model;
+        let mut prefetched = false;
+        if !residency[hub.index()].contains(&op) {
+            let mult = if qos.class == CLASS_REALTIME { 2 } else { 1 };
+            let swap = mult * m.swap_ps();
+            if prefetch && upstream_ps >= m.swap_ps() {
+                cost.push("swap(hidden)", 0);
+                prefetched = true;
+            } else {
+                cost.push("swap", swap);
+            }
+        }
+        cost.push("region-exec", m.region_exec_ps(op, bytes));
+        prefetched
+    }
+
+    /// A step fuses with its predecessor when both are region work on
+    /// the same hub and the fused chain (including this op) still fits
+    /// the hub's region count — one region program per fused chain.
+    fn fused_with_prev(
+        &self,
+        dag: &QueryDag,
+        id: NodeId,
+        choice: SiteChoice,
+        steps: &[PlanStep],
+    ) -> bool {
+        let node = dag.node_ref(id);
+        if node.op.region_op().is_none() {
+            return false;
+        }
+        let h = match choice {
+            SiteChoice::Hub(h) | SiteChoice::ShipAll(h) => h,
+            _ => return false,
+        };
+        let Some(&input) = node.inputs.first() else { return false };
+        let prev = &steps[input];
+        let prev_hub = match prev.choice {
+            SiteChoice::Hub(ph) | SiteChoice::ShipAll(ph) => ph,
+            _ => return false,
+        };
+        if prev_hub != h {
+            return false;
+        }
+        // walk the fused chain backwards collecting distinct region ops
+        let mut ops: Vec<OperatorKind> = Vec::new();
+        if let Some(op) = node.op.region_op() {
+            ops.push(op);
+        }
+        let mut cur = input;
+        loop {
+            let s = &steps[cur];
+            if let Some(op) = s.op.region_op() {
+                if !ops.contains(&op) {
+                    ops.push(op);
+                }
+            }
+            if !s.fused_with_prev {
+                break;
+            }
+            match dag.node_ref(cur).inputs.first() {
+                Some(&i) => cur = i,
+                None => break,
+            }
+        }
+        ops.len() <= self.model.regions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime_hub::{TenantId, CLASS_NORMAL};
+
+    fn ctx_local() -> PlanContext {
+        PlanContext {
+            origin: HubId(0),
+            owner: HubId(0),
+            qos: QosSpec::new(TenantId(1), CLASS_NORMAL, 1),
+            data: DataSource::HubNvme,
+        }
+    }
+
+    fn filter_dag(blocks: u64, keep: u64) -> QueryDag {
+        let mut dag = QueryDag::new();
+        let s = dag.scan(blocks);
+        dag.node(LogicalOp::Filter, &[s], keep);
+        dag
+    }
+
+    #[test]
+    fn plan_is_deterministic_run_to_run() {
+        let dag = filter_dag(256, 10);
+        let a = Planner::new(CostModel::default(), 2).plan(&dag, &ctx_local());
+        let b = Planner::new(CostModel::default(), 2).plan(&dag, &ctx_local());
+        assert_eq!(a.signature(), b.signature());
+        assert_eq!(format!("{:?}", a.steps), format!("{:?}", b.steps));
+    }
+
+    #[test]
+    fn csd_pushdown_wins_at_fast_nand_and_loses_at_slow_nand() {
+        let mut dag = QueryDag::new();
+        let s = dag.scan(256); // ~1 MB
+        dag.node(LogicalOp::Filter, &[s], 10);
+        let ctx = PlanContext { data: DataSource::Csd(0), ..ctx_local() };
+
+        let fast = CostModel { csd_nand_gbps: 96.0, ..CostModel::default() };
+        let p = Planner::new(fast, 1).plan(&dag, &ctx);
+        assert_eq!(p.choice(1), SiteChoice::Csd(0));
+
+        let slow = CostModel { csd_nand_gbps: 8.0, ..CostModel::default() };
+        let p = Planner::new(slow, 1).plan(&dag, &ctx);
+        assert_eq!(p.choice(1), SiteChoice::Hub(HubId(0)));
+    }
+
+    #[test]
+    fn warm_origin_flips_small_jobs_to_ship_all() {
+        // owner cold, origin warm: shipping the raw bytes is cheaper
+        // than a 400 µs swap for a small job, and flips back for a big
+        // one whose wire time exceeds the swap
+        let ctx = PlanContext { owner: HubId(1), ..ctx_local() };
+        let mut planner = Planner::new(CostModel::default(), 2);
+        planner.warm(HubId(0), OperatorKind::Filter);
+
+        let small = filter_dag(256, 25); // ~1 MB: ship-all
+        let p = planner.plan_pinned(&small, &ctx, &[]);
+        assert_eq!(p.choice(1), SiteChoice::Hub(HubId(1))); // pinned default stays put
+        let p = planner.plan(&small, &ctx);
+        assert_eq!(p.choice(1), SiteChoice::ShipAll(HubId(0)));
+
+        let big = filter_dag(4096, 25); // ~16.8 MB: swap cheaper than wire
+        let mut planner = Planner::new(CostModel::default(), 2);
+        planner.warm(HubId(0), OperatorKind::Filter);
+        let p = planner.plan(&big, &ctx);
+        assert_eq!(p.choice(1), SiteChoice::Hub(HubId(1)));
+    }
+
+    #[test]
+    fn residency_is_lru_and_persists_across_plans() {
+        let model = CostModel { regions: 2, ..CostModel::default() };
+        let mut planner = Planner::new(model, 1);
+        let dag = filter_dag(256, 50);
+        planner.plan(&dag, &ctx_local());
+        assert_eq!(planner.resident(HubId(0)), &[OperatorKind::Filter]);
+        // second plan of the same query hits the warm plane: no swap term
+        let p = planner.plan(&dag, &ctx_local());
+        assert!(p.step(1).cost.terms.iter().all(|&(n, _)| n != "swap"));
+        // two more distinct operators evict the least recently used
+        let mut dag2 = QueryDag::new();
+        let s = dag2.scan(256);
+        let c = dag2.node(LogicalOp::Compress, &[s], 50);
+        dag2.node(LogicalOp::Project, &[c], 50);
+        planner.plan(&dag2, &ctx_local());
+        assert!(!planner.resident(HubId(0)).contains(&OperatorKind::Filter));
+    }
+
+    #[test]
+    fn fused_chain_respects_region_capacity() {
+        // scan→filter→partition with 2 regions: both ops fuse
+        let mut dag = QueryDag::new();
+        let s = dag.scan(256);
+        let f = dag.node(LogicalOp::Filter, &[s], 50);
+        let p = dag.node(LogicalOp::Partition, &[f], 50);
+        let plan = Planner::new(CostModel::default(), 1).plan(&dag, &ctx_local());
+        assert!(plan.step(f).fused_with_prev);
+        assert!(plan.step(p).fused_with_prev);
+        // with a single region the second operator must break the chain
+        let one = CostModel { regions: 1, ..CostModel::default() };
+        let plan = Planner::new(one, 1).plan(&dag, &ctx_local());
+        assert!(!plan.step(p).fused_with_prev);
+    }
+
+    #[test]
+    fn gemm_knee_crosses_to_gpu() {
+        let mut small = QueryDag::new();
+        small.node(LogicalOp::Gemm { m: 512, n: 512, k: 512 }, &[], 100);
+        let p = Planner::new(CostModel::default(), 1).plan(&small, &ctx_local());
+        assert_eq!(p.choice(0), SiteChoice::Hub(HubId(0)));
+
+        let mut big = QueryDag::new();
+        big.node(LogicalOp::Gemm { m: 4096, n: 4096, k: 4096 }, &[], 100);
+        let p = Planner::new(CostModel::default(), 1).plan(&big, &ctx_local());
+        assert_eq!(p.choice(0), SiteChoice::Gpu(0));
+    }
+
+    #[test]
+    fn prefetch_hides_the_swap_behind_a_long_upstream() {
+        let model = CostModel { prefetch: true, ..CostModel::default() };
+        let mut planner = Planner::new(model, 1);
+        // 16.8 MB scan takes ~1.4 ms > 400 µs swap: the filter's
+        // bitstream loads while the scan streams
+        let p = planner.plan(&filter_dag(4096, 25), &ctx_local());
+        assert!(p.step(1).prefetched);
+        assert!(p.step(1).cost.terms.iter().any(|&(n, _)| n == "swap(hidden)"));
+
+        // a tiny scan cannot hide it
+        let mut planner = Planner::new(
+            CostModel { prefetch: true, ..CostModel::default() },
+            1,
+        );
+        let p = planner.plan(&filter_dag(16, 25), &ctx_local());
+        assert!(!p.step(1).prefetched);
+    }
+
+    #[test]
+    fn explain_lists_every_step_with_terms() {
+        let p = Planner::new(CostModel::default(), 1).plan(&filter_dag(256, 10), &ctx_local());
+        let text = p.explain();
+        assert!(text.contains("scan"));
+        assert!(text.contains("filter"));
+        assert!(text.contains("region-exec"));
+        assert!(text.contains("µs"));
+    }
+}

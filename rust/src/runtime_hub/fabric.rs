@@ -78,6 +78,8 @@ pub enum Site {
     Csd(u32),
     /// `i`-th programmable-switch peer site
     Switch(u32),
+    /// `i`-th CPU peer site (a host core pool behind a PCIe-class link)
+    Cpu(u32),
 }
 
 /// Interconnect shape: hub count, per-direction link rate, per-hop
@@ -129,6 +131,11 @@ pub struct SitesConfig {
     pub switches: usize,
     /// switch port rate, Gb/s per direction
     pub switch_port_gbps: f64,
+    pub cpus: usize,
+    /// cores per CPU peer site
+    pub cpu_cores: usize,
+    /// CPU host-link rate (PCIe), Gb/s per direction
+    pub cpu_link_gbps: f64,
 }
 
 impl Default for SitesConfig {
@@ -142,6 +149,9 @@ impl Default for SitesConfig {
             csd_link_gbps: constants::CSD_LINK_GBPS,
             switches: 0,
             switch_port_gbps: constants::P4_PORT_GBPS,
+            cpus: 0,
+            cpu_cores: constants::CPU_CORES as usize,
+            cpu_link_gbps: constants::PCIE_GEN3_X16_GBPS,
         }
     }
 }
@@ -196,12 +206,27 @@ pub struct SwitchSite {
     pub pipeline: Ps,
 }
 
+/// Handle to one CPU peer site (the dormant `devices/cpu.rs` model
+/// promoted to a fabric shard, ISSUE 10): host-link ids around a
+/// [`CorePool`](crate::devices::cpu::CorePool)-shaped `Stage::Core` pool.
+/// Software operator durations come from
+/// [`SwCost`](crate::devices::cpu::SwCost) at route-construction time.
+#[derive(Clone, Copy, Debug)]
+pub struct CpuSite {
+    pub site: Site,
+    pub ingress: LinkId,
+    pub egress: LinkId,
+    pub pool: PoolId,
+    pub cores: usize,
+}
+
 /// The peer shards one [`Fabric::add_sites`] call registered.
 #[derive(Clone, Debug, Default)]
 pub struct HeteroSites {
     pub gpus: Vec<GpuSite>,
     pub csds: Vec<CsdSite>,
     pub switches: Vec<SwitchSite>,
+    pub cpus: Vec<CpuSite>,
 }
 
 /// Peer device class (internal: trace tagging + site addressing).
@@ -210,6 +235,7 @@ enum PeerKind {
     Gpu,
     Csd,
     Switch,
+    Cpu,
 }
 
 /// One peer shard: its trace tag and state cell.
@@ -273,6 +299,8 @@ pub const TRACE_GPU_BASE: u32 = 0xFFFF_0000;
 pub const TRACE_CSD_BASE: u32 = 0xFFFE_0000;
 /// Trace tag base for [`Site::Switch`] peers.
 pub const TRACE_SWITCH_BASE: u32 = 0xFFFD_0000;
+/// Trace tag base for [`Site::Cpu`] peers.
+pub const TRACE_CPU_BASE: u32 = 0xFFFC_0000;
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
@@ -379,6 +407,7 @@ pub struct Fabric {
     gpu_peers: Vec<usize>,
     csd_peers: Vec<usize>,
     switch_peers: Vec<usize>,
+    cpu_peers: Vec<usize>,
     /// the injection-billed hop share (0 unless Injection billing on an
     /// eager fabric arbiter) — also the lookahead promised on hub → peer
     /// edges, so peer registration reuses the mesh's decision
@@ -458,6 +487,7 @@ impl Fabric {
             gpu_peers: Vec::new(),
             csd_peers: Vec::new(),
             switch_peers: Vec::new(),
+            cpu_peers: Vec::new(),
             inject,
         }
     }
@@ -496,6 +526,9 @@ impl Fabric {
             })),
             Site::Switch(i) => Some(*self.switch_peers.get(i as usize).unwrap_or_else(|| {
                 panic!("unknown switch site {i} (have {})", self.switch_peers.len())
+            })),
+            Site::Cpu(i) => Some(*self.cpu_peers.get(i as usize).unwrap_or_else(|| {
+                panic!("unknown CPU site {i} (have {})", self.cpu_peers.len())
             })),
             _ => None,
         }
@@ -642,6 +675,11 @@ impl Fabric {
                 self.switch_peers.push(ord);
                 (TRACE_SWITCH_BASE + i, Site::Switch(i))
             }
+            PeerKind::Cpu => {
+                let i = self.cpu_peers.len() as u32;
+                self.cpu_peers.push(ord);
+                (TRACE_CPU_BASE + i, Site::Cpu(i))
+            }
         };
         self.peers.push(PeerCell { tag, cell: cell.clone() });
         (site, cell)
@@ -733,9 +771,35 @@ impl Fabric {
         SwitchSite { site, ingress, egress, pipeline }
     }
 
+    /// Register a CPU peer site (ISSUE 10): injection-billed host links
+    /// around a many-core pool — the [`CorePool`](crate::devices::cpu::CorePool)
+    /// model as a first-class shard. Software operator durations
+    /// ([`SwCost`](crate::devices::cpu::SwCost)) become `Stage::Core` work
+    /// at route-construction time; the pool arbitrates the cores.
+    pub fn add_cpu_site(&mut self, cores: usize, link_gbps: f64) -> CpuSite {
+        assert!(cores >= 1, "a CPU site needs at least one core");
+        let (site, cell) = self.add_peer_cell(PeerKind::Cpu);
+        let hop = ns_f(self.cfg.hop_ns);
+        let (ingress, egress, pool) = {
+            let mut st = cell.borrow_mut();
+            let ingress = st.register_link_inject(
+                "cpu-host-in",
+                link_gbps,
+                hop,
+                self.inject,
+                self.cfg.policies.fabric,
+            );
+            let egress = st.register_link("cpu-host-out", link_gbps, hop, self.cfg.policies.fabric);
+            let pool = st.register_pool(cores, self.cfg.policies.pools);
+            (ingress, egress, pool)
+        };
+        CpuSite { site, ingress, egress, pool, cores }
+    }
+
     /// Register the whole `[sites]` population from config: H100-class
-    /// GPUs, CSDs (drive RNGs forked off `seed`), and Tofino-class
-    /// switches, in that order.
+    /// GPUs, CSDs (drive RNGs forked off `seed`), Tofino-class switches,
+    /// and host CPU pools, in that order (CPU sites last so pre-existing
+    /// peer populations keep their shard indices).
     pub fn add_sites(&mut self, sc: &SitesConfig, seed: u64) -> HeteroSites {
         let mut out = HeteroSites::default();
         for _ in 0..sc.gpus {
@@ -749,6 +813,9 @@ impl Fabric {
         for _ in 0..sc.switches {
             let pipeline = ns_f(constants::P4_STAGES as f64 * constants::P4_STAGE_NS);
             out.switches.push(self.add_switch_site(sc.switch_port_gbps, pipeline));
+        }
+        for _ in 0..sc.cpus {
+            out.cpus.push(self.add_cpu_site(sc.cpu_cores.max(1), sc.cpu_link_gbps));
         }
         out
     }
@@ -1541,13 +1608,18 @@ mod tests {
         let gpu = fab.add_gpu_site(crate::devices::gpu::Gpu::h100(), 100.0);
         let csd = fab.add_csd_site(2, 24.0, 100.0, 7);
         let sw = fab.add_switch_site(100.0, US);
-        assert_eq!(fab.num_peer_sites(), 3);
+        let cpu = fab.add_cpu_site(8, 100.0);
+        assert_eq!(fab.num_peer_sites(), 4);
         assert_eq!(gpu.site, Site::Gpu(0));
         assert_eq!(csd.site, Site::Csd(0));
         assert_eq!(sw.site, Site::Switch(0));
-        for (site, link) in
-            [(gpu.site, gpu.ingress), (csd.site, csd.ingress), (sw.site, sw.ingress)]
-        {
+        assert_eq!(cpu.site, Site::Cpu(0));
+        for (site, link) in [
+            (gpu.site, gpu.ingress),
+            (csd.site, csd.ingress),
+            (sw.site, sw.ingress),
+            (cpu.site, cpu.ingress),
+        ] {
             let d = TransferDesc::with_label(3).xfer(link, BYTES_1US);
             fab.submit_route_detached(0, RouteDesc::new().hop(site, d));
         }
@@ -1557,6 +1629,32 @@ mod tests {
         assert!(tags.contains(&TRACE_GPU_BASE), "{tags:?}");
         assert!(tags.contains(&TRACE_CSD_BASE), "{tags:?}");
         assert!(tags.contains(&TRACE_SWITCH_BASE), "{tags:?}");
+        assert!(tags.contains(&TRACE_CPU_BASE), "{tags:?}");
+    }
+
+    #[test]
+    fn cpu_site_parallelizes_across_cores_and_serializes_past_them() {
+        // two cores: three 4 µs jobs landing together run 2-wide, so the
+        // third starts only when a core frees up — the CorePool shape on
+        // the fabric (earliest-free-core placement via the pool arbiter)
+        let mut fab = two_hub();
+        let cpu = fab.add_cpu_site(2, 100.0);
+        let times: Rc<RefCell<Vec<Ps>>> = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..3u64 {
+            let t = times.clone();
+            let route = RouteDesc::new().hop(
+                cpu.site,
+                TransferDesc::with_label(i)
+                    .qos(QosSpec::default())
+                    .delay(US)
+                    .on_core(cpu.pool, 4 * US),
+            );
+            fab.submit_route(0, route, move |_, at| t.borrow_mut().push(at));
+        }
+        fab.run();
+        let mut got = times.borrow().clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![5 * US, 5 * US, 9 * US]);
     }
 
     #[test]

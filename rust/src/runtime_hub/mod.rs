@@ -57,9 +57,9 @@ use crate::sim::{ContSlot, Event, ResourceId, Sim, World};
 use crate::util::Slab;
 
 pub use fabric::{
-    CsdSite, Fabric, FabricConfig, GpuSite, HeteroSites, Hop, HopBilling, HubId, RouteDesc, Site,
-    SitesConfig, StuckReport, StuckSite, SwitchSite, TraceEntry, TRACE_CSD_BASE, TRACE_GPU_BASE,
-    TRACE_NET, TRACE_SWITCH_BASE,
+    CpuSite, CsdSite, Fabric, FabricConfig, GpuSite, HeteroSites, Hop, HopBilling, HubId,
+    RouteDesc, Site, SitesConfig, StuckReport, StuckSite, SwitchSite, TraceEntry, TRACE_CPU_BASE,
+    TRACE_CSD_BASE, TRACE_GPU_BASE, TRACE_NET, TRACE_SWITCH_BASE,
 };
 pub use faults::{FaultsConfig, LinkFault, RecoveryKind, RecoveryPolicy, SiteFaults, WindowTrack};
 pub use parallel::EngineMode;

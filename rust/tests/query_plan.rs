@@ -1,0 +1,560 @@
+//! Planner determinism and lowering equivalence (ISSUE 10).
+//!
+//! Three pins on the dataflow query plane:
+//!
+//! * **Lowering equivalence**: planner-lowered routes (`plan_pinned` +
+//!   the shared emitters in `apps/mod.rs` + `chain_hub_stages`)
+//!   reproduce the historical hand-wired route constructions — the
+//!   exact shapes the apps carried before the refactor, rebuilt inline
+//!   here — with bit-identical `completion_trace()`s, sequentially and
+//!   on the parallel engine at 1/4/12 worker threads.
+//! * **Plan determinism**: the same DAG + context + model produces the
+//!   same `PhysicalPlan` signature and per-node choices from freshly
+//!   built planners, run to run and across concurrently planning
+//!   threads (1/4/12).
+//! * **Random-DAG properties**: seeded DAGs keep their byte books
+//!   balanced (integer selectivity, inputs sum), validate structurally
+//!   (single sink, no orphans), and every fused region chain the
+//!   planner emits fits the model's region count.
+
+use fpgahub::apps::hetero::{filter_route, offload_route, FilterPlacement, FILTER_CMD_BYTES};
+use fpgahub::apps::storage_fetch::{register_nic_fetch_path_fabric, FETCH_CMD_BYTES};
+use fpgahub::apps::{owner_shard_route, TENANT_PIPELINE};
+use fpgahub::constants;
+use fpgahub::net::packet::HEADER_BYTES;
+use fpgahub::nvme::queue::NvmeOp;
+use fpgahub::nvme::ssd::SsdArray;
+use fpgahub::query::{
+    CostModel, DataSource, LogicalOp, PlanContext, Planner, QueryDag, SiteChoice,
+};
+use fpgahub::runtime_hub::{
+    Fabric, FabricConfig, HeteroSites, HubId, OperatorKind, QosSpec, ReconfigConfig,
+    ResourcePolicies, RouteDesc, Site, SitesConfig, TraceEntry, TransferDesc,
+};
+use fpgahub::sim::time::{ns_f, Ps, US};
+use fpgahub::util::quickcheck::forall;
+use fpgahub::util::Rng;
+
+/// Worker-thread counts the parallel checks run at (ISSUE 10 acceptance:
+/// 1/4/12 — 12 oversubscribes every fabric here).
+const THREADS: [usize; 3] = [1, 4, 12];
+
+fn drain_trace(mut fab: Fabric, threads: Option<usize>) -> (Vec<TraceEntry>, u64) {
+    match threads {
+        None => fab.run(),
+        Some(t) => fab.run_parallel(t),
+    };
+    (fab.completion_trace(), fab.trace_hash())
+}
+
+// ---------------------------------------------- pushdown workload ----
+
+const P_HUBS: usize = 4;
+const P_SSDS: usize = 2;
+const P_REQS: u64 = 48;
+const P_GAP: Ps = 20 * US;
+const P_BLOCKS: u32 = 16;
+
+fn pushdown_rc() -> ReconfigConfig {
+    ReconfigConfig { regions: 2, swap_us: 150.0, ..Default::default() }
+}
+
+/// The shared physical substrate both constructions schedule onto: the
+/// RNG threading (one `SsdArray` per hub off one seed) matches
+/// `apps::preprocess::run_pushdown_mode` exactly, so media sampling is
+/// identical on every fabric built here.
+fn pushdown_platform() -> (Fabric, Vec<fpgahub::apps::storage_fetch::NicFetchPath>) {
+    let mut rng = Rng::new(0xF26A);
+    let mut fab = Fabric::with_config(FabricConfig { hubs: P_HUBS, ..Default::default() });
+    let rc = pushdown_rc();
+    let all_ssds: Vec<usize> = (0..P_SSDS).collect();
+    let paths = (0..P_HUBS)
+        .map(|h| {
+            let hub = HubId(h as u32);
+            fab.add_regions(hub, &rc);
+            let arr = fab.add_array(hub, SsdArray::new(P_SSDS, &mut rng));
+            let mut p = register_nic_fetch_path_fabric(&mut fab, hub, arr, &all_ssds);
+            p.qos = QosSpec::latency_sensitive(TENANT_PIPELINE);
+            p
+        })
+        .collect();
+    (fab, paths)
+}
+
+fn request_geometry(i: u64) -> (HubId, HubId, usize) {
+    let origin = HubId((i % P_HUBS as u64) as u32);
+    let shard = i % (P_HUBS * P_SSDS) as u64;
+    let owner = HubId((shard / P_SSDS as u64) as u32);
+    let ssd = (shard % P_SSDS as u64) as usize;
+    (origin, owner, ssd)
+}
+
+/// The query-plane construction: scan → filter (keep the quarter) pinned
+/// to the mode's legacy placement, routes out of the shared emitters.
+fn pushdown_lowered(pushdown: bool) -> Fabric {
+    let (mut fab, paths) = pushdown_platform();
+    let planner = Planner::new(
+        CostModel::from_platform(
+            &FabricConfig { hubs: P_HUBS, ..Default::default() },
+            &SitesConfig::default(),
+            &pushdown_rc(),
+        ),
+        P_HUBS,
+    );
+    let mut dag = QueryDag::new();
+    let scan = dag.scan(P_BLOCKS as u64);
+    let filter = dag.node(LogicalOp::Filter, &[scan], 25);
+    for i in 0..P_REQS {
+        let t0 = i * P_GAP;
+        let (origin, owner, ssd) = request_geometry(i);
+        let qos = paths[owner.index()].qos;
+        let ctx = PlanContext { origin, owner, qos, data: DataSource::HubNvme };
+        let pin = if origin == owner || pushdown {
+            SiteChoice::Hub(owner)
+        } else {
+            SiteChoice::ShipAll(origin)
+        };
+        let plan = planner.plan_pinned(&dag, &ctx, &[(filter, pin)]);
+        let fetch = paths[owner.index()].fetch_desc(i, ssd, P_BLOCKS);
+        let route = match plan.choice(filter) {
+            SiteChoice::Hub(_) => owner_shard_route(
+                &fab,
+                i,
+                qos,
+                origin,
+                owner,
+                plan.chain_hub_stages(fetch),
+                FETCH_CMD_BYTES,
+                plan.step(filter).bytes_out + HEADER_BYTES,
+                None,
+            ),
+            SiteChoice::ShipAll(_) => owner_shard_route(
+                &fab,
+                i,
+                qos,
+                origin,
+                owner,
+                fetch,
+                FETCH_CMD_BYTES,
+                plan.step(filter).bytes_in + HEADER_BYTES,
+                Some(plan.chain_hub_stages(TransferDesc::with_label(i).qos(qos))),
+            ),
+            c => unreachable!("pushdown lowers filters onto hubs, got {}", c.describe()),
+        };
+        fab.submit_route(t0, route, |_, _| {});
+    }
+    fab
+}
+
+/// The pre-refactor construction, verbatim: explicit hop lists and
+/// hand-chained `.preproc(..)` stages with hand-computed reply sizes.
+fn pushdown_hand_wired(pushdown: bool) -> Fabric {
+    let (mut fab, paths) = pushdown_platform();
+    let bytes = P_BLOCKS as u64 * 4096;
+    let full_reply = bytes + HEADER_BYTES;
+    let filtered_reply = bytes / 4 + HEADER_BYTES;
+    for i in 0..P_REQS {
+        let t0 = i * P_GAP;
+        let (origin, owner, ssd) = request_geometry(i);
+        let qos = paths[owner.index()].qos;
+        let fetch = paths[owner.index()].fetch_desc(i, ssd, P_BLOCKS);
+        let route = if origin == owner {
+            RouteDesc::new()
+                .hop(Site::Hub(owner), fetch.preproc(OperatorKind::Filter, bytes))
+        } else if pushdown {
+            RouteDesc::new()
+                .hop(Site::Net, fab.hop_desc(i, qos, origin, owner, FETCH_CMD_BYTES))
+                .hop(Site::Hub(owner), fetch.preproc(OperatorKind::Filter, bytes))
+                .hop(Site::Net, fab.hop_desc(i, qos, owner, origin, filtered_reply))
+        } else {
+            RouteDesc::new()
+                .hop(Site::Net, fab.hop_desc(i, qos, origin, owner, FETCH_CMD_BYTES))
+                .hop(Site::Hub(owner), fetch)
+                .hop(Site::Net, fab.hop_desc(i, qos, owner, origin, full_reply))
+                .hop(
+                    Site::Hub(origin),
+                    TransferDesc::with_label(i).qos(qos).preproc(OperatorKind::Filter, bytes),
+                )
+        };
+        fab.submit_route(t0, route, |_, _| {});
+    }
+    fab
+}
+
+#[test]
+fn planner_lowering_reproduces_the_hand_wired_pushdown_trace() {
+    for pushdown in [true, false] {
+        let mode = if pushdown { "pushdown" } else { "ship-all" };
+        let (hand, hand_hash) = drain_trace(pushdown_hand_wired(pushdown), None);
+        let (low, low_hash) = drain_trace(pushdown_lowered(pushdown), None);
+        assert!(!hand.is_empty());
+        assert_eq!(hand, low, "{mode}: lowered trace diverged from hand-wired");
+        assert_eq!(hand_hash, low_hash, "{mode}: trace hash diverged");
+        for t in THREADS {
+            let (par, par_hash) = drain_trace(pushdown_lowered(pushdown), Some(t));
+            assert_eq!(hand, par, "{mode}: parallel({t}) trace diverged from hand-wired");
+            assert_eq!(hand_hash, par_hash, "{mode}: parallel({t}) hash diverged");
+        }
+    }
+}
+
+// ---------------------------------------------------- ETL pipeline ----
+
+const ETL_JOBS: u64 = 24;
+const ETL_GAP: Ps = 40 * US;
+const ETL_SSDS: usize = 4;
+
+fn etl_platform() -> (Fabric, fpgahub::apps::storage_fetch::NicFetchPath, usize) {
+    let mut rng = Rng::new(0xF26A ^ 0x9E7);
+    let mut fab = Fabric::new(1);
+    fab.add_regions(
+        HubId(0),
+        &ReconfigConfig { regions: 3, swap_us: 150.0, ..Default::default() },
+    );
+    let arr = fab.add_array(HubId(0), SsdArray::new(ETL_SSDS, &mut rng));
+    let all_ssds: Vec<usize> = (0..ETL_SSDS).collect();
+    let mut path = register_nic_fetch_path_fabric(&mut fab, HubId(0), arr, &all_ssds);
+    path.qos = QosSpec::latency_sensitive(TENANT_PIPELINE);
+    let egress = fab.add_link(HubId(0), "etl-egress", constants::ETH_GBPS, 0);
+    (fab, path, egress)
+}
+
+fn etl_lowered() -> Fabric {
+    let (mut fab, path, egress) = etl_platform();
+    let mut dag = QueryDag::new();
+    let s = dag.scan(P_BLOCKS as u64);
+    let f = dag.node(LogicalOp::Filter, &[s], 50);
+    let p = dag.node(LogicalOp::Partition, &[f], 50);
+    let hub = HubId(0);
+    let ctx = PlanContext { origin: hub, owner: hub, qos: path.qos, data: DataSource::HubNvme };
+    let planner = Planner::new(CostModel::default(), 1);
+    let plan = planner.plan_pinned(
+        &dag,
+        &ctx,
+        &[(f, SiteChoice::Hub(hub)), (p, SiteChoice::Hub(hub))],
+    );
+    let egress_bytes = plan.step(p).bytes_out + HEADER_BYTES;
+    for i in 0..ETL_JOBS {
+        let desc = plan
+            .chain_hub_stages(path.fetch_desc(i, (i as usize) % ETL_SSDS, P_BLOCKS))
+            .xfer(egress, egress_bytes);
+        fab.submit(hub, i * ETL_GAP, desc, |_, _| {});
+    }
+    fab
+}
+
+fn etl_hand_wired() -> Fabric {
+    let (mut fab, path, egress) = etl_platform();
+    let bytes = P_BLOCKS as u64 * 4096;
+    for i in 0..ETL_JOBS {
+        let desc = path
+            .fetch_desc(i, (i as usize) % ETL_SSDS, P_BLOCKS)
+            .preproc(OperatorKind::Filter, bytes)
+            .preproc(OperatorKind::HashPartition, bytes / 2)
+            .xfer(egress, bytes / 4 + HEADER_BYTES);
+        fab.submit(HubId(0), i * ETL_GAP, desc, |_, _| {});
+    }
+    fab
+}
+
+#[test]
+fn dag_fusion_reproduces_the_hand_chained_etl_stages() {
+    let (hand, hand_hash) = drain_trace(etl_hand_wired(), None);
+    let (low, low_hash) = drain_trace(etl_lowered(), None);
+    assert!(!hand.is_empty());
+    assert_eq!(hand, low, "fused DAG chain diverged from hand-chained preproc stages");
+    assert_eq!(hand_hash, low_hash);
+    for t in THREADS {
+        let (par, par_hash) = drain_trace(etl_lowered(), Some(t));
+        assert_eq!(hand, par, "parallel({t}) ETL trace diverged");
+        assert_eq!(hand_hash, par_hash);
+    }
+}
+
+// ------------------------------------------------ peer-site routes ----
+
+fn hetero_platform() -> (Fabric, HeteroSites) {
+    let mut fab = Fabric::with_config(FabricConfig {
+        hubs: 1,
+        gbps: 100.0,
+        hop_ns: 500.0,
+        policies: ResourcePolicies::default(),
+    });
+    let sites = fab.add_sites(
+        &SitesConfig { csds: 1, gpus: 1, switches: 1, ..Default::default() },
+        0xC0FE,
+    );
+    (fab, sites)
+}
+
+fn landing() -> Ps {
+    ns_f(constants::PCIE_DMA_SETUP_NS)
+}
+
+const PEER_BYTES: u64 = 1 << 20;
+const PEER_SELECTED: u64 = PEER_BYTES * 10 / 100;
+const PEER_HUB_GBPS: f64 = 80.0;
+const PEER_KERNEL: Ps = 50 * US;
+
+fn peer_lowered() -> Fabric {
+    let (mut fab, sites) = hetero_platform();
+    let hub = HubId(0);
+    let qos = QosSpec::default();
+    for (i, placement) in FilterPlacement::ALL.iter().enumerate() {
+        let route = filter_route(
+            &sites.csds[0],
+            hub,
+            *placement,
+            1000 + i as u64,
+            qos,
+            PEER_BYTES,
+            PEER_SELECTED,
+            PEER_HUB_GBPS,
+        );
+        fab.submit_route(i as u64 * 200 * US, route, |_, _| {});
+    }
+    let route = offload_route(&sites.gpus[0], hub, 2000, qos, 8 << 20, 4 << 20, PEER_KERNEL);
+    fab.submit_route(700 * US, route, |_, _| {});
+    fab
+}
+
+/// The pre-refactor peer routes, hop for hop: explicit three-hop lists
+/// instead of the `hub_peer_route` emitter.
+fn peer_hand_wired() -> Fabric {
+    let (mut fab, sites) = hetero_platform();
+    let hub = HubId(0);
+    let qos = QosSpec::default();
+    let csd = sites.csds[0];
+    for (i, placement) in FilterPlacement::ALL.iter().enumerate() {
+        let label = 1000 + i as u64;
+        let cmd = TransferDesc::with_label(label).qos(qos).delay(landing());
+        let drive = TransferDesc::with_label(label)
+            .qos(qos)
+            .xfer(csd.ingress, FILTER_CMD_BYTES)
+            .nvme(csd.queue, NvmeOp::Read);
+        let (drive, back) = match placement {
+            FilterPlacement::Csd => (
+                drive.delay(csd.scan_ps(PEER_BYTES)).xfer(csd.egress, PEER_SELECTED),
+                TransferDesc::with_label(label).qos(qos).delay(landing()),
+            ),
+            FilterPlacement::Hub => (
+                drive.xfer(csd.egress, PEER_BYTES),
+                TransferDesc::with_label(label)
+                    .qos(qos)
+                    .delay(ns_f(PEER_BYTES as f64 * 8.0 / PEER_HUB_GBPS))
+                    .delay(landing()),
+            ),
+            FilterPlacement::ShipAll => (
+                drive.xfer(csd.egress, PEER_BYTES),
+                TransferDesc::with_label(label).qos(qos).delay(landing()),
+            ),
+        };
+        let route = RouteDesc::new()
+            .hop(Site::Hub(hub), cmd)
+            .hop(csd.site, drive)
+            .hop(Site::Hub(hub), back);
+        fab.submit_route(i as u64 * 200 * US, route, |_, _| {});
+    }
+    let gpu = &sites.gpus[0];
+    let route = RouteDesc::new()
+        .hop(Site::Hub(hub), TransferDesc::with_label(2000).qos(qos).delay(landing()))
+        .hop(
+            gpu.site,
+            TransferDesc::with_label(2000)
+                .qos(qos)
+                .xfer(gpu.ingress, 8 << 20)
+                .on_core(gpu.kernel_queue, PEER_KERNEL)
+                .xfer(gpu.egress, 4 << 20),
+        )
+        .hop(Site::Hub(hub), TransferDesc::with_label(2000).qos(qos).delay(landing()));
+    fab.submit_route(700 * US, route, |_, _| {});
+    fab
+}
+
+#[test]
+fn peer_route_emitters_reproduce_the_hand_wired_hops() {
+    let (hand, hand_hash) = drain_trace(peer_hand_wired(), None);
+    let (low, low_hash) = drain_trace(peer_lowered(), None);
+    assert!(!hand.is_empty());
+    assert_eq!(hand, low, "emitter-built peer routes diverged from hand-wired hops");
+    assert_eq!(hand_hash, low_hash);
+    for t in THREADS {
+        let (par, par_hash) = drain_trace(peer_lowered(), Some(t));
+        assert_eq!(hand, par, "parallel({t}) peer trace diverged");
+        assert_eq!(hand_hash, par_hash);
+    }
+}
+
+// ------------------------------------------------ plan determinism ----
+
+fn mixed_dag() -> QueryDag {
+    let mut dag = QueryDag::new();
+    let s = dag.scan(2048);
+    let f = dag.node(LogicalOp::Filter, &[s], 10);
+    let p = dag.node(LogicalOp::Project, &[f], 60);
+    let _c = dag.node(LogicalOp::Compress, &[p], 40);
+    dag
+}
+
+fn plan_signature() -> (u64, Vec<SiteChoice>) {
+    let mut planner = Planner::new(CostModel::default(), 2);
+    let ctx = PlanContext {
+        origin: HubId(0),
+        owner: HubId(1),
+        qos: QosSpec::default(),
+        data: DataSource::HubNvme,
+    };
+    let dag = mixed_dag();
+    let plan = planner.plan(&dag, &ctx);
+    (plan.signature(), plan.steps.iter().map(|s| s.choice).collect())
+}
+
+#[test]
+fn plan_choice_is_identical_run_to_run() {
+    let (sig, choices) = plan_signature();
+    for _ in 0..4 {
+        let (sig2, choices2) = plan_signature();
+        assert_eq!(sig, sig2, "same DAG + context + model must plan identically");
+        assert_eq!(choices, choices2);
+    }
+}
+
+#[test]
+fn plan_choice_is_identical_across_planning_threads() {
+    let (sig, _) = plan_signature();
+    for t in THREADS {
+        let handles: Vec<_> =
+            (0..t).map(|_| std::thread::spawn(|| plan_signature().0)).collect();
+        for h in handles {
+            assert_eq!(
+                h.join().expect("planner thread panicked"),
+                sig,
+                "plan signature diverged under {t} concurrent planners"
+            );
+        }
+    }
+}
+
+// --------------------------------------------- random-DAG property ----
+
+const REGION_OPS: [LogicalOp; 4] =
+    [LogicalOp::Filter, LogicalOp::Project, LogicalOp::Partition, LogicalOp::Compress];
+
+#[derive(Clone, Debug)]
+struct DagCase {
+    joined: bool,
+    blocks_a: u64,
+    blocks_b: u64,
+    join_keep: u64,
+    /// (index into [`REGION_OPS`], keep_pct) per chain operator
+    chain: Vec<(usize, u64)>,
+    hubs: usize,
+    origin: u32,
+    owner: u32,
+    regions: usize,
+}
+
+fn dag_case_holds(c: &DagCase) -> bool {
+    let mut dag = QueryDag::new();
+    let a = dag.scan(c.blocks_a);
+    let mut prev = a;
+    let mut join = None;
+    if c.joined {
+        let b = dag.scan(c.blocks_b);
+        prev = dag.node(LogicalOp::Join, &[a, b], c.join_keep);
+        join = Some((prev, a, b));
+    }
+    let mut chain_ids = Vec::new();
+    for &(op, keep) in &c.chain {
+        prev = dag.node(REGION_OPS[op], &[prev], keep);
+        chain_ids.push((prev, keep));
+    }
+    // structure: exactly one sink, nothing orphaned
+    if dag.validate().is_err() {
+        return false;
+    }
+    // books balance: integer selectivity on each operator, inputs sum
+    for &(id, keep) in &chain_ids {
+        if dag.bytes_out(id) != dag.bytes_in(id) * keep / 100 {
+            return false;
+        }
+    }
+    if let Some((j, a, b)) = join {
+        if dag.bytes_in(j) != dag.bytes_out(a) + dag.bytes_out(b) {
+            return false;
+        }
+    }
+    // free-choice plans are deterministic across fresh planners
+    let model = CostModel { regions: c.regions, ..CostModel::default() };
+    let ctx = PlanContext {
+        origin: HubId(c.origin),
+        owner: HubId(c.owner),
+        qos: QosSpec::default(),
+        data: DataSource::HubNvme,
+    };
+    let p1 = Planner::new(model.clone(), c.hubs).plan(&dag, &ctx);
+    let p2 = Planner::new(model, c.hubs).plan(&dag, &ctx);
+    if p1.signature() != p2.signature() {
+        return false;
+    }
+    if p1.steps.iter().zip(&p2.steps).any(|(x, y)| x.choice != y.choice) {
+        return false;
+    }
+    // every fused region chain fits the model's region count
+    let mut run_ops: Vec<OperatorKind> = Vec::new();
+    for s in &p1.steps {
+        match (s.op.region_op(), s.choice) {
+            (Some(op), SiteChoice::Hub(_) | SiteChoice::ShipAll(_)) => {
+                if !s.fused_with_prev {
+                    run_ops.clear();
+                }
+                if !run_ops.contains(&op) {
+                    run_ops.push(op);
+                }
+                if run_ops.len() > c.regions {
+                    return false;
+                }
+            }
+            _ => run_ops.clear(),
+        }
+    }
+    true
+}
+
+#[test]
+fn random_dags_balance_books_and_fused_chains_fit() {
+    forall(
+        "query-dag-books-and-fusion",
+        150,
+        |g| {
+            let hubs = g.usize(1, 5);
+            DagCase {
+                joined: g.bool(),
+                blocks_a: g.u64(1, 4096),
+                blocks_b: g.u64(1, 4096),
+                join_keep: g.u64(1, 101),
+                chain: (0..g.usize(1, 6)).map(|_| (g.usize(0, 4), g.u64(1, 101))).collect(),
+                hubs,
+                origin: g.usize(0, hubs) as u32,
+                owner: g.usize(0, hubs) as u32,
+                regions: g.usize(1, 4),
+            }
+        },
+        dag_case_holds,
+        |c| {
+            let mut simpler = Vec::new();
+            if c.chain.len() > 1 {
+                let mut s = c.clone();
+                s.chain.pop();
+                simpler.push(s);
+            }
+            if c.joined {
+                simpler.push(DagCase { joined: false, ..c.clone() });
+            }
+            if c.regions < 3 {
+                simpler.push(DagCase { regions: c.regions + 1, ..c.clone() });
+            }
+            simpler
+        },
+    );
+}
